@@ -1,0 +1,149 @@
+//! End-to-end driver: exercises the FULL three-layer stack on a real small
+//! workload, proving all layers compose (EXPERIMENTS.md §E2E).
+//!
+//! 1. Loads the JAX/Pallas-lowered HLO operator artifacts (`make artifacts`)
+//!    into the Rust PJRT runtime and executes them — Layer 1/2 numerics run
+//!    for real on the CPU PJRT client.
+//! 2. Runs the **operator-level profiler** over the grid, producing the
+//!    latency-trace DB (the paper's single-command hardware integration).
+//! 3. Serves a batched request workload on the **ground-truth execution
+//!    engine** (every iteration's cost = real measured operator wall-clock)
+//!    — this is the "real system" of Fig. 2, reporting latency/throughput.
+//! 4. Replays the same workload on the **trace-driven simulator** and
+//!    reports the validation error, the paper's headline metric.
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end`
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use llmservingsim::config::{presets, PerfBackend};
+use llmservingsim::coordinator::{run_config, Simulation};
+use llmservingsim::groundtruth::ExecPerfModel;
+use llmservingsim::runtime::profiler::{profile_to_file, ProfileOptions};
+use llmservingsim::runtime::{Manifest, Runtime};
+use llmservingsim::util::bench::Table;
+use llmservingsim::workload::{Arrival, LengthDist};
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from("artifacts");
+    if !root.join("manifest.json").exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+
+    // ---- 1. Layer 1/2 artifacts execute on PJRT --------------------------
+    let manifest = Manifest::load(&root)?;
+    let mut rt = Runtime::cpu(&root)?;
+    println!("PJRT platform: {}", rt.platform());
+    let dense = manifest.model("tiny-dense").unwrap();
+    let attn = dense
+        .ops
+        .iter()
+        .find(|o| o.kind == llmservingsim::model::OpKind::AttnPrefill)
+        .unwrap();
+    let loaded = rt.load(attn)?;
+    let out = loaded.execute()?;
+    let vals = out.to_tuple1()?.to_vec::<f32>()?;
+    anyhow::ensure!(
+        vals.iter().all(|v| v.is_finite()),
+        "Pallas attention kernel produced non-finite output"
+    );
+    println!(
+        "executed Pallas flash-attention artifact '{}' -> {} finite outputs",
+        attn.name,
+        vals.len()
+    );
+
+    // ---- 2. operator-level profiler --------------------------------------
+    let trace_path = root.join("traces/cpu-pjrt-tiny-dense.json");
+    if !trace_path.exists() {
+        println!("profiling tiny-dense operator grid ...");
+        let outcome = profile_to_file(
+            &root,
+            "tiny-dense",
+            &trace_path,
+            &ProfileOptions::default(),
+        )?;
+        println!(
+            "profiled {} ops in {:.1} s",
+            outcome.ops_profiled,
+            outcome.wall_ns as f64 / 1e9
+        );
+    } else {
+        println!("using existing trace {}", trace_path.display());
+    }
+
+    // ---- 3. ground-truth serving run (real execution) --------------------
+    let mut cfg = presets::single_dense("tiny-dense", "cpu-pjrt");
+    cfg.workload.num_requests = 40;
+    cfg.workload.arrival = Arrival::Poisson { rate: 10.0 };
+    cfg.workload.lengths = LengthDist::short();
+
+    println!("\nserving {} requests on the ground-truth engine ...", 40);
+    let gt = Rc::new(ExecPerfModel::new(&root, "tiny-dense")?);
+    let gt2 = gt.clone();
+    let mut gt_sim = Simulation::with_perf_factory(cfg.clone(), &move |_, _, _| {
+        Ok(gt2.clone() as Rc<dyn llmservingsim::perf::PerfModel>)
+    })?;
+    let t0 = std::time::Instant::now();
+    let gt_report = gt_sim.run();
+    println!(
+        "ground truth: {} operator executions, {:.1} s real compute",
+        gt.executions.get(),
+        gt.exec_ns.get() as f64 / 1e9
+    );
+    let gt_wall = t0.elapsed();
+
+    // ---- 4. trace-driven simulation + validation -------------------------
+    cfg.perf = PerfBackend::Trace {
+        path: trace_path.to_string_lossy().into_owned(),
+    };
+    let t1 = std::time::Instant::now();
+    let (sim_report, summary) = run_config(cfg)?;
+    let sim_wall = t1.elapsed();
+
+    let err = sim_report.error_vs(&gt_report);
+    let mut t = Table::new(&["metric", "ground truth", "simulated", "error %"]);
+    t.row(&[
+        "TTFT mean (ms)".into(),
+        format!("{:.3}", gt_report.ttft_ns.mean / 1e6),
+        format!("{:.3}", sim_report.ttft_ns.mean / 1e6),
+        format!("{:.2}", err.ttft_pct),
+    ]);
+    t.row(&[
+        "TPOT mean (ms)".into(),
+        format!("{:.3}", gt_report.tpot_ns.mean / 1e6),
+        format!("{:.3}", sim_report.tpot_ns.mean / 1e6),
+        format!("{:.2}", err.tpot_pct),
+    ]);
+    t.row(&[
+        "ITL mean (ms)".into(),
+        format!("{:.3}", gt_report.itl_ns.mean / 1e6),
+        format!("{:.3}", sim_report.itl_ns.mean / 1e6),
+        format!("{:.2}", err.itl_pct),
+    ]);
+    t.row(&[
+        "throughput (tok/s)".into(),
+        format!("{:.1}", gt_report.throughput_tps),
+        format!("{:.1}", sim_report.throughput_tps),
+        format!("{:.2}", err.throughput_pct),
+    ]);
+    t.print();
+    println!(
+        "mean validation error: {:.2} %   (paper: 1.9% avg, <5% per config)",
+        err.mean()
+    );
+    println!(
+        "wall-clock: ground truth {:.2} s vs simulator {:.3} s ({} sim steps)",
+        gt_wall.as_secs_f64(),
+        sim_wall.as_secs_f64(),
+        summary.steps
+    );
+    anyhow::ensure!(
+        err.mean() < 15.0,
+        "validation error unexpectedly high: {:.2}%",
+        err.mean()
+    );
+    println!("END-TO-END OK: all three layers compose.");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! MoE expert-offloading study (§II-C): serve a MoE model on a
+//! memory-constrained device under each offloading strategy.
+//!
+//! The device memory is overridden so that only ~40% of the expert weights
+//! fit after the dense parameters and KV cache — the regime Pre-gated MoE
+//! and Duplex target. Expected shape: on-demand blocks on every layer's
+//! expert fetch; prefetch hides most of it; PIM executes experts in memory
+//! and ships activations instead.
+//!
+//! Run: `cargo run --release --example moe_offloading`
+
+use llmservingsim::config::{presets, GateKind, OffloadPolicy, SimConfig};
+use llmservingsim::coordinator::run_config;
+use llmservingsim::model::ModelSpec;
+use llmservingsim::util::bench::Table;
+
+fn constrained(policy: OffloadPolicy, gate: GateKind) -> SimConfig {
+    // Phi-mini-MoE (paper's MoE model) on a 24 GB RTX3090-like card is
+    // naturally memory-constrained: the full expert set (~80 GB) cannot be
+    // resident, the regime Pre-gated MoE and Duplex target.
+    let mut cfg = presets::single_moe("phi-mini-moe", "rtx3090");
+    let model = ModelSpec::phi_mini_moe();
+    let expert_total = model.moe_layers() * model.experts * model.expert_bytes();
+    assert!(expert_total > 24 * (1 << 30), "expected memory pressure");
+    if policy == OffloadPolicy::None {
+        // All-resident reference needs a device that actually fits the
+        // model: an idealized 128 GB card (labelled as such below).
+        cfg.instances[0].mem_capacity = Some(128 << 30);
+    }
+    cfg.instances[0].offload = policy;
+    cfg.instances[0].gate = gate;
+    cfg.workload.num_requests = 60;
+    cfg.workload.arrival = llmservingsim::workload::Arrival::Poisson { rate: 0.5 };
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new(&[
+        "gate",
+        "offload",
+        "TTFT mean ms",
+        "TPOT mean ms",
+        "tok/s",
+        "makespan s",
+    ]);
+    for gate in [GateKind::Uniform, GateKind::Zipf { s: 1.2 }] {
+        for policy in [
+            OffloadPolicy::None,
+            OffloadPolicy::OnDemand,
+            OffloadPolicy::Prefetch,
+            OffloadPolicy::Pim,
+        ] {
+            let gate_name = match gate {
+                GateKind::Uniform => "uniform",
+                GateKind::Zipf { .. } => "zipf-1.2",
+            };
+            let (r, _) = run_config(constrained(policy, gate.clone()))?;
+            t.row(&[
+                gate_name.into(),
+                policy.as_str().into(),
+                format!("{:.2}", r.ttft_ns.mean / 1e6),
+                format!("{:.3}", r.tpot_ns.mean / 1e6),
+                format!("{:.0}", r.throughput_tps),
+                format!("{:.2}", r.makespan as f64 / 1e9),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nNOTE: 'none' keeps all experts resident (memory permitting) and is \
+         the upper bound; on-demand exposes every fetch; prefetch overlaps \
+         fetches with the previous layer's compute; pim moves expert compute \
+         to the memory device."
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! P/D disaggregation study (§II-B): compare a colocated 2-instance
+//! deployment against prefill/decode disaggregation across arrival rates,
+//! under both KV-transfer policies.
+//!
+//! The expected shape (Splitwise/DistServe): disaggregation trades a KV
+//! transfer per request for phase isolation — decode latency (ITL) stops
+//! being polluted by long prefills, at some TTFT cost at low rates.
+//!
+//! Run: `cargo run --release --example pd_disaggregation`
+
+use llmservingsim::config::{presets, KvTransferPolicy, SimConfig};
+use llmservingsim::coordinator::run_config;
+use llmservingsim::util::bench::Table;
+use llmservingsim::workload::Arrival;
+
+fn at_rate(mut cfg: SimConfig, rate: f64) -> SimConfig {
+    cfg.workload.arrival = Arrival::Poisson { rate };
+    cfg.workload.num_requests = 100;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    // Paper-scale: Llama3.1-8B on RTX3090-like devices (the §III-A setup),
+    // priced by the analytical backend. Rates chosen around the knee where
+    // prefill interference becomes visible.
+    let mut t = Table::new(&[
+        "rate req/s",
+        "system",
+        "TTFT p99 ms",
+        "ITL mean ms",
+        "ITL p99 ms",
+        "tok/s",
+    ]);
+    for rate in [0.25, 0.5, 1.0, 2.0] {
+        let colocated = at_rate(presets::multi_dense("llama3.1-8b", "rtx3090"), rate);
+        let (co, _) = run_config(colocated)?;
+
+        let pd = at_rate(presets::pd_dense("llama3.1-8b", "rtx3090"), rate);
+        let (pd_block, _) = run_config(pd.clone())?;
+
+        let mut pd_layered = pd;
+        for i in &mut pd_layered.instances {
+            i.kv_transfer = KvTransferPolicy::Layered;
+        }
+        let (pd_lay, _) = run_config(pd_layered)?;
+
+        for (name, r) in [
+            ("colocated 2x", &co),
+            ("P/D blocking", &pd_block),
+            ("P/D layered", &pd_lay),
+        ] {
+            t.row(&[
+                format!("{rate}"),
+                name.into(),
+                format!("{:.2}", r.ttft_ns.p99 / 1e6),
+                format!("{:.3}", r.itl_ns.mean / 1e6),
+                format!("{:.3}", r.itl_ns.p99 / 1e6),
+                format!("{:.0}", r.throughput_tps),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nexpected shape: P/D isolates decode from prefill interference \
+         (lower ITL tail under load); layered KV transfer recovers most of \
+         the blocking transfer's TTFT cost."
+    );
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Prefix-caching study (§II-D): session workload with shared system
+//! prompts, swept over cache scope (per-instance vs global) and eviction
+//! policy, reporting TTFT reduction and hit rates.
+//!
+//! Run: `cargo run --release --example prefix_caching`
+
+use llmservingsim::config::{presets, CacheScope, SimConfig};
+use llmservingsim::coordinator::run_config;
+use llmservingsim::memory::EvictPolicy;
+use llmservingsim::util::bench::Table;
+
+fn sessions(mut cfg: SimConfig) -> SimConfig {
+    // Paper-scale dense model so prefill compute (and thus PC savings) is
+    // substantial; long shared system prompts, RAG-agent style.
+    cfg.workload.num_requests = 120;
+    cfg.workload.sessions = 8;
+    cfg.workload.shared_prefix = 384;
+    cfg.workload.lengths.prompt_mu = 6.3; // median ~540 tokens
+    cfg.workload.arrival = llmservingsim::workload::Arrival::Poisson { rate: 1.0 };
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    // Baseline: same session workload, no prefix cache.
+    let (base, _) =
+        run_config(sessions(presets::multi_dense("llama3.1-8b", "rtx3090")))?;
+
+    let mut t = Table::new(&[
+        "scope",
+        "evict",
+        "hit rate %",
+        "TTFT mean ms",
+        "TTFT vs no-PC",
+        "tok/s",
+    ]);
+    t.row(&[
+        "(no cache)".into(),
+        "-".into(),
+        "0.0".into(),
+        format!("{:.2}", base.ttft_ns.mean / 1e6),
+        "1.00x".into(),
+        format!("{:.0}", base.throughput_tps),
+    ]);
+
+    for scope in [CacheScope::PerInstance, CacheScope::Global] {
+        for policy in [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::LargestFirst] {
+            let mut cfg = sessions(presets::with_prefix_cache(
+                presets::multi_dense("llama3.1-8b", "rtx3090"),
+                scope,
+            ));
+            for i in &mut cfg.instances {
+                if let Some(pc) = &mut i.prefix_cache {
+                    pc.policy = policy;
+                    // small device tier so eviction policy actually matters
+                    pc.device_fraction = 0.05;
+                }
+            }
+            let (r, summary) = run_config(cfg)?;
+            let hits: f64 = {
+                let total_q: u64 = summary
+                    .cache_stats
+                    .iter()
+                    .map(|c| c.queried_tokens)
+                    .sum();
+                let total_h: u64 = summary
+                    .cache_stats
+                    .iter()
+                    .map(|c| c.hit_tokens_device + c.hit_tokens_host)
+                    .sum();
+                if total_q == 0 {
+                    0.0
+                } else {
+                    total_h as f64 / total_q as f64 * 100.0
+                }
+            };
+            t.row(&[
+                match scope {
+                    CacheScope::PerInstance => "per-instance".into(),
+                    CacheScope::Global => "global".into(),
+                },
+                policy.as_str().into(),
+                format!("{hits:.1}"),
+                format!("{:.2}", r.ttft_ns.mean / 1e6),
+                format!("{:.2}x", base.ttft_ns.mean / r.ttft_ns.mean.max(1.0)),
+                format!("{:.0}", r.throughput_tps),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nexpected shape: global scope + prefix-aware routing concentrates \
+         session prefixes, raising hit rate; TTFT improves with hit rate \
+         (the paper's motivation for modeling PC system-level)."
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: simulate a single-instance dense deployment serving 100
+//! ShareGPT-like requests at 10 req/s (the paper's §III-A workload) and
+//! print the serving metrics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use llmservingsim::config::presets;
+use llmservingsim::coordinator::run_config;
+use llmservingsim::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    // S(D) from Table II: 1 instance, 1x RTX3090-like device.
+    let cfg = presets::single_dense("tiny-dense", "rtx3090");
+    println!(
+        "simulating '{}': {} requests, Poisson 10 req/s, model={} hw={}",
+        cfg.name, cfg.workload.num_requests, cfg.instances[0].model,
+        cfg.instances[0].hardware
+    );
+
+    let t0 = std::time::Instant::now();
+    let (report, summary) = run_config(cfg)?;
+    let wall = t0.elapsed();
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["requests finished".into(), report.num_finished.to_string()]);
+    t.row(&[
+        "makespan".into(),
+        format!("{:.2} s", report.makespan as f64 / 1e9),
+    ]);
+    t.row(&[
+        "TTFT  mean / p99".into(),
+        format!(
+            "{:.2} / {:.2} ms",
+            report.ttft_ns.mean / 1e6,
+            report.ttft_ns.p99 / 1e6
+        ),
+    ]);
+    t.row(&[
+        "TPOT  mean".into(),
+        format!("{:.3} ms", report.tpot_ns.mean / 1e6),
+    ]);
+    t.row(&[
+        "ITL   mean / p99".into(),
+        format!(
+            "{:.3} / {:.3} ms",
+            report.itl_ns.mean / 1e6,
+            report.itl_ns.p99 / 1e6
+        ),
+    ]);
+    t.row(&[
+        "throughput".into(),
+        format!("{:.1} tok/s", report.throughput_tps),
+    ]);
+    t.row(&["engine steps".into(), summary.steps.to_string()]);
+    t.row(&[
+        "simulation wall-clock".into(),
+        format!("{:.3} s", wall.as_secs_f64()),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,234 @@
+"""AOT lowering: operator zoo -> HLO text artifacts + manifest.
+
+This is the compile-path half of the three-layer architecture. It lowers
+every (operator, grid-shape) pair from ``model.py`` to HLO *text* (NOT a
+serialized HloModuleProto: jax >= 0.5 emits 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly) and writes a ``manifest.json`` that the Rust runtime
+uses to (a) profile each operator on the PJRT backend and (b) execute ops in
+the Fig. 2 ground-truth engine.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--quick]
+
+Python runs ONCE here; nothing in this package is imported at simulation
+time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Shape grids. The trace-driven perf model interpolates between grid points,
+# so the grids are geometric in the token/context dimensions (latency is
+# piecewise-linear in tokens for GEMMs and in ctx for attention).
+TOKEN_GRID = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512]
+EXPERT_TOKEN_GRID = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+PREFILL_GRID = [16, 32, 64, 128, 256, 512]
+DECODE_BATCH_GRID = [1, 2, 4, 8, 16, 32]
+DECODE_CTX_GRID = [64, 128, 256, 512]
+
+QUICK_TOKEN_GRID = [1, 8, 64]
+QUICK_PREFILL_GRID = [16, 64]
+QUICK_DECODE_BATCH_GRID = [1, 4]
+QUICK_DECODE_CTX_GRID = [64, 128]
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> HLO text via StableHLO -> XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": "f32"}
+
+
+# --------------------------------------------------------------------------
+# Operator catalogue: (op kind, callable, param specs, grid vars, flops, bytes)
+# --------------------------------------------------------------------------
+
+def catalogue(cfg: M.ModelConfig, quick: bool):
+    """Yield one entry per (operator, grid point) for a model config."""
+    h, nh, d = cfg.hidden, cfg.heads, cfg.head_dim
+    f, v = cfg.ffn, cfg.vocab
+    tok_grid = QUICK_TOKEN_GRID if quick else TOKEN_GRID
+    exp_grid = QUICK_TOKEN_GRID if quick else EXPERT_TOKEN_GRID
+    pre_grid = QUICK_PREFILL_GRID if quick else PREFILL_GRID
+    db_grid = QUICK_DECODE_BATCH_GRID if quick else DECODE_BATCH_GRID
+    dc_grid = QUICK_DECODE_CTX_GRID if quick else DECODE_CTX_GRID
+
+    for t in tok_grid:
+        yield dict(
+            name=f"qkv_proj_t{t}",
+            op="qkv_proj",
+            fn=lambda x, wq, wk, wv: M.qkv_proj(x, wq, wk, wv, heads=nh),
+            specs=[f32(t, h), f32(h, h), f32(h, h), f32(h, h)],
+            grid={"tokens": t},
+            flops=2 * t * h * h * 3,
+            bytes=4 * (t * h + 3 * h * h + 3 * t * h),
+        )
+        yield dict(
+            name=f"out_proj_t{t}",
+            op="out_proj",
+            fn=lambda a, wo: (M.out_proj(a, wo),),
+            specs=[f32(nh, t, d), f32(h, h)],
+            grid={"tokens": t},
+            flops=2 * t * h * h,
+            bytes=4 * (t * h * 2 + h * h),
+        )
+        yield dict(
+            name=f"ffn_t{t}",
+            op="ffn",
+            fn=lambda x, w1, w3, w2: (M.ffn(x, w1, w3, w2),),
+            specs=[f32(t, h), f32(h, f), f32(h, f), f32(f, h)],
+            grid={"tokens": t},
+            flops=2 * t * h * f * 3,
+            bytes=4 * (t * h * 2 + 3 * h * f),
+        )
+        yield dict(
+            name=f"lm_head_t{t}",
+            op="lm_head",
+            fn=lambda x, wl: (M.lm_head(x, wl),),
+            specs=[f32(t, h), f32(h, v)],
+            grid={"tokens": t},
+            flops=2 * t * h * v,
+            bytes=4 * (t * h + h * v + t * v),
+        )
+        yield dict(
+            name=f"rmsnorm_t{t}",
+            op="rmsnorm",
+            fn=lambda x, g: (M.rmsnorm(x, g),),
+            specs=[f32(t, h), f32(h)],
+            grid={"tokens": t},
+            flops=4 * t * h,
+            bytes=4 * (2 * t * h + h),
+        )
+
+    for s in pre_grid:
+        yield dict(
+            name=f"attn_prefill_s{s}",
+            op="attn_prefill",
+            fn=lambda q, k, v: (M.attn_prefill(q, k, v),),
+            specs=[f32(nh, s, d)] * 3,
+            grid={"tokens": s},
+            flops=2 * nh * s * s * d * 2,  # QK^T + PV (causal ~/2 ignored)
+            bytes=4 * nh * s * d * 4,
+        )
+
+    for b in db_grid:
+        for c in dc_grid:
+            yield dict(
+                name=f"attn_decode_b{b}_c{c}",
+                op="attn_decode",
+                fn=lambda q, kc, vc: (M.attn_decode(q, kc, vc),),
+                specs=[f32(b, nh, d), f32(b, nh, c, d), f32(b, nh, c, d)],
+                grid={"batch": b, "ctx": c},
+                flops=2 * b * nh * c * d * 2,
+                bytes=4 * b * nh * (2 * c * d + 2 * d),
+            )
+
+    if cfg.is_moe:
+        e, fe = cfg.experts, cfg.expert_ffn
+        for t in tok_grid:
+            yield dict(
+                name=f"moe_gate_t{t}",
+                op="moe_gate",
+                fn=lambda x, wg: (M.moe_gate(x, wg),),
+                specs=[f32(t, h), f32(h, e)],
+                grid={"tokens": t},
+                flops=2 * t * h * e,
+                bytes=4 * (t * h + h * e + t * e),
+            )
+        for t in exp_grid:
+            yield dict(
+                name=f"expert_ffn_t{t}",
+                op="expert_ffn",
+                fn=lambda x, w1, w3, w2: (M.expert_ffn(x, w1, w3, w2),),
+                specs=[f32(t, h), f32(h, fe), f32(h, fe), f32(fe, h)],
+                grid={"tokens": t},
+                flops=2 * t * h * fe * 3,
+                bytes=4 * (t * h * 2 + 3 * h * fe),
+            )
+
+
+def lower_model(cfg: M.ModelConfig, out_dir: str, quick: bool):
+    """Lower every catalogue entry; return manifest op records."""
+    op_dir = os.path.join(out_dir, "ops", cfg.name)
+    os.makedirs(op_dir, exist_ok=True)
+    records = []
+    for entry in catalogue(cfg, quick):
+        lowered = jax.jit(entry["fn"]).lower(*entry["specs"])
+        text = to_hlo_text(lowered)
+        rel = os.path.join("ops", cfg.name, entry["name"] + ".hlo.txt")
+        with open(os.path.join(out_dir, rel), "w") as fp:
+            fp.write(text)
+        records.append(
+            {
+                "name": entry["name"],
+                "op": entry["op"],
+                "file": rel,
+                "params": [_spec_json(s) for s in entry["specs"]],
+                "grid": entry["grid"],
+                "flops": entry["flops"],
+                "bytes": entry["bytes"],
+            }
+        )
+        print(f"  {cfg.name}/{entry['name']}: {len(text)} chars")
+    return records
+
+
+def model_json(cfg: M.ModelConfig):
+    return {
+        "name": cfg.name,
+        "hidden": cfg.hidden,
+        "heads": cfg.heads,
+        "ffn": cfg.ffn,
+        "layers": cfg.layers,
+        "vocab": cfg.vocab,
+        "experts": cfg.experts,
+        "top_k": cfg.top_k,
+        "expert_ffn": cfg.expert_ffn,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models", default="tiny-dense,tiny-moe", help="comma-separated presets"
+    )
+    ap.add_argument(
+        "--quick", action="store_true", help="small grids (CI / pytest)"
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 2, "quick": args.quick, "models": []}
+    for name in args.models.split(","):
+        cfg = M.PRESETS[name.strip()]
+        print(f"lowering {cfg.name} ...")
+        records = lower_model(cfg, args.out, args.quick)
+        manifest["models"].append({"model": model_json(cfg), "ops": records})
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as fp:
+        json.dump(manifest, fp, indent=1)
+    n_ops = sum(len(m["ops"]) for m in manifest["models"])
+    print(f"wrote {n_ops} op artifacts + {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels: attention (prefill/decode) and MoE expert FFN."""
+
+from .attention import attn_prefill, attn_decode
+from .moe import expert_ffn
+from . import ref
+
+__all__ = ["attn_prefill", "attn_decode", "expert_ffn", "ref"]

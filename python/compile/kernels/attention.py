@@ -1,0 +1,161 @@
+"""Pallas attention kernels (the L1 hot-spot).
+
+Two kernels, both written in the flash-attention online-softmax style and
+tiled for TPU VMEM via BlockSpec:
+
+* ``attn_prefill`` — causal multi-head attention over a full prompt. The grid
+  iterates (head, query-block); each program streams KV blocks through an
+  online-softmax ``fori_loop``. On a real TPU the BlockSpec expresses the
+  HBM->VMEM schedule that the GPU flash-attention paper expressed with
+  threadblocks; the MXU sees (BQ x d) @ (d x BK) tiles.
+
+* ``attn_decode`` — one query token per sequence against a KV cache. The grid
+  iterates (batch, head); the context dimension is streamed in BK-sized
+  blocks with the same online softmax, bounding VMEM at O(BK * d).
+
+Both kernels MUST run with ``interpret=True`` here: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers the kernel to
+plain HLO so the Rust runtime can load the artifact. Real-TPU VMEM/MXU
+estimates for these block shapes live in DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes. BQ/BK are chosen so that a (BQ, d) query tile, a
+# (BK, d) KV tile, and the (BQ, BK) score tile all fit comfortably in VMEM
+# (~16 MB/core) with double buffering at paper-scale d (128): that's
+# 64*128*4 * 3 buffers * 2 ~= 200 KB, leaving headroom for the accumulator.
+DEFAULT_BQ = 64
+DEFAULT_BK = 64
+NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, scale):
+    """One (head, q-block) program of causal flash attention."""
+    qi = pl.program_id(1)
+    q = q_ref[0] * scale  # [bq, d]
+    d = q.shape[-1]
+    # Causal: query block qi only attends to KV blocks j <= qi (in bq units;
+    # bq == bk is asserted by the wrapper so block-diagonal masking is exact).
+    num_kv_blocks = qi + 1
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None)))  # [bk, d]
+        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None)))  # [bk, d]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+        # Mask the diagonal block; blocks j < qi are fully visible.
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))  # [bq]
+        p = jnp.exp(s - m_new[:, None])  # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)  # [bq]
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kv_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def attn_prefill(q, k, v, *, bq=DEFAULT_BQ, bk=DEFAULT_BK, scale=None):
+    """Causal flash attention over a prompt.
+
+    Args:
+      q, k, v: ``[nh, S, d]``; S must be divisible by ``bq`` (== ``bk``).
+
+    Returns:
+      ``[nh, S, d]`` attention output.
+    """
+    nh, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    if bq != bk:
+        raise ValueError(f"bq ({bq}) must equal bk ({bk}) for causal blocking")
+    if s % bq != 0:
+        raise ValueError(f"seq len {s} not divisible by block {bq}")
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    grid = (nh, s // bq)
+    kernel = functools.partial(_prefill_kernel, bq=bq, bk=bk, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, s, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nh, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, o_ref, *, bk, ctx, scale):
+    """One (batch, head) program of decode attention over the KV cache."""
+    q = q_ref[0, 0] * scale  # [d]
+    d = q.shape[-1]
+    num_blocks = ctx // bk
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (0, 0, pl.dslice(j * bk, bk), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.dslice(j * bk, bk), slice(None)))
+        s = jnp.dot(k, q, preferred_element_type=jnp.float32)  # [bk]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)  # [bk]
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p)
+        acc = acc * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_blocks, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / l).astype(o_ref.dtype)
+
+
+def attn_decode(q, k, v, *, bk=DEFAULT_BK, scale=None):
+    """Decode attention: one query token per sequence vs. a KV cache.
+
+    Args:
+      q: ``[B, nh, d]``; k, v: ``[B, nh, C, d]`` with C divisible by ``bk``.
+
+    Returns:
+      ``[B, nh, d]``.
+    """
+    b, nh, d = q.shape
+    ctx = k.shape[2]
+    bk = min(bk, ctx)
+    if ctx % bk != 0:
+        raise ValueError(f"context {ctx} not divisible by block {bk}")
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    grid = (b, nh)
+    kernel = functools.partial(_decode_kernel, bk=bk, ctx=ctx, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((1, 1, ctx, d), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, ctx, d), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, h: (i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,66 @@
+"""Pallas expert-FFN kernel (the MoE hot-spot).
+
+``expert_ffn`` computes a SwiGLU feed-forward for one expert over a tile of
+routed tokens. The grid iterates token blocks; the three weight matrices are
+held resident (at paper-scale expert dims H=4096, F=1408 that is
+3*4096*1408*2B bf16 ~= 34 MB, which on a real TPU would be further tiled over
+F — the BlockSpec below already expresses the F-tiling hook via ``bf``).
+The token-block matmuls are MXU-shaped: (BT x H) @ (H x BF).
+
+interpret=True for the same reason as attention.py: the Rust CPU-PJRT
+runtime must be able to execute the lowered HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BT = 32
+
+
+def _expert_ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One token-block program: SwiGLU through a single expert's weights."""
+    x = x_ref[...]  # [bt, H]
+    w1 = w1_ref[...]  # [H, F]
+    w3 = w3_ref[...]
+    w2 = w2_ref[...]  # [F, H]
+    a = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    b = jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    h = jax.nn.silu(a) * b  # [bt, F]
+    o_ref[...] = jnp.dot(h, w2, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def expert_ffn(x, w1, w3, w2, *, bt=DEFAULT_BT):
+    """SwiGLU FFN for one expert over routed tokens.
+
+    Args:
+      x: ``[T, H]`` routed-token activations; T divisible by ``bt``.
+      w1, w3: ``[H, F]``; w2: ``[F, H]``.
+
+    Returns:
+      ``[T, H]``.
+    """
+    t, hd = x.shape
+    f = w1.shape[1]
+    bt = min(bt, t)
+    if t % bt != 0:
+        raise ValueError(f"token count {t} not divisible by block {bt}")
+
+    grid = (t // bt,)
+    return pl.pallas_call(
+        functools.partial(_expert_ffn_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, hd), lambda i: (i, 0)),
+            pl.BlockSpec((hd, f), lambda i: (0, 0)),
+            pl.BlockSpec((hd, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, hd), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, hd), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written in
+plain ``jax.numpy`` with no tiling, masking tricks, or custom control flow.
+``python/tests`` sweeps shapes/dtypes with hypothesis and asserts the Pallas
+kernels (interpret=True) match these oracles to float32 tolerance.
+"""
+
+import jax.numpy as jnp
+from jax import nn
+
+
+def attn_prefill_ref(q, k, v, scale=None):
+    """Causal multi-head attention over a full prompt.
+
+    Args:
+      q, k, v: ``[nh, S, d]`` float arrays.
+      scale: optional softmax scale; defaults to ``1/sqrt(d)``.
+
+    Returns:
+      ``[nh, S, d]`` attention output.
+    """
+    nh, s, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -jnp.inf)
+    probs = nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def attn_decode_ref(q, k, v, scale=None):
+    """Single-token decode attention against a KV cache.
+
+    Args:
+      q: ``[B, nh, d]`` — one query token per sequence.
+      k, v: ``[B, nh, C, d]`` — KV cache of context length C.
+
+    Returns:
+      ``[B, nh, d]`` attention output.
+    """
+    b, nh, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhd,bhcd->bhc", q, k) * scale
+    probs = nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhc,bhcd->bhd", probs, v)
+
+
+def swiglu_ffn_ref(x, w1, w3, w2):
+    """SwiGLU feed-forward: ``(silu(x @ w1) * (x @ w3)) @ w2``.
+
+    Args:
+      x: ``[T, H]`` activations.
+      w1, w3: ``[H, F]`` up projections.
+      w2: ``[F, H]`` down projection.
+    """
+    a = nn.silu(x @ w1)
+    b = x @ w3
+    return (a * b) @ w2
+
+
+def moe_gate_ref(x, wg, top_k):
+    """Top-k softmax gate.
+
+    Args:
+      x: ``[T, H]``; wg: ``[H, E]``.
+
+    Returns:
+      (weights ``[T, top_k]`` normalized over the selected experts,
+       indices ``[T, top_k]`` int32)
+    """
+    logits = x @ wg
+    probs = nn.softmax(logits, axis=-1)
+    w, idx = jnp.sort(probs, axis=-1)[:, ::-1], jnp.argsort(probs, axis=-1)[:, ::-1]
+    w, idx = w[:, :top_k], idx[:, :top_k]
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w, idx.astype(jnp.int32)

@@ -1,0 +1,210 @@
+"""L2 operator zoo: the JAX compute graph of a transformer decoder, split
+into the per-operator units that LLMServingSim2.0's trace-driven performance
+model is keyed on.
+
+The simulator (Rust, L3) composes end-to-end iteration latency from
+*operator* latencies — exactly the granularity the paper's operator-level
+profiler hooks measure between LLM layers. Each function here is one such
+operator; ``aot.py`` lowers each one at a grid of shapes to HLO text, and
+the Rust profiler measures them on the PJRT backend.
+
+All weights are *parameters* (not baked constants) so the HLO stays small
+and the Rust side can feed deterministic random weights; activations are the
+leading parameters. Layouts:
+
+  qkv_proj     x[T,H], wq[H,H], wk[H,H], wv[H,H]       -> q,k,v  [nh,T,d] / [T,nh,d]
+  attn_prefill q,k,v[nh,S,d]                            -> o[nh,S,d]   (Pallas)
+  attn_decode  q[B,nh,d], kc,vc[B,nh,C,d]               -> o[B,nh,d]   (Pallas)
+  out_proj     a[T,H], wo[H,H]                          -> x[T,H]
+  ffn          x[T,H], w1[H,F], w3[H,F], w2[F,H]        -> x[T,H]      (dense SwiGLU)
+  moe_gate     x[T,H], wg[H,E]                          -> probs[T,E]
+  expert_ffn   x[T,H], w1[H,Fe], w3[H,Fe], w2[Fe,H]     -> x[T,H]      (Pallas)
+  lm_head      x[T,H], wl[H,V]                          -> logits[T,V]
+  rmsnorm      x[T,H], g[H]                             -> x[T,H]
+
+``dense_layer`` / ``moe_layer`` compose the full decoder layer for the
+pytest shape checks and the Fig. 2 ground-truth engine's block mode.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attn_prefill as _attn_prefill_kernel
+from .kernels import attn_decode as _attn_decode_kernel
+from .kernels import expert_ffn as _expert_ffn_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters for one model preset."""
+
+    name: str
+    hidden: int
+    heads: int
+    ffn: int  # dense FFN inner dim (SwiGLU)
+    layers: int
+    vocab: int
+    experts: int = 0  # 0 => dense model
+    top_k: int = 0
+    expert_ffn: int = 0  # per-expert inner dim
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.experts > 0
+
+
+# Presets. tiny-* are actually executed/profiled on the CPU PJRT backend;
+# the paper-scale specs are used by the simulator's calibrated analytical
+# extension (see rust/src/perf/). Mirrored in rust/src/model/.
+TINY_DENSE = ModelConfig(
+    name="tiny-dense", hidden=256, heads=8, ffn=1024, layers=4, vocab=2048
+)
+TINY_MOE = ModelConfig(
+    name="tiny-moe",
+    hidden=256,
+    heads=8,
+    ffn=1024,
+    layers=4,
+    vocab=2048,
+    experts=8,
+    top_k=2,
+    expert_ffn=512,
+)
+PRESETS = {c.name: c for c in (TINY_DENSE, TINY_MOE)}
+
+
+# --------------------------------------------------------------------------
+# Elementary operators
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-5):
+    """RMSNorm over the hidden dimension."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def qkv_proj(x, wq, wk, wv, *, heads):
+    """Project activations to per-head Q/K/V.
+
+    Returns q, k, v each shaped ``[nh, T, d]`` (prefill layout).
+    """
+    t, h = x.shape
+    d = h // heads
+
+    def split(y):
+        return y.reshape(t, heads, d).transpose(1, 0, 2)
+
+    return split(x @ wq), split(x @ wk), split(x @ wv)
+
+
+def attn_prefill(q, k, v):
+    """Causal prefill attention (Pallas flash kernel)."""
+    return _attn_prefill_kernel(q, k, v)
+
+
+def attn_decode(q, kc, vc):
+    """Decode attention against the KV cache (Pallas kernel)."""
+    return _attn_decode_kernel(q, kc, vc)
+
+
+def out_proj(a, wo):
+    """Merge heads and apply the output projection.
+
+    Args:
+      a: ``[nh, T, d]`` attention output.
+    """
+    nh, t, d = a.shape
+    return a.transpose(1, 0, 2).reshape(t, nh * d) @ wo
+
+
+def ffn(x, w1, w3, w2):
+    """Dense SwiGLU FFN (pure-jnp; XLA fuses this well on its own)."""
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def moe_gate(x, wg):
+    """Softmax gate probabilities ``[T, E]`` (top-k selection happens in the
+    simulator's expert router, which mimics this gate's output statistics)."""
+    return jax.nn.softmax(x @ wg, axis=-1)
+
+
+def expert_ffn(x, w1, w3, w2):
+    """One expert's SwiGLU FFN over its routed tokens (Pallas kernel)."""
+    return _expert_ffn_kernel(x, w1, w3, w2)
+
+
+def lm_head(x, wl):
+    """Final vocabulary projection."""
+    return x @ wl
+
+
+# --------------------------------------------------------------------------
+# Layer compositions (shape checks + ground-truth block mode)
+# --------------------------------------------------------------------------
+
+def dense_layer_prefill(x, params, *, heads):
+    """One full dense decoder layer over a prompt. ``params`` is a dict with
+    wq/wk/wv/wo/w1/w3/w2/g1/g2."""
+    h = rmsnorm(x, params["g1"])
+    q, k, v = qkv_proj(h, params["wq"], params["wk"], params["wv"], heads=heads)
+    a = attn_prefill(q, k, v)
+    x = x + out_proj(a, params["wo"])
+    h = rmsnorm(x, params["g2"])
+    return x + ffn(h, params["w1"], params["w3"], params["w2"])
+
+
+def moe_layer_prefill(x, params, *, heads, top_k):
+    """One MoE decoder layer over a prompt. Dense-equivalent gating: computes
+    the gate, then runs every expert over all tokens weighted by its gate
+    mass (numerically equals top-k dispatch when the weights are re-zeroed to
+    the top-k support, which the test does)."""
+    h = rmsnorm(x, params["g1"])
+    q, k, v = qkv_proj(h, params["wq"], params["wk"], params["wv"], heads=heads)
+    a = attn_prefill(q, k, v)
+    x = x + out_proj(a, params["wo"])
+    h = rmsnorm(x, params["g2"])
+    probs = moe_gate(h, params["wg"])  # [T, E]
+    # top-k mask + renormalize
+    e = probs.shape[-1]
+    thresh = jnp.sort(probs, axis=-1)[:, e - top_k][:, None]
+    mask = probs >= thresh
+    w = jnp.where(mask, probs, 0.0)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.zeros_like(x)
+    for i in range(e):
+        y = expert_ffn(
+            h, params["we1"][i], params["we3"][i], params["we2"][i]
+        )
+        out = out + w[:, i : i + 1] * y
+    return x + out
+
+
+def init_params(cfg: ModelConfig, key):
+    """Deterministic small-magnitude parameters for one layer."""
+    h, f = cfg.hidden, cfg.ffn
+    ks = jax.random.split(key, 12)
+    scale = 0.02
+    p = {
+        "wq": jax.random.normal(ks[0], (h, h)) * scale,
+        "wk": jax.random.normal(ks[1], (h, h)) * scale,
+        "wv": jax.random.normal(ks[2], (h, h)) * scale,
+        "wo": jax.random.normal(ks[3], (h, h)) * scale,
+        "w1": jax.random.normal(ks[4], (h, f)) * scale,
+        "w3": jax.random.normal(ks[5], (h, f)) * scale,
+        "w2": jax.random.normal(ks[6], (f, h)) * scale,
+        "g1": jnp.ones((h,)),
+        "g2": jnp.ones((h,)),
+    }
+    if cfg.is_moe:
+        fe, e = cfg.expert_ffn, cfg.experts
+        p["wg"] = jax.random.normal(ks[7], (h, e)) * scale
+        p["we1"] = jax.random.normal(ks[8], (e, h, fe)) * scale
+        p["we3"] = jax.random.normal(ks[9], (e, h, fe)) * scale
+        p["we2"] = jax.random.normal(ks[10], (e, fe, h)) * scale
+    return p

@@ -1,0 +1,107 @@
+"""AOT pipeline: HLO-text emission + manifest integrity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_roundtrippable():
+    def fn(x, y):
+        return (x @ y + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert text.startswith("HloModule")
+    assert "parameter(0)" in text and "parameter(1)" in text
+    # The xla crate's text parser needs the entry computation marker.
+    assert "ENTRY" in text
+
+
+def test_catalogue_covers_all_ops_dense():
+    ops = {e["op"] for e in aot.catalogue(M.TINY_DENSE, quick=True)}
+    assert ops == {
+        "qkv_proj",
+        "out_proj",
+        "ffn",
+        "lm_head",
+        "rmsnorm",
+        "attn_prefill",
+        "attn_decode",
+    }
+
+
+def test_catalogue_covers_all_ops_moe():
+    ops = {e["op"] for e in aot.catalogue(M.TINY_MOE, quick=True)}
+    assert "moe_gate" in ops and "expert_ffn" in ops
+
+
+def test_catalogue_flops_monotone_in_tokens():
+    entries = [
+        e for e in aot.catalogue(M.TINY_DENSE, quick=False) if e["op"] == "ffn"
+    ]
+    toks = [e["grid"]["tokens"] for e in entries]
+    flops = [e["flops"] for e in entries]
+    assert toks == sorted(toks)
+    assert flops == sorted(flops)
+    # FLOPs linear in tokens for GEMMs
+    assert flops[-1] * toks[0] == flops[0] * toks[-1]
+
+
+def test_catalogue_names_unique():
+    names = [e["name"] for e in aot.catalogue(M.TINY_MOE, quick=False)]
+    assert len(names) == len(set(names))
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out",
+            str(out),
+            "--quick",
+            "--models",
+            "tiny-dense",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    return out
+
+
+def test_manifest_schema(quick_artifacts):
+    manifest = json.loads((quick_artifacts / "manifest.json").read_text())
+    assert manifest["version"] == 2
+    (m,) = manifest["models"]
+    assert m["model"]["name"] == "tiny-dense"
+    assert m["model"]["hidden"] == 256
+    for op in m["ops"]:
+        assert set(op) >= {"name", "op", "file", "params", "grid", "flops", "bytes"}
+        f = quick_artifacts / op["file"]
+        assert f.exists(), op["file"]
+        text = f.read_text()
+        assert text.startswith("HloModule")
+        # every declared param appears in the HLO signature
+        assert text.count("parameter(") >= len(op["params"])
+
+
+def test_manifest_param_shapes_match_hlo(quick_artifacts):
+    manifest = json.loads((quick_artifacts / "manifest.json").read_text())
+    (m,) = manifest["models"]
+    for op in m["ops"][:10]:
+        text = (quick_artifacts / op["file"]).read_text()
+        for p in op["params"]:
+            dims = ",".join(str(d) for d in p["shape"])
+            token = f"f32[{dims}]"
+            assert token in text, f"{op['name']}: {token} not in HLO"

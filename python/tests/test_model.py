@@ -1,0 +1,76 @@
+"""Operator zoo shape/consistency checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+
+def _x(t, h, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (t, h)) * 0.5
+
+
+def test_qkv_proj_shapes_and_values():
+    cfg = M.TINY_DENSE
+    h, nh, d = cfg.hidden, cfg.heads, cfg.head_dim
+    t = 16
+    x = _x(t, h)
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    wq, wk, wv = (jax.random.normal(k, (h, h)) * 0.05 for k in keys)
+    q, k, v = M.qkv_proj(x, wq, wk, wv, heads=nh)
+    assert q.shape == (nh, t, d)
+    # head 0 of q equals first d columns of x @ wq
+    np.testing.assert_allclose(q[0], (x @ wq)[:, :d], rtol=1e-5, atol=1e-5)
+
+
+def test_out_proj_inverts_head_split():
+    cfg = M.TINY_DENSE
+    h, nh, d = cfg.hidden, cfg.heads, cfg.head_dim
+    t = 8
+    a = jax.random.normal(jax.random.PRNGKey(0), (nh, t, d))
+    out = M.out_proj(a, jnp.eye(h))
+    merged = a.transpose(1, 0, 2).reshape(t, h)
+    np.testing.assert_allclose(out, merged, rtol=1e-6, atol=1e-6)
+
+
+def test_rmsnorm_unit_scale():
+    x = _x(4, 64)
+    y = M.rmsnorm(x, jnp.ones((64,)))
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_dense_layer_prefill_composes():
+    cfg = M.TINY_DENSE
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    x = _x(64, cfg.hidden)
+    y = M.dense_layer_prefill(x, params, heads=cfg.heads)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_dense_layer_is_deterministic():
+    cfg = M.TINY_DENSE
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    x = _x(32, cfg.hidden)
+    y1 = M.dense_layer_prefill(x, params, heads=cfg.heads)
+    y2 = M.dense_layer_prefill(x, params, heads=cfg.heads)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_presets_consistency():
+    for cfg in M.PRESETS.values():
+        assert cfg.hidden % cfg.heads == 0
+        if cfg.is_moe:
+            assert 0 < cfg.top_k <= cfg.experts
+            assert cfg.expert_ffn > 0
+
+
+def test_moe_gate_probabilities():
+    cfg = M.TINY_MOE
+    x = _x(16, cfg.hidden)
+    wg = jax.random.normal(jax.random.PRNGKey(2), (cfg.hidden, cfg.experts)) * 0.1
+    p = M.moe_gate(x, wg)
+    assert p.shape == (16, cfg.experts)
+    np.testing.assert_allclose(np.sum(np.asarray(p), axis=-1), 1.0, rtol=1e-5)

@@ -1,0 +1,158 @@
+//! Fig. 2 reproduction: latency (a: TPOT, ITL) and throughput (b) of the
+//! trace-driven simulator vs the real (ground-truth execution) system,
+//! across the five Table II configurations SD, SM, MD, MM, PDD.
+//!
+//! Paper setup: vLLM on 4x RTX 3090 is the real system. Here the real
+//! system is the same serving stack executing its compiled HLO operators on
+//! the CPU PJRT client (DESIGN.md §1); the simulator predicts it from
+//! profiled traces. Expected shape: error within single-digit percent;
+//! single-instance < multi-instance < PDD/MoE error ordering.
+//!
+//! Run: `cargo bench --bench fig2_validation`
+//! (needs `make artifacts`; profiles on first run)
+//! Env: LLMSS_REQUESTS=100 for the paper's full request count.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use llmservingsim::config::{presets, PerfBackend, SimConfig};
+use llmservingsim::coordinator::{run_config, Simulation};
+use llmservingsim::groundtruth::ExecPerfModel;
+use llmservingsim::metrics::Report;
+use llmservingsim::runtime::profiler::{profile_to_file, ProfileOptions};
+use llmservingsim::util::bench::Table;
+use llmservingsim::workload::LengthDist;
+
+fn requests() -> usize {
+    std::env::var("LLMSS_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30)
+}
+
+fn ensure_trace(root: &PathBuf, model: &str) -> anyhow::Result<String> {
+    // Always re-profile: on a shared machine, traces must be contemporaneous
+    // with the ground-truth runs they are validated against.
+    let p = root.join(format!("traces/cpu-pjrt-{model}.json"));
+    eprintln!("profiling {model} ...");
+    profile_to_file(root, model, &p, &ProfileOptions::default())?;
+    Ok(p.to_string_lossy().into_owned())
+}
+
+fn prep(mut cfg: SimConfig) -> SimConfig {
+    for i in &mut cfg.instances {
+        i.hardware = "cpu-pjrt".into();
+    }
+    cfg.workload.num_requests = requests();
+    cfg.workload.lengths = LengthDist::short();
+    // The paper's arrival process: Poisson at 10 req/s (§III-A). With
+    // device-resident inputs the CPU-PJRT testbed sustains this at moderate
+    // utilization, like the paper's GPU testbed.
+    cfg.workload.arrival = llmservingsim::workload::Arrival::Poisson { rate: 10.0 };
+    cfg
+}
+
+fn ground_truth(
+    cfg: &SimConfig,
+    engines: &[(String, Rc<ExecPerfModel>)],
+) -> anyhow::Result<Report> {
+    let engines = engines.to_vec();
+    let mut sim = Simulation::with_perf_factory(cfg.clone(), &move |_, model, _| {
+        let found = engines
+            .iter()
+            .find(|(m, _)| m == &model.name)
+            .expect("engine prepared in main");
+        Ok(found.1.clone() as Rc<dyn llmservingsim::perf::PerfModel>)
+    })?;
+    Ok(sim.run())
+}
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    // Shared, pre-warmed ground-truth engines (compile cost excluded from
+    // serving measurements, as with any warmed-up real serving stack).
+    // Warm-up happens BEFORE profiling so the profiler measures in the same
+    // process memory state (hundreds of resident executables) the ground
+    // truth will execute in.
+    eprintln!("warming ground-truth engines ...");
+    let engines: Vec<(String, Rc<ExecPerfModel>)> = vec![
+        (
+            "tiny-dense".into(),
+            Rc::new(ExecPerfModel::new(&root, "tiny-dense")?),
+        ),
+        (
+            "tiny-moe".into(),
+            Rc::new(ExecPerfModel::new(&root, "tiny-moe")?),
+        ),
+    ];
+    let dense_trace = ensure_trace(&root, "tiny-dense")?;
+    let moe_trace = ensure_trace(&root, "tiny-moe")?;
+
+    let configs = presets::fig2_configs("tiny-dense", "tiny-moe", "cpu-pjrt");
+    let mut t2a = Table::new(&[
+        "config",
+        "TPOT real ms",
+        "TPOT sim ms",
+        "err %",
+        "ITL real ms",
+        "ITL sim ms",
+        "err %",
+    ]);
+    let mut t2b = Table::new(&["config", "thpt real tok/s", "thpt sim tok/s", "err %"]);
+    let mut errs = vec![];
+
+    for cfg in configs {
+        let cfg = prep(cfg);
+        let name = cfg.name.clone();
+        eprintln!("[{name}] ground truth ({} requests) ...", requests());
+        let gt = ground_truth(&cfg, &engines)?;
+
+        let mut sim_cfg = cfg.clone();
+        let is_moe = sim_cfg.instances[0].model.contains("moe");
+        sim_cfg.perf = PerfBackend::Trace {
+            path: if is_moe {
+                moe_trace.clone()
+            } else {
+                dense_trace.clone()
+            },
+        };
+        let (sim, _) = run_config(sim_cfg)?;
+
+        let e = sim.error_vs(&gt);
+        errs.push((name.clone(), e.mean()));
+        t2a.row(&[
+            name.clone(),
+            format!("{:.3}", gt.tpot_ns.mean / 1e6),
+            format!("{:.3}", sim.tpot_ns.mean / 1e6),
+            format!("{:.2}", e.tpot_pct),
+            format!("{:.3}", gt.itl_ns.mean / 1e6),
+            format!("{:.3}", sim.itl_ns.mean / 1e6),
+            format!("{:.2}", e.itl_pct),
+        ]);
+        t2b.row(&[
+            name,
+            format!("{:.1}", gt.throughput_tps),
+            format!("{:.1}", sim.throughput_tps),
+            format!("{:.2}", e.throughput_pct),
+        ]);
+    }
+
+    println!("\nFig. 2(a): TPOT and ITL, real vs simulated");
+    t2a.print();
+    println!("\nFig. 2(b): token generation throughput, real vs simulated");
+    t2b.print();
+    let mean = errs.iter().map(|(_, e)| e).sum::<f64>() / errs.len() as f64;
+    println!(
+        "\nmean validation error across configs: {:.2} %  (paper: 1.9 % avg, \
+         <5 % per config)",
+        mean
+    );
+    for (n, e) in &errs {
+        println!("  {n}: {e:.2} %");
+    }
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! Fig. 3 reproduction: wall-clock simulation time across nine serving
+//! configurations, comparing three simulator generations:
+//!
+//! * **LLMServingSim** — cycle-level hardware simulation per operator
+//!   invocation (`perf::cycle`, walking the systolic tile schedule);
+//! * **LLMServingSim+** — the same with computation reuse (`perf::replay`);
+//! * **LLMServingSim2.0** — trace-driven lookups (`perf::trace`).
+//!
+//! Expected shape (paper): cycle sim slowest by orders of magnitude
+//! (509x vs 2.0 in Table III); 2.0 fastest; runtime grows single < P/D <
+//! multi, MoE > dense; prefix caching can go either way.
+//!
+//! Run: `cargo bench --bench fig3_simtime`
+//! Env: LLMSS_REQUESTS=100 for the paper's full request count.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use llmservingsim::config::{presets, PerfBackend, SimConfig};
+use llmservingsim::coordinator::run_config;
+use llmservingsim::runtime::profiler::{profile_to_file, ProfileOptions};
+use llmservingsim::util::bench::Table;
+use llmservingsim::workload::LengthDist;
+
+fn requests() -> usize {
+    std::env::var("LLMSS_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50)
+}
+
+fn prep(mut cfg: SimConfig, perf: PerfBackend) -> SimConfig {
+    cfg.workload.num_requests = requests();
+    cfg.workload.lengths = LengthDist::short();
+    cfg.perf = perf;
+    cfg
+}
+
+fn time_run(cfg: SimConfig) -> anyhow::Result<f64> {
+    let t0 = Instant::now();
+    let (report, _) = run_config(cfg)?;
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(report.num_finished > 0);
+    Ok(dt)
+}
+
+fn ensure_trace(root: &PathBuf, model: &str) -> anyhow::Result<String> {
+    let p = root.join(format!("traces/cpu-pjrt-{model}.json"));
+    if !p.exists() {
+        eprintln!("profiling {model} (first run) ...");
+        profile_to_file(root, model, &p, &ProfileOptions::default())?;
+    }
+    Ok(p.to_string_lossy().into_owned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from("artifacts");
+    let have_artifacts = root.join("manifest.json").exists();
+
+    let mut t = Table::new(&[
+        "config",
+        "LLMServingSim (cycle) s",
+        "LLMServingSim+ (replay) s",
+        "2.0 (trace) s",
+        "cycle/2.0",
+        "replay/2.0",
+    ]);
+
+    for cfg in presets::fig3_configs("tiny-dense", "tiny-moe", "rtx3090") {
+        let name = cfg.name.clone();
+        eprintln!("[{name}] ...");
+        let cycle = time_run(prep(cfg.clone(), PerfBackend::Cycle))?;
+        let replay = time_run(prep(cfg.clone(), PerfBackend::CycleReplay))?;
+        // 2.0: trace-driven if artifacts exist; otherwise the calibrated
+        // analytical path exercises the same lookup-cost structure.
+        let trace_backend = if have_artifacts {
+            let model = if cfg.instances[0].model.contains("moe") {
+                "tiny-moe"
+            } else {
+                "tiny-dense"
+            };
+            PerfBackend::Trace {
+                path: ensure_trace(&root, model)?,
+            }
+        } else {
+            PerfBackend::Analytical
+        };
+        let trace = time_run(prep(cfg.clone(), trace_backend))?;
+        t.row(&[
+            name,
+            format!("{cycle:.3}"),
+            format!("{replay:.3}"),
+            format!("{trace:.3}"),
+            format!("{:.1}x", cycle / trace.max(1e-9)),
+            format!("{:.1}x", replay / trace.max(1e-9)),
+        ]);
+    }
+    println!(
+        "\nFig. 3: simulation wall-clock for {} ShareGPT-like requests",
+        requests()
+    );
+    t.print();
+    println!(
+        "\nexpected shape: cycle >> replay >= trace; single < P/D < multi; \
+         MoE > dense (per-layer expert routing overhead)."
+    );
+
+    // Paper-scale datapoint: the cycle/trace gap grows with model size
+    // (the paper's 509x is for full-size models on the NPU simulator).
+    eprintln!("[paper-scale S(D), llama3.1-8b, 3 requests] ...");
+    let mut big = presets::single_dense("llama3.1-8b", "rtx3090");
+    big.workload.num_requests = 3;
+    big.workload.lengths = LengthDist::short();
+    let mut c = big.clone();
+    c.perf = PerfBackend::Cycle;
+    let cyc = time_run(c)?;
+    let mut a = big.clone();
+    a.perf = PerfBackend::Analytical; // same O(1)-lookup cost class as trace
+    let tr = time_run(a)?;
+    println!(
+        "\npaper-scale extrapolation (Llama3.1-8B, 3 requests): cycle {cyc:.2} s \
+         vs O(1)-model {tr:.4} s -> {:.0}x (paper: 509x for the full run)",
+        cyc / tr.max(1e-9)
+    );
+    Ok(())
+}

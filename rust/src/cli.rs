@@ -1,0 +1,129 @@
+//! Minimal argument parser (clap is unavailable offline).
+//!
+//! Grammar: `llmservingsim <command> [--flag value]... [--switch]...`
+//! Flags may appear in any order; unknown flags are errors. Values are
+//! fetched typed with defaults.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_switches: &[&str],
+    ) -> anyhow::Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut switches = vec![];
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                anyhow::bail!("unexpected positional argument '{arg}'");
+            };
+            if known_switches.contains(&name) {
+                switches.push(name.to_string());
+            } else {
+                let value = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?;
+                flags.insert(name.to_string(), value);
+            }
+        }
+        Ok(Args {
+            command,
+            flags,
+            switches,
+        })
+    }
+
+    pub fn str_flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.str_flag(name).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = Args::parse(
+            argv("simulate --preset S(D) --requests 50 --quick"),
+            &["quick"],
+        )
+        .unwrap();
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.str_flag("preset"), Some("S(D)"));
+        assert_eq!(a.u64_or("requests", 100).unwrap(), 50);
+        assert!(a.switch("quick"));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(argv("profile"), &[]).unwrap();
+        assert_eq!(a.u64_or("reps", 7).unwrap(), 7);
+        assert_eq!(a.str_or("model", "tiny-dense"), "tiny-dense");
+        assert!((a.f64_or("rate", 10.0).unwrap() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(argv("run --out"), &[]).is_err());
+    }
+
+    #[test]
+    fn positional_is_error() {
+        assert!(Args::parse(argv("run stray"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(argv("run --n abc"), &[]).unwrap();
+        assert!(a.u64_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(Vec::<String>::new(), &[]).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,869 @@
+//! Simulation configuration: the JSON schema users write, plus built-in
+//! presets for the paper's Table II serving configurations.
+//!
+//! A [`SimConfig`] fully determines a simulation (given a trace DB for the
+//! trace-driven backend): instances with per-instance hardware/model/
+//! parallelism/policies, the global router policy, the workload, and the
+//! performance backend. Everything is plain data here; the serving layer
+//! interprets it.
+
+pub mod presets;
+
+use crate::memory::EvictPolicy;
+use crate::model::ModelSpec;
+use crate::perf::HardwareSpec;
+use crate::util::json::{self, Value};
+use crate::workload::{Arrival, LengthDist, WorkloadSpec};
+
+/// Instance role in a (possibly P/D-disaggregated) deployment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Runs both prefill and decode (non-disaggregated).
+    Unified,
+    /// Prefill-only instance; hands off KV to a decode instance.
+    Prefill,
+    /// Decode-only instance; receives KV from prefill instances.
+    Decode,
+}
+
+impl Role {
+    pub fn from_str(s: &str) -> Option<Role> {
+        Some(match s {
+            "unified" => Role::Unified,
+            "prefill" => Role::Prefill,
+            "decode" => Role::Decode,
+            _ => return None,
+        })
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Role::Unified => "unified",
+            Role::Prefill => "prefill",
+            Role::Decode => "decode",
+        }
+    }
+}
+
+/// Global request-router policy (§II-B: customizable routing interfaces).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    /// Fewest outstanding requests.
+    LeastOutstanding,
+    /// Lowest KV-block utilization.
+    LeastKvLoad,
+    /// Prefer the instance whose prefix cache holds the longest match.
+    PrefixAware,
+    /// Stick a session to one instance (falls back to least-outstanding).
+    SessionAffinity,
+}
+
+impl RouterPolicy {
+    pub fn from_str(s: &str) -> Option<RouterPolicy> {
+        Some(match s {
+            "round-robin" => RouterPolicy::RoundRobin,
+            "least-outstanding" => RouterPolicy::LeastOutstanding,
+            "least-kv" => RouterPolicy::LeastKvLoad,
+            "prefix-aware" => RouterPolicy::PrefixAware,
+            "session-affinity" => RouterPolicy::SessionAffinity,
+            _ => return None,
+        })
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastOutstanding => "least-outstanding",
+            RouterPolicy::LeastKvLoad => "least-kv",
+            RouterPolicy::PrefixAware => "prefix-aware",
+            RouterPolicy::SessionAffinity => "session-affinity",
+        }
+    }
+}
+
+/// Batch scheduling policy within an instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// First-come-first-served admission (vLLM default).
+    Fcfs,
+    /// Shortest prompt first.
+    Sjf,
+    /// Priority = waiting time (anti-starvation SJF hybrid).
+    Priority,
+}
+
+impl SchedPolicy {
+    pub fn from_str(s: &str) -> Option<SchedPolicy> {
+        Some(match s {
+            "fcfs" => SchedPolicy::Fcfs,
+            "sjf" => SchedPolicy::Sjf,
+            "priority" => SchedPolicy::Priority,
+            _ => return None,
+        })
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SchedPolicy::Fcfs => "fcfs",
+            SchedPolicy::Sjf => "sjf",
+            SchedPolicy::Priority => "priority",
+        }
+    }
+}
+
+/// MoE gate-mimic distribution (§II-C expert router).
+#[derive(Debug, Clone, PartialEq)]
+pub enum GateKind {
+    /// Tokens spread uniformly over experts.
+    Uniform,
+    /// Zipf-skewed expert popularity with exponent `s` (hot experts).
+    Zipf { s: f64 },
+}
+
+/// Expert-offloading strategy (§II-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadPolicy {
+    /// All experts resident in device memory.
+    None,
+    /// Experts fetched from host on demand (blocking).
+    OnDemand,
+    /// Pre-gated prefetch: next layer's experts fetched during the current
+    /// layer's compute; only mispredicted experts block.
+    Prefetch,
+    /// Experts execute in a PIM-like memory device; activations ship over
+    /// the host link instead of weights.
+    Pim,
+}
+
+impl OffloadPolicy {
+    pub fn from_str(s: &str) -> Option<OffloadPolicy> {
+        Some(match s {
+            "none" => OffloadPolicy::None,
+            "on-demand" => OffloadPolicy::OnDemand,
+            "prefetch" => OffloadPolicy::Prefetch,
+            "pim" => OffloadPolicy::Pim,
+            _ => return None,
+        })
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OffloadPolicy::None => "none",
+            OffloadPolicy::OnDemand => "on-demand",
+            OffloadPolicy::Prefetch => "prefetch",
+            OffloadPolicy::Pim => "pim",
+        }
+    }
+}
+
+/// KV-cache transfer policy for P/D disaggregation (§II-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvTransferPolicy {
+    /// Transfer the full KV cache after prefill completes, then decode.
+    Blocking,
+    /// Layer-by-layer transfer overlapped with prefill (Splitwise-style):
+    /// only the last layer's KV transfer is exposed.
+    Layered,
+}
+
+impl KvTransferPolicy {
+    pub fn from_str(s: &str) -> Option<KvTransferPolicy> {
+        Some(match s {
+            "blocking" => KvTransferPolicy::Blocking,
+            "layered" => KvTransferPolicy::Layered,
+            _ => return None,
+        })
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KvTransferPolicy::Blocking => "blocking",
+            KvTransferPolicy::Layered => "layered",
+        }
+    }
+}
+
+/// Prefix-cache scope (§II-D: per-instance and global shared caches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheScope {
+    PerInstance,
+    Global,
+}
+
+/// Prefix-cache settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixCacheConfig {
+    /// Device-tier capacity as a fraction of KV memory (0..1].
+    pub device_fraction: f64,
+    /// Host-tier capacity in tokens.
+    pub host_tokens: u64,
+    pub policy: EvictPolicy,
+    pub scope: CacheScope,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig {
+            device_fraction: 0.2,
+            host_tokens: 1 << 20,
+            policy: EvictPolicy::Lru,
+            scope: CacheScope::PerInstance,
+        }
+    }
+}
+
+/// Interconnect topology kind for an instance's device fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopoKind {
+    FullyConnected,
+    Ring,
+    Switched,
+    Hierarchical { nodes: usize, per_node: usize },
+}
+
+/// One serving instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceConfig {
+    pub name: String,
+    /// Model preset name (see [`ModelSpec::preset_names`]).
+    pub model: String,
+    /// Hardware preset name (see [`HardwareSpec::preset_names`]).
+    pub hardware: String,
+    /// Devices in this instance.
+    pub devices: usize,
+    /// Tensor parallel degree (must divide `devices`).
+    pub tp: usize,
+    /// Pipeline parallel degree (`tp * pp * ep_groups == devices`).
+    pub pp: usize,
+    /// Expert parallel degree (MoE only; 1 = experts replicated).
+    pub ep: usize,
+    pub role: Role,
+    pub topology: TopoKind,
+    /// Device-memory capacity override, bytes.
+    pub mem_capacity: Option<u64>,
+    /// Device-memory bandwidth override, bytes/s.
+    pub mem_bw: Option<f64>,
+    /// Continuous-batching token budget per step.
+    pub max_batch_tokens: u64,
+    /// Max sequences resident in a batch.
+    pub max_batch_seqs: usize,
+    /// Chunked-prefill chunk size; None = whole-prompt prefill.
+    pub chunked_prefill: Option<u64>,
+    pub sched: SchedPolicy,
+    pub prefix_cache: Option<PrefixCacheConfig>,
+    pub gate: GateKind,
+    pub offload: OffloadPolicy,
+    pub kv_transfer: KvTransferPolicy,
+    /// Attention/FFN disaggregation (Table I "AF"): attention ops execute
+    /// on a memory-optimized device (PIM-like), FFN stays local; per-layer
+    /// activation hops cross the host link.
+    pub af_disagg: bool,
+}
+
+impl InstanceConfig {
+    /// A reasonable single-device instance running `model` on `hardware`.
+    pub fn basic(name: &str, model: &str, hardware: &str) -> InstanceConfig {
+        InstanceConfig {
+            name: name.into(),
+            model: model.into(),
+            hardware: hardware.into(),
+            devices: 1,
+            tp: 1,
+            pp: 1,
+            ep: 1,
+            role: Role::Unified,
+            topology: TopoKind::FullyConnected,
+            mem_capacity: None,
+            mem_bw: None,
+            max_batch_tokens: 2048,
+            max_batch_seqs: 64,
+            chunked_prefill: None,
+            sched: SchedPolicy::Fcfs,
+            prefix_cache: None,
+            gate: GateKind::Uniform,
+            offload: OffloadPolicy::None,
+            kv_transfer: KvTransferPolicy::Blocking,
+            af_disagg: false,
+        }
+    }
+
+    /// Resolve the model preset.
+    pub fn model_spec(&self) -> anyhow::Result<ModelSpec> {
+        ModelSpec::preset(&self.model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model preset '{}'", self.model))
+    }
+
+    /// Resolve hardware with overrides applied.
+    pub fn hardware_spec(&self) -> anyhow::Result<HardwareSpec> {
+        let mut hw = HardwareSpec::preset(&self.hardware).ok_or_else(|| {
+            anyhow::anyhow!("unknown hardware preset '{}'", self.hardware)
+        })?;
+        if let Some(c) = self.mem_capacity {
+            hw.mem_capacity = c;
+        }
+        if let Some(b) = self.mem_bw {
+            hw.mem_bw = b;
+        }
+        Ok(hw)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let model = self.model_spec()?;
+        self.hardware_spec()?;
+        if self.devices == 0 {
+            anyhow::bail!("instance '{}': devices must be > 0", self.name);
+        }
+        if self.tp * self.pp == 0 || self.devices % (self.tp * self.pp) != 0 {
+            anyhow::bail!(
+                "instance '{}': tp({}) * pp({}) must divide devices({})",
+                self.name,
+                self.tp,
+                self.pp,
+                self.devices
+            );
+        }
+        if self.ep > 1 {
+            if !model.is_moe() {
+                anyhow::bail!(
+                    "instance '{}': ep > 1 requires a MoE model",
+                    self.name
+                );
+            }
+            if model.experts % self.ep as u64 != 0 {
+                anyhow::bail!(
+                    "instance '{}': ep({}) must divide experts({})",
+                    self.name,
+                    self.ep,
+                    model.experts
+                );
+            }
+        }
+        if self.offload != OffloadPolicy::None && !model.is_moe() {
+            anyhow::bail!(
+                "instance '{}': expert offloading requires a MoE model",
+                self.name
+            );
+        }
+        if self.max_batch_tokens == 0 || self.max_batch_seqs == 0 {
+            anyhow::bail!("instance '{}': batch limits must be > 0", self.name);
+        }
+        if let Some(pc) = &self.prefix_cache {
+            if !(0.0 < pc.device_fraction && pc.device_fraction <= 1.0) {
+                anyhow::bail!(
+                    "instance '{}': prefix-cache device_fraction must be in (0,1]",
+                    self.name
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Performance-model backend selection (§III simulator baselines).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PerfBackend {
+    /// Trace-driven (LLMServingSim2.0): profiled-trace DB from `path`,
+    /// calibrated-analytical extension for unprofiled model configs.
+    Trace { path: String },
+    /// Pure roofline.
+    Analytical,
+    /// Cycle-level systolic NPU simulation (LLMServingSim 1.0 baseline).
+    Cycle,
+    /// Cycle simulation with memoized replay (LLMServingSim+ baseline).
+    CycleReplay,
+}
+
+/// Top-level simulation configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    pub name: String,
+    pub seed: u64,
+    pub instances: Vec<InstanceConfig>,
+    pub router: RouterPolicy,
+    pub workload: WorkloadSpec,
+    pub perf: PerfBackend,
+    /// KV block size in tokens (PagedAttention granularity).
+    pub block_size: u64,
+    /// Interconnect between instances (router fabric + P/D transfers).
+    pub inter_instance_bw: f64,
+    pub inter_instance_latency_ns: u64,
+}
+
+impl SimConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.instances.is_empty() {
+            anyhow::bail!("config '{}': needs at least one instance", self.name);
+        }
+        for inst in &self.instances {
+            inst.validate()?;
+        }
+        let has_prefill = self.instances.iter().any(|i| i.role == Role::Prefill);
+        let has_decode = self.instances.iter().any(|i| i.role == Role::Decode);
+        if has_prefill != has_decode {
+            anyhow::bail!(
+                "config '{}': P/D disaggregation needs both prefill and decode \
+                 instances",
+                self.name
+            );
+        }
+        if self.block_size == 0 {
+            anyhow::bail!("config '{}': block_size must be > 0", self.name);
+        }
+        Ok(())
+    }
+
+    // ---- JSON ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let insts = self
+            .instances
+            .iter()
+            .map(|i| {
+                let mut fields = vec![
+                    ("name", Value::str(i.name.clone())),
+                    ("model", Value::str(i.model.clone())),
+                    ("hardware", Value::str(i.hardware.clone())),
+                    ("devices", Value::int(i.devices as i64)),
+                    ("tp", Value::int(i.tp as i64)),
+                    ("pp", Value::int(i.pp as i64)),
+                    ("ep", Value::int(i.ep as i64)),
+                    ("role", Value::str(i.role.as_str())),
+                    ("max_batch_tokens", Value::int(i.max_batch_tokens as i64)),
+                    ("max_batch_seqs", Value::int(i.max_batch_seqs as i64)),
+                    ("sched", Value::str(i.sched.as_str())),
+                    ("offload", Value::str(i.offload.as_str())),
+                    ("kv_transfer", Value::str(i.kv_transfer.as_str())),
+                    ("af_disagg", Value::Bool(i.af_disagg)),
+                    (
+                        "topology",
+                        Value::str(match &i.topology {
+                            TopoKind::FullyConnected => "fully-connected",
+                            TopoKind::Ring => "ring",
+                            TopoKind::Switched => "switched",
+                            TopoKind::Hierarchical { .. } => "hierarchical",
+                        }),
+                    ),
+                    (
+                        "gate",
+                        match &i.gate {
+                            GateKind::Uniform => Value::str("uniform"),
+                            GateKind::Zipf { s } => Value::obj(vec![
+                                ("kind", Value::str("zipf")),
+                                ("s", Value::float(*s)),
+                            ]),
+                        },
+                    ),
+                ];
+                if let Some(c) = i.mem_capacity {
+                    fields.push(("mem_capacity", Value::int(c as i64)));
+                }
+                if let Some(b) = i.mem_bw {
+                    fields.push(("mem_bw", Value::float(b)));
+                }
+                if let Some(cp) = i.chunked_prefill {
+                    fields.push(("chunked_prefill", Value::int(cp as i64)));
+                }
+                if let Some(pc) = &i.prefix_cache {
+                    fields.push((
+                        "prefix_cache",
+                        Value::obj(vec![
+                            ("device_fraction", Value::float(pc.device_fraction)),
+                            ("host_tokens", Value::int(pc.host_tokens as i64)),
+                            ("policy", Value::str(pc.policy.as_str())),
+                            (
+                                "scope",
+                                Value::str(match pc.scope {
+                                    CacheScope::PerInstance => "per-instance",
+                                    CacheScope::Global => "global",
+                                }),
+                            ),
+                        ]),
+                    ));
+                }
+                Value::obj(fields)
+            })
+            .collect();
+        Value::obj(vec![
+            ("name", Value::str(self.name.clone())),
+            ("seed", Value::int(self.seed as i64)),
+            ("router", Value::str(self.router.as_str())),
+            ("block_size", Value::int(self.block_size as i64)),
+            ("inter_instance_bw", Value::float(self.inter_instance_bw)),
+            (
+                "inter_instance_latency_ns",
+                Value::int(self.inter_instance_latency_ns as i64),
+            ),
+            (
+                "perf",
+                match &self.perf {
+                    PerfBackend::Trace { path } => Value::obj(vec![
+                        ("backend", Value::str("trace")),
+                        ("path", Value::str(path.clone())),
+                    ]),
+                    PerfBackend::Analytical => {
+                        Value::obj(vec![("backend", Value::str("analytical"))])
+                    }
+                    PerfBackend::Cycle => {
+                        Value::obj(vec![("backend", Value::str("cycle"))])
+                    }
+                    PerfBackend::CycleReplay => {
+                        Value::obj(vec![("backend", Value::str("cycle-replay"))])
+                    }
+                },
+            ),
+            (
+                "workload",
+                Value::obj(vec![
+                    (
+                        "num_requests",
+                        Value::int(self.workload.num_requests as i64),
+                    ),
+                    (
+                        "arrival",
+                        match &self.workload.arrival {
+                            Arrival::Poisson { rate } => Value::obj(vec![
+                                ("kind", Value::str("poisson")),
+                                ("rate", Value::float(*rate)),
+                            ]),
+                            Arrival::Uniform { rate } => Value::obj(vec![
+                                ("kind", Value::str("uniform")),
+                                ("rate", Value::float(*rate)),
+                            ]),
+                            Arrival::Burst => {
+                                Value::obj(vec![("kind", Value::str("burst"))])
+                            }
+                        },
+                    ),
+                    ("sessions", Value::int(self.workload.sessions as i64)),
+                    (
+                        "shared_prefix",
+                        Value::int(self.workload.shared_prefix as i64),
+                    ),
+                    ("seed", Value::int(self.workload.seed as i64)),
+                    (
+                        "lengths",
+                        Value::obj(vec![
+                            ("prompt_mu", Value::float(self.workload.lengths.prompt_mu)),
+                            (
+                                "prompt_sigma",
+                                Value::float(self.workload.lengths.prompt_sigma),
+                            ),
+                            ("output_mu", Value::float(self.workload.lengths.output_mu)),
+                            (
+                                "output_sigma",
+                                Value::float(self.workload.lengths.output_sigma),
+                            ),
+                            (
+                                "min_tokens",
+                                Value::int(self.workload.lengths.min_tokens as i64),
+                            ),
+                            (
+                                "max_tokens",
+                                Value::int(self.workload.lengths.max_tokens as i64),
+                            ),
+                        ]),
+                    ),
+                ]),
+            ),
+            ("instances", Value::Arr(insts)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<SimConfig> {
+        let name = v.get("name").as_str().unwrap_or("unnamed").to_string();
+        let seed = v.get("seed").as_u64().unwrap_or(0);
+        let router = match v.get("router").as_str() {
+            Some(s) => RouterPolicy::from_str(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown router policy '{s}'"))?,
+            None => RouterPolicy::RoundRobin,
+        };
+        let block_size = v.get("block_size").as_u64().unwrap_or(16);
+        let inter_instance_bw = v.get("inter_instance_bw").as_f64().unwrap_or(32e9);
+        let inter_instance_latency_ns =
+            v.get("inter_instance_latency_ns").as_u64().unwrap_or(5_000);
+
+        let perf = {
+            let p = v.get("perf");
+            match p.get("backend").as_str().unwrap_or("analytical") {
+                "trace" => PerfBackend::Trace {
+                    path: p
+                        .get("path")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("trace backend needs 'path'"))?
+                        .to_string(),
+                },
+                "analytical" => PerfBackend::Analytical,
+                "cycle" => PerfBackend::Cycle,
+                "cycle-replay" => PerfBackend::CycleReplay,
+                b => anyhow::bail!("unknown perf backend '{b}'"),
+            }
+        };
+
+        let w = v.get("workload");
+        let arrival = {
+            let a = w.get("arrival");
+            match a.get("kind").as_str().unwrap_or("poisson") {
+                "poisson" => Arrival::Poisson {
+                    rate: a.get("rate").as_f64().unwrap_or(10.0),
+                },
+                "uniform" => Arrival::Uniform {
+                    rate: a.get("rate").as_f64().unwrap_or(10.0),
+                },
+                "burst" => Arrival::Burst,
+                k => anyhow::bail!("unknown arrival kind '{k}'"),
+            }
+        };
+        let l = w.get("lengths");
+        let mut lengths = LengthDist::sharegpt();
+        if let Some(x) = l.get("prompt_mu").as_f64() {
+            lengths.prompt_mu = x;
+        }
+        if let Some(x) = l.get("prompt_sigma").as_f64() {
+            lengths.prompt_sigma = x;
+        }
+        if let Some(x) = l.get("output_mu").as_f64() {
+            lengths.output_mu = x;
+        }
+        if let Some(x) = l.get("output_sigma").as_f64() {
+            lengths.output_sigma = x;
+        }
+        if let Some(x) = l.get("min_tokens").as_u64() {
+            lengths.min_tokens = x;
+        }
+        if let Some(x) = l.get("max_tokens").as_u64() {
+            lengths.max_tokens = x;
+        }
+        let workload = WorkloadSpec {
+            num_requests: w.get("num_requests").as_u64().unwrap_or(100) as usize,
+            arrival,
+            lengths,
+            sessions: w.get("sessions").as_u64().unwrap_or(0) as usize,
+            shared_prefix: w.get("shared_prefix").as_u64().unwrap_or(0),
+            seed: w.get("seed").as_u64().unwrap_or(0x5EED),
+        };
+
+        let mut instances = vec![];
+        for iv in v.get("instances").as_arr().unwrap_or(&[]) {
+            let mut inst = InstanceConfig::basic(
+                iv.get("name").as_str().unwrap_or("inst"),
+                iv.get("model")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("instance missing 'model'"))?,
+                iv.get("hardware")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("instance missing 'hardware'"))?,
+            );
+            if let Some(x) = iv.get("devices").as_u64() {
+                inst.devices = x as usize;
+            }
+            if let Some(x) = iv.get("tp").as_u64() {
+                inst.tp = x as usize;
+            }
+            if let Some(x) = iv.get("pp").as_u64() {
+                inst.pp = x as usize;
+            }
+            if let Some(x) = iv.get("ep").as_u64() {
+                inst.ep = x as usize;
+            }
+            if let Some(s) = iv.get("role").as_str() {
+                inst.role = Role::from_str(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown role '{s}'"))?;
+            }
+            if let Some(s) = iv.get("sched").as_str() {
+                inst.sched = SchedPolicy::from_str(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown sched '{s}'"))?;
+            }
+            if let Some(s) = iv.get("offload").as_str() {
+                inst.offload = OffloadPolicy::from_str(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown offload '{s}'"))?;
+            }
+            if let Some(s) = iv.get("kv_transfer").as_str() {
+                inst.kv_transfer = KvTransferPolicy::from_str(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown kv_transfer '{s}'"))?;
+            }
+            if let Some(b) = iv.get("af_disagg").as_bool() {
+                inst.af_disagg = b;
+            }
+            if let Some(s) = iv.get("topology").as_str() {
+                inst.topology = match s {
+                    "fully-connected" => TopoKind::FullyConnected,
+                    "ring" => TopoKind::Ring,
+                    "switched" => TopoKind::Switched,
+                    "hierarchical" => TopoKind::Hierarchical {
+                        nodes: iv.get("nodes").as_u64().unwrap_or(2) as usize,
+                        per_node: iv.get("per_node").as_u64().unwrap_or(2) as usize,
+                    },
+                    _ => anyhow::bail!("unknown topology '{s}'"),
+                };
+            }
+            let g = iv.get("gate");
+            if let Some(s) = g.as_str() {
+                inst.gate = match s {
+                    "uniform" => GateKind::Uniform,
+                    _ => anyhow::bail!("unknown gate '{s}'"),
+                };
+            } else if g.get("kind").as_str() == Some("zipf") {
+                inst.gate = GateKind::Zipf {
+                    s: g.get("s").as_f64().unwrap_or(1.0),
+                };
+            }
+            if let Some(x) = iv.get("mem_capacity").as_u64() {
+                inst.mem_capacity = Some(x);
+            }
+            if let Some(x) = iv.get("mem_bw").as_f64() {
+                inst.mem_bw = Some(x);
+            }
+            if let Some(x) = iv.get("max_batch_tokens").as_u64() {
+                inst.max_batch_tokens = x;
+            }
+            if let Some(x) = iv.get("max_batch_seqs").as_u64() {
+                inst.max_batch_seqs = x as usize;
+            }
+            if let Some(x) = iv.get("chunked_prefill").as_u64() {
+                inst.chunked_prefill = Some(x);
+            }
+            let pc = iv.get("prefix_cache");
+            if !pc.is_null() {
+                let mut cfg = PrefixCacheConfig::default();
+                if let Some(x) = pc.get("device_fraction").as_f64() {
+                    cfg.device_fraction = x;
+                }
+                if let Some(x) = pc.get("host_tokens").as_u64() {
+                    cfg.host_tokens = x;
+                }
+                if let Some(s) = pc.get("policy").as_str() {
+                    cfg.policy = EvictPolicy::from_str(s)
+                        .ok_or_else(|| anyhow::anyhow!("unknown evict policy '{s}'"))?;
+                }
+                if let Some(s) = pc.get("scope").as_str() {
+                    cfg.scope = match s {
+                        "per-instance" => CacheScope::PerInstance,
+                        "global" => CacheScope::Global,
+                        _ => anyhow::bail!("unknown cache scope '{s}'"),
+                    };
+                }
+                inst.prefix_cache = Some(cfg);
+            }
+            instances.push(inst);
+        }
+
+        let cfg = SimConfig {
+            name,
+            seed,
+            instances,
+            router,
+            workload,
+            perf,
+            block_size,
+            inter_instance_bw,
+            inter_instance_latency_ns,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<SimConfig> {
+        Self::from_json(&json::load_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        json::save_file(path, &self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_instance_validates() {
+        let i = InstanceConfig::basic("a", "tiny-dense", "rtx3090");
+        i.validate().unwrap();
+    }
+
+    #[test]
+    fn tp_must_divide_devices() {
+        let mut i = InstanceConfig::basic("a", "tiny-dense", "rtx3090");
+        i.devices = 4;
+        i.tp = 3;
+        assert!(i.validate().is_err());
+        i.tp = 2;
+        i.pp = 2;
+        i.validate().unwrap();
+    }
+
+    #[test]
+    fn ep_requires_moe() {
+        let mut i = InstanceConfig::basic("a", "tiny-dense", "rtx3090");
+        i.devices = 2;
+        i.ep = 2;
+        assert!(i.validate().is_err());
+        i.model = "tiny-moe".into();
+        i.validate().unwrap();
+    }
+
+    #[test]
+    fn offload_requires_moe() {
+        let mut i = InstanceConfig::basic("a", "tiny-dense", "rtx3090");
+        i.offload = OffloadPolicy::Prefetch;
+        assert!(i.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_presets_rejected() {
+        let i = InstanceConfig::basic("a", "bogus-model", "rtx3090");
+        assert!(i.validate().is_err());
+        let i = InstanceConfig::basic("a", "tiny-dense", "bogus-hw");
+        assert!(i.validate().is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut i = InstanceConfig::basic("a", "tiny-dense", "rtx3090");
+        i.mem_capacity = Some(1 << 30);
+        i.mem_bw = Some(1e11);
+        let hw = i.hardware_spec().unwrap();
+        assert_eq!(hw.mem_capacity, 1 << 30);
+        assert_eq!(hw.mem_bw, 1e11);
+    }
+
+    #[test]
+    fn pd_needs_both_roles() {
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.instances[0].role = Role::Prefill;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_all_presets() {
+        for cfg in presets::all_table2("tiny-dense", "tiny-moe", "rtx3090") {
+            cfg.validate().unwrap();
+            let v = cfg.to_json();
+            let back = SimConfig::from_json(&v).unwrap();
+            assert_eq!(cfg, back, "roundtrip mismatch for {}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn enum_string_roundtrips() {
+        for r in [Role::Unified, Role::Prefill, Role::Decode] {
+            assert_eq!(Role::from_str(r.as_str()), Some(r));
+        }
+        for p in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastOutstanding,
+            RouterPolicy::LeastKvLoad,
+            RouterPolicy::PrefixAware,
+            RouterPolicy::SessionAffinity,
+        ] {
+            assert_eq!(RouterPolicy::from_str(p.as_str()), Some(p.clone()));
+        }
+        for s in [SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Priority] {
+            assert_eq!(SchedPolicy::from_str(s.as_str()), Some(s));
+        }
+        for o in [
+            OffloadPolicy::None,
+            OffloadPolicy::OnDemand,
+            OffloadPolicy::Prefetch,
+            OffloadPolicy::Pim,
+        ] {
+            assert_eq!(OffloadPolicy::from_str(o.as_str()), Some(o));
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Built-in configurations mirroring the paper's Table II:
+//!
+//! | Config  | Description                    | Instances / GPU per inst. |
+//! |---------|--------------------------------|---------------------------|
+//! | S(D/M)  | Single-instance Dense/MoE      | 1 inst., 1x RTX3090       |
+//! | M(D/M)  | Multi-instance Dense/MoE       | 2 inst., 1x RTX3090       |
+//! | PD(D/M) | P/D-disaggregated Dense/MoE    | 2 inst., 1x RTX3090       |
+//! | * + PC  | any of the above + Prefix Cache|                           |
+//!
+//! Preset builders take the model/hardware names so the same shapes run
+//! with tiny (executable) or paper-scale (analytical) models.
+
+use super::{
+    CacheScope, InstanceConfig, PerfBackend, PrefixCacheConfig, Role, RouterPolicy,
+    SimConfig,
+};
+use crate::workload::WorkloadSpec;
+
+fn base(name: &str, instances: Vec<InstanceConfig>) -> SimConfig {
+    SimConfig {
+        name: name.to_string(),
+        seed: 0xC0FFEE,
+        instances,
+        router: RouterPolicy::LeastOutstanding,
+        workload: WorkloadSpec::sharegpt_100(10.0),
+        perf: PerfBackend::Analytical,
+        block_size: 16,
+        inter_instance_bw: 32e9, // PCIe 4.0 x16 (paper §III-A)
+        inter_instance_latency_ns: 5_000,
+    }
+}
+
+/// S(D) / S(M): single instance, one device.
+pub fn single_dense(model: &str, hw: &str) -> SimConfig {
+    base(
+        "S(D)",
+        vec![InstanceConfig::basic("inst0", model, hw)],
+    )
+}
+
+pub fn single_moe(model: &str, hw: &str) -> SimConfig {
+    let mut cfg = base("S(M)", vec![InstanceConfig::basic("inst0", model, hw)]);
+    cfg.instances[0].gate = super::GateKind::Zipf { s: 1.0 };
+    cfg
+}
+
+/// M(D) / M(M): two identical unified instances behind the router.
+pub fn multi_dense(model: &str, hw: &str) -> SimConfig {
+    base(
+        "M(D)",
+        vec![
+            InstanceConfig::basic("inst0", model, hw),
+            InstanceConfig::basic("inst1", model, hw),
+        ],
+    )
+}
+
+pub fn multi_moe(model: &str, hw: &str) -> SimConfig {
+    let mut cfg = base(
+        "M(M)",
+        vec![
+            InstanceConfig::basic("inst0", model, hw),
+            InstanceConfig::basic("inst1", model, hw),
+        ],
+    );
+    for i in &mut cfg.instances {
+        i.gate = super::GateKind::Zipf { s: 1.0 };
+    }
+    cfg
+}
+
+/// PD(D) / PD(M): one prefill + one decode instance.
+pub fn pd_dense(model: &str, hw: &str) -> SimConfig {
+    let mut prefill = InstanceConfig::basic("prefill0", model, hw);
+    prefill.role = Role::Prefill;
+    let mut decode = InstanceConfig::basic("decode0", model, hw);
+    decode.role = Role::Decode;
+    base("PD(D)", vec![prefill, decode])
+}
+
+pub fn pd_moe(model: &str, hw: &str) -> SimConfig {
+    let mut cfg = pd_dense(model, hw);
+    cfg.name = "PD(M)".into();
+    for i in &mut cfg.instances {
+        i.gate = super::GateKind::Zipf { s: 1.0 };
+    }
+    cfg
+}
+
+/// Add prefix caching (the paper's `* + PC` variants). Enables sessions in
+/// the workload so prefixes actually repeat.
+pub fn with_prefix_cache(mut cfg: SimConfig, scope: CacheScope) -> SimConfig {
+    cfg.name = format!("{}+PC", cfg.name);
+    for i in &mut cfg.instances {
+        i.prefix_cache = Some(PrefixCacheConfig {
+            scope,
+            ..PrefixCacheConfig::default()
+        });
+    }
+    cfg.workload.sessions = 10;
+    cfg.workload.shared_prefix = 64;
+    if matches!(scope, CacheScope::Global) {
+        cfg.router = RouterPolicy::PrefixAware;
+    }
+    cfg
+}
+
+/// The five Fig. 2 validation configs: SD, SM, MD, MM, PDD.
+pub fn fig2_configs(dense: &str, moe: &str, hw: &str) -> Vec<SimConfig> {
+    vec![
+        single_dense(dense, hw),
+        single_moe(moe, hw),
+        multi_dense(dense, hw),
+        multi_moe(moe, hw),
+        pd_dense(dense, hw),
+    ]
+}
+
+/// The nine Fig. 3 simulation-time configs: S/M/PD x D/M plus PC variants
+/// (SD+PC, MD+PC, PDD+PC).
+pub fn fig3_configs(dense: &str, moe: &str, hw: &str) -> Vec<SimConfig> {
+    vec![
+        single_dense(dense, hw),
+        single_moe(moe, hw),
+        multi_dense(dense, hw),
+        multi_moe(moe, hw),
+        pd_dense(dense, hw),
+        pd_moe(moe, hw),
+        with_prefix_cache(single_dense(dense, hw), CacheScope::PerInstance),
+        with_prefix_cache(multi_dense(dense, hw), CacheScope::PerInstance),
+        with_prefix_cache(pd_dense(dense, hw), CacheScope::PerInstance),
+    ]
+}
+
+/// All Table II shapes (fig2 + PD(M)) for config tests.
+pub fn all_table2(dense: &str, moe: &str, hw: &str) -> Vec<SimConfig> {
+    let mut v = fig2_configs(dense, moe, hw);
+    v.push(pd_moe(moe, hw));
+    v.push(with_prefix_cache(single_dense(dense, hw), CacheScope::Global));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_has_five_validating_configs() {
+        let cfgs = fig2_configs("tiny-dense", "tiny-moe", "rtx3090");
+        assert_eq!(cfgs.len(), 5);
+        for c in &cfgs {
+            c.validate().unwrap();
+        }
+        let names: Vec<&str> = cfgs.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, ["S(D)", "S(M)", "M(D)", "M(M)", "PD(D)"]);
+    }
+
+    #[test]
+    fn fig3_has_nine_validating_configs() {
+        let cfgs = fig3_configs("tiny-dense", "tiny-moe", "rtx3090");
+        assert_eq!(cfgs.len(), 9);
+        for c in &cfgs {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn pd_configs_have_both_roles() {
+        let cfg = pd_dense("tiny-dense", "rtx3090");
+        assert!(cfg.instances.iter().any(|i| i.role == Role::Prefill));
+        assert!(cfg.instances.iter().any(|i| i.role == Role::Decode));
+    }
+
+    #[test]
+    fn pc_variant_enables_sessions() {
+        let cfg = with_prefix_cache(
+            single_dense("tiny-dense", "rtx3090"),
+            CacheScope::PerInstance,
+        );
+        assert_eq!(cfg.name, "S(D)+PC");
+        assert!(cfg.workload.sessions > 0);
+        assert!(cfg.instances[0].prefix_cache.is_some());
+    }
+
+    #[test]
+    fn global_pc_uses_prefix_aware_routing() {
+        let cfg = with_prefix_cache(
+            multi_dense("tiny-dense", "rtx3090"),
+            CacheScope::Global,
+        );
+        assert_eq!(cfg.router, RouterPolicy::PrefixAware);
+    }
+}

@@ -1,0 +1,524 @@
+//! The simulation coordinator: builds a full deployment from a
+//! [`SimConfig`] and drives the discrete-event run loop — the Layer-3
+//! composition of router, instances, prefix caches, inter-instance fabric,
+//! and metrics.
+//!
+//! Event flow:
+//! * `RequestArrival` → global router picks a prefill-capable instance →
+//!   enqueue → kick the instance if idle.
+//! * an idle instance with work runs `begin_step` (state advances
+//!   immediately; observable effects are timestamped at step completion)
+//!   and schedules `StepComplete`.
+//! * `StepComplete` → record emitted tokens / finishes / prefix-cache
+//!   inserts; P/D hand-offs price a KV transfer on the inter-instance
+//!   fabric and schedule `KvTransferDone`; then try to start the next step.
+//! * `KvTransferDone` → decode instance receives the sequence, kicks.
+//!
+//! The loop is fully deterministic given the config seed.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::config::{
+    CacheScope, KvTransferPolicy, PerfBackend, RouterPolicy, SimConfig,
+};
+use crate::instance::{ServingInstance, StepOutcome};
+use crate::memory::PrefixCache;
+use crate::metrics::{MetricsCollector, Report};
+use crate::model::ModelSpec;
+use crate::network::{Fabric, Topology};
+use crate::perf::analytical::{Calibrated, Roofline};
+use crate::perf::cycle::{CycleSim, SystolicSpec};
+use crate::perf::replay::Replay;
+use crate::perf::trace::TraceDb;
+use crate::perf::PerfModel;
+use crate::router::{GlobalRouter, InstanceView};
+use crate::sim::{Event, EventQueue, Nanos};
+use crate::workload::Request;
+
+/// Build the per-instance performance model for `backend`.
+///
+/// For the trace backend: if the trace DB was profiled for this exact model,
+/// it prices ops directly; otherwise the roofline is calibrated with the
+/// DB's measured efficiency factors (tiny-model traces extended to
+/// paper-scale configs — DESIGN.md §1).
+pub fn build_perf(
+    backend: &PerfBackend,
+    model: &ModelSpec,
+    hw: &crate::perf::HardwareSpec,
+) -> anyhow::Result<Rc<dyn PerfModel>> {
+    Ok(match backend {
+        PerfBackend::Analytical => {
+            Rc::new(Roofline::new(hw.clone(), model.clone()))
+        }
+        PerfBackend::Cycle => {
+            Rc::new(CycleSim::new(SystolicSpec::default(), model.clone()))
+        }
+        PerfBackend::CycleReplay => Rc::new(Replay::new(CycleSim::new(
+            SystolicSpec::default(),
+            model.clone(),
+        ))),
+        PerfBackend::Trace { path } => {
+            let db = TraceDb::load(std::path::Path::new(path))?;
+            if db.model == model.name {
+                Rc::new(db)
+            } else {
+                let roof = Roofline::new(hw.clone(), model.clone());
+                let cal_src = Roofline::new(
+                    hw.clone(),
+                    ModelSpec::preset(&db.model).ok_or_else(|| {
+                        anyhow::anyhow!("trace profiled unknown model '{}'", db.model)
+                    })?,
+                );
+                let factors = db.calibration(&cal_src);
+                Rc::new(Calibrated::new(roof, factors))
+            }
+        }
+    })
+}
+
+/// One fully-built simulation.
+pub struct Simulation {
+    pub cfg: SimConfig,
+    instances: Vec<ServingInstance>,
+    /// Prefix caches; `cache_of[i]` maps instance i to its cache index.
+    caches: Vec<PrefixCache>,
+    cache_of: Vec<Option<usize>>,
+    router: GlobalRouter,
+    inter_fabric: Fabric,
+    queue: EventQueue,
+    metrics: MetricsCollector,
+    requests: HashMap<u64, Request>,
+    busy: Vec<bool>,
+    pending: Vec<Option<StepOutcome>>,
+    /// In-flight P/D hand-offs: req id -> (request, destination instance).
+    kv_in_flight: HashMap<u64, (Request, usize)>,
+    pub steps_total: u64,
+}
+
+impl Simulation {
+    /// Build a simulation from config.
+    pub fn new(cfg: SimConfig) -> anyhow::Result<Self> {
+        Self::with_perf_factory(cfg, &|backend, model, hw| {
+            build_perf(backend, model, hw)
+        })
+    }
+
+    /// Build with a custom perf-model factory (used by the ground-truth
+    /// engine and by ablations that pin specific models per instance).
+    pub fn with_perf_factory(
+        cfg: SimConfig,
+        factory: &dyn Fn(
+            &PerfBackend,
+            &ModelSpec,
+            &crate::perf::HardwareSpec,
+        ) -> anyhow::Result<Rc<dyn PerfModel>>,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let mut instances = vec![];
+        let mut caches: Vec<PrefixCache> = vec![];
+        let mut cache_of = vec![];
+        let mut global_cache: Option<usize> = None;
+
+        for (i, icfg) in cfg.instances.iter().enumerate() {
+            let model = icfg.model_spec()?;
+            let hw = icfg.hardware_spec()?;
+            let perf = factory(&cfg.perf, &model, &hw)?;
+            let inst =
+                ServingInstance::new(i, icfg.clone(), perf, cfg.block_size, cfg.seed)?;
+            // prefix cache wiring
+            let slot = match &icfg.prefix_cache {
+                None => None,
+                Some(pc) => {
+                    let kv_capacity_tokens =
+                        (inst.blocks.total_blocks() as u64) * cfg.block_size;
+                    let device_tokens =
+                        ((kv_capacity_tokens as f64) * pc.device_fraction).round()
+                            as u64;
+                    match pc.scope {
+                        CacheScope::PerInstance => {
+                            caches.push(PrefixCache::new(
+                                device_tokens.max(64),
+                                pc.host_tokens,
+                                pc.policy,
+                            ));
+                            Some(caches.len() - 1)
+                        }
+                        CacheScope::Global => {
+                            Some(*global_cache.get_or_insert_with(|| {
+                                caches.push(PrefixCache::new(
+                                    device_tokens.max(64),
+                                    pc.host_tokens,
+                                    pc.policy,
+                                ));
+                                caches.len() - 1
+                            }))
+                        }
+                    }
+                }
+            };
+            cache_of.push(slot);
+            instances.push(inst);
+        }
+
+        let n = instances.len();
+        let inter_topo =
+            Topology::switched(n, cfg.inter_instance_bw, cfg.inter_instance_latency_ns);
+        Ok(Simulation {
+            router: GlobalRouter::new(cfg.router.clone()),
+            inter_fabric: Fabric::new(inter_topo),
+            queue: EventQueue::new(),
+            metrics: MetricsCollector::new(),
+            requests: HashMap::new(),
+            busy: vec![false; n],
+            pending: (0..n).map(|_| None).collect(),
+            kv_in_flight: HashMap::new(),
+            steps_total: 0,
+            cfg,
+            instances,
+            caches,
+            cache_of,
+        })
+    }
+
+    /// Router-visible views, computing the prefix match for `req` if given.
+    fn views(&self, req: Option<&Request>) -> Vec<InstanceView> {
+        let toks = req.map(|r| r.token_ids());
+        self.instances
+            .iter()
+            .enumerate()
+            .map(|(i, inst)| {
+                let prefix_match = match (&toks, self.cache_of[i]) {
+                    (Some(t), Some(c)) => self.caches[c].peek(t),
+                    _ => 0,
+                };
+                InstanceView {
+                    id: i,
+                    role: inst.cfg.role,
+                    outstanding: inst.outstanding(),
+                    kv_utilization: inst.kv_utilization(),
+                    prefix_match,
+                    compatible: true,
+                }
+            })
+            .collect()
+    }
+
+    /// Start a step on instance `i` if it is idle and has work.
+    fn kick(&mut self, i: usize, now: Nanos) {
+        if self.busy[i] || !self.instances[i].has_work() {
+            return;
+        }
+        let out = match self.cache_of[i] {
+            Some(c) => self.instances[i].begin_step(now, Some(&mut self.caches[c])),
+            None => self.instances[i].begin_step(now, None),
+        };
+        if !out.work {
+            return;
+        }
+        self.steps_total += 1;
+        self.busy[i] = true;
+        self.queue
+            .schedule_in(out.duration, Event::StepComplete { instance: i });
+        self.pending[i] = Some(out);
+    }
+
+    /// Apply a completed step's observable effects at time `now`.
+    fn complete_step(&mut self, i: usize, now: Nanos) {
+        let out = self.pending[i]
+            .take()
+            .expect("step completion without outcome");
+        self.busy[i] = false;
+        self.metrics.on_busy(i, out.duration);
+
+        for (id, cached) in &out.cache_hits {
+            self.metrics.on_cached(*id, *cached);
+        }
+        for id in &out.emitted {
+            self.metrics.on_token(*id, now);
+        }
+        for id in &out.finished {
+            self.metrics.on_finish(*id, now);
+        }
+        // prefix-cache inserts for finished prefills
+        if let Some(c) = self.cache_of[i] {
+            for req in &out.prefill_done {
+                self.caches[c].insert(&req.token_ids(), now);
+            }
+        }
+        // P/D hand-offs
+        for h in &out.handoff {
+            let views = self.views(None);
+            let Some(dst) = self.router.pick_decode(&views) else {
+                log::warn!("no decode instance for request {}", h.req.id);
+                continue;
+            };
+            let bytes = match self.instances[i].cfg.kv_transfer {
+                KvTransferPolicy::Blocking => h.kv_bytes,
+                // layered transfer overlapped with prefill; only the last
+                // layer's slice is exposed at completion
+                KvTransferPolicy::Layered => {
+                    h.kv_bytes / self.instances[i].model.layers.max(1)
+                }
+            };
+            let done = self.inter_fabric.transfer(i, dst, bytes, now);
+            self.kv_in_flight.insert(h.req.id, (h.req.clone(), dst));
+            self.queue.schedule_at(
+                done,
+                Event::KvTransferDone {
+                    request_id: h.req.id,
+                    dst_instance: dst,
+                },
+            );
+        }
+        self.kick(i, now);
+    }
+
+    /// Run to completion and produce the report.
+    pub fn run(&mut self) -> Report {
+        let reqs = self.cfg.workload.generate();
+        for r in &reqs {
+            self.requests.insert(r.id, r.clone());
+            self.queue
+                .schedule_at(r.arrival, Event::RequestArrival { request_id: r.id });
+        }
+
+        while let Some((now, event)) = self.queue.pop() {
+            match event {
+                Event::RequestArrival { request_id } => {
+                    let req = self.requests[&request_id].clone();
+                    self.metrics.on_arrival(
+                        request_id,
+                        now,
+                        req.prompt_tokens,
+                        req.output_tokens,
+                    );
+                    let views = self.views(Some(&req));
+                    let affinity = self.cfg.router == RouterPolicy::SessionAffinity;
+                    match self.router.dispatch(&req, &views, affinity) {
+                        Some(i) => {
+                            self.metrics.on_dispatch(request_id, now, i);
+                            self.instances[i].enqueue(req, now);
+                            self.kick(i, now);
+                        }
+                        None => {
+                            log::error!("no instance can serve request {request_id}")
+                        }
+                    }
+                }
+                Event::StepComplete { instance } => {
+                    self.complete_step(instance, now);
+                }
+                Event::Wake { instance } => {
+                    self.kick(instance, now);
+                }
+                Event::KvTransferDone {
+                    request_id,
+                    dst_instance,
+                } => {
+                    let (req, dst) = self
+                        .kv_in_flight
+                        .remove(&request_id)
+                        .expect("unknown KV transfer");
+                    debug_assert_eq!(dst, dst_instance);
+                    self.instances[dst].enqueue_decoded(req, now);
+                    self.kick(dst, now);
+                }
+                Event::ExpertFetchDone { .. } | Event::MetricsTick => {}
+            }
+        }
+
+        let makespan = self.queue.now();
+        let unfinished = self.requests.len() - self.metrics.num_finished();
+        if unfinished > 0 {
+            log::warn!(
+                "simulation drained with {unfinished} unfinished requests \
+                 (KV pool too small for the workload?)"
+            );
+        }
+        self.metrics.report(makespan)
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    pub fn num_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn instance(&self, i: usize) -> &ServingInstance {
+        &self.instances[i]
+    }
+
+    pub fn cache_stats(&self) -> Vec<crate::memory::CacheStats> {
+        self.caches.iter().map(|c| c.stats).collect()
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.queue.processed()
+    }
+
+    pub fn inter_instance_bytes(&self) -> u64 {
+        self.inter_fabric.bytes_moved
+    }
+}
+
+/// Convenience: build + run + report.
+pub fn run_config(cfg: SimConfig) -> anyhow::Result<(Report, SimSummary)> {
+    let mut sim = Simulation::new(cfg)?;
+    let report = sim.run();
+    let summary = SimSummary {
+        steps: sim.steps_total,
+        events: sim.events_processed(),
+        cache_stats: sim.cache_stats(),
+        inter_instance_bytes: sim.inter_instance_bytes(),
+    };
+    Ok((report, summary))
+}
+
+/// Simulator-internal counters (Fig. 3 cost accounting).
+#[derive(Debug, Clone)]
+pub struct SimSummary {
+    pub steps: u64,
+    pub events: u64,
+    pub cache_stats: Vec<crate::memory::CacheStats>,
+    pub inter_instance_bytes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn small(mut cfg: SimConfig) -> SimConfig {
+        cfg.workload.num_requests = 20;
+        cfg.workload.lengths = crate::workload::LengthDist::short();
+        cfg
+    }
+
+    #[test]
+    fn single_instance_dense_completes() {
+        let cfg = small(presets::single_dense("tiny-dense", "rtx3090"));
+        let (report, summary) = run_config(cfg).unwrap();
+        assert_eq!(report.num_finished, 20);
+        assert!(report.throughput_tps > 0.0);
+        assert!(report.ttft_ns.mean > 0.0);
+        assert!(summary.steps > 0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        let (a, sa) = run_config(cfg.clone()).unwrap();
+        let (b, sb) = run_config(cfg).unwrap();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.generated_tokens, b.generated_tokens);
+        assert_eq!(sa.steps, sb.steps);
+        assert!((a.tpot_ns.mean - b.tpot_ns.mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moe_single_instance_completes() {
+        let cfg = small(presets::single_moe("tiny-moe", "rtx3090"));
+        let (report, _) = run_config(cfg).unwrap();
+        assert_eq!(report.num_finished, 20);
+    }
+
+    #[test]
+    fn multi_instance_spreads_load() {
+        let mut cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        // burst arrivals force queueing so least-outstanding actually spreads
+        cfg.workload.arrival = crate::workload::Arrival::Burst;
+        let mut sim = Simulation::new(cfg).unwrap();
+        let report = sim.run();
+        assert_eq!(report.num_finished, 20);
+        // both instances must have done work under least-outstanding routing
+        assert!(report.utilization.get(&0).copied().unwrap_or(0.0) > 0.0);
+        assert!(report.utilization.get(&1).copied().unwrap_or(0.0) > 0.0);
+    }
+
+    #[test]
+    fn pd_disaggregation_completes_with_transfers() {
+        let cfg = small(presets::pd_dense("tiny-dense", "rtx3090"));
+        let mut sim = Simulation::new(cfg).unwrap();
+        let report = sim.run();
+        assert_eq!(report.num_finished, 20);
+        assert!(
+            sim.inter_instance_bytes() > 0,
+            "P/D must move KV across instances"
+        );
+    }
+
+    #[test]
+    fn pd_layered_transfer_moves_fewer_exposed_bytes() {
+        let mk = |policy| {
+            let mut cfg = small(presets::pd_dense("tiny-dense", "rtx3090"));
+            for i in &mut cfg.instances {
+                i.kv_transfer = policy;
+            }
+            let mut sim = Simulation::new(cfg).unwrap();
+            let r = sim.run();
+            (r, sim.inter_instance_bytes())
+        };
+        let (_, blocking_bytes) = mk(KvTransferPolicy::Blocking);
+        let (_, layered_bytes) = mk(KvTransferPolicy::Layered);
+        assert!(
+            layered_bytes < blocking_bytes,
+            "layered {layered_bytes} !< blocking {blocking_bytes}"
+        );
+    }
+
+    #[test]
+    fn prefix_cache_improves_ttft() {
+        let base = small(presets::single_dense("tiny-dense", "rtx3090"));
+        let mut with_pc = presets::with_prefix_cache(
+            base.clone(),
+            crate::config::CacheScope::PerInstance,
+        );
+        // identical workload apart from prefix sharing
+        let mut base_shared = base.clone();
+        base_shared.workload.sessions = 10;
+        base_shared.workload.shared_prefix = 64;
+        with_pc.workload = base_shared.workload.clone();
+
+        let (cold, _) = run_config(base_shared).unwrap();
+        let (warm, summary) = run_config(with_pc).unwrap();
+        assert_eq!(cold.num_finished, warm.num_finished);
+        assert!(summary.cache_stats[0].hit_rate() > 0.0);
+        assert!(
+            warm.ttft_ns.mean < cold.ttft_ns.mean,
+            "PC TTFT {} !< no-PC TTFT {}",
+            warm.ttft_ns.mean,
+            cold.ttft_ns.mean
+        );
+    }
+
+    #[test]
+    fn global_cache_shared_across_instances() {
+        let cfg = small(presets::with_prefix_cache(
+            presets::multi_dense("tiny-dense", "rtx3090"),
+            crate::config::CacheScope::Global,
+        ));
+        let mut sim = Simulation::new(cfg).unwrap();
+        let report = sim.run();
+        assert!(report.num_finished > 0);
+        assert_eq!(sim.cache_stats().len(), 1, "global scope = one cache");
+    }
+
+    #[test]
+    fn all_fig3_configs_run() {
+        for cfg in presets::fig3_configs("tiny-dense", "tiny-moe", "rtx3090") {
+            let name = cfg.name.clone();
+            let (report, _) = run_config(small(cfg)).unwrap();
+            assert_eq!(report.num_finished, 20, "config {name}");
+        }
+    }
+
+    #[test]
+    fn cycle_backend_runs() {
+        let mut cfg = small(presets::single_dense("tiny-dense", "rtx3090"));
+        cfg.workload.num_requests = 5;
+        cfg.perf = PerfBackend::Cycle;
+        let (report, _) = run_config(cfg).unwrap();
+        assert_eq!(report.num_finished, 5);
+    }
+}

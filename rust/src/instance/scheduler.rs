@@ -1,0 +1,137 @@
+//! Wait-queue ordering policies for the continuous-batching scheduler.
+//!
+//! The paper exposes scheduling as a customizable policy (§II-B); three
+//! classical orders are built in. All orders are stable and deterministic:
+//! ties break on request id.
+
+use std::collections::HashMap;
+
+use crate::config::SchedPolicy;
+use crate::sim::Nanos;
+
+use super::{Phase, SeqState};
+
+/// Reorder the wait queue in admission order for `policy`.
+///
+/// Sequences that were preempted mid-decode always sort first (vLLM
+/// semantics: recompute victims re-enter ahead of fresh arrivals so their
+/// already-emitted tokens don't stall indefinitely).
+pub fn order_wait_queue(
+    wait: &mut [u64],
+    seqs: &HashMap<u64, SeqState>,
+    policy: SchedPolicy,
+    now: Nanos,
+) {
+    match policy {
+        SchedPolicy::Fcfs => {
+            wait.sort_by_key(|id| {
+                let s = &seqs[id];
+                (priority_class(s), s.enqueued_at, s.req.id)
+            });
+        }
+        SchedPolicy::Sjf => {
+            wait.sort_by_key(|id| {
+                let s = &seqs[id];
+                (priority_class(s), s.req.prompt_tokens, s.req.id)
+            });
+        }
+        SchedPolicy::Priority => {
+            // Shortest-job-first weighted by waiting time: rank =
+            // prompt_tokens / (1 + waited_ms). Long waiters bubble up.
+            wait.sort_by(|a, b| {
+                let ra = rank(&seqs[a], now);
+                let rb = rank(&seqs[b], now);
+                (priority_class(&seqs[a]), ra, seqs[a].req.id)
+                    .partial_cmp(&(priority_class(&seqs[b]), rb, seqs[b].req.id))
+                    .unwrap()
+            });
+        }
+    }
+}
+
+fn priority_class(s: &SeqState) -> u8 {
+    match s.phase {
+        _ if s.preemptions > 0 => 0,
+        Phase::Decode { .. } => 1, // P/D handoffs: already holding a user stream
+        Phase::Prefill { .. } => 2,
+    }
+}
+
+fn rank(s: &SeqState, now: Nanos) -> f64 {
+    let waited_ms = (now.saturating_sub(s.enqueued_at)) as f64 / 1e6;
+    s.req.prompt_tokens as f64 / (1.0 + waited_ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Request;
+
+    fn seq(id: u64, prompt: u64, enq: Nanos) -> (u64, SeqState) {
+        (
+            id,
+            SeqState {
+                req: Request {
+                    id,
+                    arrival: enq,
+                    prompt_tokens: prompt,
+                    output_tokens: 4,
+                    session: id,
+                    shared_prefix: 0,
+                },
+                phase: Phase::Prefill { done: 0 },
+                cached_tokens: 0,
+                host_cached_tokens: 0,
+                enqueued_at: enq,
+                preemptions: 0,
+            },
+        )
+    }
+
+    #[test]
+    fn fcfs_orders_by_arrival() {
+        let seqs: HashMap<u64, SeqState> =
+            [seq(0, 10, 300), seq(1, 10, 100), seq(2, 10, 200)].into();
+        let mut wait = vec![0, 1, 2];
+        order_wait_queue(&mut wait, &seqs, SchedPolicy::Fcfs, 1000);
+        assert_eq!(wait, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn sjf_orders_by_prompt() {
+        let seqs: HashMap<u64, SeqState> =
+            [seq(0, 300, 0), seq(1, 50, 0), seq(2, 100, 0)].into();
+        let mut wait = vec![0, 1, 2];
+        order_wait_queue(&mut wait, &seqs, SchedPolicy::Sjf, 0);
+        assert_eq!(wait, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn preempted_always_first() {
+        let mut m: HashMap<u64, SeqState> = [seq(0, 10, 0), seq(1, 999, 500)].into();
+        m.get_mut(&1).unwrap().preemptions = 1;
+        let mut wait = vec![0, 1];
+        for p in [SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Priority] {
+            order_wait_queue(&mut wait, &m, p, 1000);
+            assert_eq!(wait[0], 1, "policy {p:?}");
+        }
+    }
+
+    #[test]
+    fn priority_ages_long_waiters() {
+        // long prompt waiting a long time beats short prompt that just came
+        let seqs: HashMap<u64, SeqState> =
+            [seq(0, 512, 0), seq(1, 64, 999_000_000)].into();
+        let mut wait = vec![0, 1];
+        order_wait_queue(&mut wait, &seqs, SchedPolicy::Priority, 1_000_000_000);
+        assert_eq!(wait[0], 0, "aged long prompt should rank first");
+    }
+
+    #[test]
+    fn deterministic_tiebreak() {
+        let seqs: HashMap<u64, SeqState> = [seq(3, 10, 0), seq(1, 10, 0), seq(2, 10, 0)].into();
+        let mut wait = vec![3, 1, 2];
+        order_wait_queue(&mut wait, &seqs, SchedPolicy::Fcfs, 0);
+        assert_eq!(wait, vec![1, 2, 3]);
+    }
+}

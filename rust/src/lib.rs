@@ -1,0 +1,29 @@
+//! LLMServingSim2.0 — a unified simulator for heterogeneous hardware and
+//! serving techniques in LLM infrastructure (reproduction).
+//!
+//! Architecture (three layers, see DESIGN.md):
+//! * **Rust (this crate)** — the discrete-event serving simulator: global
+//!   request router, heterogeneous multi-instance serving, P/D
+//!   disaggregation, MoE expert parallelism/offloading, radix-tree prefix
+//!   caching, trace-driven performance modeling, plus the PJRT runtime and
+//!   operator-level profiler.
+//! * **JAX (build-time)** — the operator zoo lowered to HLO text artifacts.
+//! * **Pallas (build-time)** — attention/expert-FFN kernels inside those
+//!   artifacts.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod groundtruth;
+pub mod instance;
+pub mod memory;
+pub mod metrics;
+pub mod moe;
+pub mod model;
+pub mod network;
+pub mod perf;
+pub mod router;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

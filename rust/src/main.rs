@@ -1,0 +1,331 @@
+//! LLMServingSim2.0 CLI: the Layer-3 leader entrypoint.
+//!
+//! Commands:
+//!   profile   — run the operator-level profiler on the PJRT backend and
+//!               write a latency-trace DB (the paper's "single command"
+//!               hardware integration, §II-A).
+//!   simulate  — run a serving simulation from a preset or config file.
+//!   validate  — Fig. 2 style: run the ground-truth execution engine and
+//!               the trace-driven simulator on the same config; print the
+//!               error table.
+//!   presets   — list built-in models, hardware, and serving configs.
+//!   gen-trace — emit a synthetic ShareGPT-like request trace as JSON.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use llmservingsim::cli::Args;
+use llmservingsim::config::{presets, PerfBackend, SimConfig};
+use llmservingsim::coordinator::{run_config, Simulation};
+use llmservingsim::groundtruth::ExecPerfModel;
+use llmservingsim::model::ModelSpec;
+use llmservingsim::perf::HardwareSpec;
+use llmservingsim::runtime::profiler::{profile_to_file, ProfileOptions};
+use llmservingsim::util::bench::Table;
+use llmservingsim::util::{json, logging};
+use llmservingsim::workload;
+
+const HELP: &str = "\
+LLMServingSim2.0 — unified simulator for heterogeneous LLM serving
+
+USAGE: llmservingsim <command> [flags]
+
+COMMANDS:
+  profile    --model <preset> [--artifacts DIR] [--out FILE]
+             [--hardware-tag TAG] [--reps N] [--warmup N]
+  simulate   (--preset NAME | --config FILE) [--model M] [--moe-model M]
+             [--hardware H] [--perf analytical|cycle|cycle-replay|trace:PATH]
+             [--requests N] [--rate R] [--seed S] [--out FILE]
+  validate   --model <preset> [--artifacts DIR] [--trace FILE]
+             [--requests N] [--rate R]
+  gen-trace  [--requests N] [--rate R] [--seed S] --out FILE
+  presets    (lists models, hardware, serving configs)
+  help
+";
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match Args::parse(args, &["quick"]) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&parsed) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.command.as_str() {
+        "profile" => cmd_profile(args),
+        "simulate" => cmd_simulate(args),
+        "validate" => cmd_validate(args),
+        "gen-trace" => cmd_gen_trace(args),
+        "presets" => cmd_presets(),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "tiny-dense").to_string();
+    let tag = args.str_or("hardware-tag", "cpu-pjrt").to_string();
+    let default_out = format!("artifacts/traces/{tag}-{model}.json");
+    let out = PathBuf::from(args.str_or("out", &default_out));
+    let opts = ProfileOptions {
+        warmup: args.u64_or("warmup", 2)? as usize,
+        reps: args.u64_or("reps", 7)? as usize,
+        hardware_tag: tag,
+    };
+    println!("profiling {model} on the PJRT backend ...");
+    let outcome = profile_to_file(&artifacts_dir(args), &model, &out, &opts)?;
+    println!(
+        "profiled {} ops in {:.2} s -> {}",
+        outcome.ops_profiled,
+        outcome.wall_ns as f64 / 1e9,
+        out.display()
+    );
+    let mut t = Table::new(&["op kind", "leave-one-out err %"]);
+    for (k, e) in &outcome.loo_error_pct {
+        t.row(&[k.to_string(), format!("{e:.2}")]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Resolve a simulation config from --preset/--config plus overrides.
+fn resolve_config(args: &Args) -> anyhow::Result<SimConfig> {
+    let dense = args.str_or("model", "tiny-dense").to_string();
+    let moe = args.str_or("moe-model", "tiny-moe").to_string();
+    let hw = args.str_or("hardware", "rtx3090").to_string();
+    let mut cfg = if let Some(path) = args.str_flag("config") {
+        SimConfig::load(Path::new(path))?
+    } else {
+        let preset = args.str_or("preset", "S(D)");
+        preset_by_name(preset, &dense, &moe, &hw)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset '{preset}'"))?
+    };
+    if let Some(p) = args.str_flag("perf") {
+        cfg.perf = parse_perf(p)?;
+    }
+    if let Some(n) = args.str_flag("requests") {
+        cfg.workload.num_requests = n.parse()?;
+    }
+    if let Some(r) = args.str_flag("rate") {
+        cfg.workload.arrival = workload::Arrival::Poisson { rate: r.parse()? };
+    }
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn preset_by_name(name: &str, dense: &str, moe: &str, hw: &str) -> Option<SimConfig> {
+    use llmservingsim::config::CacheScope;
+    Some(match name {
+        "S(D)" => presets::single_dense(dense, hw),
+        "S(M)" => presets::single_moe(moe, hw),
+        "M(D)" => presets::multi_dense(dense, hw),
+        "M(M)" => presets::multi_moe(moe, hw),
+        "PD(D)" => presets::pd_dense(dense, hw),
+        "PD(M)" => presets::pd_moe(moe, hw),
+        "S(D)+PC" => presets::with_prefix_cache(
+            presets::single_dense(dense, hw),
+            CacheScope::PerInstance,
+        ),
+        "M(D)+PC" => presets::with_prefix_cache(
+            presets::multi_dense(dense, hw),
+            CacheScope::PerInstance,
+        ),
+        "PD(D)+PC" => presets::with_prefix_cache(
+            presets::pd_dense(dense, hw),
+            CacheScope::PerInstance,
+        ),
+        _ => return None,
+    })
+}
+
+fn parse_perf(s: &str) -> anyhow::Result<PerfBackend> {
+    Ok(match s {
+        "analytical" => PerfBackend::Analytical,
+        "cycle" => PerfBackend::Cycle,
+        "cycle-replay" => PerfBackend::CycleReplay,
+        _ => match s.strip_prefix("trace:") {
+            Some(path) => PerfBackend::Trace {
+                path: path.to_string(),
+            },
+            None => anyhow::bail!(
+                "unknown perf backend '{s}' (analytical|cycle|cycle-replay|trace:PATH)"
+            ),
+        },
+    })
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = resolve_config(args)?;
+    let name = cfg.name.clone();
+    let t0 = std::time::Instant::now();
+    let (report, summary) = run_config(cfg)?;
+    let wall = t0.elapsed();
+
+    println!("config {name}: {} requests", report.num_requests);
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["finished".into(), report.num_finished.to_string()]);
+    t.row(&[
+        "makespan".into(),
+        format!("{:.3} s", report.makespan as f64 / 1e9),
+    ]);
+    t.row(&[
+        "TTFT mean".into(),
+        format!("{:.3} ms", report.ttft_ns.mean / 1e6),
+    ]);
+    t.row(&[
+        "TPOT mean".into(),
+        format!("{:.3} ms", report.tpot_ns.mean / 1e6),
+    ]);
+    t.row(&[
+        "ITL mean".into(),
+        format!("{:.3} ms", report.itl_ns.mean / 1e6),
+    ]);
+    t.row(&[
+        "throughput".into(),
+        format!("{:.1} tok/s", report.throughput_tps),
+    ]);
+    t.row(&["engine steps".into(), summary.steps.to_string()]);
+    t.row(&["sim events".into(), summary.events.to_string()]);
+    t.row(&[
+        "sim wall-clock".into(),
+        format!("{:.3} s", wall.as_secs_f64()),
+    ]);
+    for (i, cs) in summary.cache_stats.iter().enumerate() {
+        t.row(&[
+            format!("cache {i} hit rate"),
+            format!("{:.1} %", cs.hit_rate() * 100.0),
+        ]);
+    }
+    t.print();
+
+    if let Some(out) = args.str_flag("out") {
+        json::save_file(Path::new(out), &report.to_json())?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "tiny-dense").to_string();
+    let root = artifacts_dir(args);
+    let requests = args.u64_or("requests", 20)? as usize;
+    let rate = args.f64_or("rate", 10.0)?;
+
+    // Ground truth: real execution on CPU-PJRT.
+    let mut cfg = presets::single_dense(&model, "cpu-pjrt");
+    cfg.workload.num_requests = requests;
+    cfg.workload.arrival = workload::Arrival::Poisson { rate };
+    cfg.workload.lengths = workload::LengthDist::short();
+
+    println!("running ground-truth execution engine ({model}) ...");
+    let gt_model = Rc::new(ExecPerfModel::new(&root, &model)?);
+    let gt2 = gt_model.clone();
+    let mut gt_sim = Simulation::with_perf_factory(cfg.clone(), &move |_, _, _| {
+        Ok(gt2.clone() as Rc<dyn llmservingsim::perf::PerfModel>)
+    })?;
+    let gt_report = gt_sim.run();
+
+    // Simulator: trace-driven from a profiled DB.
+    let trace_path = match args.str_flag("trace") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let p = root.join(format!("traces/cpu-pjrt-{model}.json"));
+            if !p.exists() {
+                println!("no trace at {}; profiling first ...", p.display());
+                profile_to_file(&root, &model, &p, &ProfileOptions::default())?;
+            }
+            p
+        }
+    };
+    cfg.perf = PerfBackend::Trace {
+        path: trace_path.to_string_lossy().into_owned(),
+    };
+    println!("running trace-driven simulation ...");
+    let (sim_report, _) = run_config(cfg)?;
+
+    let err = sim_report.error_vs(&gt_report);
+    let mut t = Table::new(&["metric", "ground truth", "simulated", "error %"]);
+    t.row(&[
+        "TPOT mean (ms)".into(),
+        format!("{:.3}", gt_report.tpot_ns.mean / 1e6),
+        format!("{:.3}", sim_report.tpot_ns.mean / 1e6),
+        format!("{:.2}", err.tpot_pct),
+    ]);
+    t.row(&[
+        "ITL mean (ms)".into(),
+        format!("{:.3}", gt_report.itl_ns.mean / 1e6),
+        format!("{:.3}", sim_report.itl_ns.mean / 1e6),
+        format!("{:.2}", err.itl_pct),
+    ]);
+    t.row(&[
+        "throughput (tok/s)".into(),
+        format!("{:.1}", gt_report.throughput_tps),
+        format!("{:.1}", sim_report.throughput_tps),
+        format!("{:.2}", err.throughput_pct),
+    ]);
+    t.print();
+    println!("mean error: {:.2} %", err.mean());
+    Ok(())
+}
+
+fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {
+    let out = args
+        .str_flag("out")
+        .ok_or_else(|| anyhow::anyhow!("gen-trace needs --out FILE"))?;
+    let mut spec = workload::WorkloadSpec::sharegpt_100(args.f64_or("rate", 10.0)?);
+    spec.num_requests = args.u64_or("requests", 100)? as usize;
+    spec.seed = args.u64_or("seed", spec.seed)?;
+    let reqs = spec.generate();
+    workload::save_trace(Path::new(out), &reqs)?;
+    println!("wrote {} requests to {out}", reqs.len());
+    Ok(())
+}
+
+fn cmd_presets() -> anyhow::Result<()> {
+    println!("models:");
+    for m in ModelSpec::preset_names() {
+        let s = ModelSpec::preset(m).unwrap();
+        println!(
+            "  {m}: hidden={} heads={} layers={} experts={}",
+            s.hidden, s.heads, s.layers, s.experts
+        );
+    }
+    println!("hardware:");
+    for h in HardwareSpec::preset_names() {
+        let s = HardwareSpec::preset(h).unwrap();
+        println!(
+            "  {h}: {:.0} TFLOP/s, {:.0} GB/s, {} GB",
+            s.peak_flops / 1e12,
+            s.mem_bw / 1e9,
+            s.mem_capacity >> 30
+        );
+    }
+    println!("serving configs (Table II):");
+    for p in [
+        "S(D)", "S(M)", "M(D)", "M(M)", "PD(D)", "PD(M)", "S(D)+PC", "M(D)+PC",
+        "PD(D)+PC",
+    ] {
+        println!("  {p}");
+    }
+    Ok(())
+}

@@ -1,0 +1,362 @@
+//! Paged KV-cache block manager (PagedAttention-style).
+//!
+//! Device KV memory is divided into fixed-size blocks of `block_size`
+//! tokens. Sequences own chains of blocks; blocks are reference-counted so
+//! the prefix cache can share fully-filled prompt blocks between sequences
+//! (copy-on-write is unnecessary in a simulator: decode always appends to
+//! uniquely-owned tail blocks).
+
+use std::collections::HashMap;
+
+/// Block identifier.
+pub type BlockId = u32;
+
+/// Allocation failure: not enough free blocks.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("out of KV blocks: requested {requested}, free {free}")]
+pub struct OutOfBlocks {
+    pub requested: usize,
+    pub free: usize,
+}
+
+/// Fixed-pool, ref-counted block allocator.
+#[derive(Debug, Clone)]
+pub struct BlockManager {
+    block_size: u64,
+    total: usize,
+    free_list: Vec<BlockId>,
+    refcount: Vec<u32>,
+    /// Sequence table: request id -> owned block chain (in token order).
+    seqs: HashMap<u64, Vec<BlockId>>,
+}
+
+impl BlockManager {
+    /// `capacity_bytes / (block_size * kv_bytes_per_token)` blocks.
+    pub fn new(capacity_bytes: u64, block_size: u64, kv_bytes_per_token: u64) -> Self {
+        let block_bytes = block_size * kv_bytes_per_token;
+        let total = (capacity_bytes / block_bytes.max(1)) as usize;
+        BlockManager {
+            block_size,
+            total,
+            free_list: (0..total as BlockId).rev().collect(),
+            refcount: vec![0; total],
+            seqs: HashMap::new(),
+        }
+    }
+
+    pub fn block_size(&self) -> u64 {
+        self.block_size
+    }
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+    pub fn free_blocks(&self) -> usize {
+        self.free_list.len()
+    }
+    pub fn used_blocks(&self) -> usize {
+        self.total - self.free_list.len()
+    }
+    /// Fraction of the pool in use.
+    pub fn utilization(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.used_blocks() as f64 / self.total as f64
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: u64) -> usize {
+        tokens.div_ceil(self.block_size) as usize
+    }
+
+    /// Whether `n` fresh blocks can be allocated.
+    pub fn can_allocate(&self, n: usize) -> bool {
+        self.free_list.len() >= n
+    }
+
+    fn alloc_one(&mut self) -> Option<BlockId> {
+        let id = self.free_list.pop()?;
+        self.refcount[id as usize] = 1;
+        Some(id)
+    }
+
+    /// Allocate a chain for a new sequence holding `tokens` tokens,
+    /// optionally starting with shared (ref-bumped) prefix blocks.
+    pub fn allocate_seq(
+        &mut self,
+        seq_id: u64,
+        tokens: u64,
+        shared_prefix: &[BlockId],
+    ) -> Result<(), OutOfBlocks> {
+        assert!(!self.seqs.contains_key(&seq_id), "seq {seq_id} exists");
+        let needed_total = self.blocks_for(tokens);
+        let shared = shared_prefix.len().min(needed_total);
+        let fresh = needed_total - shared;
+        if !self.can_allocate(fresh) {
+            return Err(OutOfBlocks {
+                requested: fresh,
+                free: self.free_list.len(),
+            });
+        }
+        let mut chain = Vec::with_capacity(needed_total);
+        for &b in &shared_prefix[..shared] {
+            self.refcount[b as usize] += 1;
+            chain.push(b);
+        }
+        for _ in 0..fresh {
+            chain.push(self.alloc_one().unwrap());
+        }
+        self.seqs.insert(seq_id, chain);
+        Ok(())
+    }
+
+    /// Grow a sequence to hold `new_tokens` total tokens (decode append).
+    pub fn grow_seq(&mut self, seq_id: u64, new_tokens: u64) -> Result<(), OutOfBlocks> {
+        let have = self
+            .seqs
+            .get(&seq_id)
+            .unwrap_or_else(|| panic!("unknown seq {seq_id}"))
+            .len();
+        let need = self.blocks_for(new_tokens);
+        if need <= have {
+            return Ok(());
+        }
+        let fresh = need - have;
+        if !self.can_allocate(fresh) {
+            return Err(OutOfBlocks {
+                requested: fresh,
+                free: self.free_list.len(),
+            });
+        }
+        for _ in 0..fresh {
+            let b = self.alloc_one().unwrap();
+            self.seqs.get_mut(&seq_id).unwrap().push(b);
+        }
+        Ok(())
+    }
+
+    /// Release a sequence; blocks return to the pool when refcount drops
+    /// to zero. Returns the freed block ids.
+    pub fn free_seq(&mut self, seq_id: u64) -> Vec<BlockId> {
+        let chain = self.seqs.remove(&seq_id).unwrap_or_default();
+        let mut freed = vec![];
+        for b in chain {
+            self.release_block(b, &mut freed);
+        }
+        freed
+    }
+
+    fn release_block(&mut self, b: BlockId, freed: &mut Vec<BlockId>) {
+        let rc = &mut self.refcount[b as usize];
+        debug_assert!(*rc > 0);
+        *rc -= 1;
+        if *rc == 0 {
+            self.free_list.push(b);
+            freed.push(b);
+        }
+    }
+
+    /// Pin blocks for external sharing (prefix cache insert): bump refcount
+    /// so the blocks survive their owning sequence.
+    pub fn pin_blocks(&mut self, blocks: &[BlockId]) {
+        for &b in blocks {
+            assert!(self.refcount[b as usize] > 0, "pin of free block {b}");
+            self.refcount[b as usize] += 1;
+        }
+    }
+
+    /// Unpin previously pinned blocks (prefix cache eviction).
+    pub fn unpin_blocks(&mut self, blocks: &[BlockId]) -> Vec<BlockId> {
+        let mut freed = vec![];
+        for &b in blocks {
+            self.release_block(b, &mut freed);
+        }
+        freed
+    }
+
+    /// The block chain of a sequence.
+    pub fn seq_blocks(&self, seq_id: u64) -> Option<&[BlockId]> {
+        self.seqs.get(&seq_id).map(|v| v.as_slice())
+    }
+
+    /// Number of live sequences.
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Invariant check (tests / debug builds): refcounts, free list, and
+    /// sequence chains are mutually consistent.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut expected = vec![0u32; self.total];
+        for chain in self.seqs.values() {
+            for &b in chain {
+                expected[b as usize] += 1;
+            }
+        }
+        for &b in &self.free_list {
+            if self.refcount[b as usize] != 0 {
+                return Err(format!("free block {b} has refcount"));
+            }
+        }
+        for (i, (&rc, &exp)) in self.refcount.iter().zip(&expected).enumerate() {
+            // pins (prefix cache) may exceed chain ownership
+            if rc < exp {
+                return Err(format!(
+                    "block {i}: refcount {rc} < chain ownership {exp}"
+                ));
+            }
+            if rc == 0 && exp > 0 {
+                return Err(format!("block {i} owned but refcount 0"));
+            }
+        }
+        let free_set: std::collections::HashSet<BlockId> =
+            self.free_list.iter().copied().collect();
+        if free_set.len() != self.free_list.len() {
+            return Err("duplicate blocks in free list".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn mgr(blocks: usize) -> BlockManager {
+        // block_size 16 tokens, 1 byte/token → capacity = blocks*16
+        BlockManager::new(blocks as u64 * 16, 16, 1)
+    }
+
+    #[test]
+    fn pool_sizing() {
+        let m = mgr(10);
+        assert_eq!(m.total_blocks(), 10);
+        assert_eq!(m.free_blocks(), 10);
+        assert_eq!(m.blocks_for(1), 1);
+        assert_eq!(m.blocks_for(16), 1);
+        assert_eq!(m.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn allocate_and_free_roundtrip() {
+        let mut m = mgr(10);
+        m.allocate_seq(1, 40, &[]).unwrap(); // 3 blocks
+        assert_eq!(m.used_blocks(), 3);
+        m.check_invariants().unwrap();
+        let freed = m.free_seq(1);
+        assert_eq!(freed.len(), 3);
+        assert_eq!(m.free_blocks(), 10);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocation_fails_when_exhausted() {
+        let mut m = mgr(4);
+        m.allocate_seq(1, 48, &[]).unwrap(); // 3 blocks
+        let err = m.allocate_seq(2, 32, &[]).unwrap_err();
+        assert_eq!(err.requested, 2);
+        assert_eq!(err.free, 1);
+        // failed allocation must not leak
+        assert_eq!(m.used_blocks(), 3);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn grow_appends_blocks() {
+        let mut m = mgr(10);
+        m.allocate_seq(1, 16, &[]).unwrap();
+        m.grow_seq(1, 17).unwrap();
+        assert_eq!(m.seq_blocks(1).unwrap().len(), 2);
+        m.grow_seq(1, 20).unwrap(); // still 2 blocks
+        assert_eq!(m.seq_blocks(1).unwrap().len(), 2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_refcounting() {
+        let mut m = mgr(10);
+        m.allocate_seq(1, 32, &[]).unwrap();
+        let prefix: Vec<BlockId> = m.seq_blocks(1).unwrap().to_vec();
+        m.allocate_seq(2, 48, &prefix).unwrap(); // shares 2, allocs 1
+        assert_eq!(m.used_blocks(), 3);
+        // freeing seq 1 must not free shared blocks
+        m.free_seq(1);
+        assert_eq!(m.used_blocks(), 3);
+        m.check_invariants().unwrap();
+        m.free_seq(2);
+        assert_eq!(m.free_blocks(), 10);
+    }
+
+    #[test]
+    fn pin_survives_owner() {
+        let mut m = mgr(10);
+        m.allocate_seq(1, 32, &[]).unwrap();
+        let blocks: Vec<BlockId> = m.seq_blocks(1).unwrap().to_vec();
+        m.pin_blocks(&blocks);
+        m.free_seq(1);
+        assert_eq!(m.used_blocks(), 2); // pinned blocks still resident
+        let freed = m.unpin_blocks(&blocks);
+        assert_eq!(freed.len(), 2);
+        assert_eq!(m.free_blocks(), 10);
+    }
+
+    #[test]
+    fn utilization_tracks() {
+        let mut m = mgr(4);
+        assert_eq!(m.utilization(), 0.0);
+        m.allocate_seq(1, 32, &[]).unwrap();
+        assert!((m.utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_random_alloc_free_never_corrupts() {
+        prop::check(
+            "blockmgr-invariants",
+            64,
+            |rng: &mut Rng| {
+                // generate a random op sequence
+                let ops: Vec<(u8, u64)> = (0..40)
+                    .map(|_| (rng.below(3) as u8, 1 + rng.below(60)))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut m = mgr(16);
+                let mut live: Vec<u64> = vec![];
+                let mut next_id = 0u64;
+                for &(op, arg) in ops {
+                    match op {
+                        0 => {
+                            let id = next_id;
+                            next_id += 1;
+                            if m.allocate_seq(id, arg, &[]).is_ok() {
+                                live.push(id);
+                            }
+                        }
+                        1 => {
+                            if let Some(&id) = live.first() {
+                                let _ = m.grow_seq(id, arg + 60);
+                            }
+                        }
+                        _ => {
+                            if !live.is_empty() {
+                                let id = live.remove(0);
+                                m.free_seq(id);
+                            }
+                        }
+                    }
+                    m.check_invariants()?;
+                }
+                for id in live {
+                    m.free_seq(id);
+                }
+                if m.free_blocks() != 16 {
+                    return Err(format!("leak: {} free of 16", m.free_blocks()));
+                }
+                Ok(())
+            },
+        );
+    }
+}

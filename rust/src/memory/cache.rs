@@ -1,0 +1,333 @@
+//! Prefix cache manager (§II-D): radix-tree index + tiered residency +
+//! pluggable eviction.
+//!
+//! Tier 1 is the compute unit's local memory (GPU/NPU HBM); evictions spill
+//! to host CPU memory (tier 2) and are dropped beyond that. Lookups report
+//! how many tokens hit each tier so the instance can insert the
+//! corresponding memory-transfer events into its execution trace (device
+//! hits avoid prefill compute outright; host hits additionally pay a
+//! host->device transfer priced by the caller from `HardwareSpec::host_bw`).
+//! Hierarchies with more tiers (e.g. SSD) are modeled by chaining managers.
+
+use super::radix::{RadixTree, Token};
+use crate::sim::Nanos;
+
+/// Eviction policy over radix-tree leaves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Least-recently-used leaf first (RadixAttention default).
+    Lru,
+    /// Least-frequently-used leaf first.
+    Lfu,
+    /// Largest leaf first (frees the most tokens per eviction).
+    LargestFirst,
+}
+
+impl EvictPolicy {
+    pub fn from_str(s: &str) -> Option<EvictPolicy> {
+        Some(match s {
+            "lru" => EvictPolicy::Lru,
+            "lfu" => EvictPolicy::Lfu,
+            "largest" => EvictPolicy::LargestFirst,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EvictPolicy::Lru => "lru",
+            EvictPolicy::Lfu => "lfu",
+            EvictPolicy::LargestFirst => "largest",
+        }
+    }
+
+    /// Choose a victim among `(id, tokens, last_access, access_count)`.
+    fn pick(self, leaves: &[(usize, u64, Nanos, u64)]) -> Option<usize> {
+        match self {
+            EvictPolicy::Lru => leaves
+                .iter()
+                .min_by_key(|(id, _, la, _)| (*la, *id))
+                .map(|l| l.0),
+            EvictPolicy::Lfu => leaves
+                .iter()
+                .min_by_key(|(id, _, _, ac)| (*ac, *id))
+                .map(|l| l.0),
+            EvictPolicy::LargestFirst => leaves
+                .iter()
+                .max_by_key(|(id, t, _, _)| (*t, *id))
+                .map(|l| l.0),
+        }
+    }
+}
+
+/// Result of a prefix lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PrefixHit {
+    /// Tokens resident in device memory (skip prefill compute, local read).
+    pub device_tokens: u64,
+    /// Additional tokens resident in host memory (skip compute, but pay a
+    /// host->device transfer of `host_tokens * kv_bytes_per_token`).
+    pub host_tokens: u64,
+}
+
+impl PrefixHit {
+    pub fn total(&self) -> u64 {
+        self.device_tokens + self.host_tokens
+    }
+}
+
+/// Cache statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hit_tokens_device: u64,
+    pub hit_tokens_host: u64,
+    pub queried_tokens: u64,
+    pub inserted_tokens: u64,
+    pub evicted_to_host: u64,
+    pub dropped_tokens: u64,
+}
+
+impl CacheStats {
+    /// Fraction of queried tokens served from any tier.
+    pub fn hit_rate(&self) -> f64 {
+        if self.queried_tokens == 0 {
+            0.0
+        } else {
+            (self.hit_tokens_device + self.hit_tokens_host) as f64
+                / self.queried_tokens as f64
+        }
+    }
+}
+
+/// Two-tier prefix cache for one scope (instance-local or global).
+#[derive(Debug)]
+pub struct PrefixCache {
+    device: RadixTree,
+    host: RadixTree,
+    /// Device-tier capacity in tokens.
+    pub device_capacity: u64,
+    /// Host-tier capacity in tokens.
+    pub host_capacity: u64,
+    pub policy: EvictPolicy,
+    pub stats: CacheStats,
+}
+
+impl PrefixCache {
+    pub fn new(device_capacity: u64, host_capacity: u64, policy: EvictPolicy) -> Self {
+        PrefixCache {
+            device: RadixTree::new(),
+            host: RadixTree::new(),
+            device_capacity,
+            host_capacity,
+            policy,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn device_tokens(&self) -> u64 {
+        self.device.total_tokens()
+    }
+    pub fn host_tokens(&self) -> u64 {
+        self.host.total_tokens()
+    }
+
+    /// Longest-prefix lookup. On a host hit the matched host prefix is
+    /// promoted into the device tier (the "memory-transfer event" of §II-D);
+    /// the caller prices the transfer from the returned `host_tokens`.
+    pub fn lookup(&mut self, query: &[Token], now: Nanos) -> PrefixHit {
+        self.stats.lookups += 1;
+        self.stats.queried_tokens += query.len() as u64;
+
+        let dev = self.device.match_prefix(query);
+        self.device.touch(&dev, now);
+        let host = self.host.match_prefix(query);
+        self.host.touch(&host, now);
+
+        let device_tokens = dev.tokens;
+        let host_extra = host.tokens.saturating_sub(dev.tokens);
+        if host_extra > 0 {
+            // Promote the full host-matched prefix to device.
+            let promoted = &query[..host.tokens as usize];
+            self.insert_device(promoted, now);
+        }
+        self.stats.hit_tokens_device += device_tokens;
+        self.stats.hit_tokens_host += host_extra;
+        PrefixHit {
+            device_tokens,
+            host_tokens: host_extra,
+        }
+    }
+
+    /// Non-mutating best-match length across both tiers (router peek —
+    /// §II-B: routing can adapt to the state of prefix caches).
+    pub fn peek(&self, query: &[Token]) -> u64 {
+        let dev = self.device.match_prefix(query).tokens;
+        let host = self.host.match_prefix(query).tokens;
+        dev.max(host)
+    }
+
+    /// Insert a finished prompt's tokens into the device tier (after
+    /// prefill, §II-D: "new prefixes are inserted into radix tree").
+    pub fn insert(&mut self, seq: &[Token], now: Nanos) {
+        let added = self.insert_device(seq, now);
+        self.stats.inserted_tokens += added;
+    }
+
+    fn insert_device(&mut self, seq: &[Token], now: Nanos) -> u64 {
+        let added = self.device.insert(seq, now);
+        // capacity pressure triggers eviction (spill to host tier)
+        while self.device.total_tokens() > self.device_capacity {
+            if !self.evict_one(now) {
+                break;
+            }
+        }
+        added
+    }
+
+    /// Evict one device leaf to the host tier. Returns false if nothing is
+    /// evictable.
+    fn evict_one(&mut self, now: Nanos) -> bool {
+        let leaves = self.device.leaves();
+        let Some(victim) = self.policy.pick(&leaves) else {
+            return false;
+        };
+        // Reconstruct the leaf's full token path before removal so the host
+        // tier indexes the complete prefix.
+        let path = self.device.path_tokens(victim);
+        let freed = self.device.remove_leaf(victim);
+        self.stats.evicted_to_host += freed;
+        self.host.insert(&path, now);
+        while self.host.total_tokens() > self.host_capacity {
+            let hl = self.host.leaves();
+            let Some(v) = EvictPolicy::Lru.pick(&hl) else {
+                break;
+            };
+            let dropped = self.host.remove_leaf(v);
+            self.stats.dropped_tokens += dropped;
+        }
+        true
+    }
+
+    /// Invariant check for tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.device.check_invariants()?;
+        self.host.check_invariants()?;
+        if self.device.total_tokens() > self.device_capacity.max(1) * 2 {
+            return Err("device tier grossly over capacity".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(range: std::ops::Range<u32>) -> Vec<Token> {
+        range.collect()
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = PrefixCache::new(1000, 1000, EvictPolicy::Lru);
+        let q = toks(0..64);
+        assert_eq!(c.lookup(&q, 1).total(), 0);
+        c.insert(&q, 1);
+        let hit = c.lookup(&q, 2);
+        assert_eq!(hit.device_tokens, 64);
+        assert_eq!(hit.host_tokens, 0);
+        assert!(c.stats.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn partial_prefix_hit() {
+        let mut c = PrefixCache::new(1000, 1000, EvictPolicy::Lru);
+        c.insert(&toks(0..32), 1);
+        let mut q = toks(0..32);
+        q.extend([900, 901, 902]);
+        let hit = c.lookup(&q, 2);
+        assert_eq!(hit.device_tokens, 32);
+    }
+
+    #[test]
+    fn eviction_spills_to_host_and_promotes_back() {
+        // device holds 40 tokens; insert two 32-token disjoint prompts
+        let mut c = PrefixCache::new(40, 1000, EvictPolicy::Lru);
+        let a = toks(0..32);
+        let b = toks(100..132);
+        c.insert(&a, 1);
+        c.insert(&b, 2); // forces eviction of `a` (LRU)
+        assert!(c.device_tokens() <= 40);
+        assert!(c.stats.evicted_to_host > 0);
+        // `a` now hits in host tier and is promoted
+        let hit = c.lookup(&a, 3);
+        assert_eq!(hit.total(), 32);
+        assert!(hit.host_tokens > 0, "expected host-tier hit: {hit:?}");
+        c.check_invariants().unwrap();
+        // second lookup is a pure device hit post-promotion
+        let hit2 = c.lookup(&a, 4);
+        assert!(hit2.device_tokens >= hit.host_tokens);
+    }
+
+    #[test]
+    fn host_capacity_drops_tokens() {
+        let mut c = PrefixCache::new(32, 16, EvictPolicy::Lru);
+        c.insert(&toks(0..32), 1);
+        c.insert(&toks(100..132), 2);
+        c.insert(&toks(200..232), 3);
+        assert!(c.host_tokens() <= 16);
+        assert!(c.stats.dropped_tokens > 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lfu_keeps_hot_prefix() {
+        let mut c = PrefixCache::new(70, 1000, EvictPolicy::Lfu);
+        let hot = toks(0..32);
+        let cold = toks(100..132);
+        c.insert(&hot, 1);
+        c.insert(&cold, 2);
+        for t in 3..10 {
+            c.lookup(&hot, t); // heat up `hot`
+        }
+        c.insert(&toks(200..232), 20); // forces one eviction
+        let hot_hit = c.lookup(&hot, 30);
+        assert_eq!(hot_hit.device_tokens, 32, "hot prefix must stay resident");
+    }
+
+    #[test]
+    fn largest_first_frees_most() {
+        let mut c = PrefixCache::new(100, 1000, EvictPolicy::LargestFirst);
+        c.insert(&toks(0..80), 1);
+        c.insert(&toks(100..120), 2);
+        c.insert(&toks(200..240), 3); // over capacity → evict the 80-leaf
+        assert!(c.lookup(&toks(0..80), 4).device_tokens < 80);
+        assert_eq!(c.lookup(&toks(100..120), 5).device_tokens, 20);
+    }
+
+    #[test]
+    fn shared_prefix_single_copy() {
+        let mut c = PrefixCache::new(1000, 1000, EvictPolicy::Lru);
+        let mut a = toks(0..32);
+        a.extend([500, 501]);
+        let mut b = toks(0..32);
+        b.extend([600, 601]);
+        c.insert(&a, 1);
+        c.insert(&b, 2);
+        // 32 shared + 2 + 2 unique
+        assert_eq!(c.device_tokens(), 36);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(EvictPolicy::from_str("lru"), Some(EvictPolicy::Lru));
+        assert_eq!(EvictPolicy::from_str("lfu"), Some(EvictPolicy::Lfu));
+        assert_eq!(
+            EvictPolicy::from_str("largest"),
+            Some(EvictPolicy::LargestFirst)
+        );
+        assert_eq!(EvictPolicy::from_str("fifo"), None);
+        assert_eq!(EvictPolicy::Lru.as_str(), "lru");
+    }
+}

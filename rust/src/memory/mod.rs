@@ -1,0 +1,29 @@
+//! Memory modeling: paged KV-cache blocks, radix-tree prefix index, and the
+//! tiered prefix-cache manager (§II-D).
+
+pub mod block;
+pub mod cache;
+pub mod radix;
+
+pub use block::{BlockId, BlockManager, OutOfBlocks};
+pub use cache::{CacheStats, EvictPolicy, PrefixCache, PrefixHit};
+pub use radix::{RadixTree, Token};
+
+#[cfg(test)]
+mod tests {
+    use super::radix::RadixTree;
+
+    #[test]
+    fn path_tokens_reconstructs_full_prefix() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3, 4, 5], 1);
+        t.insert(&[1, 2, 9], 2); // split after [1,2]
+        let leaves = t.leaves();
+        for (id, _, _, _) in leaves {
+            let path = t.path_tokens(id);
+            // every reconstructed path must fully match in the tree
+            assert_eq!(t.match_prefix(&path).tokens, path.len() as u64);
+            assert!(path.starts_with(&[1, 2]));
+        }
+    }
+}

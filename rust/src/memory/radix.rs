@@ -1,0 +1,422 @@
+//! Radix tree over token sequences (RadixAttention-style prefix index).
+//!
+//! Nodes carry compressed token-slice edge labels. The tree answers
+//! longest-prefix-match queries in O(match length) and supports LRU/LFU
+//! leaf eviction; token ownership is tracked per node so the cache manager
+//! can convert evictions into freed bytes.
+
+use std::collections::HashMap;
+
+use crate::sim::Nanos;
+
+/// Token alphabet (synthetic token ids).
+pub type Token = u32;
+
+#[derive(Debug)]
+struct Node {
+    /// Compressed edge label leading into this node (empty at root).
+    label: Vec<Token>,
+    children: HashMap<Token, usize>,
+    parent: usize,
+    last_access: Nanos,
+    access_count: u64,
+}
+
+/// Result of a longest-prefix match.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Match {
+    /// Number of tokens matched from the query's start.
+    pub tokens: u64,
+    /// Node ids along the matched path (for access-time bumping).
+    path: Vec<usize>,
+}
+
+/// Prefix radix tree with per-node access metadata.
+#[derive(Debug)]
+pub struct RadixTree {
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    total_tokens: u64,
+}
+
+pub const ROOT: usize = 0;
+
+impl Default for RadixTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RadixTree {
+    pub fn new() -> Self {
+        RadixTree {
+            nodes: vec![Some(Node {
+                label: vec![],
+                children: HashMap::new(),
+                parent: ROOT,
+                last_access: 0,
+                access_count: 0,
+            })],
+            free: vec![],
+            total_tokens: 0,
+        }
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("dangling node id")
+    }
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("dangling node id")
+    }
+
+    fn alloc(&mut self, n: Node) -> usize {
+        if let Some(id) = self.free.pop() {
+            self.nodes[id] = Some(n);
+            id
+        } else {
+            self.nodes.push(Some(n));
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Total tokens stored in the tree (== cached KV tokens).
+    pub fn total_tokens(&self) -> u64 {
+        self.total_tokens
+    }
+
+    /// Number of live nodes (excluding root).
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.iter().flatten().count() - 1
+    }
+
+    /// Longest-prefix match of `query` against the tree.
+    pub fn match_prefix(&self, query: &[Token]) -> Match {
+        let mut cur = ROOT;
+        let mut matched = 0usize;
+        let mut path = vec![];
+        loop {
+            let node = self.node(cur);
+            let Some(&next) = query.get(matched).and_then(|t| node.children.get(t))
+            else {
+                break;
+            };
+            let child = self.node(next);
+            let rest = &query[matched..];
+            let common = child
+                .label
+                .iter()
+                .zip(rest.iter())
+                .take_while(|(a, b)| a == b)
+                .count();
+            matched += common;
+            if common < child.label.len() {
+                // partial edge match: count the tokens but stop here.
+                path.push(next);
+                break;
+            }
+            path.push(next);
+            cur = next;
+        }
+        Match {
+            tokens: matched as u64,
+            path,
+        }
+    }
+
+    /// Bump access metadata along a match path.
+    pub fn touch(&mut self, m: &Match, now: Nanos) {
+        for &id in &m.path {
+            let n = self.node_mut(id);
+            n.last_access = now;
+            n.access_count += 1;
+        }
+    }
+
+    /// Insert `seq`, sharing existing prefixes. Returns the number of NEW
+    /// tokens added to the tree.
+    pub fn insert(&mut self, seq: &[Token], now: Nanos) -> u64 {
+        let mut cur = ROOT;
+        let mut pos = 0usize;
+        loop {
+            if pos == seq.len() {
+                return self.finish_insert(0);
+            }
+            let first = seq[pos];
+            match self.node(cur).children.get(&first).copied() {
+                None => {
+                    // new leaf with the remaining suffix
+                    let label: Vec<Token> = seq[pos..].to_vec();
+                    let added = label.len() as u64;
+                    let leaf = self.alloc(Node {
+                        label,
+                        children: HashMap::new(),
+                        parent: cur,
+                        last_access: now,
+                        access_count: 1,
+                    });
+                    self.node_mut(cur).children.insert(first, leaf);
+                    return self.finish_insert(added);
+                }
+                Some(child) => {
+                    let common = {
+                        let c = self.node(child);
+                        c.label
+                            .iter()
+                            .zip(&seq[pos..])
+                            .take_while(|(a, b)| a == b)
+                            .count()
+                    };
+                    let child_label_len = self.node(child).label.len();
+                    if common == child_label_len {
+                        // full edge consumed; descend
+                        pos += common;
+                        self.node_mut(child).last_access = now;
+                        cur = child;
+                    } else {
+                        // split the edge at `common`
+                        self.split_edge(cur, child, common, now);
+                        pos += common;
+                        cur = self.node(child).parent; // the new mid node
+                    }
+                }
+            }
+        }
+    }
+
+    fn finish_insert(&mut self, added: u64) -> u64 {
+        self.total_tokens += added;
+        added
+    }
+
+    /// Split `child`'s edge after `common` tokens, introducing a mid node.
+    fn split_edge(&mut self, parent: usize, child: usize, common: usize, now: Nanos) {
+        debug_assert!(common > 0 && common < self.node(child).label.len());
+        let child_node = self.node_mut(child);
+        let suffix = child_node.label.split_off(common);
+        let prefix = std::mem::take(&mut child_node.label);
+        let (first_prefix, first_suffix) = (prefix[0], suffix[0]);
+        let (la, ac) = (child_node.last_access, child_node.access_count);
+        // mid node takes the prefix
+        let mid = self.alloc(Node {
+            label: prefix,
+            children: HashMap::new(),
+            parent,
+            last_access: now.max(la),
+            access_count: ac,
+        });
+        // child keeps the suffix, re-parented under mid
+        let c = self.node_mut(child);
+        c.label = suffix;
+        c.parent = mid;
+        self.node_mut(mid).children.insert(first_suffix, child);
+        self.node_mut(parent).children.insert(first_prefix, mid);
+    }
+
+    /// Collect leaf nodes (eviction candidates) as
+    /// `(node id, tokens, last_access, access_count)`.
+    pub fn leaves(&self) -> Vec<(usize, u64, Nanos, u64)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(id, n)| n.as_ref().map(|n| (id, n)))
+            .filter(|(id, n)| *id != ROOT && n.children.is_empty())
+            .map(|(id, n)| (id, n.label.len() as u64, n.last_access, n.access_count))
+            .collect()
+    }
+
+    /// Full token path from the root to (and including) node `id`.
+    pub fn path_tokens(&self, id: usize) -> Vec<Token> {
+        let mut labels = vec![];
+        let mut cur = id;
+        while cur != ROOT {
+            let n = self.node(cur);
+            labels.push(n.label.clone());
+            cur = n.parent;
+        }
+        labels.reverse();
+        labels.concat()
+    }
+
+    /// Remove a leaf node, returning its token count. Panics on non-leaf.
+    pub fn remove_leaf(&mut self, id: usize) -> u64 {
+        assert!(id != ROOT, "cannot remove root");
+        let node = self.nodes[id].take().expect("dangling node id");
+        assert!(node.children.is_empty(), "remove_leaf on internal node");
+        let parent = node.parent;
+        let first = node.label[0];
+        self.node_mut(parent).children.remove(&first);
+        self.free.push(id);
+        self.total_tokens -= node.label.len() as u64;
+        node.label.len() as u64
+    }
+
+    /// Check structural invariants (tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut counted = 0u64;
+        for (id, n) in self.nodes.iter().enumerate() {
+            let Some(n) = n else { continue };
+            if id != ROOT {
+                if n.label.is_empty() {
+                    return Err(format!("node {id} has empty label"));
+                }
+                let parent = self
+                    .nodes
+                    .get(n.parent)
+                    .and_then(|p| p.as_ref())
+                    .ok_or(format!("node {id} has dangling parent"))?;
+                if parent.children.get(&n.label[0]) != Some(&id) {
+                    return Err(format!("node {id} not linked from parent"));
+                }
+                counted += n.label.len() as u64;
+            }
+            for (&t, &c) in &n.children {
+                let child = self
+                    .nodes
+                    .get(c)
+                    .and_then(|x| x.as_ref())
+                    .ok_or(format!("dangling child {c}"))?;
+                if child.label.first() != Some(&t) {
+                    return Err(format!("child {c} keyed by wrong token"));
+                }
+            }
+        }
+        if counted != self.total_tokens {
+            return Err(format!(
+                "token accounting off: counted {counted} != {}",
+                self.total_tokens
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn seq(xs: &[u32]) -> Vec<Token> {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn empty_tree_matches_nothing() {
+        let t = RadixTree::new();
+        assert_eq!(t.match_prefix(&seq(&[1, 2, 3])).tokens, 0);
+        assert_eq!(t.total_tokens(), 0);
+    }
+
+    #[test]
+    fn insert_then_full_match() {
+        let mut t = RadixTree::new();
+        assert_eq!(t.insert(&seq(&[1, 2, 3, 4]), 10), 4);
+        assert_eq!(t.match_prefix(&seq(&[1, 2, 3, 4])).tokens, 4);
+        assert_eq!(t.match_prefix(&seq(&[1, 2])).tokens, 2);
+        assert_eq!(t.match_prefix(&seq(&[1, 2, 9])).tokens, 2);
+        assert_eq!(t.match_prefix(&seq(&[9])).tokens, 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_not_double_counted() {
+        let mut t = RadixTree::new();
+        t.insert(&seq(&[1, 2, 3, 4]), 1);
+        let added = t.insert(&seq(&[1, 2, 3, 9, 9]), 2);
+        assert_eq!(added, 2); // only the divergent suffix
+        assert_eq!(t.total_tokens(), 6);
+        assert_eq!(t.match_prefix(&seq(&[1, 2, 3, 9, 9])).tokens, 5);
+        assert_eq!(t.match_prefix(&seq(&[1, 2, 3, 4])).tokens, 4);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duplicate_insert_adds_nothing() {
+        let mut t = RadixTree::new();
+        t.insert(&seq(&[5, 6, 7]), 1);
+        assert_eq!(t.insert(&seq(&[5, 6, 7]), 2), 0);
+        assert_eq!(t.total_tokens(), 3);
+    }
+
+    #[test]
+    fn edge_split_preserves_matches() {
+        let mut t = RadixTree::new();
+        t.insert(&seq(&[1, 2, 3, 4, 5]), 1);
+        t.insert(&seq(&[1, 2, 9]), 2); // splits the 5-edge after 2 tokens
+        assert_eq!(t.match_prefix(&seq(&[1, 2, 3, 4, 5])).tokens, 5);
+        assert_eq!(t.match_prefix(&seq(&[1, 2, 9])).tokens, 3);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn leaves_and_eviction() {
+        let mut t = RadixTree::new();
+        t.insert(&seq(&[1, 2, 3, 4]), 1);
+        t.insert(&seq(&[1, 2, 9, 9]), 5);
+        let leaves = t.leaves();
+        assert_eq!(leaves.len(), 2);
+        // evict the older leaf ([3,4], last_access=1)
+        let (victim, tokens, la, _) =
+            *leaves.iter().min_by_key(|(_, _, la, _)| *la).unwrap();
+        assert_eq!(la, 1);
+        assert_eq!(tokens, 2);
+        t.remove_leaf(victim);
+        assert_eq!(t.total_tokens(), 4);
+        assert_eq!(t.match_prefix(&seq(&[1, 2, 3, 4])).tokens, 2);
+        assert_eq!(t.match_prefix(&seq(&[1, 2, 9, 9])).tokens, 4);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn touch_updates_access_metadata() {
+        let mut t = RadixTree::new();
+        t.insert(&seq(&[1, 2, 3]), 1);
+        let m = t.match_prefix(&seq(&[1, 2, 3]));
+        t.touch(&m, 42);
+        let leaves = t.leaves();
+        assert_eq!(leaves[0].2, 42);
+        assert_eq!(leaves[0].3, 2); // insert + touch
+    }
+
+    #[test]
+    fn prop_tree_consistent_under_random_ops() {
+        prop::check(
+            "radix-invariants",
+            96,
+            |rng: &mut Rng| {
+                let seqs: Vec<Vec<Token>> = (0..12)
+                    .map(|_| {
+                        let len = 1 + rng.below(20) as usize;
+                        (0..len).map(|_| rng.below(4) as Token).collect()
+                    })
+                    .collect();
+                seqs
+            },
+            |seqs| {
+                let mut t = RadixTree::new();
+                for (i, s) in seqs.iter().enumerate() {
+                    t.insert(s, i as Nanos);
+                    t.check_invariants()?;
+                    // inserted sequence must fully match afterwards
+                    let m = t.match_prefix(s);
+                    if m.tokens != s.len() as u64 {
+                        return Err(format!(
+                            "inserted seq {s:?} matches only {} tokens",
+                            m.tokens
+                        ));
+                    }
+                }
+                // random evictions keep the structure valid
+                while t.num_nodes() > 0 {
+                    let leaves = t.leaves();
+                    if leaves.is_empty() {
+                        break;
+                    }
+                    t.remove_leaf(leaves[0].0);
+                    t.check_invariants()?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,343 @@
+//! Serving metrics: TTFT, TPOT, ITL, end-to-end latency, token throughput,
+//! per-instance utilization, and cache statistics — the quantities Fig. 2
+//! reports (average TPOT, ITL, and token generation throughput).
+//!
+//! Definitions (matching vLLM's benchmark conventions, which the paper
+//! compares against):
+//! * **TTFT** — arrival to first output token.
+//! * **TPOT** — (end-to-end latency - TTFT) / (output tokens - 1).
+//! * **ITL**  — individual gaps between consecutive output tokens.
+//! * **Throughput** — total generated tokens / makespan.
+
+use std::collections::HashMap;
+
+use crate::sim::{nanos_to_secs, Nanos};
+use crate::util::json::Value;
+use crate::util::stats::{self, Summary};
+
+/// Lifecycle timestamps for one request.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival: Nanos,
+    pub dispatched: Option<Nanos>,
+    pub instance: Option<usize>,
+    pub token_times: Vec<Nanos>,
+    pub finished: Option<Nanos>,
+    pub prompt_tokens: u64,
+    pub output_tokens: u64,
+    /// Prompt tokens served from the prefix cache (any tier).
+    pub cached_tokens: u64,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> Option<Nanos> {
+        self.token_times.first().map(|&t| t - self.arrival)
+    }
+
+    pub fn e2e(&self) -> Option<Nanos> {
+        self.finished.map(|f| f - self.arrival)
+    }
+
+    /// Time per output token (excluding the first).
+    pub fn tpot(&self) -> Option<f64> {
+        let e2e = self.e2e()? as f64;
+        let ttft = self.ttft()? as f64;
+        let n = self.token_times.len();
+        if n <= 1 {
+            return None;
+        }
+        Some((e2e - ttft) / (n - 1) as f64)
+    }
+
+    /// Inter-token latencies.
+    pub fn itls(&self) -> Vec<f64> {
+        self.token_times
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as f64)
+            .collect()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished.is_some()
+    }
+}
+
+/// Collects per-request lifecycle events during a simulation.
+#[derive(Debug, Default)]
+pub struct MetricsCollector {
+    records: HashMap<u64, RequestRecord>,
+    /// Per-instance busy time accumulation.
+    busy: HashMap<usize, Nanos>,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_arrival(&mut self, id: u64, at: Nanos, prompt: u64, output: u64) {
+        self.records.insert(
+            id,
+            RequestRecord {
+                id,
+                arrival: at,
+                dispatched: None,
+                instance: None,
+                token_times: vec![],
+                finished: None,
+                prompt_tokens: prompt,
+                output_tokens: output,
+                cached_tokens: 0,
+            },
+        );
+    }
+
+    pub fn on_dispatch(&mut self, id: u64, at: Nanos, instance: usize) {
+        if let Some(r) = self.records.get_mut(&id) {
+            r.dispatched = Some(at);
+            r.instance = Some(instance);
+        }
+    }
+
+    pub fn on_cached(&mut self, id: u64, tokens: u64) {
+        if let Some(r) = self.records.get_mut(&id) {
+            r.cached_tokens = tokens;
+        }
+    }
+
+    pub fn on_token(&mut self, id: u64, at: Nanos) {
+        if let Some(r) = self.records.get_mut(&id) {
+            r.token_times.push(at);
+        }
+    }
+
+    pub fn on_finish(&mut self, id: u64, at: Nanos) {
+        if let Some(r) = self.records.get_mut(&id) {
+            r.finished = Some(at);
+        }
+    }
+
+    pub fn on_busy(&mut self, instance: usize, dur: Nanos) {
+        *self.busy.entry(instance).or_insert(0) += dur;
+    }
+
+    pub fn record(&self, id: u64) -> Option<&RequestRecord> {
+        self.records.get(&id)
+    }
+
+    pub fn num_finished(&self) -> usize {
+        self.records.values().filter(|r| r.is_finished()).count()
+    }
+
+    /// Build the final report. `makespan` is the simulation end time.
+    pub fn report(&self, makespan: Nanos) -> Report {
+        let finished: Vec<&RequestRecord> = {
+            let mut v: Vec<&RequestRecord> =
+                self.records.values().filter(|r| r.is_finished()).collect();
+            v.sort_by_key(|r| r.id);
+            v
+        };
+        let ttft: Vec<f64> = finished
+            .iter()
+            .filter_map(|r| r.ttft().map(|t| t as f64))
+            .collect();
+        let tpot: Vec<f64> = finished.iter().filter_map(|r| r.tpot()).collect();
+        let itl: Vec<f64> = finished.iter().flat_map(|r| r.itls()).collect();
+        let e2e: Vec<f64> = finished
+            .iter()
+            .filter_map(|r| r.e2e().map(|t| t as f64))
+            .collect();
+        let gen_tokens: u64 = finished.iter().map(|r| r.token_times.len() as u64).sum();
+        let cached_tokens: u64 = finished.iter().map(|r| r.cached_tokens).sum();
+        let secs = nanos_to_secs(makespan).max(1e-12);
+        let utilization: HashMap<usize, f64> = self
+            .busy
+            .iter()
+            .map(|(&i, &b)| (i, (b as f64 / makespan.max(1) as f64).min(1.0)))
+            .collect();
+        Report {
+            num_requests: self.records.len(),
+            num_finished: finished.len(),
+            makespan,
+            ttft_ns: Summary::of(&ttft),
+            tpot_ns: Summary::of(&tpot),
+            itl_ns: Summary::of(&itl),
+            e2e_ns: Summary::of(&e2e),
+            generated_tokens: gen_tokens,
+            cached_tokens,
+            throughput_tps: gen_tokens as f64 / secs,
+            utilization,
+        }
+    }
+}
+
+/// Final simulation report (one Fig. 2 data point).
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub num_requests: usize,
+    pub num_finished: usize,
+    pub makespan: Nanos,
+    pub ttft_ns: Summary,
+    pub tpot_ns: Summary,
+    pub itl_ns: Summary,
+    pub e2e_ns: Summary,
+    pub generated_tokens: u64,
+    pub cached_tokens: u64,
+    /// Output tokens per second.
+    pub throughput_tps: f64,
+    pub utilization: HashMap<usize, f64>,
+}
+
+impl Report {
+    pub fn to_json(&self) -> Value {
+        let sum = |s: &Summary| {
+            Value::obj(vec![
+                ("mean", Value::float(s.mean)),
+                ("p50", Value::float(s.p50)),
+                ("p90", Value::float(s.p90)),
+                ("p99", Value::float(s.p99)),
+                ("count", Value::int(s.count as i64)),
+            ])
+        };
+        let mut util: Vec<(usize, f64)> =
+            self.utilization.iter().map(|(&k, &v)| (k, v)).collect();
+        util.sort_by_key(|&(k, _)| k);
+        Value::obj(vec![
+            ("num_requests", Value::int(self.num_requests as i64)),
+            ("num_finished", Value::int(self.num_finished as i64)),
+            ("makespan_ns", Value::int(self.makespan as i64)),
+            ("ttft_ns", sum(&self.ttft_ns)),
+            ("tpot_ns", sum(&self.tpot_ns)),
+            ("itl_ns", sum(&self.itl_ns)),
+            ("e2e_ns", sum(&self.e2e_ns)),
+            ("generated_tokens", Value::int(self.generated_tokens as i64)),
+            ("cached_tokens", Value::int(self.cached_tokens as i64)),
+            ("throughput_tps", Value::float(self.throughput_tps)),
+            (
+                "utilization",
+                Value::arr(
+                    util.into_iter()
+                        .map(|(k, v)| {
+                            Value::obj(vec![
+                                ("instance", Value::int(k as i64)),
+                                ("busy", Value::float(v)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Mean absolute percentage error of headline metrics vs a reference
+    /// report (used by Fig. 2 validation: TPOT, ITL, throughput).
+    pub fn error_vs(&self, reference: &Report) -> ValidationError {
+        ValidationError {
+            tpot_pct: stats::ape(self.tpot_ns.mean, reference.tpot_ns.mean),
+            itl_pct: stats::ape(self.itl_ns.mean, reference.itl_ns.mean),
+            throughput_pct: stats::ape(self.throughput_tps, reference.throughput_tps),
+            ttft_pct: stats::ape(self.ttft_ns.mean, reference.ttft_ns.mean),
+        }
+    }
+}
+
+/// Percentage errors of a simulated report against a reference run.
+#[derive(Debug, Clone, Copy)]
+pub struct ValidationError {
+    pub tpot_pct: f64,
+    pub itl_pct: f64,
+    pub throughput_pct: f64,
+    pub ttft_pct: f64,
+}
+
+impl ValidationError {
+    pub fn mean(&self) -> f64 {
+        (self.tpot_pct + self.itl_pct + self.throughput_pct) / 3.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect_one() -> MetricsCollector {
+        let mut m = MetricsCollector::new();
+        m.on_arrival(0, 1000, 32, 4);
+        m.on_dispatch(0, 1500, 0);
+        m.on_token(0, 2000);
+        m.on_token(0, 2500);
+        m.on_token(0, 3100);
+        m.on_token(0, 3600);
+        m.on_finish(0, 3600);
+        m
+    }
+
+    #[test]
+    fn ttft_tpot_itl() {
+        let m = collect_one();
+        let r = m.record(0).unwrap();
+        assert_eq!(r.ttft(), Some(1000));
+        assert_eq!(r.e2e(), Some(2600));
+        // tpot = (2600-1000)/3
+        assert!((r.tpot().unwrap() - 1600.0 / 3.0).abs() < 1e-9);
+        assert_eq!(r.itls(), vec![500.0, 600.0, 500.0]);
+    }
+
+    #[test]
+    fn single_token_has_no_tpot() {
+        let mut m = MetricsCollector::new();
+        m.on_arrival(0, 0, 8, 1);
+        m.on_token(0, 100);
+        m.on_finish(0, 100);
+        assert!(m.record(0).unwrap().tpot().is_none());
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let m = collect_one();
+        let rep = m.report(10_000);
+        assert_eq!(rep.num_finished, 1);
+        assert_eq!(rep.generated_tokens, 4);
+        assert!((rep.throughput_tps - 4.0 / 1e-5).abs() < 1.0);
+        assert_eq!(rep.ttft_ns.mean, 1000.0);
+    }
+
+    #[test]
+    fn unfinished_requests_excluded() {
+        let mut m = collect_one();
+        m.on_arrival(1, 2000, 16, 8);
+        m.on_token(1, 3000);
+        let rep = m.report(10_000);
+        assert_eq!(rep.num_requests, 2);
+        assert_eq!(rep.num_finished, 1);
+    }
+
+    #[test]
+    fn utilization_capped() {
+        let mut m = collect_one();
+        m.on_busy(0, 5_000);
+        m.on_busy(0, 4_000);
+        let rep = m.report(10_000);
+        assert!((rep.utilization[&0] - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_vs_reference() {
+        let m = collect_one();
+        let a = m.report(10_000);
+        let mut b = a.clone();
+        b.throughput_tps *= 1.10;
+        let err = b.error_vs(&a);
+        assert!((err.throughput_pct - 10.0).abs() < 1e-6);
+        assert_eq!(err.tpot_pct, 0.0);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let rep = collect_one().report(10_000);
+        let v = rep.to_json();
+        assert_eq!(v.get("num_finished").as_i64(), Some(1));
+        assert!(v.get("tpot_ns").get("mean").as_f64().is_some());
+    }
+}

@@ -1,0 +1,263 @@
+//! Model architecture specifications.
+//!
+//! [`ModelSpec`] mirrors `python/compile/model.py::ModelConfig` and adds the
+//! analytical quantities the performance and memory models need: parameter
+//! bytes, KV-cache bytes per token, and per-operator FLOP/byte counts.
+//!
+//! `tiny-*` presets are actually executed/profiled on the CPU PJRT backend;
+//! the paper-scale presets (Llama3.1-8B, Phi-mini-MoE) drive the calibrated
+//! analytical extension of the trace model (see `perf::trace`).
+
+pub mod operators;
+
+pub use operators::{OpKind, OpInvocation};
+
+/// Bytes per element for the serving dtype (fp16/bf16 deployment style).
+pub const DTYPE_BYTES: u64 = 2;
+
+/// A transformer decoder architecture (dense or MoE).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub hidden: u64,
+    pub heads: u64,
+    /// KV heads (GQA); == heads for MHA.
+    pub kv_heads: u64,
+    /// Dense-FFN inner dimension (SwiGLU).
+    pub ffn: u64,
+    pub layers: u64,
+    pub vocab: u64,
+    /// Number of experts; 0 for dense models.
+    pub experts: u64,
+    /// Experts activated per token.
+    pub top_k: u64,
+    /// Per-expert FFN inner dimension.
+    pub expert_ffn: u64,
+    /// MoE layer stride: every `moe_every`-th layer is MoE (1 = all layers).
+    pub moe_every: u64,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> u64 {
+        self.hidden / self.heads
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.experts > 0
+    }
+
+    /// Number of MoE layers (0 for dense).
+    pub fn moe_layers(&self) -> u64 {
+        if self.is_moe() {
+            self.layers / self.moe_every
+        } else {
+            0
+        }
+    }
+
+    /// Number of layers with a dense FFN.
+    pub fn dense_ffn_layers(&self) -> u64 {
+        self.layers - self.moe_layers()
+    }
+
+    /// KV-cache bytes per token across all layers (K + V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.layers * self.kv_heads * self.head_dim() * DTYPE_BYTES
+    }
+
+    /// Total parameter bytes (weights only).
+    pub fn param_bytes(&self) -> u64 {
+        let h = self.hidden;
+        let kvh_dim = self.kv_heads * self.head_dim();
+        let attn = h * h + 2 * h * kvh_dim + h * h; // wq, wk, wv, wo
+        let dense_ffn = 3 * h * self.ffn;
+        let moe_ffn = self.experts * 3 * h * self.expert_ffn + h * self.experts;
+        let per_dense_layer = attn + dense_ffn + 2 * h;
+        let per_moe_layer = attn + moe_ffn + 2 * h;
+        let emb = 2 * self.vocab * h; // tied embeddings counted twice (in+out)
+        let body = self.dense_ffn_layers() * per_dense_layer
+            + self.moe_layers() * per_moe_layer;
+        (body + emb) * DTYPE_BYTES
+    }
+
+    /// Bytes of expert weights for ONE expert of ONE layer.
+    pub fn expert_bytes(&self) -> u64 {
+        3 * self.hidden * self.expert_ffn * DTYPE_BYTES
+    }
+
+    /// FLOPs for one forward pass over `tokens` tokens of ONE layer,
+    /// attending to `ctx` total context tokens (weights-only GEMM count;
+    /// used by the roofline model).
+    pub fn layer_flops(&self, tokens: u64, ctx: u64, moe_layer: bool) -> u64 {
+        let h = self.hidden;
+        let d = self.head_dim();
+        let kvh_dim = self.kv_heads * d;
+        let qkv = 2 * tokens * h * (h + 2 * kvh_dim);
+        let attn = 2 * tokens * ctx * self.heads * d * 2; // QK^T + PV
+        let proj = 2 * tokens * h * h;
+        let ffn = if moe_layer {
+            2 * tokens * h * self.experts // gate
+                + self.top_k * 2 * tokens * h * self.expert_ffn * 3
+        } else {
+            2 * tokens * h * self.ffn * 3
+        };
+        qkv + attn + proj + ffn
+    }
+
+    /// Total forward FLOPs over all layers + LM head.
+    pub fn forward_flops(&self, tokens: u64, ctx: u64) -> u64 {
+        let moe = self.moe_layers() * self.layer_flops(tokens, ctx, true);
+        let dense = self.dense_ffn_layers() * self.layer_flops(tokens, ctx, false);
+        moe + dense + 2 * tokens * self.hidden * self.vocab
+    }
+
+    // ---- presets ---------------------------------------------------------
+
+    /// The tiny dense model that the AOT grid actually lowers/profiles.
+    pub fn tiny_dense() -> ModelSpec {
+        ModelSpec {
+            name: "tiny-dense".into(),
+            hidden: 256,
+            heads: 8,
+            kv_heads: 8,
+            ffn: 1024,
+            layers: 4,
+            vocab: 2048,
+            experts: 0,
+            top_k: 0,
+            expert_ffn: 0,
+            moe_every: 1,
+        }
+    }
+
+    /// The tiny MoE model that the AOT grid actually lowers/profiles.
+    pub fn tiny_moe() -> ModelSpec {
+        ModelSpec {
+            name: "tiny-moe".into(),
+            hidden: 256,
+            heads: 8,
+            kv_heads: 8,
+            ffn: 1024,
+            layers: 4,
+            vocab: 2048,
+            experts: 8,
+            top_k: 2,
+            expert_ffn: 512,
+            moe_every: 1,
+        }
+    }
+
+    /// Llama 3.1 8B (paper's dense model; analytical-extension target).
+    pub fn llama31_8b() -> ModelSpec {
+        ModelSpec {
+            name: "llama3.1-8b".into(),
+            hidden: 4096,
+            heads: 32,
+            kv_heads: 8,
+            ffn: 14336,
+            layers: 32,
+            vocab: 128256,
+            experts: 0,
+            top_k: 0,
+            expert_ffn: 0,
+            moe_every: 1,
+        }
+    }
+
+    /// Phi-mini-MoE (paper's MoE model; analytical-extension target).
+    pub fn phi_mini_moe() -> ModelSpec {
+        ModelSpec {
+            name: "phi-mini-moe".into(),
+            hidden: 4096,
+            heads: 32,
+            kv_heads: 8,
+            ffn: 0, // all layers MoE
+            layers: 32,
+            vocab: 32064,
+            experts: 16,
+            top_k: 2,
+            expert_ffn: 6400,
+            moe_every: 1,
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<ModelSpec> {
+        match name {
+            "tiny-dense" => Some(Self::tiny_dense()),
+            "tiny-moe" => Some(Self::tiny_moe()),
+            "llama3.1-8b" => Some(Self::llama31_8b()),
+            "phi-mini-moe" => Some(Self::phi_mini_moe()),
+            _ => None,
+        }
+    }
+
+    /// All preset names (for CLI help / config validation messages).
+    pub fn preset_names() -> &'static [&'static str] {
+        &["tiny-dense", "tiny-moe", "llama3.1-8b", "phi-mini-moe"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ModelSpec::preset_names() {
+            let m = ModelSpec::preset(name).unwrap();
+            assert_eq!(&m.name, name);
+            assert_eq!(m.hidden % m.heads, 0);
+        }
+        assert!(ModelSpec::preset("nope").is_none());
+    }
+
+    #[test]
+    fn tiny_matches_python_manifest_dims() {
+        let m = ModelSpec::tiny_dense();
+        assert_eq!((m.hidden, m.heads, m.ffn, m.vocab), (256, 8, 1024, 2048));
+        let m = ModelSpec::tiny_moe();
+        assert_eq!((m.experts, m.top_k, m.expert_ffn), (8, 2, 512));
+    }
+
+    #[test]
+    fn kv_bytes_scale_with_layers() {
+        let m = ModelSpec::tiny_dense();
+        // 2 (K+V) * 4 layers * 8 heads * 32 dim * 2 bytes
+        assert_eq!(m.kv_bytes_per_token(), 2 * 4 * 8 * 32 * 2);
+    }
+
+    #[test]
+    fn llama8b_param_count_plausible() {
+        let m = ModelSpec::llama31_8b();
+        let params = m.param_bytes() / DTYPE_BYTES;
+        // ~8.0B (7.5–8.5 allowing for tied-embedding accounting)
+        assert!(
+            (7_000_000_000..9_000_000_000).contains(&params),
+            "params={params}"
+        );
+    }
+
+    #[test]
+    fn moe_layer_flops_use_topk_not_all_experts() {
+        let m = ModelSpec::tiny_moe();
+        let moe = m.layer_flops(16, 16, true);
+        let dense = m.layer_flops(16, 16, false);
+        // top_k * expert_ffn = 2*512 = 1024 == dense ffn → near-equal FLOPs
+        let ratio = moe as f64 / dense as f64;
+        assert!((0.9..1.2).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn forward_flops_monotone() {
+        let m = ModelSpec::tiny_dense();
+        assert!(m.forward_flops(2, 2) < m.forward_flops(4, 4));
+        assert!(m.forward_flops(4, 64) < m.forward_flops(4, 128));
+    }
+
+    #[test]
+    fn expert_bytes() {
+        let m = ModelSpec::tiny_moe();
+        assert_eq!(m.expert_bytes(), 3 * 256 * 512 * 2);
+    }
+}

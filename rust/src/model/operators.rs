@@ -1,0 +1,143 @@
+//! Operator vocabulary shared by the AOT manifest, the profiler, and the
+//! trace-driven performance model.
+//!
+//! An [`OpInvocation`] is the unit the simulator prices: "run operator X
+//! with this many tokens / this batch / this context". The trace DB is keyed
+//! on `(OpKind, grid point)`; `perf::trace` interpolates between profiled
+//! grid points.
+
+use std::fmt;
+
+/// The operator kinds emitted by `python/compile/aot.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    QkvProj,
+    AttnPrefill,
+    AttnDecode,
+    OutProj,
+    Ffn,
+    MoeGate,
+    ExpertFfn,
+    LmHead,
+    RmsNorm,
+}
+
+impl OpKind {
+    /// Manifest string name (matches `aot.py` `op` field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OpKind::QkvProj => "qkv_proj",
+            OpKind::AttnPrefill => "attn_prefill",
+            OpKind::AttnDecode => "attn_decode",
+            OpKind::OutProj => "out_proj",
+            OpKind::Ffn => "ffn",
+            OpKind::MoeGate => "moe_gate",
+            OpKind::ExpertFfn => "expert_ffn",
+            OpKind::LmHead => "lm_head",
+            OpKind::RmsNorm => "rmsnorm",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<OpKind> {
+        Some(match s {
+            "qkv_proj" => OpKind::QkvProj,
+            "attn_prefill" => OpKind::AttnPrefill,
+            "attn_decode" => OpKind::AttnDecode,
+            "out_proj" => OpKind::OutProj,
+            "ffn" => OpKind::Ffn,
+            "moe_gate" => OpKind::MoeGate,
+            "expert_ffn" => OpKind::ExpertFfn,
+            "lm_head" => OpKind::LmHead,
+            "rmsnorm" => OpKind::RmsNorm,
+            _ => return None,
+        })
+    }
+
+    /// All kinds, in manifest order.
+    pub fn all() -> &'static [OpKind] {
+        &[
+            OpKind::QkvProj,
+            OpKind::AttnPrefill,
+            OpKind::AttnDecode,
+            OpKind::OutProj,
+            OpKind::Ffn,
+            OpKind::MoeGate,
+            OpKind::ExpertFfn,
+            OpKind::LmHead,
+            OpKind::RmsNorm,
+        ]
+    }
+
+    /// True for operators whose grid is 2-D `(batch, ctx)` rather than 1-D
+    /// `(tokens)`.
+    pub fn is_decode_grid(self) -> bool {
+        matches!(self, OpKind::AttnDecode)
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A priced operator invocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpInvocation {
+    pub kind: OpKind,
+    /// Token count for 1-D-grid ops; batch size for `AttnDecode`.
+    pub tokens: u64,
+    /// Context length; only meaningful for `AttnDecode` (and informative for
+    /// `AttnPrefill`, where `tokens` is the sequence length).
+    pub ctx: u64,
+}
+
+impl OpInvocation {
+    pub fn tokens(kind: OpKind, tokens: u64) -> Self {
+        OpInvocation { kind, tokens, ctx: 0 }
+    }
+
+    pub fn decode(batch: u64, ctx: u64) -> Self {
+        OpInvocation {
+            kind: OpKind::AttnDecode,
+            tokens: batch,
+            ctx,
+        }
+    }
+
+    pub fn prefill(seq: u64) -> Self {
+        OpInvocation {
+            kind: OpKind::AttnPrefill,
+            tokens: seq,
+            ctx: seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_names() {
+        for &k in OpKind::all() {
+            assert_eq!(OpKind::from_str(k.as_str()), Some(k));
+        }
+        assert_eq!(OpKind::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn decode_grid_flag() {
+        assert!(OpKind::AttnDecode.is_decode_grid());
+        assert!(!OpKind::Ffn.is_decode_grid());
+    }
+
+    #[test]
+    fn invocation_constructors() {
+        let inv = OpInvocation::decode(8, 256);
+        assert_eq!(inv.kind, OpKind::AttnDecode);
+        assert_eq!((inv.tokens, inv.ctx), (8, 256));
+        let inv = OpInvocation::prefill(128);
+        assert_eq!((inv.tokens, inv.ctx), (128, 128));
+    }
+}

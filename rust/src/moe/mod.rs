@@ -1,0 +1,350 @@
+//! MoE serving support (§II-C): the expert router (gate mimic), expert-
+//! parallel dispatch accounting, and expert-offloading engines.
+//!
+//! The expert router mimics the statistics of a real gate function: per
+//! token it draws `top_k` distinct experts from a configurable popularity
+//! distribution (uniform, or Zipf-skewed — real gates are heavily skewed).
+//! The resulting per-expert token counts drive (a) expert-FFN pricing, (b)
+//! the all-to-all skew factor for the EP fabric, and (c) which experts an
+//! offloading engine must fetch.
+
+use crate::config::{GateKind, OffloadPolicy};
+use crate::model::ModelSpec;
+use crate::perf::HardwareSpec;
+use crate::sim::Nanos;
+use crate::util::rng::{Rng, ZipfTable};
+
+/// Per-layer outcome of routing `tokens` tokens through the gate.
+#[derive(Debug, Clone)]
+pub struct GateOutcome {
+    /// tokens routed to each expert (length = experts); sums to
+    /// `tokens * top_k`.
+    pub tokens_per_expert: Vec<u64>,
+}
+
+impl GateOutcome {
+    /// Number of experts that received at least one token.
+    pub fn active_experts(&self) -> usize {
+        self.tokens_per_expert.iter().filter(|&&t| t > 0).count()
+    }
+
+    /// Skew = max / mean over ACTIVE experts (>= 1.0); drives all-to-all
+    /// congestion modeling.
+    pub fn skew(&self) -> f64 {
+        let active: Vec<u64> = self
+            .tokens_per_expert
+            .iter()
+            .copied()
+            .filter(|&t| t > 0)
+            .collect();
+        if active.is_empty() {
+            return 1.0;
+        }
+        let max = *active.iter().max().unwrap() as f64;
+        let mean = active.iter().sum::<u64>() as f64 / active.len() as f64;
+        (max / mean).max(1.0)
+    }
+}
+
+/// Expert router: mimics a trained gate's routing statistics.
+#[derive(Debug)]
+pub struct ExpertRouter {
+    experts: usize,
+    top_k: usize,
+    kind: GateKind,
+    zipf: Option<ZipfTable>,
+    /// Per-expert popularity ranking permutation so the "hot" expert is not
+    /// always index 0 across layers (layer-dependent remap).
+    layer_perm: Vec<Vec<usize>>,
+    rng: Rng,
+}
+
+impl ExpertRouter {
+    pub fn new(model: &ModelSpec, kind: GateKind, layers: u64, seed: u64) -> Self {
+        let experts = model.experts as usize;
+        let top_k = model.top_k as usize;
+        assert!(experts > 0 && top_k > 0, "expert router needs a MoE model");
+        let zipf = match kind {
+            GateKind::Zipf { s } => Some(ZipfTable::new(experts, s)),
+            GateKind::Uniform => None,
+        };
+        let mut rng = Rng::new(seed ^ 0xE0E0_E0E0);
+        let layer_perm = (0..layers)
+            .map(|_| {
+                let mut p: Vec<usize> = (0..experts).collect();
+                rng.shuffle(&mut p);
+                p
+            })
+            .collect();
+        ExpertRouter {
+            experts,
+            top_k,
+            kind,
+            zipf,
+            layer_perm,
+            rng,
+        }
+    }
+
+    /// Route `tokens` tokens at `layer`; returns per-expert token counts.
+    ///
+    /// Sampling is per-token without replacement within a token's top-k set,
+    /// mirroring how a softmax gate picks k distinct experts.
+    pub fn route(&mut self, layer: u64, tokens: u64) -> GateOutcome {
+        let mut counts = vec![0u64; self.experts];
+        let perm = &self.layer_perm[(layer as usize) % self.layer_perm.len()];
+        for _ in 0..tokens {
+            let mut chosen = [usize::MAX; 8];
+            let mut n = 0;
+            while n < self.top_k {
+                let raw = match (&self.kind, &self.zipf) {
+                    (GateKind::Uniform, _) => self.rng.below(self.experts as u64) as usize,
+                    (GateKind::Zipf { .. }, Some(z)) => z.sample(&mut self.rng),
+                    _ => unreachable!(),
+                };
+                let e = perm[raw];
+                if !chosen[..n].contains(&e) {
+                    chosen[n] = e;
+                    n += 1;
+                    counts[e] += 1;
+                }
+            }
+        }
+        GateOutcome {
+            tokens_per_expert: counts,
+        }
+    }
+}
+
+/// Outcome of an offloading decision for one MoE layer invocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OffloadCost {
+    /// Extra latency exposed on the critical path, ns.
+    pub exposed_ns: Nanos,
+    /// Bytes moved over the host link.
+    pub bytes_moved: u64,
+    /// If true, expert FFN compute runs on the offload device (PIM) and
+    /// must be priced with the PIM hardware instead of the local device.
+    pub compute_remote: bool,
+}
+
+/// Expert-offloading engine: prices the weight movement (or remote compute)
+/// for the experts a layer needs.
+#[derive(Debug, Clone)]
+pub struct OffloadEngine {
+    pub policy: OffloadPolicy,
+    /// Fraction of each layer's experts resident in device memory, derived
+    /// from the memory budget left after weights + KV allocation.
+    pub resident_fraction: f64,
+    /// Prefetch misprediction rate (pre-gated MoE is imperfect; ~10% of
+    /// fetches are late).
+    pub mispredict: f64,
+    pub expert_bytes: u64,
+    pub host_bw: f64,
+}
+
+impl OffloadEngine {
+    pub fn new(
+        policy: OffloadPolicy,
+        model: &ModelSpec,
+        hw: &HardwareSpec,
+        kv_budget_bytes: u64,
+    ) -> Self {
+        let expert_bytes = model.expert_bytes();
+        let resident_fraction = if policy == OffloadPolicy::None {
+            1.0
+        } else {
+            // Memory left for experts after parameters-excluding-experts + KV.
+            let expert_total = model.moe_layers() * model.experts * expert_bytes;
+            let non_expert = model.param_bytes().saturating_sub(expert_total);
+            let left = hw
+                .mem_capacity
+                .saturating_sub(non_expert)
+                .saturating_sub(kv_budget_bytes);
+            (left as f64 / expert_total.max(1) as f64).clamp(0.0, 1.0)
+        };
+        OffloadEngine {
+            policy,
+            resident_fraction,
+            mispredict: 0.1,
+            expert_bytes,
+            host_bw: hw.host_bw,
+        }
+    }
+
+    /// Cost of making `needed` experts available for one layer, given
+    /// `layer_compute_ns` of overlappable compute in the same layer.
+    pub fn layer_cost(&self, needed: usize, layer_compute_ns: Nanos) -> OffloadCost {
+        let missing = ((needed as f64) * (1.0 - self.resident_fraction)).round() as u64;
+        match self.policy {
+            OffloadPolicy::None => OffloadCost {
+                exposed_ns: 0,
+                bytes_moved: 0,
+                compute_remote: false,
+            },
+            OffloadPolicy::OnDemand => {
+                let bytes = missing * self.expert_bytes;
+                OffloadCost {
+                    exposed_ns: (bytes as f64 / self.host_bw * 1e9).round() as Nanos,
+                    bytes_moved: bytes,
+                    compute_remote: false,
+                }
+            }
+            OffloadPolicy::Prefetch => {
+                let bytes = missing * self.expert_bytes;
+                let fetch = (bytes as f64 / self.host_bw * 1e9).round() as Nanos;
+                // Fetch overlaps the previous layer's compute; only the
+                // overflow plus mispredicted (late) fetches are exposed.
+                let overflow = fetch.saturating_sub(layer_compute_ns);
+                let late = (fetch as f64 * self.mispredict).round() as Nanos;
+                OffloadCost {
+                    exposed_ns: overflow + late,
+                    bytes_moved: bytes,
+                    compute_remote: false,
+                }
+            }
+            OffloadPolicy::Pim => {
+                // Experts live (and execute) in the PIM device; instead of
+                // weights, the layer's activations cross the host link.
+                OffloadCost {
+                    exposed_ns: 0, // transfer priced by caller from bytes
+                    bytes_moved: 0,
+                    compute_remote: true,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn router(kind: GateKind) -> ExpertRouter {
+        ExpertRouter::new(&ModelSpec::tiny_moe(), kind, 4, 42)
+    }
+
+    #[test]
+    fn routes_conserve_tokens() {
+        let mut r = router(GateKind::Uniform);
+        let out = r.route(0, 100);
+        assert_eq!(out.tokens_per_expert.iter().sum::<u64>(), 200); // top_k=2
+        assert_eq!(out.tokens_per_expert.len(), 8);
+    }
+
+    #[test]
+    fn zipf_gate_is_skewed_uniform_is_not() {
+        let mut ru = router(GateKind::Uniform);
+        let mut rz = router(GateKind::Zipf { s: 1.5 });
+        let (mut su, mut sz) = (0.0, 0.0);
+        for layer in 0..4 {
+            su += ru.route(layer, 500).skew();
+            sz += rz.route(layer, 500).skew();
+        }
+        assert!(
+            sz / 4.0 > su / 4.0 + 0.3,
+            "zipf skew {} vs uniform {}",
+            sz / 4.0,
+            su / 4.0
+        );
+    }
+
+    #[test]
+    fn hot_expert_varies_by_layer() {
+        let mut r = router(GateKind::Zipf { s: 1.5 });
+        let hot: Vec<usize> = (0..4)
+            .map(|l| {
+                let out = r.route(l, 2000);
+                out.tokens_per_expert
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &t)| t)
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        // with 4 layers and 8 experts, all-identical hot experts would mean
+        // the permutation is broken
+        assert!(hot.windows(2).any(|w| w[0] != w[1]), "hot={hot:?}");
+    }
+
+    #[test]
+    fn prop_topk_bounds_per_expert() {
+        prop::check(
+            "gate-topk-bounds",
+            32,
+            |rng| (1 + rng.below(200), rng.below(2) == 0),
+            |&(tokens, uniform)| {
+                let kind = if uniform {
+                    GateKind::Uniform
+                } else {
+                    GateKind::Zipf { s: 1.0 }
+                };
+                let mut r = router(kind);
+                let out = r.route(0, tokens);
+                // no expert can receive more than `tokens` (distinct per token)
+                if out.tokens_per_expert.iter().any(|&t| t > tokens) {
+                    return Err(format!("expert over-assigned: {out:?}"));
+                }
+                if out.tokens_per_expert.iter().sum::<u64>() != tokens * 2 {
+                    return Err("token conservation violated".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn offload_none_is_free() {
+        let model = ModelSpec::tiny_moe();
+        let hw = HardwareSpec::rtx3090();
+        let e = OffloadEngine::new(OffloadPolicy::None, &model, &hw, 0);
+        assert_eq!(e.resident_fraction, 1.0);
+        let c = e.layer_cost(8, 1_000_000);
+        assert_eq!(c.exposed_ns, 0);
+        assert_eq!(c.bytes_moved, 0);
+    }
+
+    #[test]
+    fn on_demand_blocks_prefetch_overlaps() {
+        let model = ModelSpec::tiny_moe();
+        let mut hw = HardwareSpec::rtx3090();
+        // Memory so tight that only ~half the experts fit.
+        let expert_total = model.moe_layers() * model.experts * model.expert_bytes();
+        hw.mem_capacity = model.param_bytes() - expert_total / 2;
+        let od = OffloadEngine::new(OffloadPolicy::OnDemand, &model, &hw, 0);
+        let pf = OffloadEngine::new(OffloadPolicy::Prefetch, &model, &hw, 0);
+        assert!(od.resident_fraction < 0.75);
+        let big_compute = 10_000_000; // 10 ms of overlap available
+        let c_od = od.layer_cost(8, big_compute);
+        let c_pf = pf.layer_cost(8, big_compute);
+        assert!(c_od.exposed_ns > 0);
+        assert!(
+            c_pf.exposed_ns < c_od.exposed_ns,
+            "prefetch {} !< on-demand {}",
+            c_pf.exposed_ns,
+            c_od.exposed_ns
+        );
+        assert_eq!(c_od.bytes_moved, c_pf.bytes_moved);
+    }
+
+    #[test]
+    fn pim_moves_compute_not_weights() {
+        let model = ModelSpec::tiny_moe();
+        let hw = HardwareSpec::rtx3090();
+        let e = OffloadEngine::new(OffloadPolicy::Pim, &model, &hw, 0);
+        let c = e.layer_cost(8, 0);
+        assert!(c.compute_remote);
+        assert_eq!(c.bytes_moved, 0);
+    }
+
+    #[test]
+    fn resident_fraction_full_when_memory_ample() {
+        let model = ModelSpec::tiny_moe();
+        let hw = HardwareSpec::rtx3090(); // 24 GB vs tiny model
+        let e = OffloadEngine::new(OffloadPolicy::OnDemand, &model, &hw, 0);
+        assert_eq!(e.resident_fraction, 1.0);
+        assert_eq!(e.layer_cost(8, 0).exposed_ns, 0);
+    }
+}

@@ -1,0 +1,266 @@
+//! Link-graph topologies: fully-connected, ring, star (switch), and
+//! hierarchical (intra-node fast + inter-node slow), with precomputed
+//! shortest routes.
+
+use crate::sim::Nanos;
+
+/// Index into [`Topology::links`].
+pub type LinkId = usize;
+
+/// One directed link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Link {
+    pub src: usize,
+    pub dst: usize,
+    /// Bytes per second.
+    pub bandwidth: f64,
+    /// Base propagation latency, ns.
+    pub latency: Nanos,
+}
+
+/// A device interconnect graph with precomputed BFS routes.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    num_devices: usize,
+    links: Vec<Link>,
+    /// `routes[src][dst]` = link ids along the path.
+    routes: Vec<Vec<Vec<LinkId>>>,
+    pub name: String,
+}
+
+impl Topology {
+    /// Build from an explicit link list.
+    pub fn new(name: &str, num_devices: usize, links: Vec<Link>) -> Self {
+        let routes = Self::compute_routes(num_devices, &links);
+        Topology {
+            num_devices,
+            links,
+            routes,
+            name: name.to_string(),
+        }
+    }
+
+    /// Every device pair directly connected (NVLink-style).
+    pub fn fully_connected(n: usize, bandwidth: f64, latency: Nanos) -> Topology {
+        let mut links = vec![];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    links.push(Link {
+                        src: i,
+                        dst: j,
+                        bandwidth,
+                        latency,
+                    });
+                }
+            }
+        }
+        Topology::new("fully-connected", n, links)
+    }
+
+    /// Bidirectional ring (TPU-pod-slice-style).
+    pub fn ring(n: usize, bandwidth: f64, latency: Nanos) -> Topology {
+        let mut links = vec![];
+        for i in 0..n {
+            let next = (i + 1) % n;
+            links.push(Link {
+                src: i,
+                dst: next,
+                bandwidth,
+                latency,
+            });
+            links.push(Link {
+                src: next,
+                dst: i,
+                bandwidth,
+                latency,
+            });
+        }
+        Topology::new("ring", n, links)
+    }
+
+    /// Star through a switch: device i <-> switch (node index n).
+    /// The switch is modeled as an extra node with 2n links.
+    pub fn switched(n: usize, bandwidth: f64, latency: Nanos) -> Topology {
+        let switch = n;
+        let mut links = vec![];
+        for i in 0..n {
+            links.push(Link {
+                src: i,
+                dst: switch,
+                bandwidth,
+                latency,
+            });
+            links.push(Link {
+                src: switch,
+                dst: i,
+                bandwidth,
+                latency,
+            });
+        }
+        Topology::new("switched", n + 1, links)
+    }
+
+    /// Two-level hierarchy: `nodes` groups of `per_node` devices; fast
+    /// intra-node links (fully connected), slow inter-node links between
+    /// node leaders (ring).
+    pub fn hierarchical(
+        nodes: usize,
+        per_node: usize,
+        intra_bw: f64,
+        intra_lat: Nanos,
+        inter_bw: f64,
+        inter_lat: Nanos,
+    ) -> Topology {
+        let n = nodes * per_node;
+        let mut links = vec![];
+        for g in 0..nodes {
+            let base = g * per_node;
+            for i in 0..per_node {
+                for j in 0..per_node {
+                    if i != j {
+                        links.push(Link {
+                            src: base + i,
+                            dst: base + j,
+                            bandwidth: intra_bw,
+                            latency: intra_lat,
+                        });
+                    }
+                }
+            }
+        }
+        for g in 0..nodes {
+            let next = ((g + 1) % nodes) * per_node;
+            let cur = g * per_node;
+            if nodes > 1 {
+                links.push(Link {
+                    src: cur,
+                    dst: next,
+                    bandwidth: inter_bw,
+                    latency: inter_lat,
+                });
+                links.push(Link {
+                    src: next,
+                    dst: cur,
+                    bandwidth: inter_bw,
+                    latency: inter_lat,
+                });
+            }
+        }
+        Topology::new("hierarchical", n, links)
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.num_devices
+    }
+    pub fn num_links(&self) -> usize {
+        self.links.len()
+    }
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    /// Link ids along the (precomputed BFS-shortest) route src -> dst.
+    /// Panics if unreachable — topologies are validated at construction.
+    pub fn route(&self, src: usize, dst: usize) -> Vec<LinkId> {
+        self.routes[src][dst].clone()
+    }
+
+    pub fn is_connected(&self) -> bool {
+        (0..self.num_devices).all(|s| {
+            (0..self.num_devices).all(|d| s == d || !self.routes[s][d].is_empty())
+        })
+    }
+
+    fn compute_routes(n: usize, links: &[Link]) -> Vec<Vec<Vec<LinkId>>> {
+        // adjacency: node -> (neighbor, link id)
+        let mut adj: Vec<Vec<(usize, LinkId)>> = vec![vec![]; n];
+        for (id, l) in links.iter().enumerate() {
+            adj[l.src].push((l.dst, id));
+        }
+        let mut routes = vec![vec![vec![]; n]; n];
+        for src in 0..n {
+            // BFS
+            let mut prev: Vec<Option<(usize, LinkId)>> = vec![None; n];
+            let mut visited = vec![false; n];
+            let mut queue = std::collections::VecDeque::new();
+            visited[src] = true;
+            queue.push_back(src);
+            while let Some(u) = queue.pop_front() {
+                for &(v, link) in &adj[u] {
+                    if !visited[v] {
+                        visited[v] = true;
+                        prev[v] = Some((u, link));
+                        queue.push_back(v);
+                    }
+                }
+            }
+            for dst in 0..n {
+                if dst == src || !visited[dst] {
+                    continue;
+                }
+                let mut path = vec![];
+                let mut cur = dst;
+                while let Some((p, link)) = prev[cur] {
+                    path.push(link);
+                    cur = p;
+                }
+                path.reverse();
+                routes[src][dst] = path;
+            }
+        }
+        routes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fully_connected_single_hop() {
+        let t = Topology::fully_connected(4, 1e9, 100);
+        assert!(t.is_connected());
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    assert_eq!(t.route(i, j).len(), 1);
+                }
+            }
+        }
+        assert_eq!(t.num_links(), 12);
+    }
+
+    #[test]
+    fn ring_shortest_path() {
+        let t = Topology::ring(6, 1e9, 100);
+        assert!(t.is_connected());
+        assert_eq!(t.route(0, 1).len(), 1);
+        assert_eq!(t.route(0, 3).len(), 3);
+        // BFS finds the short way around
+        assert_eq!(t.route(0, 5).len(), 1);
+    }
+
+    #[test]
+    fn switched_two_hops() {
+        let t = Topology::switched(4, 1e9, 100);
+        assert!(t.is_connected());
+        assert_eq!(t.route(0, 1).len(), 2); // via switch
+        assert_eq!(t.num_devices(), 5);
+    }
+
+    #[test]
+    fn hierarchical_intra_vs_inter() {
+        let t = Topology::hierarchical(2, 2, 100e9, 100, 10e9, 1000);
+        assert!(t.is_connected());
+        assert_eq!(t.route(0, 1).len(), 1); // intra-node
+        assert!(t.route(1, 3).len() >= 2); // crosses node boundary
+    }
+
+    #[test]
+    fn single_device_trivial() {
+        let t = Topology::fully_connected(1, 1e9, 100);
+        assert!(t.is_connected());
+        assert_eq!(t.num_links(), 0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Roofline performance model + the calibrated analytical extension.
+//!
+//! `latency = max(flops / peak_flops, bytes / mem_bw) + kernel_overhead`
+//!
+//! Pure roofline is the fallback when no trace covers an operator. The
+//! [`Calibrated`] wrapper scales roofline by a measured efficiency factor
+//! (profiled latency / roofline latency, averaged over the trace grid),
+//! which is how the simulator extends a tiny-model trace DB to paper-scale
+//! model configs on the same hardware (DESIGN.md §1).
+
+use super::{HardwareSpec, PerfModel};
+use crate::model::{ModelSpec, OpInvocation, OpKind, DTYPE_BYTES};
+use crate::sim::Nanos;
+
+/// FLOPs and bytes moved for one operator invocation of `model`.
+///
+/// Byte counts assume weights stream from device memory once per invocation
+/// (no cross-batch weight reuse within an op) and activations are read +
+/// written — the same accounting `aot.py` records in the manifest.
+pub fn op_cost(model: &ModelSpec, inv: OpInvocation) -> (u64, u64) {
+    let h = model.hidden;
+    let d = model.head_dim();
+    let nh = model.heads;
+    let kvh = model.kv_heads * d;
+    let f = model.ffn.max(1);
+    let fe = model.expert_ffn.max(1);
+    let e = model.experts.max(1);
+    let v = model.vocab;
+    let t = inv.tokens.max(1);
+    let b = DTYPE_BYTES;
+    match inv.kind {
+        OpKind::QkvProj => (
+            2 * t * h * (h + 2 * kvh),
+            b * (t * h + h * (h + 2 * kvh) + t * (h + 2 * kvh)),
+        ),
+        OpKind::AttnPrefill => {
+            let s = t;
+            (2 * nh * s * s * d * 2, b * nh * s * d * 4)
+        }
+        OpKind::AttnDecode => {
+            let batch = t;
+            let c = inv.ctx.max(1);
+            (
+                2 * batch * nh * c * d * 2,
+                b * batch * model.kv_heads * (2 * c * d) + b * batch * nh * 2 * d,
+            )
+        }
+        OpKind::OutProj => (2 * t * h * h, b * (2 * t * h + h * h)),
+        OpKind::Ffn => (2 * t * h * f * 3, b * (2 * t * h + 3 * h * f)),
+        OpKind::MoeGate => (2 * t * h * e, b * (t * h + h * e + t * e)),
+        OpKind::ExpertFfn => (2 * t * h * fe * 3, b * (2 * t * h + 3 * h * fe)),
+        OpKind::LmHead => (2 * t * h * v, b * (t * h + h * v + t * v)),
+        OpKind::RmsNorm => (4 * t * h, b * (2 * t * h + h)),
+    }
+}
+
+/// Pure roofline model.
+#[derive(Debug, Clone)]
+pub struct Roofline {
+    pub hw: HardwareSpec,
+    pub model: ModelSpec,
+    name: String,
+}
+
+impl Roofline {
+    pub fn new(hw: HardwareSpec, model: ModelSpec) -> Self {
+        let name = format!("roofline[{}/{}]", hw.name, model.name);
+        Roofline { hw, model, name }
+    }
+
+    /// Latency without the fixed overhead (used by calibration).
+    pub fn raw_latency(&self, inv: OpInvocation) -> f64 {
+        let (flops, bytes) = op_cost(&self.model, inv);
+        let compute = flops as f64 / self.hw.peak_flops;
+        let memory = bytes as f64 / self.hw.mem_bw;
+        compute.max(memory)
+    }
+}
+
+impl PerfModel for Roofline {
+    fn op_latency(&self, inv: OpInvocation) -> Nanos {
+        let secs = self.raw_latency(inv);
+        crate::sim::secs_to_nanos(secs) + self.hw.kernel_overhead
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Roofline scaled by per-op-kind efficiency factors measured from a trace
+/// DB (see `trace::TraceDb::calibration`).
+#[derive(Debug, Clone)]
+pub struct Calibrated {
+    base: Roofline,
+    /// Multiplier per op kind: measured / roofline. Indexed by `OpKind::all()`
+    /// position; 1.0 where no measurement exists.
+    factors: Vec<f64>,
+    name: String,
+}
+
+impl Calibrated {
+    pub fn new(base: Roofline, factors: Vec<(OpKind, f64)>) -> Self {
+        let mut table = vec![1.0; OpKind::all().len()];
+        for (k, f) in factors {
+            let idx = OpKind::all().iter().position(|&x| x == k).unwrap();
+            table[idx] = f.max(1e-3);
+        }
+        let name = format!("calibrated[{}]", base.name);
+        Calibrated {
+            base,
+            factors: table,
+            name,
+        }
+    }
+
+    pub fn factor(&self, kind: OpKind) -> f64 {
+        let idx = OpKind::all().iter().position(|&x| x == kind).unwrap();
+        self.factors[idx]
+    }
+}
+
+impl PerfModel for Calibrated {
+    fn op_latency(&self, inv: OpInvocation) -> Nanos {
+        let secs = self.base.raw_latency(inv) * self.factor(inv.kind);
+        crate::sim::secs_to_nanos(secs) + self.base.hw.kernel_overhead
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelSpec {
+        ModelSpec::tiny_dense()
+    }
+
+    #[test]
+    fn latency_monotone_in_tokens() {
+        let r = Roofline::new(HardwareSpec::rtx3090(), model());
+        let l1 = r.op_latency(OpInvocation::tokens(OpKind::Ffn, 8));
+        let l2 = r.op_latency(OpInvocation::tokens(OpKind::Ffn, 512));
+        assert!(l2 > l1);
+    }
+
+    #[test]
+    fn decode_latency_grows_with_ctx() {
+        let r = Roofline::new(HardwareSpec::rtx3090(), model());
+        let l1 = r.op_latency(OpInvocation::decode(4, 64));
+        let l2 = r.op_latency(OpInvocation::decode(4, 4096));
+        assert!(l2 > l1);
+    }
+
+    #[test]
+    fn overhead_floors_latency() {
+        let hw = HardwareSpec::rtx3090();
+        let r = Roofline::new(hw.clone(), model());
+        let l = r.op_latency(OpInvocation::tokens(OpKind::RmsNorm, 1));
+        assert!(l >= hw.kernel_overhead);
+    }
+
+    #[test]
+    fn memory_bound_decode() {
+        // Decode attention at batch 1 must be memory-bound on a GPU.
+        let r = Roofline::new(HardwareSpec::rtx3090(), ModelSpec::llama31_8b());
+        let inv = OpInvocation::decode(1, 2048);
+        let (flops, bytes) = op_cost(&r.model, inv);
+        let compute = flops as f64 / r.hw.peak_flops;
+        let memory = bytes as f64 / r.hw.mem_bw;
+        assert!(memory > compute);
+    }
+
+    #[test]
+    fn calibration_scales() {
+        let base = Roofline::new(HardwareSpec::cpu_pjrt(), model());
+        let plain = base.op_latency(OpInvocation::tokens(OpKind::Ffn, 64));
+        let cal = Calibrated::new(base, vec![(OpKind::Ffn, 2.0)]);
+        let scaled = cal.op_latency(OpInvocation::tokens(OpKind::Ffn, 64));
+        let overhead = HardwareSpec::cpu_pjrt().kernel_overhead;
+        let raw_plain = plain - overhead;
+        let raw_scaled = scaled - overhead;
+        assert!(
+            (raw_scaled as f64 / raw_plain as f64 - 2.0).abs() < 0.01,
+            "{raw_plain} vs {raw_scaled}"
+        );
+        // unmeasured kinds keep factor 1.0
+        assert_eq!(cal.factor(OpKind::LmHead), 1.0);
+    }
+
+    #[test]
+    fn moe_ops_priced() {
+        let r = Roofline::new(HardwareSpec::rtx3090(), ModelSpec::tiny_moe());
+        let gate = r.op_latency(OpInvocation::tokens(OpKind::MoeGate, 16));
+        let expert = r.op_latency(OpInvocation::tokens(OpKind::ExpertFfn, 16));
+        assert!(gate > 0 && expert > gate);
+    }
+}

@@ -1,0 +1,141 @@
+//! Performance models: how the simulator prices an operator invocation.
+//!
+//! The paper's key advancement is **trace-driven performance modeling**
+//! ([`trace::TraceDb`], fed by the operator-level profiler). Alongside it we
+//! implement the comparison baselines from §III:
+//!
+//! * [`analytical`] — roofline model, also used to extend traces to
+//!   paper-scale models via a measured calibration factor;
+//! * [`cycle`] — a cycle-level systolic-array NPU simulator standing in for
+//!   LLMServingSim 1.0's cycle-accurate hardware simulation;
+//! * [`replay`] — cycle results memoized and replayed (LLMServingSim+).
+
+pub mod analytical;
+pub mod cycle;
+pub mod replay;
+pub mod trace;
+
+use crate::model::OpInvocation;
+use crate::sim::Nanos;
+
+/// Prices one operator invocation on one hardware target.
+///
+/// Implementations must be deterministic: the same invocation always costs
+/// the same latency (variance enters the simulation through batching and
+/// queueing dynamics, as in the paper).
+pub trait PerfModel {
+    /// Latency of running `inv` on this hardware.
+    fn op_latency(&self, inv: OpInvocation) -> Nanos;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &str;
+}
+
+/// Hardware description used by the analytical/cycle models and the memory
+/// and network layers. Mirrors the paper's per-instance device config
+/// (§III-A: memory capacity, bandwidth, interconnect).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareSpec {
+    pub name: String,
+    /// Peak compute throughput, FLOP/s (fp16/bf16 tensor math).
+    pub peak_flops: f64,
+    /// Device memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Device memory capacity, bytes.
+    pub mem_capacity: u64,
+    /// Host<->device interconnect bandwidth, bytes/s (PCIe/ICI).
+    pub host_bw: f64,
+    /// Fixed per-kernel launch/dispatch overhead, ns.
+    pub kernel_overhead: Nanos,
+}
+
+impl HardwareSpec {
+    /// RTX 3090-like device (paper's GPU baseline: 24 GB, 936 GB/s).
+    pub fn rtx3090() -> HardwareSpec {
+        HardwareSpec {
+            name: "rtx3090".into(),
+            peak_flops: 71e12, // fp16 tensor
+            mem_bw: 936e9,
+            mem_capacity: 24 * (1 << 30),
+            host_bw: 32e9, // PCIe 4.0 x16
+            kernel_overhead: 8_000,
+        }
+    }
+
+    /// TPU-v6e-1-like device (paper's §III-A: 32 GB, 1.6 TB/s, 800 GB/s ICI).
+    pub fn tpu_v6e() -> HardwareSpec {
+        HardwareSpec {
+            name: "tpu-v6e".into(),
+            peak_flops: 918e12, // bf16
+            mem_bw: 1.6e12,
+            mem_capacity: 32 * (1 << 30),
+            host_bw: 800e9,
+            kernel_overhead: 5_000,
+        }
+    }
+
+    /// The CPU PJRT backend this repo actually profiles (tiny models).
+    /// peak/bw estimated from a few cores of AVX f32 math; the trace DB is
+    /// the authoritative source — this spec only seeds the roofline
+    /// fallback and the memory model.
+    pub fn cpu_pjrt() -> HardwareSpec {
+        HardwareSpec {
+            name: "cpu-pjrt".into(),
+            peak_flops: 2.0e11,
+            mem_bw: 2.0e10,
+            mem_capacity: 8 * (1 << 30),
+            host_bw: 1.0e10,
+            kernel_overhead: 20_000,
+        }
+    }
+
+    /// PIM-like memory-bound accelerator for expert offloading studies
+    /// (Duplex-style: modest compute, very high internal bandwidth).
+    pub fn pim() -> HardwareSpec {
+        HardwareSpec {
+            name: "pim".into(),
+            peak_flops: 4e12,
+            mem_bw: 4.8e12,
+            mem_capacity: 48 * (1 << 30),
+            host_bw: 64e9,
+            kernel_overhead: 3_000,
+        }
+    }
+
+    pub fn preset(name: &str) -> Option<HardwareSpec> {
+        match name {
+            "rtx3090" => Some(Self::rtx3090()),
+            "tpu-v6e" => Some(Self::tpu_v6e()),
+            "cpu-pjrt" => Some(Self::cpu_pjrt()),
+            "pim" => Some(Self::pim()),
+            _ => None,
+        }
+    }
+
+    pub fn preset_names() -> &'static [&'static str] {
+        &["rtx3090", "tpu-v6e", "cpu-pjrt", "pim"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for n in HardwareSpec::preset_names() {
+            let h = HardwareSpec::preset(n).unwrap();
+            assert!(h.peak_flops > 0.0 && h.mem_bw > 0.0);
+        }
+        assert!(HardwareSpec::preset("abacus").is_none());
+    }
+
+    #[test]
+    fn paper_device_specs() {
+        let g = HardwareSpec::rtx3090();
+        assert_eq!(g.mem_capacity, 24 * (1 << 30));
+        let t = HardwareSpec::tpu_v6e();
+        assert_eq!(t.mem_capacity, 32 * (1 << 30));
+        assert!((t.host_bw - 800e9).abs() < 1.0);
+    }
+}

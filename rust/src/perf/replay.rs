@@ -1,0 +1,110 @@
+//! Replay performance model: "LLMServingSim+" baseline.
+//!
+//! LLMServingSim 1.0 mitigated cycle-simulation cost by *computation reuse*:
+//! each distinct operator shape is simulated once and replayed from a cache
+//! afterwards. [`Replay`] wraps any inner [`PerfModel`] with exactly that
+//! memoization; wrapping [`super::cycle::CycleSim`] reproduces the
+//! LLMServingSim+ baseline of §III-D (Fig. 3).
+//!
+//! The cache key quantizes nothing — only exact shape repeats hit, matching
+//! the original's behaviour (autoregressive decode repeats shapes heavily,
+//! prefill rarely).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::PerfModel;
+use crate::model::OpInvocation;
+use crate::sim::Nanos;
+
+/// Memoizing wrapper around a slow inner model.
+pub struct Replay<M: PerfModel> {
+    inner: M,
+    cache: Mutex<HashMap<(u8, u64, u64), Nanos>>,
+    hits: Mutex<u64>,
+    misses: Mutex<u64>,
+    name: String,
+}
+
+impl<M: PerfModel> Replay<M> {
+    pub fn new(inner: M) -> Self {
+        let name = format!("replay[{}]", inner.name());
+        Replay {
+            inner,
+            cache: Mutex::new(HashMap::new()),
+            hits: Mutex::new(0),
+            misses: Mutex::new(0),
+            name,
+        }
+    }
+
+    fn key(inv: OpInvocation) -> (u8, u64, u64) {
+        let kind = crate::model::OpKind::all()
+            .iter()
+            .position(|&k| k == inv.kind)
+            .unwrap() as u8;
+        (kind, inv.tokens, inv.ctx)
+    }
+
+    /// (cache hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (*self.hits.lock().unwrap(), *self.misses.lock().unwrap())
+    }
+}
+
+impl<M: PerfModel> PerfModel for Replay<M> {
+    fn op_latency(&self, inv: OpInvocation) -> Nanos {
+        let key = Self::key(inv);
+        if let Some(&ns) = self.cache.lock().unwrap().get(&key) {
+            *self.hits.lock().unwrap() += 1;
+            return ns;
+        }
+        let ns = self.inner.op_latency(inv);
+        self.cache.lock().unwrap().insert(key, ns);
+        *self.misses.lock().unwrap() += 1;
+        ns
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelSpec, OpKind};
+    use crate::perf::cycle::{CycleSim, SystolicSpec};
+
+    #[test]
+    fn replay_matches_inner() {
+        let inner = CycleSim::new(SystolicSpec::default(), ModelSpec::tiny_dense());
+        let expect = inner.op_latency(OpInvocation::tokens(OpKind::Ffn, 32));
+        let replay = Replay::new(inner);
+        assert_eq!(
+            replay.op_latency(OpInvocation::tokens(OpKind::Ffn, 32)),
+            expect
+        );
+    }
+
+    #[test]
+    fn second_lookup_hits_cache() {
+        let inner = CycleSim::new(SystolicSpec::default(), ModelSpec::tiny_dense());
+        let replay = Replay::new(inner);
+        let inv = OpInvocation::decode(4, 256);
+        let a = replay.op_latency(inv);
+        let b = replay.op_latency(inv);
+        assert_eq!(a, b);
+        assert_eq!(replay.stats(), (1, 1));
+    }
+
+    #[test]
+    fn different_shapes_miss() {
+        let inner = CycleSim::new(SystolicSpec::default(), ModelSpec::tiny_dense());
+        let replay = Replay::new(inner);
+        replay.op_latency(OpInvocation::decode(4, 256));
+        replay.op_latency(OpInvocation::decode(4, 257));
+        replay.op_latency(OpInvocation::decode(5, 256));
+        assert_eq!(replay.stats(), (0, 3));
+    }
+}

@@ -1,0 +1,487 @@
+//! Trace-driven performance model (the paper's §II-A headline feature).
+//!
+//! A [`TraceDb`] holds per-operator latency measurements on a grid of shapes
+//! (produced by the operator-level profiler, `runtime::profiler`) and prices
+//! arbitrary invocations by piecewise-linear interpolation:
+//!
+//! * 1-D operators (GEMMs, norms): linear in token count between grid
+//!   points, linear extrapolation beyond the last segment;
+//! * decode attention: bilinear in (batch, context).
+//!
+//! The DB also derives per-op **calibration factors** (measured / roofline)
+//! so the analytical model can extend this hardware's behaviour to model
+//! configs that were never profiled (paper-scale Llama/Phi presets).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::analytical::Roofline;
+use super::PerfModel;
+use crate::model::{OpInvocation, OpKind};
+use crate::sim::Nanos;
+use crate::util::json::{self, Value};
+
+/// Latency samples for one operator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpTrace {
+    /// `(tokens, ns)`, sorted by tokens.
+    Tokens(Vec<(u64, u64)>),
+    /// `(batch, ctx, ns)`, sorted by (batch, ctx); forms a full grid.
+    BatchCtx(Vec<(u64, u64, u64)>),
+}
+
+/// Profiled operator-latency database for one (hardware, model) pair.
+#[derive(Debug, Clone, Default)]
+pub struct TraceDb {
+    pub hardware: String,
+    pub model: String,
+    ops: BTreeMap<OpKind, OpTrace>,
+    name: String,
+}
+
+impl TraceDb {
+    pub fn new(hardware: &str, model: &str) -> Self {
+        TraceDb {
+            hardware: hardware.to_string(),
+            model: model.to_string(),
+            ops: BTreeMap::new(),
+            name: format!("trace[{hardware}/{model}]"),
+        }
+    }
+
+    /// Insert a 1-D sample.
+    pub fn add_tokens(&mut self, kind: OpKind, tokens: u64, ns: u64) {
+        match self
+            .ops
+            .entry(kind)
+            .or_insert_with(|| OpTrace::Tokens(vec![]))
+        {
+            OpTrace::Tokens(v) => {
+                v.push((tokens, ns));
+                v.sort();
+            }
+            _ => panic!("{kind} is a batch/ctx op"),
+        }
+    }
+
+    /// Insert a decode-grid sample.
+    pub fn add_batch_ctx(&mut self, kind: OpKind, batch: u64, ctx: u64, ns: u64) {
+        match self
+            .ops
+            .entry(kind)
+            .or_insert_with(|| OpTrace::BatchCtx(vec![]))
+        {
+            OpTrace::BatchCtx(v) => {
+                v.push((batch, ctx, ns));
+                v.sort();
+            }
+            _ => panic!("{kind} is a tokens op"),
+        }
+    }
+
+    pub fn kinds(&self) -> impl Iterator<Item = OpKind> + '_ {
+        self.ops.keys().copied()
+    }
+
+    pub fn has(&self, kind: OpKind) -> bool {
+        self.ops.contains_key(&kind)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Raw samples for one kind, normalized to `(a, b, ns)` triples:
+    /// `(tokens, 0, ns)` for 1-D ops, `(batch, ctx, ns)` for decode.
+    pub fn samples(&self, kind: OpKind) -> Vec<(u64, u64, u64)> {
+        match self.ops.get(&kind) {
+            None => vec![],
+            Some(OpTrace::Tokens(v)) => v.iter().map(|&(t, ns)| (t, 0, ns)).collect(),
+            Some(OpTrace::BatchCtx(v)) => v.clone(),
+        }
+    }
+
+    // ---- interpolation ----------------------------------------------------
+
+    fn interp_tokens(points: &[(u64, u64)], t: u64) -> f64 {
+        debug_assert!(!points.is_empty());
+        let t = t as f64;
+        if points.len() == 1 {
+            // single point: scale proportionally (latency ~ tokens for GEMMs)
+            let (t0, l0) = points[0];
+            return l0 as f64 * (t / t0 as f64).max(0.0);
+        }
+        // clamp below: linear from first segment through origin-ish region
+        let idx = points.partition_point(|&(x, _)| (x as f64) < t);
+        let (i0, i1) = if idx == 0 {
+            (0, 1)
+        } else if idx >= points.len() {
+            (points.len() - 2, points.len() - 1)
+        } else {
+            (idx - 1, idx)
+        };
+        let (x0, y0) = (points[i0].0 as f64, points[i0].1 as f64);
+        let (x1, y1) = (points[i1].0 as f64, points[i1].1 as f64);
+        let slope = (y1 - y0) / (x1 - x0);
+        (y0 + slope * (t - x0)).max(0.0)
+    }
+
+    fn interp_batch_ctx(points: &[(u64, u64, u64)], b: u64, c: u64) -> f64 {
+        // Collect the axes of the (assumed full) grid.
+        let mut batches: Vec<u64> = points.iter().map(|p| p.0).collect();
+        batches.dedup();
+        let mut ctxs: Vec<u64> = points.iter().map(|p| p.1).collect();
+        ctxs.sort();
+        ctxs.dedup();
+        let lookup = |bb: u64, cc: u64| -> Option<f64> {
+            points
+                .iter()
+                .find(|p| p.0 == bb && p.1 == cc)
+                .map(|p| p.2 as f64)
+        };
+        // 1-D interpolation helper over an axis.
+        let bracket = |axis: &[u64], x: u64| -> (u64, u64, f64) {
+            let xf = x as f64;
+            if axis.len() == 1 {
+                return (axis[0], axis[0], 0.0);
+            }
+            let idx = axis.partition_point(|&a| (a as f64) < xf);
+            let (i0, i1) = if idx == 0 {
+                (0, 1)
+            } else if idx >= axis.len() {
+                (axis.len() - 2, axis.len() - 1)
+            } else {
+                (idx - 1, idx)
+            };
+            let (a0, a1) = (axis[i0] as f64, axis[i1] as f64);
+            let w = if a1 > a0 { (xf - a0) / (a1 - a0) } else { 0.0 };
+            (axis[i0], axis[i1], w)
+        };
+        let (b0, b1, wb) = bracket(&batches, b);
+        let (c0, c1, wc) = bracket(&ctxs, c);
+        let get = |bb, cc| lookup(bb, cc).unwrap_or_else(|| {
+            // sparse grid fallback: nearest by batch then ctx
+            points
+                .iter()
+                .min_by_key(|p| {
+                    (p.0 as i64 - bb as i64).abs() * 1_000_000
+                        + (p.1 as i64 - cc as i64).abs()
+                })
+                .map(|p| p.2 as f64)
+                .unwrap_or(0.0)
+        });
+        let y00 = get(b0, c0);
+        let y01 = get(b0, c1);
+        let y10 = get(b1, c0);
+        let y11 = get(b1, c1);
+        let y0 = y00 * (1.0 - wc) + y01 * wc;
+        let y1 = y10 * (1.0 - wc) + y11 * wc;
+        (y0 * (1.0 - wb) + y1 * wb).max(0.0)
+    }
+
+    /// Interpolated latency for `inv`; `None` if the op was never profiled.
+    pub fn lookup(&self, inv: OpInvocation) -> Option<f64> {
+        match self.ops.get(&inv.kind)? {
+            OpTrace::Tokens(pts) => Some(Self::interp_tokens(pts, inv.tokens)),
+            OpTrace::BatchCtx(pts) => {
+                Some(Self::interp_batch_ctx(pts, inv.tokens, inv.ctx))
+            }
+        }
+    }
+
+    // ---- calibration -------------------------------------------------------
+
+    /// Mean measured/roofline ratio per op kind, for extending this
+    /// hardware's behaviour to unprofiled model configs.
+    pub fn calibration(&self, roofline: &Roofline) -> Vec<(OpKind, f64)> {
+        let mut out = vec![];
+        for (&kind, tr) in &self.ops {
+            let mut ratios = vec![];
+            let mut push = |inv: OpInvocation, ns: u64| {
+                let ideal = roofline.raw_latency(inv) * 1e9;
+                if ideal > 0.0 && ns > 0 {
+                    ratios.push(ns as f64 / ideal);
+                }
+            };
+            match tr {
+                OpTrace::Tokens(pts) => {
+                    for &(t, ns) in pts {
+                        let inv = if kind == OpKind::AttnPrefill {
+                            OpInvocation::prefill(t)
+                        } else {
+                            OpInvocation::tokens(kind, t)
+                        };
+                        push(inv, ns);
+                    }
+                }
+                OpTrace::BatchCtx(pts) => {
+                    for &(b, c, ns) in pts {
+                        push(OpInvocation::decode(b, c), ns);
+                    }
+                }
+            }
+            if !ratios.is_empty() {
+                let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+                out.push((kind, mean));
+            }
+        }
+        out
+    }
+
+    // ---- persistence -------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let mut ops = Vec::new();
+        for (kind, tr) in &self.ops {
+            let (grid, pts) = match tr {
+                OpTrace::Tokens(v) => (
+                    "tokens",
+                    v.iter()
+                        .map(|&(t, ns)| {
+                            Value::arr(vec![Value::int(t as i64), Value::int(ns as i64)])
+                        })
+                        .collect::<Vec<_>>(),
+                ),
+                OpTrace::BatchCtx(v) => (
+                    "batch_ctx",
+                    v.iter()
+                        .map(|&(b, c, ns)| {
+                            Value::arr(vec![
+                                Value::int(b as i64),
+                                Value::int(c as i64),
+                                Value::int(ns as i64),
+                            ])
+                        })
+                        .collect::<Vec<_>>(),
+                ),
+            };
+            ops.push((
+                kind.as_str(),
+                Value::obj(vec![
+                    ("grid", Value::str(grid)),
+                    ("points", Value::arr(pts)),
+                ]),
+            ));
+        }
+        Value::obj(vec![
+            ("hardware", Value::str(self.hardware.clone())),
+            ("model", Value::str(self.model.clone())),
+            ("ops", Value::obj(ops)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<TraceDb> {
+        let hardware = v
+            .get("hardware")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("trace missing 'hardware'"))?
+            .to_string();
+        let model = v
+            .get("model")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("trace missing 'model'"))?
+            .to_string();
+        let mut db = TraceDb::new(&hardware, &model);
+        let ops = v
+            .get("ops")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("trace missing 'ops'"))?;
+        for (name, op) in ops {
+            let kind = OpKind::from_str(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown op kind '{name}'"))?;
+            let grid = op.get("grid").as_str().unwrap_or("tokens");
+            let pts = op
+                .get("points")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("op '{name}' missing points"))?;
+            for p in pts {
+                match grid {
+                    "tokens" => db.add_tokens(
+                        kind,
+                        p.idx(0)
+                            .as_u64()
+                            .ok_or_else(|| anyhow::anyhow!("bad point in '{name}'"))?,
+                        p.idx(1)
+                            .as_u64()
+                            .ok_or_else(|| anyhow::anyhow!("bad point in '{name}'"))?,
+                    ),
+                    "batch_ctx" => db.add_batch_ctx(
+                        kind,
+                        p.idx(0)
+                            .as_u64()
+                            .ok_or_else(|| anyhow::anyhow!("bad point in '{name}'"))?,
+                        p.idx(1)
+                            .as_u64()
+                            .ok_or_else(|| anyhow::anyhow!("bad point in '{name}'"))?,
+                        p.idx(2)
+                            .as_u64()
+                            .ok_or_else(|| anyhow::anyhow!("bad point in '{name}'"))?,
+                    ),
+                    g => anyhow::bail!("unknown grid kind '{g}'"),
+                }
+            }
+        }
+        Ok(db)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<TraceDb> {
+        Self::from_json(&json::load_file(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        json::save_file(path, &self.to_json())
+    }
+}
+
+impl PerfModel for TraceDb {
+    fn op_latency(&self, inv: OpInvocation) -> Nanos {
+        match self.lookup(inv) {
+            Some(ns) => ns.round() as Nanos,
+            None => panic!(
+                "trace[{}/{}] has no samples for op {} — re-run the profiler \
+                 or use the calibrated analytical model",
+                self.hardware, self.model, inv.kind
+            ),
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+    use crate::perf::HardwareSpec;
+    use crate::util::prop;
+
+    fn db_linear() -> TraceDb {
+        let mut db = TraceDb::new("test-hw", "tiny-dense");
+        for t in [1u64, 2, 4, 8, 16, 32, 64] {
+            db.add_tokens(OpKind::Ffn, t, 1000 * t); // exactly linear
+        }
+        db
+    }
+
+    #[test]
+    fn interpolates_exactly_on_grid() {
+        let db = db_linear();
+        assert_eq!(db.op_latency(OpInvocation::tokens(OpKind::Ffn, 8)), 8000);
+    }
+
+    #[test]
+    fn interpolates_between_points() {
+        let db = db_linear();
+        let l = db.op_latency(OpInvocation::tokens(OpKind::Ffn, 12));
+        assert_eq!(l, 12_000);
+    }
+
+    #[test]
+    fn extrapolates_above_grid() {
+        let db = db_linear();
+        let l = db.op_latency(OpInvocation::tokens(OpKind::Ffn, 128));
+        assert_eq!(l, 128_000);
+    }
+
+    #[test]
+    fn bilinear_decode_grid() {
+        let mut db = TraceDb::new("hw", "m");
+        for b in [1u64, 2, 4] {
+            for c in [64u64, 128] {
+                db.add_batch_ctx(OpKind::AttnDecode, b, c, b * c * 10);
+            }
+        }
+        // exact on grid
+        assert_eq!(db.op_latency(OpInvocation::decode(2, 128)), 2560);
+        // between batches: b=3, c=64 → between 640*3=1920 (linear)
+        assert_eq!(db.op_latency(OpInvocation::decode(3, 64)), 1920);
+        // between ctx: b=1, c=96 → 960
+        assert_eq!(db.op_latency(OpInvocation::decode(1, 96)), 960);
+    }
+
+    #[test]
+    fn lookup_missing_returns_none() {
+        let db = db_linear();
+        assert!(db.lookup(OpInvocation::tokens(OpKind::LmHead, 4)).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "no samples")]
+    fn perfmodel_panics_on_missing_op() {
+        let db = db_linear();
+        db.op_latency(OpInvocation::tokens(OpKind::LmHead, 4));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut db = db_linear();
+        db.add_batch_ctx(OpKind::AttnDecode, 1, 64, 5000);
+        db.add_batch_ctx(OpKind::AttnDecode, 2, 64, 9000);
+        let v = db.to_json();
+        let back = TraceDb::from_json(&v).unwrap();
+        assert_eq!(back.hardware, "test-hw");
+        assert_eq!(
+            back.op_latency(OpInvocation::tokens(OpKind::Ffn, 12)),
+            db.op_latency(OpInvocation::tokens(OpKind::Ffn, 12))
+        );
+        assert_eq!(back.op_latency(OpInvocation::decode(1, 64)), 5000);
+    }
+
+    #[test]
+    fn calibration_recovers_known_factor() {
+        // Build a trace that is exactly 3x the roofline.
+        let model = ModelSpec::tiny_dense();
+        let hw = HardwareSpec::cpu_pjrt();
+        let roof = Roofline::new(hw, model);
+        let mut db = TraceDb::new("cpu-pjrt", "tiny-dense");
+        for t in [4u64, 16, 64, 256] {
+            let inv = OpInvocation::tokens(OpKind::Ffn, t);
+            let ns = (roof.raw_latency(inv) * 3.0 * 1e9).round() as u64;
+            db.add_tokens(OpKind::Ffn, t, ns);
+        }
+        let cal = db.calibration(&roof);
+        let (_, f) = cal.iter().find(|(k, _)| *k == OpKind::Ffn).unwrap();
+        assert!((f - 3.0).abs() < 0.05, "factor={f}");
+    }
+
+    #[test]
+    fn prop_interpolation_within_bracket_bounds() {
+        prop::check(
+            "trace-interp-bounded",
+            128,
+            |rng| {
+                let n = 2 + rng.below(6) as usize;
+                let mut pts: Vec<(u64, u64)> = (0..n)
+                    .map(|i| {
+                        (
+                            (i as u64 + 1) * (1 + rng.below(8)),
+                            1000 + rng.below(1_000_000),
+                        )
+                    })
+                    .collect();
+                pts.sort();
+                pts.dedup_by_key(|p| p.0);
+                let q = 1 + rng.below(pts.last().unwrap().0);
+                (pts, q)
+            },
+            |(pts, q)| {
+                let y = TraceDb::interp_tokens(pts, *q);
+                // inside the grid, interpolation is bounded by segment endpoints
+                let idx = pts.partition_point(|&(x, _)| x < *q);
+                if idx > 0 && idx < pts.len() {
+                    let lo = pts[idx - 1].1.min(pts[idx].1) as f64;
+                    let hi = pts[idx - 1].1.max(pts[idx].1) as f64;
+                    if y < lo - 1e-6 || y > hi + 1e-6 {
+                        return Err(format!("y={y} outside [{lo},{hi}] q={q}"));
+                    }
+                }
+                if !y.is_finite() || y < 0.0 {
+                    return Err(format!("y={y} invalid"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

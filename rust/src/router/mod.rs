@@ -1,0 +1,308 @@
+//! Global request router (§II-B): sits outside the instances, dispatches
+//! every arriving request according to the configured policy, and picks
+//! decode targets for P/D KV hand-offs.
+//!
+//! Policies see a compact [`InstanceView`] snapshot (load, KV pressure,
+//! prefix-cache match, role) — the same signals the paper lists: "load
+//! balancing, workload characteristics, and the state of prefix caches".
+//! New policies implement [`RoutePolicy`]; the built-ins cover the enum in
+//! `config::RouterPolicy`.
+
+use std::collections::HashMap;
+
+use crate::config::{Role, RouterPolicy};
+use crate::workload::Request;
+
+/// Router-visible snapshot of one instance.
+#[derive(Debug, Clone)]
+pub struct InstanceView {
+    pub id: usize,
+    pub role: Role,
+    /// Waiting + running requests.
+    pub outstanding: usize,
+    /// KV pool utilization in [0, 1].
+    pub kv_utilization: f64,
+    /// Longest prefix-cache match for the request being routed (tokens).
+    pub prefix_match: u64,
+    /// Whether the instance serves this request's model.
+    pub compatible: bool,
+}
+
+/// A routing decision strategy. Implement this to plug in custom policies.
+pub trait RoutePolicy: Send {
+    /// Choose among `candidates` (non-empty, already filtered to
+    /// prefill-capable + model-compatible instances).
+    fn choose(&mut self, req: &Request, candidates: &[InstanceView]) -> usize;
+
+    fn name(&self) -> &str;
+}
+
+/// The global router: policy + session-affinity memory + RR cursor.
+pub struct GlobalRouter {
+    policy: Box<dyn RoutePolicy>,
+    affinity: HashMap<u64, usize>,
+    pub dispatched: u64,
+}
+
+impl GlobalRouter {
+    pub fn new(policy: RouterPolicy) -> Self {
+        let policy: Box<dyn RoutePolicy> = match policy {
+            RouterPolicy::RoundRobin => Box::new(RoundRobin { cursor: 0 }),
+            RouterPolicy::LeastOutstanding => Box::new(LeastOutstanding),
+            RouterPolicy::LeastKvLoad => Box::new(LeastKvLoad),
+            RouterPolicy::PrefixAware => Box::new(PrefixAware),
+            RouterPolicy::SessionAffinity => Box::new(LeastOutstanding),
+        };
+        GlobalRouter {
+            policy,
+            affinity: HashMap::new(),
+            dispatched: 0,
+        }
+    }
+
+    pub fn custom(policy: Box<dyn RoutePolicy>) -> Self {
+        GlobalRouter {
+            policy,
+            affinity: HashMap::new(),
+            dispatched: 0,
+        }
+    }
+
+    /// Route an arriving request to a prefill-capable instance.
+    /// `session_affinity` enables sticky sessions on top of any policy.
+    pub fn dispatch(
+        &mut self,
+        req: &Request,
+        views: &[InstanceView],
+        session_affinity: bool,
+    ) -> Option<usize> {
+        let candidates: Vec<InstanceView> = views
+            .iter()
+            .filter(|v| v.compatible && matches!(v.role, Role::Unified | Role::Prefill))
+            .cloned()
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        if session_affinity {
+            if let Some(&inst) = self.affinity.get(&req.session) {
+                if candidates.iter().any(|v| v.id == inst) {
+                    self.dispatched += 1;
+                    return Some(inst);
+                }
+            }
+        }
+        let chosen = self.policy.choose(req, &candidates);
+        debug_assert!(candidates.iter().any(|v| v.id == chosen));
+        if session_affinity {
+            self.affinity.insert(req.session, chosen);
+        }
+        self.dispatched += 1;
+        Some(chosen)
+    }
+
+    /// Pick a decode instance for a P/D KV hand-off (least outstanding
+    /// among decode-role instances).
+    pub fn pick_decode(&mut self, views: &[InstanceView]) -> Option<usize> {
+        views
+            .iter()
+            .filter(|v| v.compatible && v.role == Role::Decode)
+            .min_by(|a, b| {
+                (a.outstanding, a.id).cmp(&(b.outstanding, b.id))
+            })
+            .map(|v| v.id)
+    }
+
+    pub fn policy_name(&self) -> &str {
+        self.policy.name()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in policies
+// ---------------------------------------------------------------------------
+
+struct RoundRobin {
+    cursor: usize,
+}
+
+impl RoutePolicy for RoundRobin {
+    fn choose(&mut self, _req: &Request, candidates: &[InstanceView]) -> usize {
+        let v = &candidates[self.cursor % candidates.len()];
+        self.cursor = self.cursor.wrapping_add(1);
+        v.id
+    }
+    fn name(&self) -> &str {
+        "round-robin"
+    }
+}
+
+struct LeastOutstanding;
+
+impl RoutePolicy for LeastOutstanding {
+    fn choose(&mut self, _req: &Request, candidates: &[InstanceView]) -> usize {
+        candidates
+            .iter()
+            .min_by(|a, b| (a.outstanding, a.id).cmp(&(b.outstanding, b.id)))
+            .unwrap()
+            .id
+    }
+    fn name(&self) -> &str {
+        "least-outstanding"
+    }
+}
+
+struct LeastKvLoad;
+
+impl RoutePolicy for LeastKvLoad {
+    fn choose(&mut self, _req: &Request, candidates: &[InstanceView]) -> usize {
+        candidates
+            .iter()
+            .min_by(|a, b| {
+                a.kv_utilization
+                    .partial_cmp(&b.kv_utilization)
+                    .unwrap()
+                    .then(a.id.cmp(&b.id))
+            })
+            .unwrap()
+            .id
+    }
+    fn name(&self) -> &str {
+        "least-kv"
+    }
+}
+
+/// Prefer the longest prefix-cache match; break ties by load. A match is
+/// only honored when it saves meaningful work (>= 16 tokens), otherwise
+/// falls back to load balancing.
+struct PrefixAware;
+
+impl RoutePolicy for PrefixAware {
+    fn choose(&mut self, _req: &Request, candidates: &[InstanceView]) -> usize {
+        let best = candidates.iter().map(|v| v.prefix_match).max().unwrap_or(0);
+        if best >= 16 {
+            candidates
+                .iter()
+                .filter(|v| v.prefix_match == best)
+                .min_by(|a, b| (a.outstanding, a.id).cmp(&(b.outstanding, b.id)))
+                .unwrap()
+                .id
+        } else {
+            LeastOutstanding.choose(_req, candidates)
+        }
+    }
+    fn name(&self) -> &str {
+        "prefix-aware"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(id: usize, role: Role, outstanding: usize) -> InstanceView {
+        InstanceView {
+            id,
+            role,
+            outstanding,
+            kv_utilization: 0.0,
+            prefix_match: 0,
+            compatible: true,
+        }
+    }
+
+    fn req(id: u64, session: u64) -> Request {
+        Request {
+            id,
+            arrival: 0,
+            prompt_tokens: 64,
+            output_tokens: 8,
+            session,
+            shared_prefix: 0,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = GlobalRouter::new(RouterPolicy::RoundRobin);
+        let views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 0)];
+        let picks: Vec<usize> = (0..4)
+            .map(|i| r.dispatch(&req(i, i), &views, false).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn least_outstanding_balances() {
+        let mut r = GlobalRouter::new(RouterPolicy::LeastOutstanding);
+        let views = vec![view(0, Role::Unified, 5), view(1, Role::Unified, 2)];
+        assert_eq!(r.dispatch(&req(0, 0), &views, false), Some(1));
+    }
+
+    #[test]
+    fn least_kv_prefers_free_memory() {
+        let mut r = GlobalRouter::new(RouterPolicy::LeastKvLoad);
+        let mut views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 9)];
+        views[0].kv_utilization = 0.9;
+        views[1].kv_utilization = 0.1;
+        assert_eq!(r.dispatch(&req(0, 0), &views, false), Some(1));
+    }
+
+    #[test]
+    fn prefix_aware_follows_cache() {
+        let mut r = GlobalRouter::new(RouterPolicy::PrefixAware);
+        let mut views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 9)];
+        views[1].prefix_match = 128;
+        assert_eq!(r.dispatch(&req(0, 0), &views, false), Some(1));
+        // tiny match falls back to load
+        views[1].prefix_match = 4;
+        assert_eq!(r.dispatch(&req(1, 1), &views, false), Some(0));
+    }
+
+    #[test]
+    fn session_affinity_sticks() {
+        let mut r = GlobalRouter::new(RouterPolicy::SessionAffinity);
+        let views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 0)];
+        let first = r.dispatch(&req(0, 42), &views, true).unwrap();
+        // same session, now-busier instance: still sticks
+        let mut views2 = views.clone();
+        views2[first].outstanding = 100;
+        assert_eq!(r.dispatch(&req(1, 42), &views2, true), Some(first));
+        // different session balances away
+        assert_ne!(r.dispatch(&req(2, 43), &views2, true), Some(first));
+    }
+
+    #[test]
+    fn decode_instances_not_dispatch_targets() {
+        let mut r = GlobalRouter::new(RouterPolicy::RoundRobin);
+        let views = vec![view(0, Role::Decode, 0), view(1, Role::Prefill, 0)];
+        assert_eq!(r.dispatch(&req(0, 0), &views, false), Some(1));
+    }
+
+    #[test]
+    fn pick_decode_least_loaded() {
+        let mut r = GlobalRouter::new(RouterPolicy::RoundRobin);
+        let views = vec![
+            view(0, Role::Prefill, 0),
+            view(1, Role::Decode, 3),
+            view(2, Role::Decode, 1),
+        ];
+        assert_eq!(r.pick_decode(&views), Some(2));
+    }
+
+    #[test]
+    fn no_candidates_none() {
+        let mut r = GlobalRouter::new(RouterPolicy::RoundRobin);
+        assert_eq!(r.dispatch(&req(0, 0), &[], false), None);
+        let views = vec![view(0, Role::Decode, 0)];
+        assert_eq!(r.dispatch(&req(0, 0), &views, false), None);
+    }
+
+    #[test]
+    fn incompatible_filtered() {
+        let mut r = GlobalRouter::new(RouterPolicy::LeastOutstanding);
+        let mut views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 5)];
+        views[0].compatible = false;
+        assert_eq!(r.dispatch(&req(0, 0), &views, false), Some(1));
+    }
+}

@@ -1,0 +1,356 @@
+//! PJRT runtime: loads the HLO-text operator artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via the
+//! `xla` crate.
+//!
+//! This is the only place Rust touches XLA. Interchange is HLO *text* (not
+//! serialized `HloModuleProto`): jax >= 0.5 emits 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). Python never runs at simulation time — the
+//! artifacts directory is the complete hand-off.
+
+pub mod profiler;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::OpKind;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+/// One lowered operator artifact (a `manifest.json` entry).
+#[derive(Debug, Clone)]
+pub struct OpArtifact {
+    pub name: String,
+    pub kind: OpKind,
+    /// Path relative to the artifacts root.
+    pub file: String,
+    /// Parameter shapes (all f32).
+    pub param_shapes: Vec<Vec<usize>>,
+    /// 1-D grid coordinate (tokens) — 0 for decode-grid ops.
+    pub tokens: u64,
+    /// 2-D grid coordinates for decode attention.
+    pub batch: u64,
+    pub ctx: u64,
+    pub flops: u64,
+    pub bytes: u64,
+}
+
+/// Manifest for one model's operator grid.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub model: String,
+    pub hidden: u64,
+    pub layers: u64,
+    pub ops: Vec<OpArtifact>,
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: Vec<ModelManifest>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &Path) -> anyhow::Result<Manifest> {
+        let v = json::load_file(&root.join("manifest.json"))?;
+        Self::from_json(root, &v)
+    }
+
+    pub fn from_json(root: &Path, v: &Value) -> anyhow::Result<Manifest> {
+        let mut models = vec![];
+        for m in v.get("models").as_arr().unwrap_or(&[]) {
+            let info = m.get("model");
+            let name = info
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("manifest model missing name"))?
+                .to_string();
+            let mut ops = vec![];
+            for op in m.get("ops").as_arr().unwrap_or(&[]) {
+                let kind_str = op
+                    .get("op")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("op missing kind"))?;
+                let kind = OpKind::from_str(kind_str)
+                    .ok_or_else(|| anyhow::anyhow!("unknown op kind '{kind_str}'"))?;
+                let param_shapes = op
+                    .get("params")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|p| {
+                        p.get("shape")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(|d| d.as_u64().unwrap_or(0) as usize)
+                            .collect()
+                    })
+                    .collect();
+                let grid = op.get("grid");
+                ops.push(OpArtifact {
+                    name: op
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("op missing name"))?
+                        .to_string(),
+                    kind,
+                    file: op
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("op missing file"))?
+                        .to_string(),
+                    param_shapes,
+                    tokens: grid.get("tokens").as_u64().unwrap_or(0),
+                    batch: grid.get("batch").as_u64().unwrap_or(0),
+                    ctx: grid.get("ctx").as_u64().unwrap_or(0),
+                    flops: op.get("flops").as_u64().unwrap_or(0),
+                    bytes: op.get("bytes").as_u64().unwrap_or(0),
+                });
+            }
+            models.push(ModelManifest {
+                model: name,
+                hidden: info.get("hidden").as_u64().unwrap_or(0),
+                layers: info.get("layers").as_u64().unwrap_or(0),
+                ops,
+            });
+        }
+        if models.is_empty() {
+            anyhow::bail!("manifest has no models");
+        }
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelManifest> {
+        self.models.iter().find(|m| m.model == name)
+    }
+}
+
+/// A compiled operator ready to execute: executable + pre-built inputs.
+pub struct LoadedOp {
+    pub artifact: OpArtifact,
+    exe: xla::PjRtLoadedExecutable,
+    /// Inputs staged as DEVICE buffers once at load time and reused via
+    /// `execute_b`: the literal-taking `execute` converts (and, in xla
+    /// 0.1.6's C shim, leaks) a device buffer per argument per call.
+    inputs: Vec<xla::PjRtBuffer>,
+}
+
+/// Process-CPU-time clock: immune to preemption by other tenants on the
+/// (single-core, shared) testbed. Both the profiler and the ground-truth
+/// engine measure with this clock, so predictions and reference use the
+/// same time base.
+pub fn cpu_time_ns() -> u64 {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    // SAFETY: clock_gettime with a valid clock id and out-pointer.
+    unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+impl LoadedOp {
+    /// Execute once, synchronously; returns process-CPU nanoseconds.
+    pub fn execute_timed(&self) -> anyhow::Result<u64> {
+        let t0 = cpu_time_ns();
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&self.inputs)?;
+        // Force completion by materializing the (tuple) output.
+        let _lit = result[0][0].to_literal_sync()?;
+        Ok(cpu_time_ns() - t0)
+    }
+
+    /// Execute and return the raw output literal (tests / numerics checks).
+    pub fn execute(&self) -> anyhow::Result<xla::Literal> {
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&self.inputs)?;
+        Ok(result[0][0].to_literal_sync()?)
+    }
+}
+
+/// PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, LoadedOp>,
+    root: PathBuf,
+    /// Seed for deterministic input generation.
+    seed: u64,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime rooted at the artifacts directory.
+    pub fn cpu(artifacts_root: &Path) -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            client,
+            cache: HashMap::new(),
+            root: artifacts_root.to_path_buf(),
+            seed: 0xA07,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile + build inputs for) an artifact; cached by name.
+    pub fn load(&mut self, artifact: &OpArtifact) -> anyhow::Result<&LoadedOp> {
+        if !self.cache.contains_key(&artifact.name) {
+            let path = self.root.join(&artifact.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e}", artifact.name))?;
+            let mut rng = Rng::new(self.seed ^ hash_name(&artifact.name));
+            let inputs = artifact
+                .param_shapes
+                .iter()
+                .map(|shape| {
+                    let lit = make_literal(shape, &mut rng)?;
+                    let buf = self
+                        .client
+                        .buffer_from_host_literal(None, &lit)
+                        .map_err(|e| anyhow::anyhow!("staging input: {e}"))?;
+                    // The host->device copy is asynchronous; force it to
+                    // complete before `lit` drops (use-after-free otherwise).
+                    buf.to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("sync staging: {e}"))?;
+                    Ok(buf)
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            self.cache.insert(
+                artifact.name.clone(),
+                LoadedOp {
+                    artifact: artifact.clone(),
+                    exe,
+                    inputs,
+                },
+            );
+        }
+        Ok(&self.cache[&artifact.name])
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn hash_name(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Build a random f32 literal of `shape` (small magnitude: activations and
+/// weights in a realistic range so softmax paths stay finite).
+fn make_literal(shape: &[usize], rng: &mut Rng) -> anyhow::Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    let data: Vec<f32> = (0..n)
+        .map(|_| (rng.f64() as f32 - 0.5) * 0.2)
+        .collect();
+    let lit = xla::Literal::vec1(&data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if dims.is_empty() {
+        return Ok(lit);
+    }
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {shape:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_root().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_root()).unwrap();
+        assert!(m.model("tiny-dense").is_some());
+        let dense = m.model("tiny-dense").unwrap();
+        assert_eq!(dense.hidden, 256);
+        // all nine op kinds minus moe-specific ones
+        let kinds: std::collections::HashSet<OpKind> =
+            dense.ops.iter().map(|o| o.kind).collect();
+        assert!(kinds.contains(&OpKind::AttnPrefill));
+        assert!(kinds.contains(&OpKind::AttnDecode));
+        assert!(kinds.contains(&OpKind::Ffn));
+        // decode ops carry 2-D grid coords
+        let d = dense
+            .ops
+            .iter()
+            .find(|o| o.kind == OpKind::AttnDecode)
+            .unwrap();
+        assert!(d.batch > 0 && d.ctx > 0);
+    }
+
+    #[test]
+    fn runtime_loads_and_executes_op() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_root()).unwrap();
+        let dense = m.model("tiny-dense").unwrap();
+        let op = dense
+            .ops
+            .iter()
+            .find(|o| o.kind == OpKind::Ffn && o.tokens == 8)
+            .expect("ffn_t8 artifact");
+        let mut rt = Runtime::cpu(&artifacts_root()).unwrap();
+        let loaded = rt.load(op).unwrap();
+        let ns = loaded.execute_timed().unwrap();
+        assert!(ns > 0);
+        // second load is cached
+        let _ = rt.load(op).unwrap();
+        assert_eq!(rt.loaded_count(), 1);
+    }
+
+    #[test]
+    fn pallas_attention_artifact_executes() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_root()).unwrap();
+        let dense = m.model("tiny-dense").unwrap();
+        let op = dense
+            .ops
+            .iter()
+            .find(|o| o.kind == OpKind::AttnPrefill)
+            .unwrap();
+        let mut rt = Runtime::cpu(&artifacts_root()).unwrap();
+        let loaded = rt.load(op).unwrap();
+        // the interpret-mode Pallas kernel must run on the CPU client
+        let out = loaded.execute().unwrap();
+        let tuple = out.to_tuple1().unwrap();
+        let values = tuple.to_vec::<f32>().unwrap();
+        assert!(!values.is_empty());
+        assert!(values.iter().all(|v| v.is_finite()));
+    }
+}

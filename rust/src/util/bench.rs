@@ -1,0 +1,205 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated measurement with median/std reporting and an
+//! aligned table printer. All `benches/*.rs` targets use `harness = false`
+//! and drive this module directly, so `cargo bench` regenerates each paper
+//! table/figure as a printed table.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Cap total measurement wall-clock; long-running sims get fewer iters.
+    pub max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 2,
+            measure_iters: 10,
+            max_total: Duration::from_secs(60),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            measure_iters: 3,
+            max_total: Duration::from_secs(120),
+        }
+    }
+
+    /// Measure `f`, returning per-iteration timing statistics.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let started = Instant::now();
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if started.elapsed() > self.max_total && samples.len() >= 3 {
+                break;
+            }
+        }
+        let s = stats::Summary::of(&samples);
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            median: Duration::from_secs_f64(s.p50),
+            mean: Duration::from_secs_f64(s.mean),
+            std: Duration::from_secs_f64(s.std),
+            min: Duration::from_secs_f64(s.min),
+        }
+    }
+}
+
+/// Human-readable duration (ns/µs/ms/s auto-scaling).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Aligned ASCII table printer for bench/report output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line
+        };
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher {
+            warmup_iters: 1,
+            measure_iters: 5,
+            max_total: Duration::from_secs(5),
+        };
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.median > Duration::ZERO);
+        assert!(r.min <= r.median);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_duration(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_duration(Duration::from_millis(2500)).contains(" s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["config", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2".into()]);
+        let out = t.render();
+        assert!(out.contains("| config    |"));
+        assert!(out.contains("| long-name |"));
+        let widths: Vec<usize> = out.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-contained substrates: JSON codec, PRNG, statistics, property-test
+//! harness, benchmark harness, and logging. These replace the crates the
+//! offline registry does not carry (serde/rand/proptest/criterion); see
+//! DESIGN.md §1.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

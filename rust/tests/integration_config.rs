@@ -1,0 +1,129 @@
+//! Config-file integration: JSON round-trips through disk, user-authored
+//! configs load, and validation rejects inconsistent deployments.
+
+use llmservingsim::config::{presets, CacheScope, SimConfig};
+use llmservingsim::coordinator::run_config;
+use llmservingsim::util::json;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("llmss_cfg_{name}.json"))
+}
+
+#[test]
+fn save_load_run_roundtrip() {
+    let mut cfg = presets::with_prefix_cache(
+        presets::multi_dense("tiny-dense", "rtx3090"),
+        CacheScope::Global,
+    );
+    cfg.workload.num_requests = 10;
+    let path = tmp("roundtrip");
+    cfg.save(&path).unwrap();
+    let loaded = SimConfig::load(&path).unwrap();
+    assert_eq!(cfg, loaded);
+    let (a, _) = run_config(cfg).unwrap();
+    let (b, _) = run_config(loaded).unwrap();
+    assert_eq!(a.makespan, b.makespan);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn hand_written_config_loads() {
+    let text = r#"{
+      "name": "hand-written",
+      "seed": 7,
+      "router": "prefix-aware",
+      "block_size": 32,
+      "perf": {"backend": "analytical"},
+      "workload": {
+        "num_requests": 8,
+        "arrival": {"kind": "poisson", "rate": 5.0},
+        "sessions": 2,
+        "shared_prefix": 16
+      },
+      "instances": [
+        {
+          "name": "gpu0",
+          "model": "tiny-dense",
+          "hardware": "rtx3090",
+          "devices": 2,
+          "tp": 2,
+          "max_batch_tokens": 1024,
+          "sched": "sjf",
+          "prefix_cache": {"device_fraction": 0.1, "policy": "lfu",
+                           "scope": "global"},
+          "topology": "ring"
+        },
+        {
+          "name": "tpu0",
+          "model": "tiny-dense",
+          "hardware": "tpu-v6e",
+          "af_disagg": true
+        }
+      ]
+    }"#;
+    let path = tmp("hand");
+    std::fs::write(&path, text).unwrap();
+    let cfg = SimConfig::load(&path).unwrap();
+    assert_eq!(cfg.name, "hand-written");
+    assert_eq!(cfg.instances.len(), 2);
+    assert_eq!(cfg.instances[0].tp, 2);
+    assert!(cfg.instances[1].af_disagg);
+    let (report, _) = run_config(cfg).unwrap();
+    assert_eq!(report.num_finished, 8);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn invalid_configs_rejected_with_clear_errors() {
+    let cases = [
+        // tp doesn't divide devices
+        (
+            r#"{"instances": [{"model": "tiny-dense", "hardware": "rtx3090",
+                "devices": 4, "tp": 3}]}"#,
+            "must divide",
+        ),
+        // ep on a dense model
+        (
+            r#"{"instances": [{"model": "tiny-dense", "hardware": "rtx3090",
+                "devices": 2, "tp": 2, "ep": 2}]}"#,
+            "MoE",
+        ),
+        // unknown model
+        (
+            r#"{"instances": [{"model": "gpt-7", "hardware": "rtx3090"}]}"#,
+            "unknown model",
+        ),
+        // prefill without decode
+        (
+            r#"{"instances": [{"model": "tiny-dense", "hardware": "rtx3090",
+                "role": "prefill"}]}"#,
+            "prefill and decode",
+        ),
+        // bad router policy
+        (
+            r#"{"router": "coin-flip",
+                "instances": [{"model": "tiny-dense", "hardware": "rtx3090"}]}"#,
+            "router",
+        ),
+    ];
+    for (text, needle) in cases {
+        let v = json::parse(text).unwrap();
+        let err = SimConfig::from_json(&v).unwrap_err().to_string();
+        assert!(
+            err.contains(needle),
+            "error '{err}' should mention '{needle}'"
+        );
+    }
+}
+
+#[test]
+fn workload_trace_files_interoperate_with_cli_schema() {
+    // gen-trace writes the same schema load_trace reads
+    let reqs = llmservingsim::workload::WorkloadSpec::sharegpt_100(10.0).generate();
+    let path = tmp("trace");
+    llmservingsim::workload::save_trace(&path, &reqs).unwrap();
+    let loaded = llmservingsim::workload::load_trace(&path).unwrap();
+    assert_eq!(reqs.len(), loaded.len());
+    assert_eq!(reqs[0], loaded[0]);
+    let _ = std::fs::remove_file(&path);
+}
