@@ -15,7 +15,7 @@
 //! Run: `make artifacts && cargo run --release --example end_to_end`
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use llmservingsim::config::{presets, PerfBackend};
 use llmservingsim::coordinator::{run_config, Simulation};
@@ -29,6 +29,12 @@ fn main() -> anyhow::Result<()> {
     let root = PathBuf::from("artifacts");
     if !root.join("manifest.json").exists() {
         anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    if !Runtime::backend_available() {
+        anyhow::bail!(
+            "no real PJRT backend compiled in (xla stub) — see \
+             rust/src/runtime/xla.rs for enabling real execution"
+        );
     }
 
     // ---- 1. Layer 1/2 artifacts execute on PJRT --------------------------
@@ -80,10 +86,10 @@ fn main() -> anyhow::Result<()> {
     cfg.workload.lengths = LengthDist::short();
 
     println!("\nserving {} requests on the ground-truth engine ...", 40);
-    let gt = Rc::new(ExecPerfModel::new(&root, "tiny-dense")?);
+    let gt = Arc::new(ExecPerfModel::new(&root, "tiny-dense")?);
     let gt2 = gt.clone();
     let mut gt_sim = Simulation::with_perf_factory(cfg.clone(), &move |_, _, _| {
-        Ok(gt2.clone() as Rc<dyn llmservingsim::perf::PerfModel>)
+        Ok(gt2.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
     })?;
     let t0 = std::time::Instant::now();
     let gt_report = gt_sim.run();

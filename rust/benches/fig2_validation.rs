@@ -13,7 +13,7 @@
 //! Env: LLMSS_REQUESTS=100 for the paper's full request count.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use llmservingsim::config::{presets, PerfBackend, SimConfig};
 use llmservingsim::coordinator::{run_config, Simulation};
@@ -54,7 +54,7 @@ fn prep(mut cfg: SimConfig) -> SimConfig {
 
 fn ground_truth(
     cfg: &SimConfig,
-    engines: &[(String, Rc<ExecPerfModel>)],
+    engines: &[(String, Arc<ExecPerfModel>)],
 ) -> anyhow::Result<Report> {
     let engines = engines.to_vec();
     let mut sim = Simulation::with_perf_factory(cfg.clone(), &move |_, model, _| {
@@ -62,15 +62,20 @@ fn ground_truth(
             .iter()
             .find(|(m, _)| m == &model.name)
             .expect("engine prepared in main");
-        Ok(found.1.clone() as Rc<dyn llmservingsim::perf::PerfModel>)
+        Ok(found.1.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
     })?;
     Ok(sim.run())
 }
 
 fn main() -> anyhow::Result<()> {
     let root = PathBuf::from("artifacts");
-    if !root.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+    if !root.join("manifest.json").exists()
+        || !llmservingsim::runtime::Runtime::backend_available()
+    {
+        eprintln!(
+            "SKIP: needs `make artifacts` and a real PJRT backend \
+             (built with the xla stub?)"
+        );
         return Ok(());
     }
     // Shared, pre-warmed ground-truth engines (compile cost excluded from
@@ -79,14 +84,14 @@ fn main() -> anyhow::Result<()> {
     // process memory state (hundreds of resident executables) the ground
     // truth will execute in.
     eprintln!("warming ground-truth engines ...");
-    let engines: Vec<(String, Rc<ExecPerfModel>)> = vec![
+    let engines: Vec<(String, Arc<ExecPerfModel>)> = vec![
         (
             "tiny-dense".into(),
-            Rc::new(ExecPerfModel::new(&root, "tiny-dense")?),
+            Arc::new(ExecPerfModel::new(&root, "tiny-dense")?),
         ),
         (
             "tiny-moe".into(),
-            Rc::new(ExecPerfModel::new(&root, "tiny-moe")?),
+            Arc::new(ExecPerfModel::new(&root, "tiny-moe")?),
         ),
     ];
     let dense_trace = ensure_trace(&root, "tiny-dense")?;

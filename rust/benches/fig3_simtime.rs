@@ -55,7 +55,8 @@ fn ensure_trace(root: &PathBuf, model: &str) -> anyhow::Result<String> {
 
 fn main() -> anyhow::Result<()> {
     let root = PathBuf::from("artifacts");
-    let have_artifacts = root.join("manifest.json").exists();
+    let have_artifacts = root.join("manifest.json").exists()
+        && llmservingsim::runtime::Runtime::backend_available();
 
     let mut t = Table::new(&[
         "config",

@@ -18,7 +18,7 @@
 //! Run: `cargo bench --bench table3_integration` (needs `make artifacts`)
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use llmservingsim::config::{presets, PerfBackend, SimConfig};
@@ -48,17 +48,22 @@ fn cfg_base() -> SimConfig {
 }
 
 fn ground_truth(root: &PathBuf) -> anyhow::Result<Report> {
-    let gt = Rc::new(ExecPerfModel::new(root, "tiny-dense")?);
+    let gt = Arc::new(ExecPerfModel::new(root, "tiny-dense")?);
     let mut sim = Simulation::with_perf_factory(cfg_base(), &move |_, _, _| {
-        Ok(gt.clone() as Rc<dyn llmservingsim::perf::PerfModel>)
+        Ok(gt.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
     })?;
     Ok(sim.run())
 }
 
 fn main() -> anyhow::Result<()> {
     let root = PathBuf::from("artifacts");
-    if !root.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+    if !root.join("manifest.json").exists()
+        || !llmservingsim::runtime::Runtime::backend_available()
+    {
+        eprintln!(
+            "SKIP: needs `make artifacts` and a real PJRT backend \
+             (built with the xla stub?)"
+        );
         return Ok(());
     }
 

@@ -58,16 +58,33 @@ pub enum RouterPolicy {
     SessionAffinity,
 }
 
-impl RouterPolicy {
-    pub fn from_str(s: &str) -> Option<RouterPolicy> {
-        Some(match s {
+impl std::str::FromStr for RouterPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<RouterPolicy, Self::Err> {
+        Ok(match s {
             "round-robin" => RouterPolicy::RoundRobin,
             "least-outstanding" => RouterPolicy::LeastOutstanding,
             "least-kv" => RouterPolicy::LeastKvLoad,
             "prefix-aware" => RouterPolicy::PrefixAware,
             "session-affinity" => RouterPolicy::SessionAffinity,
-            _ => return None,
+            _ => anyhow::bail!(
+                "unknown router policy '{s}' (round-robin|least-outstanding|\
+                 least-kv|prefix-aware|session-affinity)"
+            ),
         })
+    }
+}
+
+impl RouterPolicy {
+    pub fn all() -> &'static [RouterPolicy] {
+        &[
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastOutstanding,
+            RouterPolicy::LeastKvLoad,
+            RouterPolicy::PrefixAware,
+            RouterPolicy::SessionAffinity,
+        ]
     }
     pub fn as_str(&self) -> &'static str {
         match self {
@@ -369,6 +386,41 @@ pub enum PerfBackend {
     CycleReplay,
 }
 
+impl std::str::FromStr for PerfBackend {
+    type Err = anyhow::Error;
+
+    /// Parse the CLI spelling: `analytical`, `cycle`, `cycle-replay`, or
+    /// `trace:PATH`.
+    fn from_str(s: &str) -> Result<PerfBackend, Self::Err> {
+        Ok(match s {
+            "analytical" => PerfBackend::Analytical,
+            "cycle" => PerfBackend::Cycle,
+            "cycle-replay" => PerfBackend::CycleReplay,
+            _ => match s.strip_prefix("trace:") {
+                Some(path) => PerfBackend::Trace {
+                    path: path.to_string(),
+                },
+                None => anyhow::bail!(
+                    "unknown perf backend '{s}' \
+                     (analytical|cycle|cycle-replay|trace:PATH)"
+                ),
+            },
+        })
+    }
+}
+
+impl PerfBackend {
+    /// The CLI spelling parsed by `FromStr` (round-trips).
+    pub fn cli_str(&self) -> String {
+        match self {
+            PerfBackend::Analytical => "analytical".into(),
+            PerfBackend::Cycle => "cycle".into(),
+            PerfBackend::CycleReplay => "cycle-replay".into(),
+            PerfBackend::Trace { path } => format!("trace:{path}"),
+        }
+    }
+}
+
 /// Top-level simulation configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {
@@ -569,8 +621,7 @@ impl SimConfig {
         let name = v.get("name").as_str().unwrap_or("unnamed").to_string();
         let seed = v.get("seed").as_u64().unwrap_or(0);
         let router = match v.get("router").as_str() {
-            Some(s) => RouterPolicy::from_str(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown router policy '{s}'"))?,
+            Some(s) => s.parse::<RouterPolicy>()?,
             None => RouterPolicy::RoundRobin,
         };
         let block_size = v.get("block_size").as_u64().unwrap_or(16);
@@ -728,8 +779,7 @@ impl SimConfig {
                     cfg.host_tokens = x;
                 }
                 if let Some(s) = pc.get("policy").as_str() {
-                    cfg.policy = EvictPolicy::from_str(s)
-                        .ok_or_else(|| anyhow::anyhow!("unknown evict policy '{s}'"))?;
+                    cfg.policy = s.parse::<EvictPolicy>()?;
                 }
                 if let Some(s) = pc.get("scope").as_str() {
                     cfg.scope = match s {
@@ -845,15 +895,11 @@ mod tests {
         for r in [Role::Unified, Role::Prefill, Role::Decode] {
             assert_eq!(Role::from_str(r.as_str()), Some(r));
         }
-        for p in [
-            RouterPolicy::RoundRobin,
-            RouterPolicy::LeastOutstanding,
-            RouterPolicy::LeastKvLoad,
-            RouterPolicy::PrefixAware,
-            RouterPolicy::SessionAffinity,
-        ] {
-            assert_eq!(RouterPolicy::from_str(p.as_str()), Some(p.clone()));
+        // RouterPolicy uses std::str::FromStr, so plain `.parse()` works.
+        for p in RouterPolicy::all() {
+            assert_eq!(&p.as_str().parse::<RouterPolicy>().unwrap(), p);
         }
+        assert!("bogus".parse::<RouterPolicy>().is_err());
         for s in [SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Priority] {
             assert_eq!(SchedPolicy::from_str(s.as_str()), Some(s));
         }
@@ -865,5 +911,20 @@ mod tests {
         ] {
             assert_eq!(OffloadPolicy::from_str(o.as_str()), Some(o));
         }
+    }
+
+    #[test]
+    fn perf_backend_cli_roundtrips() {
+        for b in [
+            PerfBackend::Analytical,
+            PerfBackend::Cycle,
+            PerfBackend::CycleReplay,
+            PerfBackend::Trace {
+                path: "artifacts/traces/t.json".into(),
+            },
+        ] {
+            assert_eq!(b.cli_str().parse::<PerfBackend>().unwrap(), b);
+        }
+        assert!("quantum".parse::<PerfBackend>().is_err());
     }
 }

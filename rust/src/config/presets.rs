@@ -105,6 +105,33 @@ pub fn with_prefix_cache(mut cfg: SimConfig, scope: CacheScope) -> SimConfig {
     cfg
 }
 
+/// Resolve a Table II serving-config name (`S(D)`, `M(M)`, `PD(D)+PC`, ...)
+/// into a full [`SimConfig`], substituting the dense/MoE model and hardware
+/// presets. Shared by the CLI (`simulate`) and the sweep engine's preset
+/// axis; `None` for unknown names.
+pub fn by_name(name: &str, dense: &str, moe: &str, hw: &str) -> Option<SimConfig> {
+    Some(match name {
+        "S(D)" => single_dense(dense, hw),
+        "S(M)" => single_moe(moe, hw),
+        "M(D)" => multi_dense(dense, hw),
+        "M(M)" => multi_moe(moe, hw),
+        "PD(D)" => pd_dense(dense, hw),
+        "PD(M)" => pd_moe(moe, hw),
+        "S(D)+PC" => with_prefix_cache(single_dense(dense, hw), CacheScope::PerInstance),
+        "M(D)+PC" => with_prefix_cache(multi_dense(dense, hw), CacheScope::PerInstance),
+        "PD(D)+PC" => with_prefix_cache(pd_dense(dense, hw), CacheScope::PerInstance),
+        _ => return None,
+    })
+}
+
+/// Names accepted by [`by_name`], in presentation order.
+pub fn serving_preset_names() -> &'static [&'static str] {
+    &[
+        "S(D)", "S(M)", "M(D)", "M(M)", "PD(D)", "PD(M)", "S(D)+PC", "M(D)+PC",
+        "PD(D)+PC",
+    ]
+}
+
 /// The five Fig. 2 validation configs: SD, SM, MD, MM, PDD.
 pub fn fig2_configs(dense: &str, moe: &str, hw: &str) -> Vec<SimConfig> {
     vec![
@@ -180,6 +207,17 @@ mod tests {
         assert_eq!(cfg.name, "S(D)+PC");
         assert!(cfg.workload.sessions > 0);
         assert!(cfg.instances[0].prefix_cache.is_some());
+    }
+
+    #[test]
+    fn by_name_covers_every_listed_preset() {
+        for name in serving_preset_names() {
+            let cfg = by_name(name, "tiny-dense", "tiny-moe", "rtx3090")
+                .unwrap_or_else(|| panic!("preset '{name}' not resolvable"));
+            cfg.validate().unwrap();
+            assert_eq!(&cfg.name, name);
+        }
+        assert!(by_name("X(Q)", "tiny-dense", "tiny-moe", "rtx3090").is_none());
     }
 
     #[test]

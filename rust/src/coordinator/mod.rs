@@ -17,7 +17,7 @@
 //! The loop is fully deterministic given the config seed.
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::{
     CacheScope, KvTransferPolicy, PerfBackend, RouterPolicy, SimConfig,
@@ -46,22 +46,22 @@ pub fn build_perf(
     backend: &PerfBackend,
     model: &ModelSpec,
     hw: &crate::perf::HardwareSpec,
-) -> anyhow::Result<Rc<dyn PerfModel>> {
+) -> anyhow::Result<Arc<dyn PerfModel>> {
     Ok(match backend {
         PerfBackend::Analytical => {
-            Rc::new(Roofline::new(hw.clone(), model.clone()))
+            Arc::new(Roofline::new(hw.clone(), model.clone()))
         }
         PerfBackend::Cycle => {
-            Rc::new(CycleSim::new(SystolicSpec::default(), model.clone()))
+            Arc::new(CycleSim::new(SystolicSpec::default(), model.clone()))
         }
-        PerfBackend::CycleReplay => Rc::new(Replay::new(CycleSim::new(
+        PerfBackend::CycleReplay => Arc::new(Replay::new(CycleSim::new(
             SystolicSpec::default(),
             model.clone(),
         ))),
         PerfBackend::Trace { path } => {
             let db = TraceDb::load(std::path::Path::new(path))?;
             if db.model == model.name {
-                Rc::new(db)
+                Arc::new(db)
             } else {
                 let roof = Roofline::new(hw.clone(), model.clone());
                 let cal_src = Roofline::new(
@@ -71,13 +71,20 @@ pub fn build_perf(
                     })?,
                 );
                 let factors = db.calibration(&cal_src);
-                Rc::new(Calibrated::new(roof, factors))
+                Arc::new(Calibrated::new(roof, factors))
             }
         }
     })
 }
 
 /// One fully-built simulation.
+///
+/// `Simulation` is `Send`: the whole object graph (instances with their
+/// shared `Arc<dyn PerfModel>`, caches, router, event queue, metrics) can
+/// move to another thread, which is what the parallel sweep engine
+/// ([`crate::sweep`]) relies on. Each simulation still runs sequentially —
+/// determinism comes from the event queue's total order, parallelism from
+/// running many independent simulations at once.
 pub struct Simulation {
     pub cfg: SimConfig,
     instances: Vec<ServingInstance>,
@@ -112,7 +119,7 @@ impl Simulation {
             &PerfBackend,
             &ModelSpec,
             &crate::perf::HardwareSpec,
-        ) -> anyhow::Result<Rc<dyn PerfModel>>,
+        ) -> anyhow::Result<Arc<dyn PerfModel>>,
     ) -> anyhow::Result<Self> {
         cfg.validate()?;
         let mut instances = vec![];
@@ -384,6 +391,16 @@ pub struct SimSummary {
     pub inter_instance_bytes: u64,
 }
 
+// Compile-time guarantee that the simulation core stays thread-movable;
+// losing `Send` here would silently break the sweep engine.
+#[allow(dead_code)]
+fn assert_core_is_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<Simulation>();
+    assert_send::<crate::metrics::Report>();
+    assert_send::<SimSummary>();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -511,6 +528,24 @@ mod tests {
             let (report, _) = run_config(small(cfg)).unwrap();
             assert_eq!(report.num_finished, 20, "config {name}");
         }
+    }
+
+    #[test]
+    fn simulation_moves_across_threads() {
+        // The tentpole property behind the sweep engine: a fully-built
+        // simulation is Send and produces the same report on a foreign
+        // thread as on the building thread.
+        let cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        let (home, _) = run_config(cfg.clone()).unwrap();
+        let mut sim = Simulation::new(cfg).unwrap();
+        let away = std::thread::spawn(move || sim.run()).join().unwrap();
+        assert_eq!(home.makespan, away.makespan);
+        assert_eq!(home.generated_tokens, away.generated_tokens);
+        assert_eq!(
+            home.to_json().to_string(),
+            away.to_json().to_string(),
+            "thread migration must not perturb the report"
+        );
     }
 
     #[test]

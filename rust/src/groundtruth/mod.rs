@@ -18,16 +18,44 @@
 //! as in the paper.
 
 use std::path::Path;
-use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::model::{OpInvocation, OpKind};
 use crate::perf::PerfModel;
 use crate::runtime::{Manifest, OpArtifact, Runtime};
 use crate::sim::Nanos;
 
+/// Thread-safe monotonically-updated diagnostic counter. Keeps the old
+/// `Cell`-era `get`/`set` call surface while making [`ExecPerfModel`]
+/// `Sync`, as the `PerfModel` contract now requires.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new(v: u64) -> Counter {
+        Counter(AtomicU64::new(v))
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+}
+
 /// Executes operators for real to price them.
 pub struct ExecPerfModel {
-    inner: RefCell<Runtime>,
+    /// The PJRT runtime, serialized behind a mutex: PJRT execution is
+    /// inherently sequential on the CPU client, and the lock makes the
+    /// model `Sync` so ground-truth simulations can cross threads.
+    inner: Mutex<Runtime>,
     ops: Vec<OpArtifact>,
     name: String,
     /// Per-op-kind dispatch-overhead floor (ns), estimated during warm-up
@@ -36,8 +64,8 @@ pub struct ExecPerfModel {
     /// grow with shape.
     overhead: Vec<u64>,
     /// Total real execution time spent (diagnostics).
-    pub exec_ns: Cell<u64>,
-    pub executions: Cell<u64>,
+    pub exec_ns: Counter,
+    pub executions: Counter,
 }
 
 impl ExecPerfModel {
@@ -72,12 +100,12 @@ impl ExecPerfModel {
             t0.elapsed().as_secs_f64()
         );
         Ok(ExecPerfModel {
-            inner: RefCell::new(runtime),
+            inner: Mutex::new(runtime),
             ops: mm.ops.clone(),
             name: format!("exec[{model}]"),
             overhead,
-            exec_ns: Cell::new(0),
-            executions: Cell::new(0),
+            exec_ns: Counter::new(0),
+            executions: Counter::new(0),
         })
     }
 
@@ -112,7 +140,7 @@ impl PerfModel for ExecPerfModel {
             .nearest(inv)
             .unwrap_or_else(|| panic!("no artifact for op {}", inv.kind))
             .clone();
-        let mut rt = self.inner.borrow_mut();
+        let mut rt = self.inner.lock().unwrap();
         let loaded = rt
             .load(&art)
             .unwrap_or_else(|e| panic!("loading {}: {e}", art.name));
@@ -144,8 +172,8 @@ impl PerfModel for ExecPerfModel {
         // shape-response model and residual error reflects genuine dynamics.
         let _ = &self.overhead;
         let ns = (measured as f64 * scale).round() as u64;
-        self.exec_ns.set(self.exec_ns.get() + measured);
-        self.executions.set(self.executions.get() + 1);
+        self.exec_ns.add(measured);
+        self.executions.add(1);
         ns.max(1)
     }
 
@@ -163,8 +191,11 @@ mod tests {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// Artifacts on disk AND a real PJRT backend compiled in (the in-repo
+    /// xla stub cannot execute, so these tests must skip with it).
     fn have_artifacts() -> bool {
         artifacts_root().join("manifest.json").exists()
+            && crate::runtime::Runtime::backend_available()
     }
 
     #[test]
@@ -208,14 +239,14 @@ mod tests {
         }
         use crate::config::presets;
         use crate::coordinator::Simulation;
-        use std::rc::Rc;
+        use std::sync::Arc;
         let mut cfg = presets::single_dense("tiny-dense", "cpu-pjrt");
         cfg.workload.num_requests = 5;
         cfg.workload.lengths = crate::workload::LengthDist::short();
-        let gt = Rc::new(ExecPerfModel::new(&artifacts_root(), "tiny-dense").unwrap());
+        let gt = Arc::new(ExecPerfModel::new(&artifacts_root(), "tiny-dense").unwrap());
         let gt2 = gt.clone();
         let mut sim = Simulation::with_perf_factory(cfg, &move |_, _, _| {
-            Ok(gt2.clone() as Rc<dyn crate::perf::PerfModel>)
+            Ok(gt2.clone() as Arc<dyn crate::perf::PerfModel>)
         })
         .unwrap();
         let report = sim.run();

@@ -14,7 +14,7 @@
 pub mod scheduler;
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::{InstanceConfig, OffloadPolicy, Role};
 use crate::memory::{BlockManager, PrefixCache};
@@ -96,7 +96,7 @@ pub struct ServingInstance {
     pub cfg: InstanceConfig,
     pub model: ModelSpec,
     pub hw: HardwareSpec,
-    perf: Rc<dyn PerfModel>,
+    perf: Arc<dyn PerfModel>,
     /// PIM roofline for `OffloadPolicy::Pim` expert pricing.
     pim_perf: Option<Roofline>,
     fabric: Fabric,
@@ -115,7 +115,7 @@ impl ServingInstance {
     pub fn new(
         id: usize,
         cfg: InstanceConfig,
-        perf: Rc<dyn PerfModel>,
+        perf: Arc<dyn PerfModel>,
         block_size: u64,
         seed: u64,
     ) -> anyhow::Result<Self> {
@@ -721,7 +721,7 @@ mod tests {
 
     fn dense_instance() -> ServingInstance {
         let cfg = InstanceConfig::basic("t", "tiny-dense", "rtx3090");
-        let perf = Rc::new(Roofline::new(
+        let perf = Arc::new(Roofline::new(
             HardwareSpec::rtx3090(),
             ModelSpec::tiny_dense(),
         ));
@@ -732,7 +732,7 @@ mod tests {
         let mut cfg = InstanceConfig::basic("m", "tiny-moe", "rtx3090");
         cfg.gate = GateKind::Zipf { s: 1.0 };
         cfg.offload = offload;
-        let perf = Rc::new(Roofline::new(
+        let perf = Arc::new(Roofline::new(
             HardwareSpec::rtx3090(),
             ModelSpec::tiny_moe(),
         ));
@@ -889,7 +889,7 @@ mod tests {
         let mut inst = dense_instance();
         let mut hw = HardwareSpec::rtx3090();
         hw.kernel_overhead = 0;
-        inst.perf = Rc::new(Roofline::new(hw, ModelSpec::tiny_dense()));
+        inst.perf = Arc::new(Roofline::new(hw, ModelSpec::tiny_dense()));
         let mut cache = PrefixCache::new(1 << 20, 1 << 20, crate::memory::EvictPolicy::Lru);
         let mut r1 = req(0, 0, 256, 2);
         r1.session = 7;
@@ -921,7 +921,7 @@ mod tests {
             let mut cfg = InstanceConfig::basic("t", "tiny-dense", "rtx3090");
             cfg.devices = tp;
             cfg.tp = tp;
-            let perf = Rc::new(Roofline::new(
+            let perf = Arc::new(Roofline::new(
                 HardwareSpec::rtx3090(),
                 ModelSpec::tiny_dense(),
             ));

@@ -10,6 +10,11 @@
 //! * **JAX (build-time)** — the operator zoo lowered to HLO text artifacts.
 //! * **Pallas (build-time)** — attention/expert-FFN kernels inside those
 //!   artifacts.
+//!
+//! The simulation core is `Send` end-to-end (perf models are
+//! `Arc<dyn PerfModel + Send + Sync>`), which the [`sweep`] engine exploits
+//! to run whole configuration grids across worker threads while keeping
+//! every individual simulation sequential and bit-deterministic.
 
 pub mod cli;
 pub mod config;
@@ -25,5 +30,6 @@ pub mod perf;
 pub mod router;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workload;

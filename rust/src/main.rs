@@ -8,19 +8,28 @@
 //!   validate  — Fig. 2 style: run the ground-truth execution engine and
 //!               the trace-driven simulator on the same config; print the
 //!               error table.
+//!   sweep     — expand a configuration grid (presets x rates x policies x
+//!               perf backends x hardware) and run it on a worker pool;
+//!               emit per-config reports and a comparative summary.
 //!   presets   — list built-in models, hardware, and serving configs.
 //!   gen-trace — emit a synthetic ShareGPT-like request trace as JSON.
 
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Arc;
 
 use llmservingsim::cli::Args;
-use llmservingsim::config::{presets, PerfBackend, SimConfig};
+use llmservingsim::config::{
+    presets, PerfBackend, RouterPolicy, SchedPolicy, SimConfig,
+};
 use llmservingsim::coordinator::{run_config, Simulation};
 use llmservingsim::groundtruth::ExecPerfModel;
+use llmservingsim::memory::EvictPolicy;
 use llmservingsim::model::ModelSpec;
 use llmservingsim::perf::HardwareSpec;
 use llmservingsim::runtime::profiler::{profile_to_file, ProfileOptions};
+use llmservingsim::sweep::{
+    render_table, run_sweep, summarize, sweep_json, SweepSpec,
+};
 use llmservingsim::util::bench::Table;
 use llmservingsim::util::{json, logging};
 use llmservingsim::workload;
@@ -36,6 +45,10 @@ COMMANDS:
   simulate   (--preset NAME | --config FILE) [--model M] [--moe-model M]
              [--hardware H] [--perf analytical|cycle|cycle-replay|trace:PATH]
              [--requests N] [--rate R] [--seed S] [--out FILE]
+  sweep      [--presets A,B,..] [--hardware H1,H2,..] [--rates R1,R2,..]
+             [--routers P1,P2,..] [--scheds S1,S2,..] [--evict E1,E2,..]
+             [--perf B1,B2,..] [--model M] [--moe-model M] [--requests N]
+             [--seed S] [--threads T] [--baseline NAME] [--out FILE] [--quick]
   validate   --model <preset> [--artifacts DIR] [--trace FILE]
              [--requests N] [--rate R]
   gen-trace  [--requests N] [--rate R] [--seed S] --out FILE
@@ -67,6 +80,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
     match args.command.as_str() {
         "profile" => cmd_profile(args),
         "simulate" => cmd_simulate(args),
+        "sweep" => cmd_sweep(args),
         "validate" => cmd_validate(args),
         "gen-trace" => cmd_gen_trace(args),
         "presets" => cmd_presets(),
@@ -116,11 +130,11 @@ fn resolve_config(args: &Args) -> anyhow::Result<SimConfig> {
         SimConfig::load(Path::new(path))?
     } else {
         let preset = args.str_or("preset", "S(D)");
-        preset_by_name(preset, &dense, &moe, &hw)
+        presets::by_name(preset, &dense, &moe, &hw)
             .ok_or_else(|| anyhow::anyhow!("unknown preset '{preset}'"))?
     };
     if let Some(p) = args.str_flag("perf") {
-        cfg.perf = parse_perf(p)?;
+        cfg.perf = p.parse()?;
     }
     if let Some(n) = args.str_flag("requests") {
         cfg.workload.num_requests = n.parse()?;
@@ -133,45 +147,106 @@ fn resolve_config(args: &Args) -> anyhow::Result<SimConfig> {
     Ok(cfg)
 }
 
-fn preset_by_name(name: &str, dense: &str, moe: &str, hw: &str) -> Option<SimConfig> {
-    use llmservingsim::config::CacheScope;
-    Some(match name {
-        "S(D)" => presets::single_dense(dense, hw),
-        "S(M)" => presets::single_moe(moe, hw),
-        "M(D)" => presets::multi_dense(dense, hw),
-        "M(M)" => presets::multi_moe(moe, hw),
-        "PD(D)" => presets::pd_dense(dense, hw),
-        "PD(M)" => presets::pd_moe(moe, hw),
-        "S(D)+PC" => presets::with_prefix_cache(
-            presets::single_dense(dense, hw),
-            CacheScope::PerInstance,
-        ),
-        "M(D)+PC" => presets::with_prefix_cache(
-            presets::multi_dense(dense, hw),
-            CacheScope::PerInstance,
-        ),
-        "PD(D)+PC" => presets::with_prefix_cache(
-            presets::pd_dense(dense, hw),
-            CacheScope::PerInstance,
-        ),
-        _ => return None,
-    })
+/// Split a comma-separated flag value, dropping empty segments.
+fn csv(s: &str) -> Vec<&str> {
+    s.split(',').map(str::trim).filter(|t| !t.is_empty()).collect()
 }
 
-fn parse_perf(s: &str) -> anyhow::Result<PerfBackend> {
-    Ok(match s {
-        "analytical" => PerfBackend::Analytical,
-        "cycle" => PerfBackend::Cycle,
-        "cycle-replay" => PerfBackend::CycleReplay,
-        _ => match s.strip_prefix("trace:") {
-            Some(path) => PerfBackend::Trace {
-                path: path.to_string(),
-            },
-            None => anyhow::bail!(
-                "unknown perf backend '{s}' (analytical|cycle|cycle-replay|trace:PATH)"
-            ),
-        },
-    })
+/// Parse every element of a comma-separated flag through `FromStr`.
+fn csv_parse<T>(args: &Args, flag: &str) -> anyhow::Result<Vec<T>>
+where
+    T: std::str::FromStr,
+    anyhow::Error: From<T::Err>,
+{
+    match args.str_flag(flag) {
+        None => Ok(vec![]),
+        Some(s) => csv(s)
+            .into_iter()
+            .map(|t| T::from_str(t).map_err(anyhow::Error::from))
+            .collect(),
+    }
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let mut spec = SweepSpec {
+        dense_model: args.str_or("model", "tiny-dense").to_string(),
+        moe_model: args.str_or("moe-model", "tiny-moe").to_string(),
+        num_requests: args.u64_or("requests", 40)? as usize,
+        quick: args.switch("quick"),
+        baseline: args.str_flag("baseline").map(str::to_string),
+        ..SweepSpec::default()
+    };
+    spec.seed = args.u64_or("seed", spec.seed)?;
+    if let Some(p) = args.str_flag("presets") {
+        spec.axes.presets = csv(p).into_iter().map(str::to_string).collect();
+    }
+    if let Some(h) = args.str_flag("hardware") {
+        spec.axes.hardware = csv(h).into_iter().map(str::to_string).collect();
+    }
+    spec.axes.rates = csv_parse::<f64>(args, "rates")?;
+    spec.axes.routers = csv_parse::<RouterPolicy>(args, "routers")?;
+    spec.axes.scheds = match args.str_flag("scheds") {
+        None => vec![],
+        Some(s) => csv(s)
+            .into_iter()
+            .map(|t| {
+                SchedPolicy::from_str(t)
+                    .ok_or_else(|| anyhow::anyhow!("unknown sched policy '{t}'"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    spec.axes.evictions = csv_parse::<EvictPolicy>(args, "evict")?;
+    spec.axes.backends = csv_parse::<PerfBackend>(args, "perf")?;
+
+    let cfgs = spec.expand()?;
+    // Catch a bad baseline before the (potentially long) sweep runs, not
+    // after all the work has been done.
+    if let Some(b) = &spec.baseline {
+        if !cfgs.iter().any(|c| &c.name == b) {
+            anyhow::bail!(
+                "baseline '{b}' is not a grid point; points are:\n  {}",
+                cfgs.iter()
+                    .map(|c| c.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join("\n  ")
+            );
+        }
+    }
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get() as u64)
+        .unwrap_or(1);
+    let threads = args.u64_or("threads", default_threads)?.max(1) as usize;
+    println!(
+        "sweeping {} configs on {} worker threads ...",
+        cfgs.len(),
+        threads.min(cfgs.len())
+    );
+
+    let outcome = run_sweep(&cfgs, threads)?;
+    let summary = summarize(&outcome, spec.baseline.as_deref())?;
+
+    render_table(&outcome, &summary).print();
+    println!("baseline: {}", summary.baseline);
+    let mut t = Table::new(&["metric", "best (config)", "worst (config)"]);
+    for e in &summary.extremes {
+        t.row(&[
+            e.metric.to_string(),
+            format!("{:.3} ({})", e.best, e.best_config),
+            format!("{:.3} ({})", e.worst, e.worst_config),
+        ]);
+    }
+    t.print();
+    println!(
+        "sweep wall-clock: {:.3} s on {} threads",
+        outcome.wall_ns as f64 / 1e9,
+        outcome.threads
+    );
+
+    if let Some(out) = args.str_flag("out") {
+        json::save_file(Path::new(out), &sweep_json(&outcome, &summary))?;
+        println!("sweep report written to {out}");
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
@@ -238,10 +313,10 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     cfg.workload.lengths = workload::LengthDist::short();
 
     println!("running ground-truth execution engine ({model}) ...");
-    let gt_model = Rc::new(ExecPerfModel::new(&root, &model)?);
+    let gt_model = Arc::new(ExecPerfModel::new(&root, &model)?);
     let gt2 = gt_model.clone();
     let mut gt_sim = Simulation::with_perf_factory(cfg.clone(), &move |_, _, _| {
-        Ok(gt2.clone() as Rc<dyn llmservingsim::perf::PerfModel>)
+        Ok(gt2.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
     })?;
     let gt_report = gt_sim.run();
 
@@ -321,10 +396,7 @@ fn cmd_presets() -> anyhow::Result<()> {
         );
     }
     println!("serving configs (Table II):");
-    for p in [
-        "S(D)", "S(M)", "M(D)", "M(M)", "PD(D)", "PD(M)", "S(D)+PC", "M(D)+PC",
-        "PD(D)+PC",
-    ] {
+    for p in presets::serving_preset_names() {
         println!("  {p}");
     }
     Ok(())

@@ -23,16 +23,20 @@ pub enum EvictPolicy {
     LargestFirst,
 }
 
-impl EvictPolicy {
-    pub fn from_str(s: &str) -> Option<EvictPolicy> {
-        Some(match s {
+impl std::str::FromStr for EvictPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<EvictPolicy, Self::Err> {
+        Ok(match s {
             "lru" => EvictPolicy::Lru,
             "lfu" => EvictPolicy::Lfu,
             "largest" => EvictPolicy::LargestFirst,
-            _ => return None,
+            _ => anyhow::bail!("unknown evict policy '{s}' (lru|lfu|largest)"),
         })
     }
+}
 
+impl EvictPolicy {
     pub fn as_str(self) -> &'static str {
         match self {
             EvictPolicy::Lru => "lru",
@@ -321,13 +325,18 @@ mod tests {
 
     #[test]
     fn policy_parsing() {
-        assert_eq!(EvictPolicy::from_str("lru"), Some(EvictPolicy::Lru));
-        assert_eq!(EvictPolicy::from_str("lfu"), Some(EvictPolicy::Lfu));
+        // std::str::FromStr (not an inherent shadow), so `.parse()` works.
+        assert_eq!("lru".parse::<EvictPolicy>().unwrap(), EvictPolicy::Lru);
+        assert_eq!("lfu".parse::<EvictPolicy>().unwrap(), EvictPolicy::Lfu);
         assert_eq!(
-            EvictPolicy::from_str("largest"),
-            Some(EvictPolicy::LargestFirst)
+            "largest".parse::<EvictPolicy>().unwrap(),
+            EvictPolicy::LargestFirst
         );
-        assert_eq!(EvictPolicy::from_str("fifo"), None);
+        assert!("fifo".parse::<EvictPolicy>().is_err());
         assert_eq!(EvictPolicy::Lru.as_str(), "lru");
+        // as_str <-> parse round-trip for every variant
+        for p in [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::LargestFirst] {
+            assert_eq!(p.as_str().parse::<EvictPolicy>().unwrap(), p);
+        }
     }
 }

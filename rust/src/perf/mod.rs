@@ -23,7 +23,14 @@ use crate::sim::Nanos;
 /// Implementations must be deterministic: the same invocation always costs
 /// the same latency (variance enters the simulation through batching and
 /// queueing dynamics, as in the paper).
-pub trait PerfModel {
+///
+/// `Send + Sync` is part of the contract: performance models are shared
+/// behind `Arc` by every instance of a simulation, and whole simulations
+/// move across worker threads in the sweep engine (DESIGN.md §5). Models
+/// with internal caches must use thread-safe interior mutability
+/// ([`replay::Replay`] uses `Mutex`, the ground-truth engine wraps its
+/// runtime the same way).
+pub trait PerfModel: Send + Sync {
     /// Latency of running `inv` on this hardware.
     fn op_latency(&self, inv: OpInvocation) -> Nanos;
 

@@ -174,8 +174,10 @@ mod tests {
 
     #[test]
     fn profiles_tiny_dense_and_prices_lookups() {
-        if !artifacts_root().join("manifest.json").exists() {
-            eprintln!("skipping: run `make artifacts` first");
+        if !artifacts_root().join("manifest.json").exists()
+            || !Runtime::backend_available()
+        {
+            eprintln!("skipping: needs `make artifacts` and a real PJRT backend");
             return;
         }
         let opts = ProfileOptions {

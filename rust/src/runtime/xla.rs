@@ -1,0 +1,152 @@
+//! Build-hermetic stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The real ground-truth engine executes compiled HLO artifacts through
+//! PJRT via the `xla` crate (xla_extension C shim). That crate needs the
+//! XLA C++ libraries at build time, which the CI / offline environment does
+//! not guarantee, so the simulator compiles against this API-compatible
+//! stub by default: every entry point that would touch PJRT returns a
+//! "backend unavailable" error, and [`super::Runtime::cpu`] fails cleanly
+//! before any other method can be reached.
+//!
+//! Everything artifact-gated (ground-truth validation, the profiler,
+//! `validate`/`profile` CLI commands, Fig. 2 benches) degrades to a clear
+//! error or a skip; the discrete-event simulator, all perf backends, and
+//! the sweep engine are unaffected. To wire the real backend back in, add
+//! the `xla` dependency to `Cargo.toml` and replace the `mod xla` / `use`
+//! in `runtime/mod.rs` with `use xla;` — the call sites are unchanged.
+
+use std::fmt;
+
+/// Error raised by every stubbed PJRT entry point.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT backend unavailable (built against the in-repo xla \
+             stub; see rust/src/runtime/xla.rs to enable real execution)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Host-side tensor literal. The stub keeps no data: literals are only ever
+/// staged into device buffers, which cannot exist without a client.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (text form).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer. Unconstructible through the stub.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable. Unconstructible through the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(
+        &self,
+        _args: &[PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the single gate: it fails, so
+/// no other stub method is reachable in practice.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(Error::unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_gate_fails_with_clear_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT backend unavailable"));
+    }
+
+    #[test]
+    fn literal_construction_is_usable_without_a_client() {
+        let lit = Literal::vec1(&[0.0; 6]);
+        assert!(lit.reshape(&[2, 3]).is_ok());
+    }
+}

@@ -1,0 +1,676 @@
+//! Parallel scenario-sweep engine (DESIGN.md §5).
+//!
+//! The paper positions LLMServingSim2.0 as a design-space-exploration
+//! platform: its experiments are *grids* of serving configurations (Table
+//! II presets x request rates x policies x hardware). This module makes
+//! that a first-class workflow:
+//!
+//! 1. [`SweepSpec`] declares axes; [`SweepSpec::expand`] takes their
+//!    cartesian product into named [`SimConfig`]s.
+//! 2. [`run_sweep`] executes the grid on a `std::thread::scope` worker
+//!    pool. Each worker pulls the next config off a shared atomic cursor,
+//!    builds a [`Simulation`](crate::coordinator::Simulation) and runs it
+//!    to completion. Simulations are individually sequential and
+//!    deterministic, so per-config reports are **byte-identical** for any
+//!    worker count — parallelism only changes wall-clock time.
+//! 3. [`summarize`] aggregates the per-config reports into a comparative
+//!    summary: best/worst config per metric plus percentage deltas against
+//!    a baseline config.
+//!
+//! Empty axes inherit the preset's default for that dimension, so the grid
+//! size is the product of the non-empty axes only.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{presets, PerfBackend, RouterPolicy, SchedPolicy, SimConfig};
+use crate::coordinator::{run_config, SimSummary};
+use crate::memory::EvictPolicy;
+use crate::metrics::Report;
+use crate::util::bench::Table;
+use crate::util::json::Value;
+use crate::workload::{Arrival, LengthDist};
+
+/// Hardware preset substituted when the hardware axis is empty.
+pub const DEFAULT_HARDWARE: &str = "rtx3090";
+
+/// The swept dimensions. An empty axis means "keep the preset's default"
+/// and contributes a factor of 1 to the grid size.
+#[derive(Debug, Clone, Default)]
+pub struct SweepAxes {
+    /// Table II serving-config names ([`presets::by_name`]). Must be
+    /// non-empty — it anchors every grid point.
+    pub presets: Vec<String>,
+    /// Hardware preset names ([`crate::perf::HardwareSpec::preset`]).
+    pub hardware: Vec<String>,
+    /// Poisson arrival rates, requests/second.
+    pub rates: Vec<f64>,
+    /// Global router policies.
+    pub routers: Vec<RouterPolicy>,
+    /// Per-instance batch scheduling policies.
+    pub scheds: Vec<SchedPolicy>,
+    /// Prefix-cache eviction policies (only observable on `*+PC` presets;
+    /// applied wherever an instance has a prefix cache).
+    pub evictions: Vec<EvictPolicy>,
+    /// Performance-model backends.
+    pub backends: Vec<PerfBackend>,
+}
+
+/// A full sweep declaration: axes plus the knobs shared by every point.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub axes: SweepAxes,
+    /// Dense / MoE model presets substituted into the serving presets.
+    pub dense_model: String,
+    pub moe_model: String,
+    /// Requests per grid point.
+    pub num_requests: usize,
+    /// Seed applied to both the simulation and the workload generator of
+    /// every point — the determinism anchor.
+    pub seed: u64,
+    /// Use the short length distribution (fast exploratory sweeps).
+    pub quick: bool,
+    /// Baseline config name for the comparative summary; defaults to the
+    /// first grid point.
+    pub baseline: Option<String>,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            axes: SweepAxes {
+                presets: vec!["S(D)".to_string()],
+                ..SweepAxes::default()
+            },
+            dense_model: "tiny-dense".to_string(),
+            moe_model: "tiny-moe".to_string(),
+            num_requests: 40,
+            seed: 0xC0FFEE,
+            quick: false,
+            baseline: None,
+        }
+    }
+}
+
+/// `[None]` for an empty axis (inherit preset default), else each value.
+fn axis<T>(values: &[T]) -> Vec<Option<&T>> {
+    if values.is_empty() {
+        vec![None]
+    } else {
+        values.iter().map(Some).collect()
+    }
+}
+
+impl SweepSpec {
+    /// Grid size without expanding (product of non-empty axes).
+    pub fn grid_size(&self) -> usize {
+        let f = |n: usize| n.max(1);
+        f(self.axes.presets.len())
+            * f(self.axes.hardware.len())
+            * f(self.axes.rates.len())
+            * f(self.axes.routers.len())
+            * f(self.axes.scheds.len())
+            * f(self.axes.evictions.len())
+            * f(self.axes.backends.len())
+    }
+
+    /// Expand the cartesian product into named, validated [`SimConfig`]s.
+    ///
+    /// Point names are `preset|axis=value|...`, listing only the swept
+    /// axes, so they are stable identifiers for baselines and reports.
+    pub fn expand(&self) -> anyhow::Result<Vec<SimConfig>> {
+        if self.axes.presets.is_empty() {
+            anyhow::bail!("sweep needs at least one serving preset");
+        }
+        let mut out: Vec<SimConfig> = vec![];
+        let mut seen: HashSet<String> = HashSet::new();
+        for preset in &self.axes.presets {
+            for hw in axis(&self.axes.hardware) {
+                for rate in axis(&self.axes.rates) {
+                    for router in axis(&self.axes.routers) {
+                        for sched in axis(&self.axes.scheds) {
+                            for evict in axis(&self.axes.evictions) {
+                                for backend in axis(&self.axes.backends) {
+                                    let cfg = self.point(
+                                        preset, hw, rate, router, sched, evict,
+                                        backend,
+                                    )?;
+                                    if !seen.insert(cfg.name.clone()) {
+                                        anyhow::bail!(
+                                            "duplicate sweep point '{}' \
+                                             (repeated axis value?)",
+                                            cfg.name
+                                        );
+                                    }
+                                    out.push(cfg);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn point(
+        &self,
+        preset: &str,
+        hw: Option<&String>,
+        rate: Option<&f64>,
+        router: Option<&RouterPolicy>,
+        sched: Option<&SchedPolicy>,
+        evict: Option<&EvictPolicy>,
+        backend: Option<&PerfBackend>,
+    ) -> anyhow::Result<SimConfig> {
+        let hw_name = hw.map(String::as_str).unwrap_or(DEFAULT_HARDWARE);
+        let mut cfg = presets::by_name(
+            preset,
+            &self.dense_model,
+            &self.moe_model,
+            hw_name,
+        )
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown serving preset '{preset}' (expected one of {:?})",
+                presets::serving_preset_names()
+            )
+        })?;
+
+        let mut name = preset.to_string();
+        if let Some(h) = hw {
+            name.push_str(&format!("|hw={h}"));
+        }
+        if let Some(r) = rate {
+            cfg.workload.arrival = Arrival::Poisson { rate: *r };
+            name.push_str(&format!("|rate={r}"));
+        }
+        if let Some(p) = router {
+            cfg.router = p.clone();
+            name.push_str(&format!("|router={}", p.as_str()));
+        }
+        if let Some(s) = sched {
+            for inst in &mut cfg.instances {
+                inst.sched = *s;
+            }
+            name.push_str(&format!("|sched={}", s.as_str()));
+        }
+        if let Some(e) = evict {
+            for inst in &mut cfg.instances {
+                if let Some(pc) = &mut inst.prefix_cache {
+                    pc.policy = *e;
+                }
+            }
+            name.push_str(&format!("|evict={}", e.as_str()));
+        }
+        if let Some(b) = backend {
+            cfg.perf = b.clone();
+            name.push_str(&format!("|perf={}", b.cli_str()));
+        }
+
+        cfg.name = name;
+        cfg.seed = self.seed;
+        cfg.workload.seed = self.seed;
+        cfg.workload.num_requests = self.num_requests;
+        if self.quick {
+            cfg.workload.lengths = LengthDist::short();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// One completed grid point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub name: String,
+    pub report: Report,
+    pub summary: SimSummary,
+}
+
+/// All grid points, in expansion order regardless of worker scheduling.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub points: Vec<SweepPoint>,
+    pub threads: usize,
+    /// Wall-clock of the whole sweep (diagnostics only — excluded from the
+    /// deterministic per-point reports).
+    pub wall_ns: u64,
+}
+
+/// Run every config on `threads` workers sharing an atomic work cursor.
+///
+/// Each point is built and run entirely by one worker (the `Send`-safe
+/// core lets the `Simulation` live on that worker's stack), so results are
+/// independent of the worker count and of scheduling order; slot `i` of
+/// the outcome always corresponds to `cfgs[i]`.
+pub fn run_sweep(cfgs: &[SimConfig], threads: usize) -> anyhow::Result<SweepOutcome> {
+    if cfgs.is_empty() {
+        anyhow::bail!("sweep has no grid points");
+    }
+    let threads = threads.clamp(1, cfgs.len());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<anyhow::Result<SweepPoint>>>> =
+        (0..cfgs.len()).map(|_| Mutex::new(None)).collect();
+    let t0 = std::time::Instant::now();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cfgs.len() {
+                    break;
+                }
+                let cfg = cfgs[i].clone();
+                let name = cfg.name.clone();
+                let res = run_config(cfg).map(|(report, summary)| SweepPoint {
+                    name,
+                    report,
+                    summary,
+                });
+                *slots[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+
+    let mut points = Vec::with_capacity(cfgs.len());
+    for slot in slots {
+        let filled = slot
+            .into_inner()
+            .expect("sweep slot mutex poisoned")
+            .expect("sweep worker exited without filling its slot");
+        points.push(filled?);
+    }
+    Ok(SweepOutcome {
+        points,
+        threads,
+        wall_ns: t0.elapsed().as_nanos() as u64,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Comparative summary
+// ---------------------------------------------------------------------------
+
+/// A headline metric extracted from a [`Report`] for cross-config ranking.
+pub struct MetricDef {
+    pub key: &'static str,
+    pub higher_is_better: bool,
+    extract: fn(&Report) -> f64,
+}
+
+fn m_ttft(r: &Report) -> f64 {
+    r.ttft_ns.mean / 1e6
+}
+fn m_tpot(r: &Report) -> f64 {
+    r.tpot_ns.mean / 1e6
+}
+fn m_itl(r: &Report) -> f64 {
+    r.itl_ns.mean / 1e6
+}
+fn m_tps(r: &Report) -> f64 {
+    r.throughput_tps
+}
+fn m_makespan(r: &Report) -> f64 {
+    r.makespan as f64 / 1e9
+}
+
+/// The ranked metrics, in presentation order.
+pub static METRICS: &[MetricDef] = &[
+    MetricDef {
+        key: "ttft_mean_ms",
+        higher_is_better: false,
+        extract: m_ttft,
+    },
+    MetricDef {
+        key: "tpot_mean_ms",
+        higher_is_better: false,
+        extract: m_tpot,
+    },
+    MetricDef {
+        key: "itl_mean_ms",
+        higher_is_better: false,
+        extract: m_itl,
+    },
+    MetricDef {
+        key: "throughput_tps",
+        higher_is_better: true,
+        extract: m_tps,
+    },
+    MetricDef {
+        key: "makespan_s",
+        higher_is_better: false,
+        extract: m_makespan,
+    },
+];
+
+/// Best/worst grid point for one metric.
+#[derive(Debug, Clone)]
+pub struct Extreme {
+    pub metric: &'static str,
+    pub best_config: String,
+    pub best: f64,
+    pub worst_config: String,
+    pub worst: f64,
+}
+
+/// Percentage deltas of one grid point against the baseline, keyed by
+/// metric (`(value - baseline) / baseline * 100`).
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub config: String,
+    pub pct: Vec<(&'static str, f64)>,
+}
+
+/// Comparative view over a completed sweep.
+#[derive(Debug, Clone)]
+pub struct SweepSummary {
+    pub baseline: String,
+    pub extremes: Vec<Extreme>,
+    pub deltas: Vec<Delta>,
+}
+
+/// Aggregate the outcome into best/worst per metric and deltas vs
+/// `baseline` (name of a grid point; default: the first point).
+pub fn summarize(
+    outcome: &SweepOutcome,
+    baseline: Option<&str>,
+) -> anyhow::Result<SweepSummary> {
+    let points = &outcome.points;
+    if points.is_empty() {
+        anyhow::bail!("cannot summarize an empty sweep");
+    }
+    let base_name = baseline.unwrap_or(&points[0].name);
+    let base = points
+        .iter()
+        .find(|p| p.name == base_name)
+        .ok_or_else(|| {
+            anyhow::anyhow!("baseline '{base_name}' is not a sweep point")
+        })?;
+
+    let mut extremes = vec![];
+    for m in METRICS {
+        let mut best = &points[0];
+        let mut worst = &points[0];
+        for p in &points[1..] {
+            let v = (m.extract)(&p.report);
+            let better = if m.higher_is_better {
+                v > (m.extract)(&best.report)
+            } else {
+                v < (m.extract)(&best.report)
+            };
+            let worse = if m.higher_is_better {
+                v < (m.extract)(&worst.report)
+            } else {
+                v > (m.extract)(&worst.report)
+            };
+            if better {
+                best = p;
+            }
+            if worse {
+                worst = p;
+            }
+        }
+        extremes.push(Extreme {
+            metric: m.key,
+            best_config: best.name.clone(),
+            best: (m.extract)(&best.report),
+            worst_config: worst.name.clone(),
+            worst: (m.extract)(&worst.report),
+        });
+    }
+
+    let deltas = points
+        .iter()
+        .filter(|p| p.name != base.name)
+        .map(|p| Delta {
+            config: p.name.clone(),
+            pct: METRICS
+                .iter()
+                .map(|m| {
+                    let b = (m.extract)(&base.report);
+                    let v = (m.extract)(&p.report);
+                    let pct = if b.abs() > 1e-12 {
+                        (v - b) / b * 100.0
+                    } else {
+                        0.0
+                    };
+                    (m.key, pct)
+                })
+                .collect(),
+        })
+        .collect();
+
+    Ok(SweepSummary {
+        baseline: base.name.clone(),
+        extremes,
+        deltas,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Emission: JSON + terminal table
+// ---------------------------------------------------------------------------
+
+/// Serialize the full sweep (per-point reports + comparative summary).
+pub fn sweep_json(outcome: &SweepOutcome, summary: &SweepSummary) -> Value {
+    let points = outcome
+        .points
+        .iter()
+        .map(|p| {
+            Value::obj(vec![
+                ("name", Value::str(p.name.clone())),
+                ("steps", Value::int(p.summary.steps as i64)),
+                ("events", Value::int(p.summary.events as i64)),
+                (
+                    "inter_instance_bytes",
+                    Value::int(p.summary.inter_instance_bytes as i64),
+                ),
+                ("report", p.report.to_json()),
+            ])
+        })
+        .collect();
+    let extremes = summary
+        .extremes
+        .iter()
+        .map(|e| {
+            Value::obj(vec![
+                ("metric", Value::str(e.metric)),
+                ("best_config", Value::str(e.best_config.clone())),
+                ("best", Value::float(e.best)),
+                ("worst_config", Value::str(e.worst_config.clone())),
+                ("worst", Value::float(e.worst)),
+            ])
+        })
+        .collect();
+    let deltas = summary
+        .deltas
+        .iter()
+        .map(|d| {
+            Value::obj(vec![
+                ("config", Value::str(d.config.clone())),
+                (
+                    "pct_vs_baseline",
+                    Value::obj(
+                        d.pct
+                            .iter()
+                            .map(|(k, v)| (*k, Value::float(*v)))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Value::obj(vec![
+        ("threads", Value::int(outcome.threads as i64)),
+        ("wall_ns", Value::int(outcome.wall_ns as i64)),
+        ("points", Value::Arr(points)),
+        (
+            "summary",
+            Value::obj(vec![
+                ("baseline", Value::str(summary.baseline.clone())),
+                ("extremes", Value::Arr(extremes)),
+                ("deltas", Value::Arr(deltas)),
+            ]),
+        ),
+    ])
+}
+
+/// Render the per-point metrics plus throughput delta vs the baseline.
+pub fn render_table(outcome: &SweepOutcome, summary: &SweepSummary) -> Table {
+    let mut t = Table::new(&[
+        "config",
+        "finished",
+        "TTFT ms",
+        "TPOT ms",
+        "ITL ms",
+        "tok/s",
+        "Δ tok/s %",
+    ]);
+    for p in &outcome.points {
+        let delta = if p.name == summary.baseline {
+            "base".to_string()
+        } else {
+            summary
+                .deltas
+                .iter()
+                .find(|d| d.config == p.name)
+                .and_then(|d| {
+                    d.pct
+                        .iter()
+                        .find(|(k, _)| *k == "throughput_tps")
+                        .map(|(_, v)| format!("{v:+.1}"))
+                })
+                .unwrap_or_default()
+        };
+        t.row(&[
+            p.name.clone(),
+            p.report.num_finished.to_string(),
+            format!("{:.3}", p.report.ttft_ns.mean / 1e6),
+            format!("{:.3}", p.report.tpot_ns.mean / 1e6),
+            format!("{:.3}", p.report.itl_ns.mean / 1e6),
+            format!("{:.1}", p.report.throughput_tps),
+            delta,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_spec() -> SweepSpec {
+        SweepSpec {
+            num_requests: 10,
+            quick: true,
+            ..SweepSpec::default()
+        }
+    }
+
+    #[test]
+    fn empty_axes_yield_single_default_point() {
+        let cfgs = quick_spec().expand().unwrap();
+        assert_eq!(cfgs.len(), 1);
+        assert_eq!(cfgs[0].name, "S(D)");
+        assert_eq!(cfgs[0].workload.num_requests, 10);
+    }
+
+    #[test]
+    fn grid_is_cartesian_with_stable_names() {
+        let mut spec = quick_spec();
+        spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+        spec.axes.rates = vec![5.0, 20.0];
+        spec.axes.routers =
+            vec![RouterPolicy::RoundRobin, RouterPolicy::LeastOutstanding];
+        assert_eq!(spec.grid_size(), 8);
+        let cfgs = spec.expand().unwrap();
+        assert_eq!(cfgs.len(), 8);
+        let names: HashSet<&str> = cfgs.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names.len(), 8, "names must be unique");
+        assert!(names.contains("S(D)|rate=5|router=round-robin"));
+        assert!(names.contains("M(D)|rate=20|router=least-outstanding"));
+        // the axes actually landed in the configs
+        for cfg in &cfgs {
+            match &cfg.workload.arrival {
+                Arrival::Poisson { rate } => {
+                    assert!(*rate == 5.0 || *rate == 20.0)
+                }
+                other => panic!("unexpected arrival {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn eviction_axis_applies_to_prefix_cache_presets() {
+        let mut spec = quick_spec();
+        spec.axes.presets = vec!["S(D)+PC".into()];
+        spec.axes.evictions = vec![EvictPolicy::Lfu];
+        let cfgs = spec.expand().unwrap();
+        assert_eq!(cfgs.len(), 1);
+        let pc = cfgs[0].instances[0].prefix_cache.as_ref().unwrap();
+        assert_eq!(pc.policy, EvictPolicy::Lfu);
+        assert_eq!(cfgs[0].name, "S(D)+PC|evict=lfu");
+    }
+
+    #[test]
+    fn unknown_preset_and_duplicates_rejected() {
+        let mut spec = quick_spec();
+        spec.axes.presets = vec!["X(Q)".into()];
+        assert!(spec.expand().is_err());
+        let mut spec = quick_spec();
+        spec.axes.rates = vec![10.0, 10.0];
+        assert!(spec.expand().is_err(), "duplicate grid point must error");
+    }
+
+    #[test]
+    fn sweep_reports_identical_across_worker_counts() {
+        let mut spec = quick_spec();
+        spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+        spec.axes.rates = vec![8.0, 25.0];
+        let cfgs = spec.expand().unwrap();
+        let solo = run_sweep(&cfgs, 1).unwrap();
+        let pool = run_sweep(&cfgs, 3).unwrap();
+        assert_eq!(solo.points.len(), pool.points.len());
+        for (a, b) in solo.points.iter().zip(&pool.points) {
+            assert_eq!(a.name, b.name, "slot order must follow expansion");
+            assert_eq!(
+                a.report.to_json().to_string(),
+                b.report.to_json().to_string(),
+                "point '{}' diverged across worker counts",
+                a.name
+            );
+            assert_eq!(a.summary.steps, b.summary.steps);
+        }
+    }
+
+    #[test]
+    fn summary_ranks_and_deltas() {
+        let mut spec = quick_spec();
+        spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+        let cfgs = spec.expand().unwrap();
+        let outcome = run_sweep(&cfgs, 2).unwrap();
+        let summary = summarize(&outcome, None).unwrap();
+        assert_eq!(summary.baseline, "S(D)");
+        assert_eq!(summary.extremes.len(), METRICS.len());
+        for e in &summary.extremes {
+            let m = METRICS.iter().find(|m| m.key == e.metric).unwrap();
+            if m.higher_is_better {
+                assert!(e.best >= e.worst, "{}: {} < {}", e.metric, e.best, e.worst);
+            } else {
+                assert!(e.best <= e.worst, "{}: {} > {}", e.metric, e.best, e.worst);
+            }
+        }
+        assert_eq!(summary.deltas.len(), 1);
+        assert_eq!(summary.deltas[0].config, "M(D)");
+        // JSON + table render without panicking and carry the points
+        let v = sweep_json(&outcome, &summary);
+        assert_eq!(v.get("points").as_arr().unwrap().len(), 2);
+        let table = render_table(&outcome, &summary).render();
+        assert!(table.contains("M(D)"));
+        // unknown baseline is an error
+        assert!(summarize(&outcome, Some("nope")).is_err());
+    }
+}

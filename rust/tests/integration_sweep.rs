@@ -1,0 +1,134 @@
+//! Determinism under parallelism: the same seed + config must produce
+//! byte-identical report JSON standalone, and through the sweep engine at
+//! 1, 2, and 8 worker threads (ISSUE: the acceptance contract of the
+//! Send-safe core).
+
+use llmservingsim::config::{PerfBackend, RouterPolicy, SimConfig};
+use llmservingsim::coordinator::run_config;
+use llmservingsim::memory::EvictPolicy;
+use llmservingsim::sweep::{run_sweep, summarize, sweep_json, SweepSpec};
+
+/// A 2 presets x 2 rates x 2 routers grid (8 points), small enough for CI.
+fn grid_spec() -> SweepSpec {
+    let mut spec = SweepSpec {
+        num_requests: 15,
+        quick: true,
+        seed: 0xDE75,
+        ..SweepSpec::default()
+    };
+    spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+    spec.axes.rates = vec![10.0, 40.0];
+    spec.axes.routers =
+        vec![RouterPolicy::RoundRobin, RouterPolicy::LeastOutstanding];
+    spec
+}
+
+fn report_jsons(cfgs: &[SimConfig], threads: usize) -> Vec<(String, String)> {
+    run_sweep(cfgs, threads)
+        .unwrap()
+        .points
+        .into_iter()
+        .map(|p| (p.name, p.report.to_json().to_string()))
+        .collect()
+}
+
+#[test]
+fn standalone_runs_are_byte_identical() {
+    for cfg in grid_spec().expand().unwrap() {
+        let (a, _) = run_config(cfg.clone()).unwrap();
+        let (b, _) = run_config(cfg.clone()).unwrap();
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "config '{}' not reproducible standalone",
+            cfg.name
+        );
+    }
+}
+
+#[test]
+fn sweep_matches_standalone_at_1_2_and_8_threads() {
+    let cfgs = grid_spec().expand().unwrap();
+    assert_eq!(cfgs.len(), 8, "the CI grid is 2x2x2");
+
+    // Standalone reference, one config at a time on the main thread.
+    let reference: Vec<(String, String)> = cfgs
+        .iter()
+        .map(|cfg| {
+            let (report, _) = run_config(cfg.clone()).unwrap();
+            (cfg.name.clone(), report.to_json().to_string())
+        })
+        .collect();
+
+    for threads in [1, 2, 8] {
+        let swept = report_jsons(&cfgs, threads);
+        assert_eq!(swept.len(), reference.len());
+        for ((ref_name, ref_json), (name, json)) in reference.iter().zip(&swept) {
+            assert_eq!(ref_name, name, "point order must follow expansion");
+            assert_eq!(
+                ref_json, json,
+                "config '{name}' diverged from standalone at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn different_seeds_actually_change_reports() {
+    // Guards against the determinism tests passing vacuously (e.g. the
+    // seed being ignored entirely).
+    let mut a = grid_spec();
+    a.axes.presets.truncate(1);
+    a.axes.rates.truncate(1);
+    a.axes.routers.truncate(1);
+    let mut b = a.clone();
+    b.seed = a.seed + 1;
+    let ra = report_jsons(&a.expand().unwrap(), 1);
+    let rb = report_jsons(&b.expand().unwrap(), 1);
+    assert_ne!(ra[0].1, rb[0].1, "seed must influence the workload");
+}
+
+#[test]
+fn sweep_summary_and_json_cover_the_grid() {
+    let cfgs = grid_spec().expand().unwrap();
+    let outcome = run_sweep(&cfgs, 4).unwrap();
+    for p in &outcome.points {
+        assert_eq!(
+            p.report.num_finished, 15,
+            "point '{}' dropped requests",
+            p.name
+        );
+    }
+    let baseline = "S(D)|rate=10|router=round-robin";
+    let summary = summarize(&outcome, Some(baseline)).unwrap();
+    assert_eq!(summary.baseline, baseline);
+    assert_eq!(summary.deltas.len(), cfgs.len() - 1);
+    let v = sweep_json(&outcome, &summary);
+    assert_eq!(v.get("points").as_arr().unwrap().len(), cfgs.len());
+    assert_eq!(
+        v.get("summary").get("baseline").as_str(),
+        Some(baseline),
+        "summary JSON must carry the baseline"
+    );
+}
+
+#[test]
+fn eviction_and_backend_axes_expand() {
+    // A second grid shape touching the other axes: prefix-cache preset x
+    // eviction policy x perf backend.
+    let mut spec = SweepSpec {
+        num_requests: 10,
+        quick: true,
+        ..SweepSpec::default()
+    };
+    spec.axes.presets = vec!["S(D)+PC".into()];
+    spec.axes.evictions = vec![EvictPolicy::Lru, EvictPolicy::Lfu];
+    spec.axes.backends = vec![PerfBackend::Analytical, PerfBackend::CycleReplay];
+    let cfgs = spec.expand().unwrap();
+    assert_eq!(cfgs.len(), 4);
+    let outcome = run_sweep(&cfgs, 2).unwrap();
+    assert_eq!(outcome.points.len(), 4);
+    for p in &outcome.points {
+        assert!(p.report.num_finished > 0, "point '{}' finished nothing", p.name);
+    }
+}
