@@ -88,9 +88,11 @@ fn main() -> anyhow::Result<()> {
     println!("\nserving {} requests on the ground-truth engine ...", 40);
     let gt = Arc::new(ExecPerfModel::new(&root, "tiny-dense")?);
     let gt2 = gt.clone();
-    let mut gt_sim = Simulation::with_perf_factory(cfg.clone(), &move |_, _, _| {
-        Ok(gt2.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
-    })?;
+    let mut gt_sim = Simulation::builder(cfg.clone())
+        .with_perf_factory(move |_, _, _| {
+            Ok(gt2.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
+        })
+        .build()?;
     let t0 = std::time::Instant::now();
     let gt_report = gt_sim.run();
     println!(

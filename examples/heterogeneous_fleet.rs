@@ -9,16 +9,14 @@
 //!
 //! Run: `cargo run --release --example heterogeneous_fleet`
 
-use llmservingsim::config::{
-    presets, InstanceConfig, RouterPolicy, SimConfig, TopoKind,
-};
+use llmservingsim::config::{presets, InstanceConfig, SimConfig, TopoKind};
 use llmservingsim::coordinator::run_config;
 use llmservingsim::util::bench::Table;
 use llmservingsim::workload::Arrival;
 
-fn fleet(router: RouterPolicy) -> SimConfig {
+fn fleet(router: &str) -> SimConfig {
     let mut cfg = presets::single_dense("llama3.1-8b", "rtx3090");
-    cfg.name = format!("fleet/{}", router.as_str());
+    cfg.name = format!("fleet/{router}");
     // instance 0: single GPU
     // instance 1: TPU-like, ring fabric (much faster device)
     let mut tpu = InstanceConfig::basic("tpu0", "llama3.1-8b", "tpu-v6e");
@@ -29,7 +27,7 @@ fn fleet(router: RouterPolicy) -> SimConfig {
     tp2.tp = 2;
     cfg.instances.push(tpu);
     cfg.instances.push(tp2);
-    cfg.router = router;
+    cfg.router = router.to_string();
     cfg.workload.num_requests = 150;
     cfg.workload.arrival = Arrival::Poisson { rate: 2.0 };
     cfg
@@ -44,12 +42,12 @@ fn main() -> anyhow::Result<()> {
         "util i0/i1/i2 %",
     ]);
     for router in [
-        RouterPolicy::RoundRobin,
-        RouterPolicy::LeastOutstanding,
-        RouterPolicy::LeastKvLoad,
-        RouterPolicy::SessionAffinity,
+        "round-robin",
+        "least-outstanding",
+        "least-kv",
+        "session-affinity",
     ] {
-        let name = router.as_str().to_string();
+        let name = router.to_string();
         let (r, _) = run_config(fleet(router))?;
         let util = |i: usize| r.utilization.get(&i).copied().unwrap_or(0.0) * 100.0;
         t.row(&[

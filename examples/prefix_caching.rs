@@ -6,7 +6,6 @@
 
 use llmservingsim::config::{presets, CacheScope, SimConfig};
 use llmservingsim::coordinator::run_config;
-use llmservingsim::memory::EvictPolicy;
 use llmservingsim::util::bench::Table;
 
 fn sessions(mut cfg: SimConfig) -> SimConfig {
@@ -42,15 +41,18 @@ fn main() -> anyhow::Result<()> {
         format!("{:.0}", base.throughput_tps),
     ]);
 
+    // enumerate eviction policies from the registry — a user-registered
+    // policy would join this sweep automatically
+    let evictions = llmservingsim::policy::snapshot().evict_names();
     for scope in [CacheScope::PerInstance, CacheScope::Global] {
-        for policy in [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::LargestFirst] {
+        for policy in &evictions {
             let mut cfg = sessions(presets::with_prefix_cache(
                 presets::multi_dense("llama3.1-8b", "rtx3090"),
                 scope,
             ));
             for i in &mut cfg.instances {
                 if let Some(pc) = &mut i.prefix_cache {
-                    pc.policy = policy;
+                    pc.policy = policy.clone();
                     // small device tier so eviction policy actually matters
                     pc.device_fraction = 0.05;
                 }
@@ -78,7 +80,7 @@ fn main() -> anyhow::Result<()> {
                     CacheScope::PerInstance => "per-instance".into(),
                     CacheScope::Global => "global".into(),
                 },
-                policy.as_str().into(),
+                policy.clone(),
                 format!("{hits:.1}"),
                 format!("{:.2}", r.ttft_ns.mean / 1e6),
                 format!("{:.2}x", base.ttft_ns.mean / r.ttft_ns.mean.max(1.0)),

@@ -8,7 +8,6 @@
 //!
 //! Run: `cargo run --release --example sweep`
 
-use llmservingsim::config::RouterPolicy;
 use llmservingsim::sweep::{
     render_table, run_sweep, summarize, sweep_json, SweepSpec,
 };
@@ -21,8 +20,7 @@ fn main() -> anyhow::Result<()> {
     };
     spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
     spec.axes.rates = vec![10.0, 40.0];
-    spec.axes.routers =
-        vec![RouterPolicy::RoundRobin, RouterPolicy::LeastOutstanding];
+    spec.axes.routers = vec!["round-robin".into(), "least-outstanding".into()];
 
     let cfgs = spec.expand()?;
     println!("expanded {} grid points:", cfgs.len());

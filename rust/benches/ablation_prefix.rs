@@ -5,7 +5,6 @@
 
 use llmservingsim::config::{presets, CacheScope, SimConfig};
 use llmservingsim::coordinator::run_config;
-use llmservingsim::memory::EvictPolicy;
 use llmservingsim::util::bench::Table;
 use llmservingsim::workload::Arrival;
 
@@ -37,14 +36,15 @@ fn main() -> anyhow::Result<()> {
         format!("{:.1}", no_pc.ttft_ns.mean / 1e6),
         "1.00x".into(),
     ]);
+    let evictions = llmservingsim::policy::snapshot().evict_names();
     for scope in [CacheScope::PerInstance, CacheScope::Global] {
-        for policy in [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::LargestFirst] {
+        for policy in &evictions {
             for frac in [0.01, 0.05, 0.3] {
                 let mut cfg = presets::with_prefix_cache(base(), scope);
                 cfg.workload = base().workload;
                 for i in &mut cfg.instances {
                     if let Some(pc) = &mut i.prefix_cache {
-                        pc.policy = policy;
+                        pc.policy = policy.clone();
                         pc.device_fraction = frac;
                     }
                 }
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
                         CacheScope::PerInstance => "per-inst".into(),
                         CacheScope::Global => "global".into(),
                     },
-                    policy.as_str().into(),
+                    policy.clone(),
                     format!("{frac}"),
                     format!("{:.1}", h as f64 / q.max(1) as f64 * 100.0),
                     format!("{:.1}", r.ttft_ns.mean / 1e6),

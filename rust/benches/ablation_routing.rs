@@ -4,17 +4,17 @@
 //!
 //! Run: `cargo bench --bench ablation_routing`
 
-use llmservingsim::config::{presets, InstanceConfig, RouterPolicy, SimConfig};
+use llmservingsim::config::{presets, InstanceConfig, SimConfig};
 use llmservingsim::coordinator::run_config;
 use llmservingsim::util::bench::Table;
 use llmservingsim::workload::Arrival;
 
-fn fleet(router: RouterPolicy) -> SimConfig {
+fn fleet(router: &str) -> SimConfig {
     let mut cfg = presets::single_dense("llama3.1-8b", "rtx3090");
     let mut fast = InstanceConfig::basic("tpu0", "llama3.1-8b", "tpu-v6e");
     fast.topology = llmservingsim::config::TopoKind::Ring;
     cfg.instances.push(fast);
-    cfg.router = router;
+    cfg.router = router.to_string();
     cfg.workload.num_requests = 120;
     cfg.workload.arrival = Arrival::Poisson { rate: 1.5 };
     cfg.workload.sessions = 6; // Zipf sessions => skewed affinity load
@@ -31,15 +31,10 @@ fn main() -> anyhow::Result<()> {
         "tok/s",
         "util gpu/tpu %",
     ]);
-    for router in [
-        RouterPolicy::RoundRobin,
-        RouterPolicy::LeastOutstanding,
-        RouterPolicy::LeastKvLoad,
-        RouterPolicy::SessionAffinity,
-        RouterPolicy::PrefixAware,
-    ] {
-        let name = router.as_str().to_string();
-        let (r, _) = run_config(fleet(router))?;
+    // enumerate the registry: custom registered routers join the ablation
+    for router in llmservingsim::policy::snapshot().route_names() {
+        let name = router.clone();
+        let (r, _) = run_config(fleet(&router))?;
         let u = |i: usize| r.utilization.get(&i).copied().unwrap_or(0.0) * 100.0;
         t.row(&[
             name,

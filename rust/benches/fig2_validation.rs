@@ -57,13 +57,15 @@ fn ground_truth(
     engines: &[(String, Arc<ExecPerfModel>)],
 ) -> anyhow::Result<Report> {
     let engines = engines.to_vec();
-    let mut sim = Simulation::with_perf_factory(cfg.clone(), &move |_, model, _| {
-        let found = engines
-            .iter()
-            .find(|(m, _)| m == &model.name)
-            .expect("engine prepared in main");
-        Ok(found.1.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
-    })?;
+    let mut sim = Simulation::builder(cfg.clone())
+        .with_perf_factory(move |_, model, _| {
+            let found = engines
+                .iter()
+                .find(|(m, _)| m == &model.name)
+                .expect("engine prepared in main");
+            Ok(found.1.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
+        })
+        .build()?;
     Ok(sim.run())
 }
 

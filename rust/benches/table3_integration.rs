@@ -49,9 +49,11 @@ fn cfg_base() -> SimConfig {
 
 fn ground_truth(root: &PathBuf) -> anyhow::Result<Report> {
     let gt = Arc::new(ExecPerfModel::new(root, "tiny-dense")?);
-    let mut sim = Simulation::with_perf_factory(cfg_base(), &move |_, _, _| {
-        Ok(gt.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
-    })?;
+    let mut sim = Simulation::builder(cfg_base())
+        .with_perf_factory(move |_, _, _| {
+            Ok(gt.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
+        })
+        .build()?;
     Ok(sim.run())
 }
 

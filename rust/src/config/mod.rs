@@ -6,10 +6,17 @@
 //! parallelism/policies, the global router policy, the workload, and the
 //! performance backend. Everything is plain data here; the serving layer
 //! interprets it.
+//!
+//! Routing, scheduling, and eviction policies are stored as *names*
+//! (plain strings, e.g. `"least-outstanding"`, `"fcfs"`, `"lru"`), so the
+//! JSON schema is stable and user-registered policies are configurable
+//! without touching this module. Names resolve against the
+//! [`policy registry`](crate::policy) exactly once, when a
+//! [`Simulation`](crate::coordinator::Simulation) is built — unknown names
+//! error there with the list of registered candidates.
 
 pub mod presets;
 
-use crate::memory::EvictPolicy;
 use crate::model::ModelSpec;
 use crate::perf::HardwareSpec;
 use crate::util::json::{self, Value};
@@ -26,15 +33,20 @@ pub enum Role {
     Decode,
 }
 
-impl Role {
-    pub fn from_str(s: &str) -> Option<Role> {
-        Some(match s {
+impl std::str::FromStr for Role {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Role, Self::Err> {
+        Ok(match s {
             "unified" => Role::Unified,
             "prefill" => Role::Prefill,
             "decode" => Role::Decode,
-            _ => return None,
+            _ => anyhow::bail!("unknown role '{s}' (unified|prefill|decode)"),
         })
     }
+}
+
+impl Role {
     pub fn as_str(self) -> &'static str {
         match self {
             Role::Unified => "unified",
@@ -44,60 +56,13 @@ impl Role {
     }
 }
 
-/// Global request-router policy (§II-B: customizable routing interfaces).
-#[derive(Debug, Clone, PartialEq)]
-pub enum RouterPolicy {
-    RoundRobin,
-    /// Fewest outstanding requests.
-    LeastOutstanding,
-    /// Lowest KV-block utilization.
-    LeastKvLoad,
-    /// Prefer the instance whose prefix cache holds the longest match.
-    PrefixAware,
-    /// Stick a session to one instance (falls back to least-outstanding).
-    SessionAffinity,
-}
-
-impl std::str::FromStr for RouterPolicy {
-    type Err = anyhow::Error;
-
-    fn from_str(s: &str) -> Result<RouterPolicy, Self::Err> {
-        Ok(match s {
-            "round-robin" => RouterPolicy::RoundRobin,
-            "least-outstanding" => RouterPolicy::LeastOutstanding,
-            "least-kv" => RouterPolicy::LeastKvLoad,
-            "prefix-aware" => RouterPolicy::PrefixAware,
-            "session-affinity" => RouterPolicy::SessionAffinity,
-            _ => anyhow::bail!(
-                "unknown router policy '{s}' (round-robin|least-outstanding|\
-                 least-kv|prefix-aware|session-affinity)"
-            ),
-        })
-    }
-}
-
-impl RouterPolicy {
-    pub fn all() -> &'static [RouterPolicy] {
-        &[
-            RouterPolicy::RoundRobin,
-            RouterPolicy::LeastOutstanding,
-            RouterPolicy::LeastKvLoad,
-            RouterPolicy::PrefixAware,
-            RouterPolicy::SessionAffinity,
-        ]
-    }
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            RouterPolicy::RoundRobin => "round-robin",
-            RouterPolicy::LeastOutstanding => "least-outstanding",
-            RouterPolicy::LeastKvLoad => "least-kv",
-            RouterPolicy::PrefixAware => "prefix-aware",
-            RouterPolicy::SessionAffinity => "session-affinity",
-        }
-    }
-}
-
-/// Batch scheduling policy within an instance.
+/// Typed handle for the built-in batch-scheduling policies.
+///
+/// Configs store scheduling policies by *name* ([`InstanceConfig::sched`]);
+/// this enum is the convenience bridge for code that wants a `Copy` value
+/// (tests, ablations) — `as_str()` is the registry name and `to_policy()`
+/// instantiates the matching [`SchedulePolicy`](crate::policy::SchedulePolicy)
+/// trait object.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedPolicy {
     /// First-come-first-served admission (vLLM default).
@@ -108,20 +73,39 @@ pub enum SchedPolicy {
     Priority,
 }
 
-impl SchedPolicy {
-    pub fn from_str(s: &str) -> Option<SchedPolicy> {
-        Some(match s {
+impl std::str::FromStr for SchedPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<SchedPolicy, Self::Err> {
+        Ok(match s {
             "fcfs" => SchedPolicy::Fcfs,
             "sjf" => SchedPolicy::Sjf,
             "priority" => SchedPolicy::Priority,
-            _ => return None,
+            _ => anyhow::bail!("unknown sched policy '{s}' (fcfs|sjf|priority)"),
         })
     }
+}
+
+impl SchedPolicy {
+    pub fn all() -> &'static [SchedPolicy] {
+        &[SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Priority]
+    }
+
     pub fn as_str(self) -> &'static str {
         match self {
             SchedPolicy::Fcfs => "fcfs",
             SchedPolicy::Sjf => "sjf",
             SchedPolicy::Priority => "priority",
+        }
+    }
+
+    /// Instantiate the matching built-in trait object.
+    pub fn to_policy(self) -> Box<dyn crate::policy::SchedulePolicy> {
+        use crate::instance::scheduler::{Fcfs, Priority, Sjf};
+        match self {
+            SchedPolicy::Fcfs => Box::new(Fcfs),
+            SchedPolicy::Sjf => Box::new(Sjf),
+            SchedPolicy::Priority => Box::new(Priority),
         }
     }
 }
@@ -150,16 +134,23 @@ pub enum OffloadPolicy {
     Pim,
 }
 
-impl OffloadPolicy {
-    pub fn from_str(s: &str) -> Option<OffloadPolicy> {
-        Some(match s {
+impl std::str::FromStr for OffloadPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<OffloadPolicy, Self::Err> {
+        Ok(match s {
             "none" => OffloadPolicy::None,
             "on-demand" => OffloadPolicy::OnDemand,
             "prefetch" => OffloadPolicy::Prefetch,
             "pim" => OffloadPolicy::Pim,
-            _ => return None,
+            _ => anyhow::bail!(
+                "unknown offload policy '{s}' (none|on-demand|prefetch|pim)"
+            ),
         })
     }
+}
+
+impl OffloadPolicy {
     pub fn as_str(self) -> &'static str {
         match self {
             OffloadPolicy::None => "none",
@@ -180,14 +171,21 @@ pub enum KvTransferPolicy {
     Layered,
 }
 
-impl KvTransferPolicy {
-    pub fn from_str(s: &str) -> Option<KvTransferPolicy> {
-        Some(match s {
+impl std::str::FromStr for KvTransferPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<KvTransferPolicy, Self::Err> {
+        Ok(match s {
             "blocking" => KvTransferPolicy::Blocking,
             "layered" => KvTransferPolicy::Layered,
-            _ => return None,
+            _ => anyhow::bail!(
+                "unknown kv-transfer policy '{s}' (blocking|layered)"
+            ),
         })
     }
+}
+
+impl KvTransferPolicy {
     pub fn as_str(self) -> &'static str {
         match self {
             KvTransferPolicy::Blocking => "blocking",
@@ -210,7 +208,10 @@ pub struct PrefixCacheConfig {
     pub device_fraction: f64,
     /// Host-tier capacity in tokens.
     pub host_tokens: u64,
-    pub policy: EvictPolicy,
+    /// Eviction-policy *name*, resolved through the
+    /// [`policy registry`](crate::policy) (built-ins: `lru`, `lfu`,
+    /// `largest`).
+    pub policy: String,
     pub scope: CacheScope,
 }
 
@@ -219,7 +220,7 @@ impl Default for PrefixCacheConfig {
         PrefixCacheConfig {
             device_fraction: 0.2,
             host_tokens: 1 << 20,
-            policy: EvictPolicy::Lru,
+            policy: "lru".to_string(),
             scope: CacheScope::PerInstance,
         }
     }
@@ -262,7 +263,10 @@ pub struct InstanceConfig {
     pub max_batch_seqs: usize,
     /// Chunked-prefill chunk size; None = whole-prompt prefill.
     pub chunked_prefill: Option<u64>,
-    pub sched: SchedPolicy,
+    /// Batch-scheduling policy *name*, resolved through the
+    /// [`policy registry`](crate::policy) (built-ins: `fcfs`, `sjf`,
+    /// `priority`).
+    pub sched: String,
     pub prefix_cache: Option<PrefixCacheConfig>,
     pub gate: GateKind,
     pub offload: OffloadPolicy,
@@ -291,7 +295,7 @@ impl InstanceConfig {
             max_batch_tokens: 2048,
             max_batch_seqs: 64,
             chunked_prefill: None,
-            sched: SchedPolicy::Fcfs,
+            sched: "fcfs".to_string(),
             prefix_cache: None,
             gate: GateKind::Uniform,
             offload: OffloadPolicy::None,
@@ -427,7 +431,11 @@ pub struct SimConfig {
     pub name: String,
     pub seed: u64,
     pub instances: Vec<InstanceConfig>,
-    pub router: RouterPolicy,
+    /// Global router-policy *name*, resolved through the
+    /// [`policy registry`](crate::policy) (built-ins: `round-robin`,
+    /// `least-outstanding`, `least-kv`, `prefix-aware`,
+    /// `session-affinity`).
+    pub router: String,
     pub workload: WorkloadSpec,
     pub perf: PerfBackend,
     /// KV block size in tokens (PagedAttention granularity).
@@ -478,7 +486,7 @@ impl SimConfig {
                     ("role", Value::str(i.role.as_str())),
                     ("max_batch_tokens", Value::int(i.max_batch_tokens as i64)),
                     ("max_batch_seqs", Value::int(i.max_batch_seqs as i64)),
-                    ("sched", Value::str(i.sched.as_str())),
+                    ("sched", Value::str(i.sched.clone())),
                     ("offload", Value::str(i.offload.as_str())),
                     ("kv_transfer", Value::str(i.kv_transfer.as_str())),
                     ("af_disagg", Value::Bool(i.af_disagg)),
@@ -517,7 +525,7 @@ impl SimConfig {
                         Value::obj(vec![
                             ("device_fraction", Value::float(pc.device_fraction)),
                             ("host_tokens", Value::int(pc.host_tokens as i64)),
-                            ("policy", Value::str(pc.policy.as_str())),
+                            ("policy", Value::str(pc.policy.clone())),
                             (
                                 "scope",
                                 Value::str(match pc.scope {
@@ -534,7 +542,7 @@ impl SimConfig {
         Value::obj(vec![
             ("name", Value::str(self.name.clone())),
             ("seed", Value::int(self.seed as i64)),
-            ("router", Value::str(self.router.as_str())),
+            ("router", Value::str(self.router.clone())),
             ("block_size", Value::int(self.block_size as i64)),
             ("inter_instance_bw", Value::float(self.inter_instance_bw)),
             (
@@ -620,10 +628,13 @@ impl SimConfig {
     pub fn from_json(v: &Value) -> anyhow::Result<SimConfig> {
         let name = v.get("name").as_str().unwrap_or("unnamed").to_string();
         let seed = v.get("seed").as_u64().unwrap_or(0);
-        let router = match v.get("router").as_str() {
-            Some(s) => s.parse::<RouterPolicy>()?,
-            None => RouterPolicy::RoundRobin,
-        };
+        // Policy names are free-form here; they resolve (and error with
+        // candidate lists) when the simulation is built.
+        let router = v
+            .get("router")
+            .as_str()
+            .unwrap_or("round-robin")
+            .to_string();
         let block_size = v.get("block_size").as_u64().unwrap_or(16);
         let inter_instance_bw = v.get("inter_instance_bw").as_f64().unwrap_or(32e9);
         let inter_instance_latency_ns =
@@ -713,20 +724,16 @@ impl SimConfig {
                 inst.ep = x as usize;
             }
             if let Some(s) = iv.get("role").as_str() {
-                inst.role = Role::from_str(s)
-                    .ok_or_else(|| anyhow::anyhow!("unknown role '{s}'"))?;
+                inst.role = s.parse::<Role>()?;
             }
             if let Some(s) = iv.get("sched").as_str() {
-                inst.sched = SchedPolicy::from_str(s)
-                    .ok_or_else(|| anyhow::anyhow!("unknown sched '{s}'"))?;
+                inst.sched = s.to_string();
             }
             if let Some(s) = iv.get("offload").as_str() {
-                inst.offload = OffloadPolicy::from_str(s)
-                    .ok_or_else(|| anyhow::anyhow!("unknown offload '{s}'"))?;
+                inst.offload = s.parse::<OffloadPolicy>()?;
             }
             if let Some(s) = iv.get("kv_transfer").as_str() {
-                inst.kv_transfer = KvTransferPolicy::from_str(s)
-                    .ok_or_else(|| anyhow::anyhow!("unknown kv_transfer '{s}'"))?;
+                inst.kv_transfer = s.parse::<KvTransferPolicy>()?;
             }
             if let Some(b) = iv.get("af_disagg").as_bool() {
                 inst.af_disagg = b;
@@ -779,7 +786,7 @@ impl SimConfig {
                     cfg.host_tokens = x;
                 }
                 if let Some(s) = pc.get("policy").as_str() {
-                    cfg.policy = s.parse::<EvictPolicy>()?;
+                    cfg.policy = s.to_string();
                 }
                 if let Some(s) = pc.get("scope").as_str() {
                     cfg.scope = match s {
@@ -892,25 +899,42 @@ mod tests {
 
     #[test]
     fn enum_string_roundtrips() {
+        // Every enum now implements std::str::FromStr (not an inherent
+        // shadow), so plain `.parse()` works and errors carry candidates.
         for r in [Role::Unified, Role::Prefill, Role::Decode] {
-            assert_eq!(Role::from_str(r.as_str()), Some(r));
+            assert_eq!(r.as_str().parse::<Role>().unwrap(), r);
         }
-        // RouterPolicy uses std::str::FromStr, so plain `.parse()` works.
-        for p in RouterPolicy::all() {
-            assert_eq!(&p.as_str().parse::<RouterPolicy>().unwrap(), p);
+        assert!("bogus".parse::<Role>().unwrap_err().to_string().contains("unified"));
+        for s in SchedPolicy::all() {
+            assert_eq!(s.as_str().parse::<SchedPolicy>().unwrap(), *s);
+            assert_eq!(s.to_policy().name(), s.as_str());
         }
-        assert!("bogus".parse::<RouterPolicy>().is_err());
-        for s in [SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Priority] {
-            assert_eq!(SchedPolicy::from_str(s.as_str()), Some(s));
-        }
+        assert!("lifo"
+            .parse::<SchedPolicy>()
+            .unwrap_err()
+            .to_string()
+            .contains("fcfs"));
         for o in [
             OffloadPolicy::None,
             OffloadPolicy::OnDemand,
             OffloadPolicy::Prefetch,
             OffloadPolicy::Pim,
         ] {
-            assert_eq!(OffloadPolicy::from_str(o.as_str()), Some(o));
+            assert_eq!(o.as_str().parse::<OffloadPolicy>().unwrap(), o);
         }
+        assert!("ssd"
+            .parse::<OffloadPolicy>()
+            .unwrap_err()
+            .to_string()
+            .contains("on-demand"));
+        for k in [KvTransferPolicy::Blocking, KvTransferPolicy::Layered] {
+            assert_eq!(k.as_str().parse::<KvTransferPolicy>().unwrap(), k);
+        }
+        assert!("streamed"
+            .parse::<KvTransferPolicy>()
+            .unwrap_err()
+            .to_string()
+            .contains("layered"));
     }
 
     #[test]

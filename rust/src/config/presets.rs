@@ -11,8 +11,7 @@
 //! with tiny (executable) or paper-scale (analytical) models.
 
 use super::{
-    CacheScope, InstanceConfig, PerfBackend, PrefixCacheConfig, Role, RouterPolicy,
-    SimConfig,
+    CacheScope, InstanceConfig, PerfBackend, PrefixCacheConfig, Role, SimConfig,
 };
 use crate::workload::WorkloadSpec;
 
@@ -21,7 +20,7 @@ fn base(name: &str, instances: Vec<InstanceConfig>) -> SimConfig {
         name: name.to_string(),
         seed: 0xC0FFEE,
         instances,
-        router: RouterPolicy::LeastOutstanding,
+        router: "least-outstanding".to_string(),
         workload: WorkloadSpec::sharegpt_100(10.0),
         perf: PerfBackend::Analytical,
         block_size: 16,
@@ -100,7 +99,7 @@ pub fn with_prefix_cache(mut cfg: SimConfig, scope: CacheScope) -> SimConfig {
     cfg.workload.sessions = 10;
     cfg.workload.shared_prefix = 64;
     if matches!(scope, CacheScope::Global) {
-        cfg.router = RouterPolicy::PrefixAware;
+        cfg.router = "prefix-aware".to_string();
     }
     cfg
 }
@@ -226,6 +225,6 @@ mod tests {
             multi_dense("tiny-dense", "rtx3090"),
             CacheScope::Global,
         );
-        assert_eq!(cfg.router, RouterPolicy::PrefixAware);
+        assert_eq!(cfg.router, "prefix-aware");
     }
 }

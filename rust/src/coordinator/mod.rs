@@ -19,9 +19,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::config::{
-    CacheScope, KvTransferPolicy, PerfBackend, RouterPolicy, SimConfig,
-};
+use crate::config::{CacheScope, KvTransferPolicy, PerfBackend, SimConfig};
 use crate::instance::{ServingInstance, StepOutcome};
 use crate::memory::PrefixCache;
 use crate::metrics::{MetricsCollector, Report};
@@ -32,6 +30,7 @@ use crate::perf::cycle::{CycleSim, SystolicSpec};
 use crate::perf::replay::Replay;
 use crate::perf::trace::TraceDb;
 use crate::perf::PerfModel;
+use crate::policy::{EvictionPolicy, PolicyRegistry, RoutePolicy, SchedulePolicy};
 use crate::router::{GlobalRouter, InstanceView};
 use crate::sim::{Event, EventQueue, Nanos};
 use crate::workload::Request;
@@ -103,25 +102,111 @@ pub struct Simulation {
     pub steps_total: u64,
 }
 
-impl Simulation {
-    /// Build a simulation from config.
-    pub fn new(cfg: SimConfig) -> anyhow::Result<Self> {
-        Self::with_perf_factory(cfg, &|backend, model, hw| {
-            build_perf(backend, model, hw)
-        })
+/// Boxed perf-model factory (see [`SimulationBuilder::with_perf_factory`]).
+pub type PerfFactoryFn = Box<
+    dyn Fn(
+        &PerfBackend,
+        &ModelSpec,
+        &crate::perf::HardwareSpec,
+    ) -> anyhow::Result<Arc<dyn PerfModel>>,
+>;
+
+/// Staged construction of a [`Simulation`] with injectable policies.
+///
+/// By default every policy *name* in the config (router, per-instance
+/// scheduling, prefix-cache eviction) resolves against a snapshot of the
+/// [global policy registry](crate::policy::global), and perf models come
+/// from [`build_perf`]. Each `with_*` method overrides one decision point
+/// for this simulation only — no registration, no config enum, no core
+/// edit:
+///
+/// ```ignore
+/// let sim = Simulation::builder(cfg)
+///     .with_route_policy(Box::new(MyRouter::default()))
+///     .with_sched_policy(|| Box::new(MySched))
+///     .with_evict_policy(|| Box::new(MyEvict))
+///     .build()?;
+/// ```
+///
+/// Scheduling/eviction overrides are factories because every instance
+/// (resp. cache) needs its own policy instance — policies are stateful and
+/// sharing one would couple decision points. Overrides apply uniformly to
+/// all instances; per-instance heterogeneity stays name-driven via
+/// [`with_registry`](SimulationBuilder::with_registry).
+pub struct SimulationBuilder {
+    cfg: SimConfig,
+    registry: Option<PolicyRegistry>,
+    route: Option<Box<dyn RoutePolicy>>,
+    sched: Option<Box<dyn Fn() -> Box<dyn SchedulePolicy>>>,
+    evict: Option<Box<dyn Fn() -> Box<dyn EvictionPolicy>>>,
+    perf: Option<PerfFactoryFn>,
+}
+
+impl SimulationBuilder {
+    /// Resolve policy names against `registry` instead of a snapshot of
+    /// the global one.
+    pub fn with_registry(mut self, registry: PolicyRegistry) -> Self {
+        self.registry = Some(registry);
+        self
     }
 
-    /// Build with a custom perf-model factory (used by the ground-truth
-    /// engine and by ablations that pin specific models per instance).
+    /// Use `policy` for global routing, ignoring the config's router name.
+    pub fn with_route_policy(mut self, policy: Box<dyn RoutePolicy>) -> Self {
+        self.route = Some(policy);
+        self
+    }
+
+    /// Use `factory()` for every instance's wait-queue ordering, ignoring
+    /// the config's sched names.
+    pub fn with_sched_policy(
+        mut self,
+        factory: impl Fn() -> Box<dyn SchedulePolicy> + 'static,
+    ) -> Self {
+        self.sched = Some(Box::new(factory));
+        self
+    }
+
+    /// Use `factory()` for every prefix cache's eviction, ignoring the
+    /// config's evict names.
+    pub fn with_evict_policy(
+        mut self,
+        factory: impl Fn() -> Box<dyn EvictionPolicy> + 'static,
+    ) -> Self {
+        self.evict = Some(Box::new(factory));
+        self
+    }
+
+    /// Use a custom perf-model factory instead of [`build_perf`] (the
+    /// ground-truth engine and ablations that pin models per instance).
     pub fn with_perf_factory(
-        cfg: SimConfig,
-        factory: &dyn Fn(
-            &PerfBackend,
-            &ModelSpec,
-            &crate::perf::HardwareSpec,
-        ) -> anyhow::Result<Arc<dyn PerfModel>>,
-    ) -> anyhow::Result<Self> {
+        mut self,
+        factory: impl Fn(
+                &PerfBackend,
+                &ModelSpec,
+                &crate::perf::HardwareSpec,
+            ) -> anyhow::Result<Arc<dyn PerfModel>>
+            + 'static,
+    ) -> Self {
+        self.perf = Some(Box::new(factory));
+        self
+    }
+
+    /// Validate the config, resolve every policy name exactly once, and
+    /// assemble the simulation.
+    pub fn build(self) -> anyhow::Result<Simulation> {
+        let SimulationBuilder {
+            cfg,
+            registry,
+            route,
+            sched,
+            evict,
+            perf,
+        } = self;
         cfg.validate()?;
+        let registry = registry.unwrap_or_else(crate::policy::snapshot);
+        let perf_factory: PerfFactoryFn =
+            perf.unwrap_or_else(|| Box::new(build_perf));
+
         let mut instances = vec![];
         let mut caches: Vec<PrefixCache> = vec![];
         let mut cache_of = vec![];
@@ -130,9 +215,19 @@ impl Simulation {
         for (i, icfg) in cfg.instances.iter().enumerate() {
             let model = icfg.model_spec()?;
             let hw = icfg.hardware_spec()?;
-            let perf = factory(&cfg.perf, &model, &hw)?;
-            let inst =
-                ServingInstance::new(i, icfg.clone(), perf, cfg.block_size, cfg.seed)?;
+            let perf = perf_factory(&cfg.perf, &model, &hw)?;
+            let sched_policy = match &sched {
+                Some(f) => f(),
+                None => registry.make_sched(&icfg.sched)?,
+            };
+            let inst = ServingInstance::new(
+                i,
+                icfg.clone(),
+                perf,
+                cfg.block_size,
+                cfg.seed,
+                sched_policy,
+            )?;
             // prefix cache wiring
             let slot = match &icfg.prefix_cache {
                 None => None,
@@ -142,25 +237,33 @@ impl Simulation {
                     let device_tokens =
                         ((kv_capacity_tokens as f64) * pc.device_fraction).round()
                             as u64;
-                    match pc.scope {
-                        CacheScope::PerInstance => {
-                            caches.push(PrefixCache::new(
-                                device_tokens.max(64),
-                                pc.host_tokens,
-                                pc.policy,
-                            ));
-                            Some(caches.len() - 1)
+                    let needs_new = match pc.scope {
+                        CacheScope::PerInstance => true,
+                        CacheScope::Global => global_cache.is_none(),
+                    };
+                    if needs_new {
+                        let evict_policy = match &evict {
+                            Some(f) => f(),
+                            None => registry.make_evict(&pc.policy)?,
+                        };
+                        caches.push(PrefixCache::with_policy(
+                            device_tokens.max(64),
+                            pc.host_tokens,
+                            evict_policy,
+                        ));
+                        if pc.scope == CacheScope::Global {
+                            global_cache = Some(caches.len() - 1);
                         }
-                        CacheScope::Global => {
-                            Some(*global_cache.get_or_insert_with(|| {
-                                caches.push(PrefixCache::new(
-                                    device_tokens.max(64),
-                                    pc.host_tokens,
-                                    pc.policy,
-                                ));
-                                caches.len() - 1
-                            }))
+                        Some(caches.len() - 1)
+                    } else {
+                        // Shared global cache already built by an earlier
+                        // instance: that instance's policy wins, but this
+                        // name must still resolve so typos fail the build
+                        // with the candidate list rather than pass silently.
+                        if evict.is_none() {
+                            registry.check_evict(&pc.policy)?;
                         }
+                        global_cache
                     }
                 }
             };
@@ -168,11 +271,16 @@ impl Simulation {
             instances.push(inst);
         }
 
+        let route_policy = match route {
+            Some(p) => p,
+            None => registry.make_route(&cfg.router)?,
+        };
+
         let n = instances.len();
         let inter_topo =
             Topology::switched(n, cfg.inter_instance_bw, cfg.inter_instance_latency_ns);
         Ok(Simulation {
-            router: GlobalRouter::new(cfg.router.clone()),
+            router: GlobalRouter::new(route_policy),
             inter_fabric: Fabric::new(inter_topo),
             queue: EventQueue::new(),
             metrics: MetricsCollector::new(),
@@ -186,6 +294,27 @@ impl Simulation {
             caches,
             cache_of,
         })
+    }
+}
+
+impl Simulation {
+    /// Build a simulation from config, resolving every policy name
+    /// against the global registry.
+    pub fn new(cfg: SimConfig) -> anyhow::Result<Self> {
+        Self::builder(cfg).build()
+    }
+
+    /// Staged construction with policy/perf injection — the single entry
+    /// point for custom policies that skip the registry.
+    pub fn builder(cfg: SimConfig) -> SimulationBuilder {
+        SimulationBuilder {
+            cfg,
+            registry: None,
+            route: None,
+            sched: None,
+            evict: None,
+            perf: None,
+        }
     }
 
     /// Router-visible views, computing the prefix match for `req` if given.
@@ -301,8 +430,7 @@ impl Simulation {
                         req.output_tokens,
                     );
                     let views = self.views(Some(&req));
-                    let affinity = self.cfg.router == RouterPolicy::SessionAffinity;
-                    match self.router.dispatch(&req, &views, affinity) {
+                    match self.router.dispatch(&req, &views) {
                         Some(i) => {
                             self.metrics.on_dispatch(request_id, now, i);
                             self.instances[i].enqueue(req, now);
@@ -350,6 +478,13 @@ impl Simulation {
 
     pub fn num_instances(&self) -> usize {
         self.instances.len()
+    }
+
+    /// Name reported by the resolved router policy (e.g.
+    /// `session-affinity(least-outstanding)` — wrappers spell out their
+    /// fallback, so reports never misattribute placement).
+    pub fn router_policy_name(&self) -> &str {
+        self.router.policy_name()
     }
 
     pub fn instance(&self, i: usize) -> &ServingInstance {
@@ -555,5 +690,117 @@ mod tests {
         cfg.perf = PerfBackend::Cycle;
         let (report, _) = run_config(cfg).unwrap();
         assert_eq!(report.num_finished, 5);
+    }
+
+    #[test]
+    fn unknown_policy_names_fail_at_build_with_candidates() {
+        let mut cfg = small(presets::single_dense("tiny-dense", "rtx3090"));
+        cfg.router = "coin-flip".to_string();
+        let e = Simulation::new(cfg).unwrap_err().to_string();
+        assert!(e.contains("coin-flip") && e.contains("round-robin"), "{e}");
+
+        let mut cfg = small(presets::single_dense("tiny-dense", "rtx3090"));
+        cfg.instances[0].sched = "lifo".to_string();
+        let e = Simulation::new(cfg).unwrap_err().to_string();
+        assert!(e.contains("lifo") && e.contains("fcfs"), "{e}");
+
+        let mut cfg = small(presets::with_prefix_cache(
+            presets::single_dense("tiny-dense", "rtx3090"),
+            crate::config::CacheScope::PerInstance,
+        ));
+        cfg.instances[0].prefix_cache.as_mut().unwrap().policy =
+            "random".to_string();
+        let e = Simulation::new(cfg).unwrap_err().to_string();
+        assert!(e.contains("random") && e.contains("lru"), "{e}");
+
+        // Global scope: instances after the cache-creating one share the
+        // first instance's cache, but their evict names must still resolve.
+        let mut cfg = small(presets::with_prefix_cache(
+            presets::multi_dense("tiny-dense", "rtx3090"),
+            crate::config::CacheScope::Global,
+        ));
+        cfg.instances[1].prefix_cache.as_mut().unwrap().policy =
+            "bogus".to_string();
+        let e = Simulation::new(cfg).unwrap_err().to_string();
+        assert!(e.contains("bogus") && e.contains("lru"), "{e}");
+    }
+
+    #[test]
+    fn builder_overrides_skip_name_resolution() {
+        // Policies injected through the builder win over config names, so
+        // unregistered names are fine when every slot is overridden.
+        use crate::policy::{CacheLeaf, EvictionPolicy, SchedulePolicy};
+        use crate::router::{InstanceView, RoutePolicy};
+
+        struct FirstFit;
+        impl RoutePolicy for FirstFit {
+            fn choose(
+                &mut self,
+                _req: &crate::workload::Request,
+                candidates: &[InstanceView],
+            ) -> usize {
+                candidates[0].id
+            }
+            fn name(&self) -> &str {
+                "first-fit"
+            }
+        }
+        struct ReverseId;
+        impl SchedulePolicy for ReverseId {
+            fn name(&self) -> &str {
+                "reverse-id"
+            }
+            fn order(
+                &mut self,
+                wait: &mut [u64],
+                _seqs: &std::collections::HashMap<u64, crate::instance::SeqState>,
+                _now: Nanos,
+            ) {
+                wait.sort_by_key(|id| std::cmp::Reverse(*id));
+            }
+        }
+        struct EvictAll;
+        impl EvictionPolicy for EvictAll {
+            fn name(&self) -> &str {
+                "evict-first"
+            }
+            fn pick(&mut self, leaves: &[CacheLeaf]) -> Option<usize> {
+                leaves.first().map(|l| l.id)
+            }
+        }
+
+        let mut cfg = small(presets::with_prefix_cache(
+            presets::multi_dense("tiny-dense", "rtx3090"),
+            crate::config::CacheScope::PerInstance,
+        ));
+        cfg.router = "not-registered".to_string();
+        for i in &mut cfg.instances {
+            i.sched = "not-registered".to_string();
+            i.prefix_cache.as_mut().unwrap().policy = "not-registered".to_string();
+        }
+        let mut sim = Simulation::builder(cfg)
+            .with_route_policy(Box::new(FirstFit))
+            .with_sched_policy(|| Box::new(ReverseId))
+            .with_evict_policy(|| Box::new(EvictAll))
+            .build()
+            .unwrap();
+        assert_eq!(sim.router_policy_name(), "first-fit");
+        assert_eq!(sim.instance(0).sched_name(), "reverse-id");
+        let report = sim.run();
+        assert_eq!(report.num_finished, 20);
+    }
+
+    #[test]
+    fn session_affinity_reports_wrapped_name() {
+        let mut cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        cfg.router = "session-affinity".to_string();
+        cfg.workload.sessions = 5;
+        let mut sim = Simulation::new(cfg).unwrap();
+        assert_eq!(
+            sim.router_policy_name(),
+            "session-affinity(least-outstanding)"
+        );
+        let report = sim.run();
+        assert_eq!(report.num_finished, 20);
     }
 }

@@ -245,10 +245,12 @@ mod tests {
         cfg.workload.lengths = crate::workload::LengthDist::short();
         let gt = Arc::new(ExecPerfModel::new(&artifacts_root(), "tiny-dense").unwrap());
         let gt2 = gt.clone();
-        let mut sim = Simulation::with_perf_factory(cfg, &move |_, _, _| {
-            Ok(gt2.clone() as Arc<dyn crate::perf::PerfModel>)
-        })
-        .unwrap();
+        let mut sim = Simulation::builder(cfg)
+            .with_perf_factory(move |_, _, _| {
+                Ok(gt2.clone() as Arc<dyn crate::perf::PerfModel>)
+            })
+            .build()
+            .unwrap();
         let report = sim.run();
         assert_eq!(report.num_finished, 5);
         assert!(gt.executions.get() > 0);

@@ -22,10 +22,9 @@ use crate::model::{ModelSpec, OpInvocation, OpKind, DTYPE_BYTES};
 use crate::moe::{ExpertRouter, OffloadEngine};
 use crate::network::{Fabric, Topology};
 use crate::perf::{analytical::Roofline, HardwareSpec, PerfModel};
+use crate::policy::SchedulePolicy;
 use crate::sim::Nanos;
 use crate::workload::Request;
-
-use scheduler::order_wait_queue;
 
 /// Sequence lifecycle phase.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -103,6 +102,9 @@ pub struct ServingInstance {
     pub blocks: BlockManager,
     expert_router: Option<ExpertRouter>,
     offload: Option<OffloadEngine>,
+    /// Wait-queue ordering policy, resolved once at construction (from the
+    /// policy registry or injected via the simulation builder).
+    sched: Box<dyn SchedulePolicy>,
     wait: Vec<u64>,
     running: Vec<u64>,
     seqs: HashMap<u64, SeqState>,
@@ -112,12 +114,19 @@ pub struct ServingInstance {
 }
 
 impl ServingInstance {
+    /// Build an instance with an already-resolved scheduling policy.
+    ///
+    /// The coordinator resolves `cfg.sched` (a policy *name*) through the
+    /// [`PolicyRegistry`](crate::policy::PolicyRegistry) — or substitutes a
+    /// builder-injected custom policy — before calling this, so the
+    /// instance itself never touches the registry.
     pub fn new(
         id: usize,
         cfg: InstanceConfig,
         perf: Arc<dyn PerfModel>,
         block_size: u64,
         seed: u64,
+        sched: Box<dyn SchedulePolicy>,
     ) -> anyhow::Result<Self> {
         let model = cfg.model_spec()?;
         let hw = cfg.hardware_spec()?;
@@ -209,12 +218,18 @@ impl ServingInstance {
             blocks,
             expert_router,
             offload,
+            sched,
             wait: vec![],
             running: vec![],
             seqs: HashMap::new(),
             steps: 0,
             preemptions: 0,
         })
+    }
+
+    /// Name of the resolved wait-queue ordering policy.
+    pub fn sched_name(&self) -> &str {
+        self.sched.name()
     }
 
     // ---- router-visible load signals ------------------------------------
@@ -419,7 +434,7 @@ impl ServingInstance {
         cache: &mut Option<&mut PrefixCache>,
         out: &mut StepOutcome,
     ) {
-        order_wait_queue(&mut self.wait, &self.seqs, self.cfg.sched, now);
+        self.sched.order(&mut self.wait, &self.seqs, now);
         // Reject sequences that can never fit the pool (they would block
         // the head of the queue forever).
         let total = self.blocks.total_blocks();
@@ -705,8 +720,9 @@ impl ServingInstance {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{GateKind, SchedPolicy};
+    use crate::config::GateKind;
     use crate::perf::analytical::Roofline;
+    use scheduler::{Fcfs, Sjf};
 
     fn req(id: u64, arrival: Nanos, prompt: u64, output: u64) -> Request {
         Request {
@@ -725,7 +741,7 @@ mod tests {
             HardwareSpec::rtx3090(),
             ModelSpec::tiny_dense(),
         ));
-        ServingInstance::new(0, cfg, perf, 16, 1).unwrap()
+        ServingInstance::new(0, cfg, perf, 16, 1, Box::new(Fcfs)).unwrap()
     }
 
     fn moe_instance(offload: OffloadPolicy) -> ServingInstance {
@@ -736,7 +752,7 @@ mod tests {
             HardwareSpec::rtx3090(),
             ModelSpec::tiny_moe(),
         ));
-        ServingInstance::new(0, cfg, perf, 16, 1).unwrap()
+        ServingInstance::new(0, cfg, perf, 16, 1, Box::new(Fcfs)).unwrap()
     }
 
     /// Drive an instance until a request finishes or the step budget runs out.
@@ -925,7 +941,7 @@ mod tests {
                 HardwareSpec::rtx3090(),
                 ModelSpec::tiny_dense(),
             ));
-            ServingInstance::new(0, cfg, perf, 16, 1).unwrap()
+            ServingInstance::new(0, cfg, perf, 16, 1, Box::new(Fcfs)).unwrap()
         };
         let mut a = mk(1);
         let mut b = mk(2);
@@ -938,9 +954,15 @@ mod tests {
 
     #[test]
     fn scheduler_sjf_prefers_short_prompts() {
-        let mut inst = dense_instance();
-        inst.cfg.sched = SchedPolicy::Sjf;
-        inst.cfg.max_batch_seqs = 1;
+        let mut cfg = InstanceConfig::basic("t", "tiny-dense", "rtx3090");
+        cfg.max_batch_seqs = 1;
+        let perf = Arc::new(Roofline::new(
+            HardwareSpec::rtx3090(),
+            ModelSpec::tiny_dense(),
+        ));
+        let mut inst =
+            ServingInstance::new(0, cfg, perf, 16, 1, Box::new(Sjf)).unwrap();
+        assert_eq!(inst.sched_name(), "sjf");
         inst.enqueue(req(0, 0, 512, 2), 0);
         inst.enqueue(req(1, 0, 16, 2), 0);
         let out = inst.begin_step(0, None);

@@ -1,55 +1,78 @@
 //! Wait-queue ordering policies for the continuous-batching scheduler.
 //!
-//! The paper exposes scheduling as a customizable policy (§II-B); three
-//! classical orders are built in. All orders are stable and deterministic:
-//! ties break on request id.
+//! The paper exposes scheduling as a customizable policy (§II-B). The
+//! decision point is the [`SchedulePolicy`] trait; the three classical
+//! orders below back the registry's `fcfs`, `sjf`, and `priority` entries.
+//! All built-in orders are stable and deterministic: ties break on request
+//! id, and sequences that were preempted mid-decode always sort first
+//! (vLLM semantics: recompute victims re-enter ahead of fresh arrivals so
+//! their already-emitted tokens don't stall indefinitely). Custom policies
+//! implement the trait in their own file and register via
+//! [`crate::policy::register_sched_policy`] — no edits here required.
 
 use std::collections::HashMap;
 
-use crate::config::SchedPolicy;
+use crate::policy::SchedulePolicy;
 use crate::sim::Nanos;
 
 use super::{Phase, SeqState};
 
-/// Reorder the wait queue in admission order for `policy`.
-///
-/// Sequences that were preempted mid-decode always sort first (vLLM
-/// semantics: recompute victims re-enter ahead of fresh arrivals so their
-/// already-emitted tokens don't stall indefinitely).
-pub fn order_wait_queue(
-    wait: &mut [u64],
-    seqs: &HashMap<u64, SeqState>,
-    policy: SchedPolicy,
-    now: Nanos,
-) {
-    match policy {
-        SchedPolicy::Fcfs => {
-            wait.sort_by_key(|id| {
-                let s = &seqs[id];
-                (priority_class(s), s.enqueued_at, s.req.id)
-            });
-        }
-        SchedPolicy::Sjf => {
-            wait.sort_by_key(|id| {
-                let s = &seqs[id];
-                (priority_class(s), s.req.prompt_tokens, s.req.id)
-            });
-        }
-        SchedPolicy::Priority => {
-            // Shortest-job-first weighted by waiting time: rank =
-            // prompt_tokens / (1 + waited_ms). Long waiters bubble up.
-            wait.sort_by(|a, b| {
-                let ra = rank(&seqs[a], now);
-                let rb = rank(&seqs[b], now);
-                (priority_class(&seqs[a]), ra, seqs[a].req.id)
-                    .partial_cmp(&(priority_class(&seqs[b]), rb, seqs[b].req.id))
-                    .unwrap()
-            });
-        }
+/// First-come-first-served admission (vLLM default).
+#[derive(Debug, Default)]
+pub struct Fcfs;
+
+impl SchedulePolicy for Fcfs {
+    fn name(&self) -> &str {
+        "fcfs"
+    }
+    fn order(&mut self, wait: &mut [u64], seqs: &HashMap<u64, SeqState>, _now: Nanos) {
+        wait.sort_by_key(|id| {
+            let s = &seqs[id];
+            (priority_class(s), s.enqueued_at, s.req.id)
+        });
     }
 }
 
-fn priority_class(s: &SeqState) -> u8 {
+/// Shortest prompt first.
+#[derive(Debug, Default)]
+pub struct Sjf;
+
+impl SchedulePolicy for Sjf {
+    fn name(&self) -> &str {
+        "sjf"
+    }
+    fn order(&mut self, wait: &mut [u64], seqs: &HashMap<u64, SeqState>, _now: Nanos) {
+        wait.sort_by_key(|id| {
+            let s = &seqs[id];
+            (priority_class(s), s.req.prompt_tokens, s.req.id)
+        });
+    }
+}
+
+/// Shortest-job-first weighted by waiting time: rank =
+/// `prompt_tokens / (1 + waited_ms)`. Long waiters bubble up
+/// (anti-starvation SJF hybrid).
+#[derive(Debug, Default)]
+pub struct Priority;
+
+impl SchedulePolicy for Priority {
+    fn name(&self) -> &str {
+        "priority"
+    }
+    fn order(&mut self, wait: &mut [u64], seqs: &HashMap<u64, SeqState>, now: Nanos) {
+        wait.sort_by(|a, b| {
+            let ra = rank(&seqs[a], now);
+            let rb = rank(&seqs[b], now);
+            (priority_class(&seqs[a]), ra, seqs[a].req.id)
+                .partial_cmp(&(priority_class(&seqs[b]), rb, seqs[b].req.id))
+                .unwrap()
+        });
+    }
+}
+
+/// Admission class shared by the built-in orders: preemption victims first,
+/// then P/D hand-offs (already holding a user stream), then fresh prefills.
+pub fn priority_class(s: &SeqState) -> u8 {
     match s.phase {
         _ if s.preemptions > 0 => 0,
         Phase::Decode { .. } => 1, // P/D handoffs: already holding a user stream
@@ -88,12 +111,16 @@ mod tests {
         )
     }
 
+    fn builtin_policies() -> Vec<Box<dyn SchedulePolicy>> {
+        vec![Box::new(Fcfs), Box::new(Sjf), Box::new(Priority)]
+    }
+
     #[test]
     fn fcfs_orders_by_arrival() {
         let seqs: HashMap<u64, SeqState> =
             [seq(0, 10, 300), seq(1, 10, 100), seq(2, 10, 200)].into();
         let mut wait = vec![0, 1, 2];
-        order_wait_queue(&mut wait, &seqs, SchedPolicy::Fcfs, 1000);
+        Fcfs.order(&mut wait, &seqs, 1000);
         assert_eq!(wait, vec![1, 2, 0]);
     }
 
@@ -102,7 +129,7 @@ mod tests {
         let seqs: HashMap<u64, SeqState> =
             [seq(0, 300, 0), seq(1, 50, 0), seq(2, 100, 0)].into();
         let mut wait = vec![0, 1, 2];
-        order_wait_queue(&mut wait, &seqs, SchedPolicy::Sjf, 0);
+        Sjf.order(&mut wait, &seqs, 0);
         assert_eq!(wait, vec![1, 2, 0]);
     }
 
@@ -111,9 +138,9 @@ mod tests {
         let mut m: HashMap<u64, SeqState> = [seq(0, 10, 0), seq(1, 999, 500)].into();
         m.get_mut(&1).unwrap().preemptions = 1;
         let mut wait = vec![0, 1];
-        for p in [SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Priority] {
-            order_wait_queue(&mut wait, &m, p, 1000);
-            assert_eq!(wait[0], 1, "policy {p:?}");
+        for mut p in builtin_policies() {
+            p.order(&mut wait, &m, 1000);
+            assert_eq!(wait[0], 1, "policy {}", p.name());
         }
     }
 
@@ -123,7 +150,7 @@ mod tests {
         let seqs: HashMap<u64, SeqState> =
             [seq(0, 512, 0), seq(1, 64, 999_000_000)].into();
         let mut wait = vec![0, 1];
-        order_wait_queue(&mut wait, &seqs, SchedPolicy::Priority, 1_000_000_000);
+        Priority.order(&mut wait, &seqs, 1_000_000_000);
         assert_eq!(wait[0], 0, "aged long prompt should rank first");
     }
 
@@ -131,7 +158,18 @@ mod tests {
     fn deterministic_tiebreak() {
         let seqs: HashMap<u64, SeqState> = [seq(3, 10, 0), seq(1, 10, 0), seq(2, 10, 0)].into();
         let mut wait = vec![3, 1, 2];
-        order_wait_queue(&mut wait, &seqs, SchedPolicy::Fcfs, 0);
+        Fcfs.order(&mut wait, &seqs, 0);
         assert_eq!(wait, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn names_match_registry_keys() {
+        for p in builtin_policies() {
+            assert!(
+                crate::policy::PolicyRegistry::builtins().has_sched(p.name()),
+                "builtin sched '{}' missing from registry",
+                p.name()
+            );
+        }
     }
 }

@@ -15,6 +15,14 @@
 //! `Arc<dyn PerfModel + Send + Sync>`), which the [`sweep`] engine exploits
 //! to run whole configuration grids across worker threads while keeping
 //! every individual simulation sequential and bit-deterministic.
+//!
+//! Every serving decision point — request routing, wait-queue scheduling,
+//! prefix-cache eviction — is a named, registered trait object (see
+//! [`policy`]): configs store policy *names*, a [`policy::PolicyRegistry`]
+//! maps names to factories, and resolution happens once when a
+//! [`coordinator::Simulation`] is built. Custom policies plug in through
+//! [`policy::register_route_policy`] & friends or per-simulation via
+//! [`coordinator::Simulation::builder`], with zero core edits.
 
 pub mod cli;
 pub mod config;
@@ -27,6 +35,7 @@ pub mod moe;
 pub mod model;
 pub mod network;
 pub mod perf;
+pub mod policy;
 pub mod router;
 pub mod runtime;
 pub mod sim;

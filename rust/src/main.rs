@@ -18,14 +18,12 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use llmservingsim::cli::Args;
-use llmservingsim::config::{
-    presets, PerfBackend, RouterPolicy, SchedPolicy, SimConfig,
-};
+use llmservingsim::config::{presets, PerfBackend, SimConfig};
 use llmservingsim::coordinator::{run_config, Simulation};
 use llmservingsim::groundtruth::ExecPerfModel;
-use llmservingsim::memory::EvictPolicy;
 use llmservingsim::model::ModelSpec;
 use llmservingsim::perf::HardwareSpec;
+use llmservingsim::policy;
 use llmservingsim::runtime::profiler::{profile_to_file, ProfileOptions};
 use llmservingsim::sweep::{
     render_table, run_sweep, summarize, sweep_json, SweepSpec,
@@ -46,9 +44,12 @@ COMMANDS:
              [--hardware H] [--perf analytical|cycle|cycle-replay|trace:PATH]
              [--requests N] [--rate R] [--seed S] [--out FILE]
   sweep      [--presets A,B,..] [--hardware H1,H2,..] [--rates R1,R2,..]
-             [--routers P1,P2,..] [--scheds S1,S2,..] [--evict E1,E2,..]
-             [--perf B1,B2,..] [--model M] [--moe-model M] [--requests N]
-             [--seed S] [--threads T] [--baseline NAME] [--out FILE] [--quick]
+             [--routers P1,P2,..|all] [--scheds S1,S2,..|all]
+             [--evict E1,E2,..|all] [--perf B1,B2,..] [--model M]
+             [--moe-model M] [--requests N] [--seed S] [--threads T]
+             [--baseline NAME] [--out FILE] [--quick]
+             (policy axes take registry names; `all` sweeps every
+              registered policy, including custom ones)
   validate   --model <preset> [--artifacts DIR] [--trace FILE]
              [--requests N] [--rate R]
   gen-trace  [--requests N] [--rate R] [--seed S] --out FILE
@@ -167,6 +168,16 @@ where
     }
 }
 
+/// Resolve a policy-axis flag: comma-separated registry names, or the
+/// literal `all` to sweep every name registered for that decision point.
+fn policy_axis(args: &Args, flag: &str, all_names: Vec<String>) -> Vec<String> {
+    match args.str_flag(flag) {
+        None => vec![],
+        Some("all") => all_names,
+        Some(s) => csv(s).into_iter().map(str::to_string).collect(),
+    }
+}
+
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let mut spec = SweepSpec {
         dense_model: args.str_or("model", "tiny-dense").to_string(),
@@ -184,18 +195,13 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         spec.axes.hardware = csv(h).into_iter().map(str::to_string).collect();
     }
     spec.axes.rates = csv_parse::<f64>(args, "rates")?;
-    spec.axes.routers = csv_parse::<RouterPolicy>(args, "routers")?;
-    spec.axes.scheds = match args.str_flag("scheds") {
-        None => vec![],
-        Some(s) => csv(s)
-            .into_iter()
-            .map(|t| {
-                SchedPolicy::from_str(t)
-                    .ok_or_else(|| anyhow::anyhow!("unknown sched policy '{t}'"))
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?,
-    };
-    spec.axes.evictions = csv_parse::<EvictPolicy>(args, "evict")?;
+    // Policy axes take registry names; unknown names are rejected by
+    // `expand()` with the registered candidates. `all` sweeps everything
+    // currently registered (built-ins + user registrations).
+    let registry = policy::snapshot();
+    spec.axes.routers = policy_axis(args, "routers", registry.route_names());
+    spec.axes.scheds = policy_axis(args, "scheds", registry.sched_names());
+    spec.axes.evictions = policy_axis(args, "evict", registry.evict_names());
     spec.axes.backends = csv_parse::<PerfBackend>(args, "perf")?;
 
     let cfgs = spec.expand()?;
@@ -315,9 +321,11 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     println!("running ground-truth execution engine ({model}) ...");
     let gt_model = Arc::new(ExecPerfModel::new(&root, &model)?);
     let gt2 = gt_model.clone();
-    let mut gt_sim = Simulation::with_perf_factory(cfg.clone(), &move |_, _, _| {
-        Ok(gt2.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
-    })?;
+    let mut gt_sim = Simulation::builder(cfg.clone())
+        .with_perf_factory(move |_, _, _| {
+            Ok(gt2.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
+        })
+        .build()?;
     let gt_report = gt_sim.run();
 
     // Simulator: trace-driven from a profiled DB.
@@ -399,5 +407,10 @@ fn cmd_presets() -> anyhow::Result<()> {
     for p in presets::serving_preset_names() {
         println!("  {p}");
     }
+    let registry = policy::snapshot();
+    println!("policies (registry; custom registrations appear here too):");
+    println!("  router: {}", registry.route_names().join(", "));
+    println!("  sched:  {}", registry.sched_names().join(", "));
+    println!("  evict:  {}", registry.evict_names().join(", "));
     Ok(())
 }

@@ -8,11 +8,24 @@
 //! hits avoid prefill compute outright; host hits additionally pay a
 //! host->device transfer priced by the caller from `HardwareSpec::host_bw`).
 //! Hierarchies with more tiers (e.g. SSD) are modeled by chaining managers.
+//!
+//! Victim selection is a [`EvictionPolicy`] trait object: the built-ins
+//! below back the registry's `lru`, `lfu`, and `largest` entries, and
+//! custom policies plug in via
+//! [`crate::policy::register_evict_policy`] or
+//! [`Simulation::builder`](crate::coordinator::Simulation::builder) with no
+//! edits to this module.
 
 use super::radix::{RadixTree, Token};
+use crate::policy::{CacheLeaf, EvictionPolicy};
 use crate::sim::Nanos;
 
-/// Eviction policy over radix-tree leaves.
+/// Typed handle for the built-in eviction policies.
+///
+/// The cache itself stores a `Box<dyn EvictionPolicy>`; this enum is the
+/// convenience bridge for code that wants a `Copy` value (tests, ablation
+/// benches) — `to_policy()` instantiates the matching trait object, and
+/// `as_str()` is the registry name.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EvictPolicy {
     /// Least-recently-used leaf first (RadixAttention default).
@@ -37,6 +50,10 @@ impl std::str::FromStr for EvictPolicy {
 }
 
 impl EvictPolicy {
+    pub fn all() -> &'static [EvictPolicy] {
+        &[EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::LargestFirst]
+    }
+
     pub fn as_str(self) -> &'static str {
         match self {
             EvictPolicy::Lru => "lru",
@@ -45,22 +62,65 @@ impl EvictPolicy {
         }
     }
 
-    /// Choose a victim among `(id, tokens, last_access, access_count)`.
-    fn pick(self, leaves: &[(usize, u64, Nanos, u64)]) -> Option<usize> {
+    /// Instantiate the matching built-in trait object.
+    pub fn to_policy(self) -> Box<dyn EvictionPolicy> {
         match self {
-            EvictPolicy::Lru => leaves
-                .iter()
-                .min_by_key(|(id, _, la, _)| (*la, *id))
-                .map(|l| l.0),
-            EvictPolicy::Lfu => leaves
-                .iter()
-                .min_by_key(|(id, _, _, ac)| (*ac, *id))
-                .map(|l| l.0),
-            EvictPolicy::LargestFirst => leaves
-                .iter()
-                .max_by_key(|(id, t, _, _)| (*t, *id))
-                .map(|l| l.0),
+            EvictPolicy::Lru => Box::new(Lru),
+            EvictPolicy::Lfu => Box::new(Lfu),
+            EvictPolicy::LargestFirst => Box::new(LargestFirst),
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in eviction policies
+// ---------------------------------------------------------------------------
+
+/// Least-recently-used leaf first (RadixAttention default).
+#[derive(Debug, Default)]
+pub struct Lru;
+
+impl EvictionPolicy for Lru {
+    fn name(&self) -> &str {
+        "lru"
+    }
+    fn pick(&mut self, leaves: &[CacheLeaf]) -> Option<usize> {
+        leaves
+            .iter()
+            .min_by_key(|l| (l.last_access, l.id))
+            .map(|l| l.id)
+    }
+}
+
+/// Least-frequently-used leaf first.
+#[derive(Debug, Default)]
+pub struct Lfu;
+
+impl EvictionPolicy for Lfu {
+    fn name(&self) -> &str {
+        "lfu"
+    }
+    fn pick(&mut self, leaves: &[CacheLeaf]) -> Option<usize> {
+        leaves
+            .iter()
+            .min_by_key(|l| (l.access_count, l.id))
+            .map(|l| l.id)
+    }
+}
+
+/// Largest leaf first (frees the most tokens per eviction).
+#[derive(Debug, Default)]
+pub struct LargestFirst;
+
+impl EvictionPolicy for LargestFirst {
+    fn name(&self) -> &str {
+        "largest"
+    }
+    fn pick(&mut self, leaves: &[CacheLeaf]) -> Option<usize> {
+        leaves
+            .iter()
+            .max_by_key(|l| (l.tokens, l.id))
+            .map(|l| l.id)
     }
 }
 
@@ -105,7 +165,6 @@ impl CacheStats {
 }
 
 /// Two-tier prefix cache for one scope (instance-local or global).
-#[derive(Debug)]
 pub struct PrefixCache {
     device: RadixTree,
     host: RadixTree,
@@ -113,12 +172,38 @@ pub struct PrefixCache {
     pub device_capacity: u64,
     /// Host-tier capacity in tokens.
     pub host_capacity: u64,
-    pub policy: EvictPolicy,
+    /// Device-tier victim selection. The host tier always uses LRU: it is
+    /// a spill buffer whose contents were already chosen for eviction once.
+    policy: Box<dyn EvictionPolicy>,
     pub stats: CacheStats,
 }
 
+impl std::fmt::Debug for PrefixCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefixCache")
+            .field("device_tokens", &self.device.total_tokens())
+            .field("host_tokens", &self.host.total_tokens())
+            .field("device_capacity", &self.device_capacity)
+            .field("host_capacity", &self.host_capacity)
+            .field("policy", &self.policy.name())
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
 impl PrefixCache {
+    /// Build with a built-in eviction policy (convenience; see
+    /// [`PrefixCache::with_policy`] for custom trait objects).
     pub fn new(device_capacity: u64, host_capacity: u64, policy: EvictPolicy) -> Self {
+        Self::with_policy(device_capacity, host_capacity, policy.to_policy())
+    }
+
+    /// Build with an arbitrary (possibly custom) eviction policy.
+    pub fn with_policy(
+        device_capacity: u64,
+        host_capacity: u64,
+        policy: Box<dyn EvictionPolicy>,
+    ) -> Self {
         PrefixCache {
             device: RadixTree::new(),
             host: RadixTree::new(),
@@ -127,6 +212,11 @@ impl PrefixCache {
             policy,
             stats: CacheStats::default(),
         }
+    }
+
+    /// Name of the device-tier eviction policy.
+    pub fn policy_name(&self) -> &str {
+        self.policy.name()
     }
 
     pub fn device_tokens(&self) -> u64 {
@@ -190,12 +280,25 @@ impl PrefixCache {
     }
 
     /// Evict one device leaf to the host tier. Returns false if nothing is
-    /// evictable.
+    /// evictable (or the policy refuses).
     fn evict_one(&mut self, now: Nanos) -> bool {
         let leaves = self.device.leaves();
         let Some(victim) = self.policy.pick(&leaves) else {
             return false;
         };
+        // Hard check even in release: the natural custom-policy bug —
+        // returning a slice *index* instead of a leaf *id* — would
+        // otherwise evict the wrong leaf silently (or panic deep inside
+        // the radix tree without naming the misbehaving policy).
+        assert!(
+            leaves.iter().any(|l| l.id == victim),
+            "eviction policy '{}' picked leaf {}, which is not a candidate \
+             (leaf ids: {:?}); EvictionPolicy::pick must return the `id` \
+             field of one of the leaves it was given",
+            self.policy.name(),
+            victim,
+            leaves.iter().map(|l| l.id).collect::<Vec<_>>()
+        );
         // Reconstruct the leaf's full token path before removal so the host
         // tier indexes the complete prefix.
         let path = self.device.path_tokens(victim);
@@ -204,7 +307,7 @@ impl PrefixCache {
         self.host.insert(&path, now);
         while self.host.total_tokens() > self.host_capacity {
             let hl = self.host.leaves();
-            let Some(v) = EvictPolicy::Lru.pick(&hl) else {
+            let Some(v) = Lru.pick(&hl) else {
                 break;
             };
             let dropped = self.host.remove_leaf(v);
@@ -324,6 +427,64 @@ mod tests {
     }
 
     #[test]
+    fn custom_policy_via_with_policy() {
+        /// Evicts the leaf with the smallest id — pathological but legal.
+        struct SmallestId;
+        impl EvictionPolicy for SmallestId {
+            fn name(&self) -> &str {
+                "smallest-id"
+            }
+            fn pick(&mut self, leaves: &[CacheLeaf]) -> Option<usize> {
+                leaves.iter().map(|l| l.id).min()
+            }
+        }
+        let mut c = PrefixCache::with_policy(40, 1000, Box::new(SmallestId));
+        assert_eq!(c.policy_name(), "smallest-id");
+        c.insert(&toks(0..32), 1);
+        c.insert(&toks(100..132), 2);
+        assert!(c.device_tokens() <= 40, "custom policy must still evict");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "not a candidate")]
+    fn policy_returning_non_leaf_id_is_caught() {
+        // The natural custom-policy bug: a slice index instead of a leaf
+        // id. usize::MAX can never be a valid node id.
+        struct IndexNotId;
+        impl EvictionPolicy for IndexNotId {
+            fn name(&self) -> &str {
+                "index-not-id"
+            }
+            fn pick(&mut self, _leaves: &[CacheLeaf]) -> Option<usize> {
+                Some(usize::MAX)
+            }
+        }
+        let mut c = PrefixCache::with_policy(40, 1000, Box::new(IndexNotId));
+        c.insert(&toks(0..32), 1);
+        c.insert(&toks(100..132), 2); // over capacity → pick() → panic
+    }
+
+    #[test]
+    fn refusing_policy_stops_eviction() {
+        struct Never;
+        impl EvictionPolicy for Never {
+            fn name(&self) -> &str {
+                "never"
+            }
+            fn pick(&mut self, _leaves: &[CacheLeaf]) -> Option<usize> {
+                None
+            }
+        }
+        let mut c = PrefixCache::with_policy(40, 1000, Box::new(Never));
+        c.insert(&toks(0..32), 1);
+        c.insert(&toks(100..132), 2);
+        // nothing evicted: the device tier runs over capacity instead
+        assert_eq!(c.device_tokens(), 64);
+        assert_eq!(c.stats.evicted_to_host, 0);
+    }
+
+    #[test]
     fn policy_parsing() {
         // std::str::FromStr (not an inherent shadow), so `.parse()` works.
         assert_eq!("lru".parse::<EvictPolicy>().unwrap(), EvictPolicy::Lru);
@@ -334,9 +495,10 @@ mod tests {
         );
         assert!("fifo".parse::<EvictPolicy>().is_err());
         assert_eq!(EvictPolicy::Lru.as_str(), "lru");
-        // as_str <-> parse round-trip for every variant
-        for p in [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::LargestFirst] {
-            assert_eq!(p.as_str().parse::<EvictPolicy>().unwrap(), p);
+        // as_str <-> parse <-> to_policy round-trip for every variant
+        for p in EvictPolicy::all() {
+            assert_eq!(p.as_str().parse::<EvictPolicy>().unwrap(), *p);
+            assert_eq!(p.to_policy().name(), p.as_str());
         }
     }
 }

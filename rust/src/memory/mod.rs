@@ -6,8 +6,10 @@ pub mod cache;
 pub mod radix;
 
 pub use block::{BlockId, BlockManager, OutOfBlocks};
-pub use cache::{CacheStats, EvictPolicy, PrefixCache, PrefixHit};
-pub use radix::{RadixTree, Token};
+pub use cache::{
+    CacheStats, EvictPolicy, LargestFirst, Lfu, Lru, PrefixCache, PrefixHit,
+};
+pub use radix::{CacheLeaf, RadixTree, Token};
 
 #[cfg(test)]
 mod tests {
@@ -19,8 +21,8 @@ mod tests {
         t.insert(&[1, 2, 3, 4, 5], 1);
         t.insert(&[1, 2, 9], 2); // split after [1,2]
         let leaves = t.leaves();
-        for (id, _, _, _) in leaves {
-            let path = t.path_tokens(id);
+        for leaf in leaves {
+            let path = t.path_tokens(leaf.id);
             // every reconstructed path must fully match in the tree
             assert_eq!(t.match_prefix(&path).tokens, path.len() as u64);
             assert!(path.starts_with(&[1, 2]));

@@ -12,6 +12,23 @@ use crate::sim::Nanos;
 /// Token alphabet (synthetic token ids).
 pub type Token = u32;
 
+/// Compact, policy-visible snapshot of one evictable leaf.
+///
+/// This is the input type of
+/// [`EvictionPolicy::pick`](crate::policy::EvictionPolicy::pick)
+/// (re-exported as `policy::CacheLeaf`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheLeaf {
+    /// Stable node id (returned by the policy to evict this leaf).
+    pub id: usize,
+    /// Tokens freed if this leaf is evicted.
+    pub tokens: u64,
+    /// Simulation time of the last lookup touching this leaf.
+    pub last_access: Nanos,
+    /// Number of lookups that touched this leaf.
+    pub access_count: u64,
+}
+
 #[derive(Debug)]
 struct Node {
     /// Compressed edge label leading into this node (empty at root).
@@ -212,15 +229,19 @@ impl RadixTree {
         self.node_mut(parent).children.insert(first_prefix, mid);
     }
 
-    /// Collect leaf nodes (eviction candidates) as
-    /// `(node id, tokens, last_access, access_count)`.
-    pub fn leaves(&self) -> Vec<(usize, u64, Nanos, u64)> {
+    /// Collect leaf nodes (eviction candidates).
+    pub fn leaves(&self) -> Vec<CacheLeaf> {
         self.nodes
             .iter()
             .enumerate()
             .filter_map(|(id, n)| n.as_ref().map(|n| (id, n)))
             .filter(|(id, n)| *id != ROOT && n.children.is_empty())
-            .map(|(id, n)| (id, n.label.len() as u64, n.last_access, n.access_count))
+            .map(|(id, n)| CacheLeaf {
+                id,
+                tokens: n.label.len() as u64,
+                last_access: n.last_access,
+                access_count: n.access_count,
+            })
             .collect()
     }
 
@@ -356,11 +377,10 @@ mod tests {
         let leaves = t.leaves();
         assert_eq!(leaves.len(), 2);
         // evict the older leaf ([3,4], last_access=1)
-        let (victim, tokens, la, _) =
-            *leaves.iter().min_by_key(|(_, _, la, _)| *la).unwrap();
-        assert_eq!(la, 1);
-        assert_eq!(tokens, 2);
-        t.remove_leaf(victim);
+        let victim = *leaves.iter().min_by_key(|l| l.last_access).unwrap();
+        assert_eq!(victim.last_access, 1);
+        assert_eq!(victim.tokens, 2);
+        t.remove_leaf(victim.id);
         assert_eq!(t.total_tokens(), 4);
         assert_eq!(t.match_prefix(&seq(&[1, 2, 3, 4])).tokens, 2);
         assert_eq!(t.match_prefix(&seq(&[1, 2, 9, 9])).tokens, 4);
@@ -374,8 +394,8 @@ mod tests {
         let m = t.match_prefix(&seq(&[1, 2, 3]));
         t.touch(&m, 42);
         let leaves = t.leaves();
-        assert_eq!(leaves[0].2, 42);
-        assert_eq!(leaves[0].3, 2); // insert + touch
+        assert_eq!(leaves[0].last_access, 42);
+        assert_eq!(leaves[0].access_count, 2); // insert + touch
     }
 
     #[test]
@@ -412,7 +432,7 @@ mod tests {
                     if leaves.is_empty() {
                         break;
                     }
-                    t.remove_leaf(leaves[0].0);
+                    t.remove_leaf(leaves[0].id);
                     t.check_invariants()?;
                 }
                 Ok(())

@@ -1,0 +1,429 @@
+//! Unified policy-plugin layer (§II-B: "flexible interfaces for request
+//! routing, cache management, and scheduling policies").
+//!
+//! Every serving decision point is a named, registered trait object:
+//!
+//! | Decision point        | Trait              | Built-in names |
+//! |-----------------------|--------------------|----------------|
+//! | global request routing| [`RoutePolicy`]    | `round-robin`, `least-outstanding`, `least-kv`, `prefix-aware`, `session-affinity` |
+//! | wait-queue ordering   | [`SchedulePolicy`] | `fcfs`, `sjf`, `priority` |
+//! | prefix-cache eviction | [`EvictionPolicy`] | `lru`, `lfu`, `largest` |
+//!
+//! [`SimConfig`](crate::config::SimConfig) stores policy *names* (plain
+//! strings, so JSON round-trip and presets keep working); a
+//! [`PolicyRegistry`] maps names to factory closures, and resolution
+//! happens exactly once, when a
+//! [`Simulation`](crate::coordinator::Simulation) is built. Downstream
+//! code adds a policy in one file with zero core edits:
+//!
+//! 1. implement the trait (all three are object-safe and `Send`);
+//! 2. either register a factory under a name
+//!    ([`register_sched_policy`] & friends make it reachable from configs
+//!    and [sweep](crate::sweep) axes), or inject an instance directly via
+//!    [`Simulation::builder`](crate::coordinator::Simulation::builder).
+//!
+//! The registry is deterministic: names are stored in a `BTreeMap`, so
+//! enumeration order is stable and sweep grids built from
+//! [`PolicyRegistry::route_names`] etc. are reproducible.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::sim::Nanos;
+
+pub use crate::memory::radix::CacheLeaf;
+pub use crate::router::{InstanceView, RoutePolicy};
+
+// ---------------------------------------------------------------------------
+// Traits
+// ---------------------------------------------------------------------------
+
+/// Wait-queue ordering policy for the continuous-batching scheduler.
+///
+/// `order` reorders `wait` in admission order (index 0 is admitted first).
+/// Implementations must be deterministic — break ties on request id — or
+/// simulations stop being reproducible. The built-ins always sort
+/// preempted sequences first (vLLM recompute semantics); custom policies
+/// are free to choose otherwise.
+pub trait SchedulePolicy: Send {
+    /// Registry/report name of this policy.
+    fn name(&self) -> &str;
+
+    /// Reorder `wait` (sequence ids) in admission order.
+    fn order(
+        &mut self,
+        wait: &mut [u64],
+        seqs: &std::collections::HashMap<u64, crate::instance::SeqState>,
+        now: Nanos,
+    );
+}
+
+/// Victim-selection policy for the tiered prefix cache.
+/// Candidates arrive as [`CacheLeaf`] snapshots (id, tokens, last access,
+/// access count), collected from the radix tree by the cache manager.
+///
+/// `pick` returns the id of the leaf to evict, or `None` to refuse (the
+/// cache then stops evicting). Must be deterministic: break ties on
+/// `leaf.id`.
+pub trait EvictionPolicy: Send {
+    /// Registry/report name of this policy.
+    fn name(&self) -> &str;
+
+    /// Choose a victim among `leaves` (possibly empty).
+    fn pick(&mut self, leaves: &[CacheLeaf]) -> Option<usize>;
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Factory for route policies. `Arc` so a registry snapshot is cheap.
+pub type RouteFactory = Arc<dyn Fn() -> Box<dyn RoutePolicy> + Send + Sync>;
+/// Factory for schedule policies.
+pub type SchedFactory = Arc<dyn Fn() -> Box<dyn SchedulePolicy> + Send + Sync>;
+/// Factory for eviction policies.
+pub type EvictFactory = Arc<dyn Fn() -> Box<dyn EvictionPolicy> + Send + Sync>;
+
+/// Maps policy names to factory closures for all three decision points.
+///
+/// Factories (not instances) are stored because policies are stateful and
+/// every simulation needs a fresh instance — sharing one across sweep
+/// workers would break determinism. Registration replaces any previous
+/// entry under the same name (last wins), so re-registering is idempotent.
+#[derive(Clone)]
+pub struct PolicyRegistry {
+    route: BTreeMap<String, RouteFactory>,
+    sched: BTreeMap<String, SchedFactory>,
+    evict: BTreeMap<String, EvictFactory>,
+}
+
+impl Default for PolicyRegistry {
+    /// The built-in registry ([`PolicyRegistry::builtins`]).
+    fn default() -> Self {
+        Self::builtins()
+    }
+}
+
+impl std::fmt::Debug for PolicyRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PolicyRegistry")
+            .field("route", &self.route_names())
+            .field("sched", &self.sched_names())
+            .field("evict", &self.evict_names())
+            .finish()
+    }
+}
+
+fn unknown(kind: &str, name: &str, known: &[String]) -> anyhow::Error {
+    anyhow::anyhow!(
+        "unknown {kind} policy '{name}' (registered: {})",
+        known.join("|")
+    )
+}
+
+impl PolicyRegistry {
+    /// A registry with no entries (useful for fully-custom setups).
+    pub fn empty() -> Self {
+        PolicyRegistry {
+            route: BTreeMap::new(),
+            sched: BTreeMap::new(),
+            evict: BTreeMap::new(),
+        }
+    }
+
+    /// A registry pre-seeded with every built-in policy.
+    pub fn builtins() -> Self {
+        use crate::router::{
+            LeastKvLoad, LeastOutstanding, PrefixAware, RoundRobin,
+            SessionAffinity,
+        };
+
+        let mut r = Self::empty();
+        r.register_route("round-robin", || Box::new(RoundRobin::default()));
+        r.register_route("least-outstanding", || Box::new(LeastOutstanding));
+        r.register_route("least-kv", || Box::new(LeastKvLoad));
+        r.register_route("prefix-aware", || Box::new(PrefixAware));
+        // Session affinity is a wrapper: sticky sessions over a fallback
+        // policy that places each session's first request. The instance's
+        // `name()` reports both ("session-affinity(least-outstanding)") so
+        // reports never misattribute the placement decisions.
+        r.register_route("session-affinity", || {
+            Box::new(SessionAffinity::wrapping(Box::new(LeastOutstanding)))
+        });
+        // The sched/evict sides derive from the typed enums, so name,
+        // enum, and registry can never drift apart.
+        for s in crate::config::SchedPolicy::all() {
+            let s = *s;
+            r.register_sched(s.as_str(), move || s.to_policy());
+        }
+        for e in crate::memory::EvictPolicy::all() {
+            let e = *e;
+            r.register_evict(e.as_str(), move || e.to_policy());
+        }
+        r
+    }
+
+    // ---- registration -----------------------------------------------------
+
+    /// Register (or replace) a route-policy factory under `name`.
+    pub fn register_route(
+        &mut self,
+        name: impl Into<String>,
+        factory: impl Fn() -> Box<dyn RoutePolicy> + Send + Sync + 'static,
+    ) {
+        self.route.insert(name.into(), Arc::new(factory));
+    }
+
+    /// Register (or replace) a schedule-policy factory under `name`.
+    pub fn register_sched(
+        &mut self,
+        name: impl Into<String>,
+        factory: impl Fn() -> Box<dyn SchedulePolicy> + Send + Sync + 'static,
+    ) {
+        self.sched.insert(name.into(), Arc::new(factory));
+    }
+
+    /// Register (or replace) an eviction-policy factory under `name`.
+    pub fn register_evict(
+        &mut self,
+        name: impl Into<String>,
+        factory: impl Fn() -> Box<dyn EvictionPolicy> + Send + Sync + 'static,
+    ) {
+        self.evict.insert(name.into(), Arc::new(factory));
+    }
+
+    // ---- resolution -------------------------------------------------------
+
+    /// Instantiate the route policy registered as `name`.
+    pub fn make_route(&self, name: &str) -> anyhow::Result<Box<dyn RoutePolicy>> {
+        match self.route.get(name) {
+            Some(f) => Ok(f()),
+            None => Err(unknown("router", name, &self.route_names())),
+        }
+    }
+
+    /// Instantiate the schedule policy registered as `name`.
+    pub fn make_sched(&self, name: &str) -> anyhow::Result<Box<dyn SchedulePolicy>> {
+        match self.sched.get(name) {
+            Some(f) => Ok(f()),
+            None => Err(unknown("sched", name, &self.sched_names())),
+        }
+    }
+
+    /// Instantiate the eviction policy registered as `name`.
+    pub fn make_evict(&self, name: &str) -> anyhow::Result<Box<dyn EvictionPolicy>> {
+        match self.evict.get(name) {
+            Some(f) => Ok(f()),
+            None => Err(unknown("evict", name, &self.evict_names())),
+        }
+    }
+
+    pub fn has_route(&self, name: &str) -> bool {
+        self.route.contains_key(name)
+    }
+    pub fn has_sched(&self, name: &str) -> bool {
+        self.sched.contains_key(name)
+    }
+    pub fn has_evict(&self, name: &str) -> bool {
+        self.evict.contains_key(name)
+    }
+
+    // ---- validation without instantiation ---------------------------------
+    // (factories may be stateful/expensive; name checks must not run them)
+
+    /// Error (with the candidate list) unless `name` is a registered route
+    /// policy.
+    pub fn check_route(&self, name: &str) -> anyhow::Result<()> {
+        if self.has_route(name) {
+            Ok(())
+        } else {
+            Err(unknown("router", name, &self.route_names()))
+        }
+    }
+
+    /// Error (with the candidate list) unless `name` is a registered
+    /// schedule policy.
+    pub fn check_sched(&self, name: &str) -> anyhow::Result<()> {
+        if self.has_sched(name) {
+            Ok(())
+        } else {
+            Err(unknown("sched", name, &self.sched_names()))
+        }
+    }
+
+    /// Error (with the candidate list) unless `name` is a registered
+    /// eviction policy.
+    pub fn check_evict(&self, name: &str) -> anyhow::Result<()> {
+        if self.has_evict(name) {
+            Ok(())
+        } else {
+            Err(unknown("evict", name, &self.evict_names()))
+        }
+    }
+
+    // ---- enumeration (sorted, deterministic) ------------------------------
+
+    /// All registered route-policy names, sorted.
+    pub fn route_names(&self) -> Vec<String> {
+        self.route.keys().cloned().collect()
+    }
+
+    /// All registered schedule-policy names, sorted.
+    pub fn sched_names(&self) -> Vec<String> {
+        self.sched.keys().cloned().collect()
+    }
+
+    /// All registered eviction-policy names, sorted.
+    pub fn evict_names(&self) -> Vec<String> {
+        self.evict.keys().cloned().collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global registry
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<RwLock<PolicyRegistry>> = OnceLock::new();
+
+/// The process-wide registry, pre-seeded with all built-ins. Configs and
+/// sweep axes referring to policies by name resolve against a snapshot of
+/// this unless a custom registry is supplied via
+/// [`Simulation::builder`](crate::coordinator::Simulation::builder).
+pub fn global() -> &'static RwLock<PolicyRegistry> {
+    GLOBAL.get_or_init(|| RwLock::new(PolicyRegistry::builtins()))
+}
+
+/// A point-in-time copy of the global registry (cheap: factories are
+/// `Arc`-shared). Simulations resolve against snapshots, so a concurrent
+/// registration never changes a running simulation.
+pub fn snapshot() -> PolicyRegistry {
+    global().read().expect("policy registry lock poisoned").clone()
+}
+
+/// Register a route policy in the global registry (last wins).
+pub fn register_route_policy(
+    name: impl Into<String>,
+    factory: impl Fn() -> Box<dyn RoutePolicy> + Send + Sync + 'static,
+) {
+    global()
+        .write()
+        .expect("policy registry lock poisoned")
+        .register_route(name, factory);
+}
+
+/// Register a schedule policy in the global registry (last wins).
+pub fn register_sched_policy(
+    name: impl Into<String>,
+    factory: impl Fn() -> Box<dyn SchedulePolicy> + Send + Sync + 'static,
+) {
+    global()
+        .write()
+        .expect("policy registry lock poisoned")
+        .register_sched(name, factory);
+}
+
+/// Register an eviction policy in the global registry (last wins).
+pub fn register_evict_policy(
+    name: impl Into<String>,
+    factory: impl Fn() -> Box<dyn EvictionPolicy> + Send + Sync + 'static,
+) {
+    global()
+        .write()
+        .expect("policy registry lock poisoned")
+        .register_evict(name, factory);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_by_name() {
+        let reg = PolicyRegistry::builtins();
+        for name in reg.route_names() {
+            let p = reg.make_route(&name).unwrap();
+            // session-affinity reports its fallback inside the name
+            assert!(
+                p.name().starts_with(name.as_str()),
+                "route '{}' reports '{}'",
+                name,
+                p.name()
+            );
+        }
+        for name in reg.sched_names() {
+            assert_eq!(reg.make_sched(&name).unwrap().name(), name);
+        }
+        for name in reg.evict_names() {
+            assert_eq!(reg.make_evict(&name).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_names_error_with_candidates() {
+        let reg = PolicyRegistry::builtins();
+        let e = reg.make_route("coin-flip").unwrap_err().to_string();
+        assert!(e.contains("coin-flip") && e.contains("round-robin"), "{e}");
+        let e = reg.make_sched("lifo").unwrap_err().to_string();
+        assert!(e.contains("lifo") && e.contains("fcfs"), "{e}");
+        let e = reg.make_evict("random").unwrap_err().to_string();
+        assert!(e.contains("random") && e.contains("lru"), "{e}");
+    }
+
+    #[test]
+    fn enumeration_is_sorted_and_stable() {
+        let reg = PolicyRegistry::builtins();
+        let names = reg.route_names();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        assert_eq!(reg.sched_names(), vec!["fcfs", "priority", "sjf"]);
+        assert_eq!(reg.evict_names(), vec!["largest", "lfu", "lru"]);
+    }
+
+    #[test]
+    fn registration_replaces_and_snapshot_isolates() {
+        let mut reg = PolicyRegistry::builtins();
+        struct Always0;
+        impl RoutePolicy for Always0 {
+            fn choose(
+                &mut self,
+                _req: &crate::workload::Request,
+                candidates: &[InstanceView],
+            ) -> usize {
+                candidates[0].id
+            }
+            fn name(&self) -> &str {
+                "always-0"
+            }
+        }
+        reg.register_route("always-0", || Box::new(Always0));
+        let snap = reg.clone();
+        reg.register_route("always-0", || Box::new(Always0));
+        assert!(snap.has_route("always-0"));
+        assert_eq!(snap.make_route("always-0").unwrap().name(), "always-0");
+        // snapshot does not gain entries registered later
+        reg.register_route("later", || Box::new(Always0));
+        assert!(!snap.has_route("later"));
+        assert!(reg.has_route("later"));
+    }
+
+    #[test]
+    fn global_registration_is_visible_in_snapshots() {
+        struct Noop;
+        impl EvictionPolicy for Noop {
+            fn name(&self) -> &str {
+                "test-noop-evict"
+            }
+            fn pick(&mut self, _leaves: &[CacheLeaf]) -> Option<usize> {
+                None
+            }
+        }
+        register_evict_policy("test-noop-evict", || Box::new(Noop));
+        let snap = snapshot();
+        assert!(snap.has_evict("test-noop-evict"));
+        assert!(snap
+            .evict_names()
+            .contains(&"test-noop-evict".to_string()));
+        assert!(snap.make_evict("test-noop-evict").unwrap().pick(&[]).is_none());
+    }
+}

@@ -5,12 +5,14 @@
 //! Policies see a compact [`InstanceView`] snapshot (load, KV pressure,
 //! prefix-cache match, role) — the same signals the paper lists: "load
 //! balancing, workload characteristics, and the state of prefix caches".
-//! New policies implement [`RoutePolicy`]; the built-ins cover the enum in
-//! `config::RouterPolicy`.
+//! New policies implement [`RoutePolicy`] and register in the
+//! [`policy registry`](crate::policy); the built-ins below back the
+//! registry's `round-robin`, `least-outstanding`, `least-kv`,
+//! `prefix-aware`, and `session-affinity` entries.
 
 use std::collections::HashMap;
 
-use crate::config::{Role, RouterPolicy};
+use crate::config::Role;
 use crate::workload::Request;
 
 /// Router-visible snapshot of one instance.
@@ -37,45 +39,28 @@ pub trait RoutePolicy: Send {
     fn name(&self) -> &str;
 }
 
-/// The global router: policy + session-affinity memory + RR cursor.
+/// The global router: a resolved [`RoutePolicy`] plus dispatch accounting.
+///
+/// Session stickiness is no longer a router-level flag: it lives in the
+/// [`SessionAffinity`] wrapper policy, so any policy can be made sticky and
+/// reports attribute decisions to the policy that actually made them.
 pub struct GlobalRouter {
     policy: Box<dyn RoutePolicy>,
-    affinity: HashMap<u64, usize>,
     pub dispatched: u64,
 }
 
 impl GlobalRouter {
-    pub fn new(policy: RouterPolicy) -> Self {
-        let policy: Box<dyn RoutePolicy> = match policy {
-            RouterPolicy::RoundRobin => Box::new(RoundRobin { cursor: 0 }),
-            RouterPolicy::LeastOutstanding => Box::new(LeastOutstanding),
-            RouterPolicy::LeastKvLoad => Box::new(LeastKvLoad),
-            RouterPolicy::PrefixAware => Box::new(PrefixAware),
-            RouterPolicy::SessionAffinity => Box::new(LeastOutstanding),
-        };
+    /// Wrap an already-resolved policy (see
+    /// [`PolicyRegistry::make_route`](crate::policy::PolicyRegistry::make_route)).
+    pub fn new(policy: Box<dyn RoutePolicy>) -> Self {
         GlobalRouter {
             policy,
-            affinity: HashMap::new(),
-            dispatched: 0,
-        }
-    }
-
-    pub fn custom(policy: Box<dyn RoutePolicy>) -> Self {
-        GlobalRouter {
-            policy,
-            affinity: HashMap::new(),
             dispatched: 0,
         }
     }
 
     /// Route an arriving request to a prefill-capable instance.
-    /// `session_affinity` enables sticky sessions on top of any policy.
-    pub fn dispatch(
-        &mut self,
-        req: &Request,
-        views: &[InstanceView],
-        session_affinity: bool,
-    ) -> Option<usize> {
+    pub fn dispatch(&mut self, req: &Request, views: &[InstanceView]) -> Option<usize> {
         let candidates: Vec<InstanceView> = views
             .iter()
             .filter(|v| v.compatible && matches!(v.role, Role::Unified | Role::Prefill))
@@ -84,19 +69,20 @@ impl GlobalRouter {
         if candidates.is_empty() {
             return None;
         }
-        if session_affinity {
-            if let Some(&inst) = self.affinity.get(&req.session) {
-                if candidates.iter().any(|v| v.id == inst) {
-                    self.dispatched += 1;
-                    return Some(inst);
-                }
-            }
-        }
         let chosen = self.policy.choose(req, &candidates);
-        debug_assert!(candidates.iter().any(|v| v.id == chosen));
-        if session_affinity {
-            self.affinity.insert(req.session, chosen);
-        }
+        // Hard check even in release: custom policies are the headline API,
+        // and the natural bug — returning a slice *index* instead of a
+        // candidate *id* — would otherwise silently misroute to a filtered
+        // -out (wrong-role or incompatible) instance.
+        assert!(
+            candidates.iter().any(|v| v.id == chosen),
+            "route policy '{}' chose instance {}, which is not a candidate \
+             (candidate ids: {:?}); RoutePolicy::choose must return the `id` \
+             field of one of the views it was given",
+            self.policy.name(),
+            chosen,
+            candidates.iter().map(|v| v.id).collect::<Vec<_>>()
+        );
         self.dispatched += 1;
         Some(chosen)
     }
@@ -122,7 +108,9 @@ impl GlobalRouter {
 // Built-in policies
 // ---------------------------------------------------------------------------
 
-struct RoundRobin {
+/// Cycle through candidates in arrival order.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
     cursor: usize,
 }
 
@@ -137,7 +125,9 @@ impl RoutePolicy for RoundRobin {
     }
 }
 
-struct LeastOutstanding;
+/// Fewest outstanding (waiting + running) requests.
+#[derive(Debug, Default)]
+pub struct LeastOutstanding;
 
 impl RoutePolicy for LeastOutstanding {
     fn choose(&mut self, _req: &Request, candidates: &[InstanceView]) -> usize {
@@ -152,7 +142,9 @@ impl RoutePolicy for LeastOutstanding {
     }
 }
 
-struct LeastKvLoad;
+/// Lowest KV-block utilization.
+#[derive(Debug, Default)]
+pub struct LeastKvLoad;
 
 impl RoutePolicy for LeastKvLoad {
     fn choose(&mut self, _req: &Request, candidates: &[InstanceView]) -> usize {
@@ -175,7 +167,8 @@ impl RoutePolicy for LeastKvLoad {
 /// Prefer the longest prefix-cache match; break ties by load. A match is
 /// only honored when it saves meaningful work (>= 16 tokens), otherwise
 /// falls back to load balancing.
-struct PrefixAware;
+#[derive(Debug, Default)]
+pub struct PrefixAware;
 
 impl RoutePolicy for PrefixAware {
     fn choose(&mut self, _req: &Request, candidates: &[InstanceView]) -> usize {
@@ -193,6 +186,48 @@ impl RoutePolicy for PrefixAware {
     }
     fn name(&self) -> &str {
         "prefix-aware"
+    }
+}
+
+/// Stick every session to the instance that served its first request; the
+/// wrapped fallback policy places that first request (and any request whose
+/// pinned instance is no longer a candidate).
+///
+/// This is a *wrapper*, not a standalone policy: the registry's
+/// `session-affinity` entry wraps [`LeastOutstanding`], and the reported
+/// name spells out the fallback (`session-affinity(least-outstanding)`) so
+/// reports never silently attribute placement to the wrong policy.
+pub struct SessionAffinity {
+    inner: Box<dyn RoutePolicy>,
+    affinity: HashMap<u64, usize>,
+    name: String,
+}
+
+impl SessionAffinity {
+    /// Make `inner` session-sticky.
+    pub fn wrapping(inner: Box<dyn RoutePolicy>) -> Self {
+        let name = format!("session-affinity({})", inner.name());
+        SessionAffinity {
+            inner,
+            affinity: HashMap::new(),
+            name,
+        }
+    }
+}
+
+impl RoutePolicy for SessionAffinity {
+    fn choose(&mut self, req: &Request, candidates: &[InstanceView]) -> usize {
+        if let Some(&pinned) = self.affinity.get(&req.session) {
+            if candidates.iter().any(|v| v.id == pinned) {
+                return pinned;
+            }
+        }
+        let chosen = self.inner.choose(req, candidates);
+        self.affinity.insert(req.session, chosen);
+        chosen
+    }
+    fn name(&self) -> &str {
+        &self.name
     }
 }
 
@@ -224,64 +259,85 @@ mod tests {
 
     #[test]
     fn round_robin_cycles() {
-        let mut r = GlobalRouter::new(RouterPolicy::RoundRobin);
+        let mut r = GlobalRouter::new(Box::new(RoundRobin::default()));
         let views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 0)];
         let picks: Vec<usize> = (0..4)
-            .map(|i| r.dispatch(&req(i, i), &views, false).unwrap())
+            .map(|i| r.dispatch(&req(i, i), &views).unwrap())
             .collect();
         assert_eq!(picks, vec![0, 1, 0, 1]);
     }
 
     #[test]
     fn least_outstanding_balances() {
-        let mut r = GlobalRouter::new(RouterPolicy::LeastOutstanding);
+        let mut r = GlobalRouter::new(Box::new(LeastOutstanding));
         let views = vec![view(0, Role::Unified, 5), view(1, Role::Unified, 2)];
-        assert_eq!(r.dispatch(&req(0, 0), &views, false), Some(1));
+        assert_eq!(r.dispatch(&req(0, 0), &views), Some(1));
     }
 
     #[test]
     fn least_kv_prefers_free_memory() {
-        let mut r = GlobalRouter::new(RouterPolicy::LeastKvLoad);
+        let mut r = GlobalRouter::new(Box::new(LeastKvLoad));
         let mut views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 9)];
         views[0].kv_utilization = 0.9;
         views[1].kv_utilization = 0.1;
-        assert_eq!(r.dispatch(&req(0, 0), &views, false), Some(1));
+        assert_eq!(r.dispatch(&req(0, 0), &views), Some(1));
     }
 
     #[test]
     fn prefix_aware_follows_cache() {
-        let mut r = GlobalRouter::new(RouterPolicy::PrefixAware);
+        let mut r = GlobalRouter::new(Box::new(PrefixAware));
         let mut views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 9)];
         views[1].prefix_match = 128;
-        assert_eq!(r.dispatch(&req(0, 0), &views, false), Some(1));
+        assert_eq!(r.dispatch(&req(0, 0), &views), Some(1));
         // tiny match falls back to load
         views[1].prefix_match = 4;
-        assert_eq!(r.dispatch(&req(1, 1), &views, false), Some(0));
+        assert_eq!(r.dispatch(&req(1, 1), &views), Some(0));
     }
 
     #[test]
     fn session_affinity_sticks() {
-        let mut r = GlobalRouter::new(RouterPolicy::SessionAffinity);
+        let mut r = GlobalRouter::new(Box::new(SessionAffinity::wrapping(
+            Box::new(LeastOutstanding),
+        )));
         let views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 0)];
-        let first = r.dispatch(&req(0, 42), &views, true).unwrap();
+        let first = r.dispatch(&req(0, 42), &views).unwrap();
         // same session, now-busier instance: still sticks
         let mut views2 = views.clone();
         views2[first].outstanding = 100;
-        assert_eq!(r.dispatch(&req(1, 42), &views2, true), Some(first));
+        assert_eq!(r.dispatch(&req(1, 42), &views2), Some(first));
         // different session balances away
-        assert_ne!(r.dispatch(&req(2, 43), &views2, true), Some(first));
+        assert_ne!(r.dispatch(&req(2, 43), &views2), Some(first));
+    }
+
+    #[test]
+    fn session_affinity_name_reports_fallback() {
+        let p = SessionAffinity::wrapping(Box::new(LeastOutstanding));
+        assert_eq!(p.name(), "session-affinity(least-outstanding)");
+        let r = GlobalRouter::new(Box::new(p));
+        assert_eq!(r.policy_name(), "session-affinity(least-outstanding)");
+    }
+
+    #[test]
+    fn session_affinity_repins_when_pin_invalid() {
+        let mut p = SessionAffinity::wrapping(Box::new(LeastOutstanding));
+        let views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 5)];
+        assert_eq!(p.choose(&req(0, 7), &views), 0);
+        // pinned instance no longer a candidate -> falls back + repins
+        let only1 = vec![view(1, Role::Unified, 5)];
+        assert_eq!(p.choose(&req(1, 7), &only1), 1);
+        assert_eq!(p.choose(&req(2, 7), &views), 1, "repinned to instance 1");
     }
 
     #[test]
     fn decode_instances_not_dispatch_targets() {
-        let mut r = GlobalRouter::new(RouterPolicy::RoundRobin);
+        let mut r = GlobalRouter::new(Box::new(RoundRobin::default()));
         let views = vec![view(0, Role::Decode, 0), view(1, Role::Prefill, 0)];
-        assert_eq!(r.dispatch(&req(0, 0), &views, false), Some(1));
+        assert_eq!(r.dispatch(&req(0, 0), &views), Some(1));
     }
 
     #[test]
     fn pick_decode_least_loaded() {
-        let mut r = GlobalRouter::new(RouterPolicy::RoundRobin);
+        let mut r = GlobalRouter::new(Box::new(RoundRobin::default()));
         let views = vec![
             view(0, Role::Prefill, 0),
             view(1, Role::Decode, 3),
@@ -292,17 +348,36 @@ mod tests {
 
     #[test]
     fn no_candidates_none() {
-        let mut r = GlobalRouter::new(RouterPolicy::RoundRobin);
-        assert_eq!(r.dispatch(&req(0, 0), &[], false), None);
+        let mut r = GlobalRouter::new(Box::new(RoundRobin::default()));
+        assert_eq!(r.dispatch(&req(0, 0), &[]), None);
         let views = vec![view(0, Role::Decode, 0)];
-        assert_eq!(r.dispatch(&req(0, 0), &views, false), None);
+        assert_eq!(r.dispatch(&req(0, 0), &views), None);
     }
 
     #[test]
     fn incompatible_filtered() {
-        let mut r = GlobalRouter::new(RouterPolicy::LeastOutstanding);
+        let mut r = GlobalRouter::new(Box::new(LeastOutstanding));
         let mut views = vec![view(0, Role::Unified, 0), view(1, Role::Unified, 5)];
         views[0].compatible = false;
-        assert_eq!(r.dispatch(&req(0, 0), &views, false), Some(1));
+        assert_eq!(r.dispatch(&req(0, 0), &views), Some(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a candidate")]
+    fn policy_returning_non_candidate_id_is_caught() {
+        // The natural custom-policy bug: returning a slice index instead of
+        // a candidate id. Views 5 and 7 make every index a non-id.
+        struct IndexNotId;
+        impl RoutePolicy for IndexNotId {
+            fn choose(&mut self, _req: &Request, _c: &[InstanceView]) -> usize {
+                0 // "first candidate" — but as an index, not an id
+            }
+            fn name(&self) -> &str {
+                "index-not-id"
+            }
+        }
+        let mut r = GlobalRouter::new(Box::new(IndexNotId));
+        let views = vec![view(5, Role::Unified, 0), view(7, Role::Unified, 0)];
+        let _ = r.dispatch(&req(0, 0), &views);
     }
 }

@@ -19,15 +19,22 @@
 //!
 //! Empty axes inherit the preset's default for that dimension, so the grid
 //! size is the product of the non-empty axes only.
+//!
+//! Policy axes (router / sched / evict) hold policy *names* resolved
+//! through the [`policy registry`](crate::policy), so user-registered
+//! policies sweep exactly like built-ins:
+//! [`SweepAxes::with_all_policies`] enumerates every registry entry, and
+//! [`SweepSpec::expand`] rejects unknown names up front with the candidate
+//! list instead of failing mid-sweep.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::config::{presets, PerfBackend, RouterPolicy, SchedPolicy, SimConfig};
+use crate::config::{presets, PerfBackend, SimConfig};
 use crate::coordinator::{run_config, SimSummary};
-use crate::memory::EvictPolicy;
 use crate::metrics::Report;
+use crate::policy::PolicyRegistry;
 use crate::util::bench::Table;
 use crate::util::json::Value;
 use crate::workload::{Arrival, LengthDist};
@@ -46,15 +53,37 @@ pub struct SweepAxes {
     pub hardware: Vec<String>,
     /// Poisson arrival rates, requests/second.
     pub rates: Vec<f64>,
-    /// Global router policies.
-    pub routers: Vec<RouterPolicy>,
-    /// Per-instance batch scheduling policies.
-    pub scheds: Vec<SchedPolicy>,
-    /// Prefix-cache eviction policies (only observable on `*+PC` presets;
-    /// applied wherever an instance has a prefix cache).
-    pub evictions: Vec<EvictPolicy>,
+    /// Global router-policy names (resolved through the policy registry).
+    pub routers: Vec<String>,
+    /// Per-instance batch-scheduling policy names.
+    pub scheds: Vec<String>,
+    /// Prefix-cache eviction-policy names, applied wherever an instance
+    /// has a prefix cache. Only meaningful on `*+PC` presets —
+    /// [`SweepSpec::expand`] errors if a grid point's preset has no
+    /// prefix cache at all (the axis would be a silent no-op).
+    pub evictions: Vec<String>,
     /// Performance-model backends.
     pub backends: Vec<PerfBackend>,
+}
+
+impl SweepAxes {
+    /// Fill the three policy axes with *every* policy registered in
+    /// `registry` — built-ins and user registrations alike. This is the
+    /// registry-driven replacement for hard-coded `::all()` lists.
+    ///
+    /// Sweep execution resolves names through the **global** registry —
+    /// each grid point runs via
+    /// [`Simulation::new`](crate::coordinator::Simulation::new) — so pass
+    /// [`crate::policy::snapshot`] here, or make sure any custom entries
+    /// in a hand-built registry are also registered globally
+    /// ([`crate::policy::register_sched_policy`] & friends) before
+    /// expanding.
+    pub fn with_all_policies(mut self, registry: &PolicyRegistry) -> Self {
+        self.routers = registry.route_names();
+        self.scheds = registry.sched_names();
+        self.evictions = registry.evict_names();
+        self
+    }
 }
 
 /// A full sweep declaration: axes plus the knobs shared by every point.
@@ -123,6 +152,20 @@ impl SweepSpec {
         if self.axes.presets.is_empty() {
             anyhow::bail!("sweep needs at least one serving preset");
         }
+        // Reject unknown policy names up front (with the registered
+        // candidates) instead of failing on the first grid point mid-run.
+        // Existence checks only — user factories may be stateful, so
+        // nothing is instantiated here.
+        let registry = crate::policy::snapshot();
+        for r in &self.axes.routers {
+            registry.check_route(r)?;
+        }
+        for s in &self.axes.scheds {
+            registry.check_sched(s)?;
+        }
+        for e in &self.axes.evictions {
+            registry.check_evict(e)?;
+        }
         let mut out: Vec<SimConfig> = vec![];
         let mut seen: HashSet<String> = HashSet::new();
         for preset in &self.axes.presets {
@@ -160,9 +203,9 @@ impl SweepSpec {
         preset: &str,
         hw: Option<&String>,
         rate: Option<&f64>,
-        router: Option<&RouterPolicy>,
-        sched: Option<&SchedPolicy>,
-        evict: Option<&EvictPolicy>,
+        router: Option<&String>,
+        sched: Option<&String>,
+        evict: Option<&String>,
         backend: Option<&PerfBackend>,
     ) -> anyhow::Result<SimConfig> {
         let hw_name = hw.map(String::as_str).unwrap_or(DEFAULT_HARDWARE);
@@ -189,21 +232,33 @@ impl SweepSpec {
         }
         if let Some(p) = router {
             cfg.router = p.clone();
-            name.push_str(&format!("|router={}", p.as_str()));
+            name.push_str(&format!("|router={p}"));
         }
         if let Some(s) = sched {
             for inst in &mut cfg.instances {
-                inst.sched = *s;
+                inst.sched = s.clone();
             }
-            name.push_str(&format!("|sched={}", s.as_str()));
+            name.push_str(&format!("|sched={s}"));
         }
         if let Some(e) = evict {
+            let mut applied = false;
             for inst in &mut cfg.instances {
                 if let Some(pc) = &mut inst.prefix_cache {
-                    pc.policy = *e;
+                    pc.policy = e.clone();
+                    applied = true;
                 }
             }
-            name.push_str(&format!("|evict={}", e.as_str()));
+            // A silent no-op axis would expand into byte-identical grid
+            // points differing only in name, presenting "eviction has zero
+            // effect" as a result instead of an inapplicable dimension.
+            if !applied {
+                anyhow::bail!(
+                    "eviction axis value '{e}' has no effect on preset \
+                     '{preset}': no instance has a prefix cache (use a \
+                     '+PC' preset or drop the eviction axis)"
+                );
+            }
+            name.push_str(&format!("|evict={e}"));
         }
         if let Some(b) = backend {
             cfg.perf = b.clone();
@@ -584,7 +639,7 @@ mod tests {
         spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
         spec.axes.rates = vec![5.0, 20.0];
         spec.axes.routers =
-            vec![RouterPolicy::RoundRobin, RouterPolicy::LeastOutstanding];
+            vec!["round-robin".into(), "least-outstanding".into()];
         assert_eq!(spec.grid_size(), 8);
         let cfgs = spec.expand().unwrap();
         assert_eq!(cfgs.len(), 8);
@@ -607,11 +662,11 @@ mod tests {
     fn eviction_axis_applies_to_prefix_cache_presets() {
         let mut spec = quick_spec();
         spec.axes.presets = vec!["S(D)+PC".into()];
-        spec.axes.evictions = vec![EvictPolicy::Lfu];
+        spec.axes.evictions = vec!["lfu".into()];
         let cfgs = spec.expand().unwrap();
         assert_eq!(cfgs.len(), 1);
         let pc = cfgs[0].instances[0].prefix_cache.as_ref().unwrap();
-        assert_eq!(pc.policy, EvictPolicy::Lfu);
+        assert_eq!(pc.policy, "lfu");
         assert_eq!(cfgs[0].name, "S(D)+PC|evict=lfu");
     }
 
@@ -623,6 +678,52 @@ mod tests {
         let mut spec = quick_spec();
         spec.axes.rates = vec![10.0, 10.0];
         assert!(spec.expand().is_err(), "duplicate grid point must error");
+    }
+
+    #[test]
+    fn eviction_axis_on_cacheless_preset_rejected() {
+        // S(D) has no prefix cache: the axis would be a silent no-op
+        // producing byte-identical points, so expand refuses it.
+        let mut spec = quick_spec();
+        spec.axes.evictions = vec!["lru".into()];
+        let e = spec.expand().unwrap_err().to_string();
+        assert!(e.contains("prefix cache") && e.contains("S(D)"), "{e}");
+    }
+
+    #[test]
+    fn unknown_policy_names_rejected_before_running() {
+        let mut spec = quick_spec();
+        spec.axes.routers = vec!["coin-flip".into()];
+        let e = spec.expand().unwrap_err().to_string();
+        assert!(e.contains("coin-flip") && e.contains("round-robin"), "{e}");
+        let mut spec = quick_spec();
+        spec.axes.scheds = vec!["lifo".into()];
+        assert!(spec.expand().is_err());
+        let mut spec = quick_spec();
+        spec.axes.evictions = vec!["random".into()];
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn all_policies_axis_enumerates_registry() {
+        let registry = crate::policy::snapshot();
+        let mut spec = quick_spec();
+        spec.axes = spec.axes.with_all_policies(&registry);
+        spec.axes.presets = vec!["S(D)+PC".into()];
+        let cfgs = spec.expand().unwrap();
+        assert_eq!(
+            cfgs.len(),
+            registry.route_names().len()
+                * registry.sched_names().len()
+                * registry.evict_names().len()
+        );
+        // every built-in shows up in at least one point name
+        for r in registry.route_names() {
+            assert!(
+                cfgs.iter().any(|c| c.name.contains(&format!("router={r}"))),
+                "router '{r}' missing from grid"
+            );
+        }
     }
 
     #[test]

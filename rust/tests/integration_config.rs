@@ -99,11 +99,16 @@ fn invalid_configs_rejected_with_clear_errors() {
                 "role": "prefill"}]}"#,
             "prefill and decode",
         ),
-        // bad router policy
+        // bad serving-mechanism spellings still fail at parse time
         (
-            r#"{"router": "coin-flip",
-                "instances": [{"model": "tiny-dense", "hardware": "rtx3090"}]}"#,
-            "router",
+            r#"{"instances": [{"model": "tiny-dense", "hardware": "rtx3090",
+                "role": "proxy"}]}"#,
+            "unknown role",
+        ),
+        (
+            r#"{"instances": [{"model": "tiny-dense", "hardware": "rtx3090",
+                "kv_transfer": "streamed"}]}"#,
+            "kv-transfer",
         ),
     ];
     for (text, needle) in cases {
@@ -114,6 +119,24 @@ fn invalid_configs_rejected_with_clear_errors() {
             "error '{err}' should mention '{needle}'"
         );
     }
+}
+
+#[test]
+fn unknown_policy_names_load_but_fail_to_build_with_candidates() {
+    // Policy names are registry keys, not config enums: the file parses,
+    // and the error surfaces at simulation construction listing what IS
+    // registered.
+    let text = r#"{"router": "coin-flip",
+        "instances": [{"model": "tiny-dense", "hardware": "rtx3090"}]}"#;
+    let cfg = SimConfig::from_json(&json::parse(text).unwrap()).unwrap();
+    assert_eq!(cfg.router, "coin-flip");
+    let err = llmservingsim::coordinator::Simulation::new(cfg)
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("coin-flip") && err.contains("round-robin"),
+        "error '{err}' should name the bad policy and the candidates"
+    );
 }
 
 #[test]

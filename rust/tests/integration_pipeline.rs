@@ -93,10 +93,12 @@ fn sim_vs_real_execution_error_within_bounds() {
 
     let gt = Arc::new(ExecPerfModel::new(&root(), "tiny-dense").unwrap());
     let gt2 = gt.clone();
-    let mut gt_sim = Simulation::with_perf_factory(cfg.clone(), &move |_, _, _| {
-        Ok(gt2.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
-    })
-    .unwrap();
+    let mut gt_sim = Simulation::builder(cfg.clone())
+        .with_perf_factory(move |_, _, _| {
+            Ok(gt2.clone() as Arc<dyn llmservingsim::perf::PerfModel>)
+        })
+        .build()
+        .unwrap();
     let gt_report = gt_sim.run();
 
     let db = quick_profile("tiny-dense");

@@ -4,7 +4,7 @@
 
 use llmservingsim::config::{
     presets, CacheScope, GateKind, KvTransferPolicy, OffloadPolicy, PerfBackend,
-    RouterPolicy, SimConfig,
+    SimConfig,
 };
 use llmservingsim::coordinator::{run_config, Simulation};
 use llmservingsim::workload::{Arrival, LengthDist, WorkloadSpec};
@@ -133,19 +133,15 @@ fn ep_degrees_complete_and_price_alltoall() {
 
 #[test]
 fn all_router_policies_complete_on_mixed_fleet() {
-    for policy in [
-        RouterPolicy::RoundRobin,
-        RouterPolicy::LeastOutstanding,
-        RouterPolicy::LeastKvLoad,
-        RouterPolicy::PrefixAware,
-        RouterPolicy::SessionAffinity,
-    ] {
+    // enumerate the registry instead of a hard-coded list: any policy a
+    // user registers is exercised the same way
+    for policy in llmservingsim::policy::snapshot().route_names() {
         let mut cfg = small(presets::multi_dense("tiny-dense", "rtx3090"), 25);
         cfg.router = policy.clone();
         cfg.workload.sessions = 4;
         cfg.workload.shared_prefix = 16;
         let (r, _) = run_config(cfg).unwrap();
-        assert_eq!(r.num_finished, 25, "router {policy:?}");
+        assert_eq!(r.num_finished, 25, "router {policy}");
     }
 }
 

@@ -3,9 +3,8 @@
 //! 1, 2, and 8 worker threads (ISSUE: the acceptance contract of the
 //! Send-safe core).
 
-use llmservingsim::config::{PerfBackend, RouterPolicy, SimConfig};
+use llmservingsim::config::{PerfBackend, SimConfig};
 use llmservingsim::coordinator::run_config;
-use llmservingsim::memory::EvictPolicy;
 use llmservingsim::sweep::{run_sweep, summarize, sweep_json, SweepSpec};
 
 /// A 2 presets x 2 rates x 2 routers grid (8 points), small enough for CI.
@@ -18,8 +17,7 @@ fn grid_spec() -> SweepSpec {
     };
     spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
     spec.axes.rates = vec![10.0, 40.0];
-    spec.axes.routers =
-        vec![RouterPolicy::RoundRobin, RouterPolicy::LeastOutstanding];
+    spec.axes.routers = vec!["round-robin".into(), "least-outstanding".into()];
     spec
 }
 
@@ -122,7 +120,7 @@ fn eviction_and_backend_axes_expand() {
         ..SweepSpec::default()
     };
     spec.axes.presets = vec!["S(D)+PC".into()];
-    spec.axes.evictions = vec![EvictPolicy::Lru, EvictPolicy::Lfu];
+    spec.axes.evictions = vec!["lru".into(), "lfu".into()];
     spec.axes.backends = vec![PerfBackend::Analytical, PerfBackend::CycleReplay];
     let cfgs = spec.expand().unwrap();
     assert_eq!(cfgs.len(), 4);
