@@ -23,7 +23,7 @@ use llmservingsim::groundtruth::ExecPerfModel;
 use llmservingsim::runtime::profiler::{profile_to_file, ProfileOptions};
 use llmservingsim::runtime::{Manifest, Runtime};
 use llmservingsim::util::bench::Table;
-use llmservingsim::workload::{Arrival, LengthDist};
+use llmservingsim::workload::{LengthDist, Traffic};
 
 fn main() -> anyhow::Result<()> {
     let root = PathBuf::from("artifacts");
@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
     // ---- 3. ground-truth serving run (real execution) --------------------
     let mut cfg = presets::single_dense("tiny-dense", "cpu-pjrt");
     cfg.workload.num_requests = 40;
-    cfg.workload.arrival = Arrival::Poisson { rate: 10.0 };
+    cfg.workload.traffic = Traffic::poisson(10.0);
     cfg.workload.lengths = LengthDist::short();
 
     println!("\nserving {} requests on the ground-truth engine ...", 40);

@@ -12,7 +12,7 @@
 use llmservingsim::config::{presets, InstanceConfig, SimConfig, TopoKind};
 use llmservingsim::coordinator::run_config;
 use llmservingsim::util::bench::Table;
-use llmservingsim::workload::Arrival;
+use llmservingsim::workload::Traffic;
 
 fn fleet(router: &str) -> SimConfig {
     let mut cfg = presets::single_dense("llama3.1-8b", "rtx3090");
@@ -29,7 +29,7 @@ fn fleet(router: &str) -> SimConfig {
     cfg.instances.push(tp2);
     cfg.router = router.to_string();
     cfg.workload.num_requests = 150;
-    cfg.workload.arrival = Arrival::Poisson { rate: 2.0 };
+    cfg.workload.traffic = Traffic::poisson(2.0);
     cfg
 }
 

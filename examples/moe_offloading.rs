@@ -30,7 +30,7 @@ fn constrained(policy: OffloadPolicy, gate: GateKind) -> SimConfig {
     cfg.instances[0].offload = policy;
     cfg.instances[0].gate = gate;
     cfg.workload.num_requests = 60;
-    cfg.workload.arrival = llmservingsim::workload::Arrival::Poisson { rate: 0.5 };
+    cfg.workload.traffic = llmservingsim::workload::Traffic::poisson(0.5);
     cfg
 }
 

@@ -15,7 +15,7 @@ fn sessions(mut cfg: SimConfig) -> SimConfig {
     cfg.workload.sessions = 8;
     cfg.workload.shared_prefix = 384;
     cfg.workload.lengths.prompt_mu = 6.3; // median ~540 tokens
-    cfg.workload.arrival = llmservingsim::workload::Arrival::Poisson { rate: 1.0 };
+    cfg.workload.traffic = llmservingsim::workload::Traffic::poisson(1.0);
     cfg
 }
 

@@ -6,7 +6,7 @@
 use llmservingsim::config::{presets, GateKind, OffloadPolicy, SimConfig};
 use llmservingsim::coordinator::run_config;
 use llmservingsim::util::bench::Table;
-use llmservingsim::workload::Arrival;
+use llmservingsim::workload::Traffic;
 
 fn cfg(policy: OffloadPolicy, gate: GateKind) -> SimConfig {
     let mut cfg = presets::single_moe("phi-mini-moe", "rtx3090");
@@ -16,7 +16,7 @@ fn cfg(policy: OffloadPolicy, gate: GateKind) -> SimConfig {
     cfg.instances[0].offload = policy;
     cfg.instances[0].gate = gate;
     cfg.workload.num_requests = 40;
-    cfg.workload.arrival = Arrival::Poisson { rate: 0.5 };
+    cfg.workload.traffic = Traffic::poisson(0.5);
     cfg
 }
 

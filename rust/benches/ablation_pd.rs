@@ -7,11 +7,11 @@
 use llmservingsim::config::{presets, KvTransferPolicy, SimConfig};
 use llmservingsim::coordinator::run_config;
 use llmservingsim::util::bench::Table;
-use llmservingsim::workload::Arrival;
+use llmservingsim::workload::Traffic;
 
 fn at(mut cfg: SimConfig, rate: f64) -> SimConfig {
     cfg.workload.num_requests = 80;
-    cfg.workload.arrival = Arrival::Poisson { rate };
+    cfg.workload.traffic = Traffic::poisson(rate);
     cfg
 }
 

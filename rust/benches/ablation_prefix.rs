@@ -6,7 +6,7 @@
 use llmservingsim::config::{presets, CacheScope, SimConfig};
 use llmservingsim::coordinator::run_config;
 use llmservingsim::util::bench::Table;
-use llmservingsim::workload::Arrival;
+use llmservingsim::workload::Traffic;
 
 fn base() -> SimConfig {
     let mut cfg = presets::multi_dense("llama3.1-8b", "rtx3090");
@@ -14,7 +14,7 @@ fn base() -> SimConfig {
     cfg.workload.sessions = 8;
     cfg.workload.shared_prefix = 384;
     cfg.workload.lengths.prompt_mu = 6.3;
-    cfg.workload.arrival = Arrival::Poisson { rate: 1.0 };
+    cfg.workload.traffic = Traffic::poisson(1.0);
     cfg
 }
 

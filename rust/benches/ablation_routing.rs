@@ -7,7 +7,7 @@
 use llmservingsim::config::{presets, InstanceConfig, SimConfig};
 use llmservingsim::coordinator::run_config;
 use llmservingsim::util::bench::Table;
-use llmservingsim::workload::Arrival;
+use llmservingsim::workload::Traffic;
 
 fn fleet(router: &str) -> SimConfig {
     let mut cfg = presets::single_dense("llama3.1-8b", "rtx3090");
@@ -16,7 +16,7 @@ fn fleet(router: &str) -> SimConfig {
     cfg.instances.push(fast);
     cfg.router = router.to_string();
     cfg.workload.num_requests = 120;
-    cfg.workload.arrival = Arrival::Poisson { rate: 1.5 };
+    cfg.workload.traffic = Traffic::poisson(1.5);
     cfg.workload.sessions = 6; // Zipf sessions => skewed affinity load
     cfg.workload.shared_prefix = 32;
     cfg

@@ -48,7 +48,7 @@ fn prep(mut cfg: SimConfig) -> SimConfig {
     // The paper's arrival process: Poisson at 10 req/s (§III-A). With
     // device-resident inputs the CPU-PJRT testbed sustains this at moderate
     // utilization, like the paper's GPU testbed.
-    cfg.workload.arrival = llmservingsim::workload::Arrival::Poisson { rate: 10.0 };
+    cfg.workload.traffic = llmservingsim::workload::Traffic::poisson(10.0);
     cfg
 }
 

@@ -12,7 +12,7 @@ use llmservingsim::config::{
 };
 use llmservingsim::coordinator::run_config;
 use llmservingsim::util::bench::Table;
-use llmservingsim::workload::{Arrival, LengthDist};
+use llmservingsim::workload::{LengthDist, Traffic};
 
 fn small(mut cfg: SimConfig) -> SimConfig {
     cfg.workload.num_requests = 15;
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     // AF: attention/FFN disaggregation.
     rows.push(check("AF  (attention/FFN disagg.)", {
         let mut plain = small(presets::single_dense("tiny-dense", "rtx3090"));
-        plain.workload.arrival = Arrival::Burst;
+        plain.workload.traffic = Traffic::burst();
         let mut af = plain.clone();
         af.instances[0].af_disagg = true;
         let (p, _) = run_config(plain)?;
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     // DP: data parallelism (multiple replicas behind the router).
     rows.push(check("DP  (data parallelism)", {
         let mut cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
-        cfg.workload.arrival = Arrival::Burst;
+        cfg.workload.traffic = Traffic::burst();
         let (r, _) = run_config(cfg)?;
         Ok(r.num_finished == 15
             && r.utilization.values().filter(|&&u| u > 0.0).count() == 2)
@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
         // recycling + preemption/recompute
         cfg.instances[0].mem_capacity =
             Some(llmservingsim::model::ModelSpec::tiny_dense().param_bytes() + (3 << 20));
-        cfg.workload.arrival = Arrival::Burst;
+        cfg.workload.traffic = Traffic::burst();
         let mut sim = llmservingsim::coordinator::Simulation::new(cfg)?;
         let r = sim.run();
         Ok(r.num_finished == 15 && sim.instance(0).blocks.total_blocks() > 0)
@@ -124,7 +124,7 @@ fn main() -> anyhow::Result<()> {
         let mut moe = InstanceConfig::basic("moe", "tiny-moe", "rtx3090");
         moe.role = Role::Unified;
         cfg.instances.push(moe);
-        cfg.workload.arrival = Arrival::Burst;
+        cfg.workload.traffic = Traffic::burst();
         let (r, _) = run_config(cfg)?;
         Ok(r.num_finished == 15)
     }));

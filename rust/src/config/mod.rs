@@ -20,7 +20,9 @@ pub mod presets;
 use crate::model::ModelSpec;
 use crate::perf::HardwareSpec;
 use crate::util::json::{self, Value};
-use crate::workload::{Arrival, LengthDist, WorkloadSpec};
+use crate::workload::{
+    Arrival, LengthDist, SloClass, TenantSpec, Traffic, WorkloadSpec,
+};
 
 /// Instance role in a (possibly P/D-disaggregated) deployment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,6 +73,10 @@ pub enum SchedPolicy {
     Sjf,
     /// Priority = waiting time (anti-starvation SJF hybrid).
     Priority,
+    /// Earliest TTFT deadline first, derived from each request's
+    /// [`SloClass`](crate::workload::SloClass) (interactive traffic
+    /// overtakes batch traffic until its deadline slack evens out).
+    Slo,
 }
 
 impl std::str::FromStr for SchedPolicy {
@@ -81,14 +87,20 @@ impl std::str::FromStr for SchedPolicy {
             "fcfs" => SchedPolicy::Fcfs,
             "sjf" => SchedPolicy::Sjf,
             "priority" => SchedPolicy::Priority,
-            _ => anyhow::bail!("unknown sched policy '{s}' (fcfs|sjf|priority)"),
+            "slo" => SchedPolicy::Slo,
+            _ => anyhow::bail!("unknown sched policy '{s}' (fcfs|sjf|priority|slo)"),
         })
     }
 }
 
 impl SchedPolicy {
     pub fn all() -> &'static [SchedPolicy] {
-        &[SchedPolicy::Fcfs, SchedPolicy::Sjf, SchedPolicy::Priority]
+        &[
+            SchedPolicy::Fcfs,
+            SchedPolicy::Sjf,
+            SchedPolicy::Priority,
+            SchedPolicy::Slo,
+        ]
     }
 
     pub fn as_str(self) -> &'static str {
@@ -96,16 +108,18 @@ impl SchedPolicy {
             SchedPolicy::Fcfs => "fcfs",
             SchedPolicy::Sjf => "sjf",
             SchedPolicy::Priority => "priority",
+            SchedPolicy::Slo => "slo",
         }
     }
 
     /// Instantiate the matching built-in trait object.
     pub fn to_policy(self) -> Box<dyn crate::policy::SchedulePolicy> {
-        use crate::instance::scheduler::{Fcfs, Priority, Sjf};
+        use crate::instance::scheduler::{Fcfs, Priority, Sjf, SloDeadline};
         match self {
             SchedPolicy::Fcfs => Box::new(Fcfs),
             SchedPolicy::Sjf => Box::new(Sjf),
             SchedPolicy::Priority => Box::new(Priority),
+            SchedPolicy::Slo => Box::new(SloDeadline),
         }
     }
 }
@@ -465,6 +479,9 @@ impl SimConfig {
         if self.block_size == 0 {
             anyhow::bail!("config '{}': block_size must be > 0", self.name);
         }
+        self.workload
+            .validate()
+            .map_err(|e| anyhow::anyhow!("config '{}': {e}", self.name))?;
         Ok(())
     }
 
@@ -574,21 +591,22 @@ impl SimConfig {
                         "num_requests",
                         Value::int(self.workload.num_requests as i64),
                     ),
+                    ("traffic", traffic_to_json(&self.workload.traffic)),
                     (
-                        "arrival",
-                        match &self.workload.arrival {
-                            Arrival::Poisson { rate } => Value::obj(vec![
-                                ("kind", Value::str("poisson")),
-                                ("rate", Value::float(*rate)),
-                            ]),
-                            Arrival::Uniform { rate } => Value::obj(vec![
-                                ("kind", Value::str("uniform")),
-                                ("rate", Value::float(*rate)),
-                            ]),
-                            Arrival::Burst => {
-                                Value::obj(vec![("kind", Value::str("burst"))])
-                            }
-                        },
+                        "tenants",
+                        Value::arr(
+                            self.workload
+                                .tenants
+                                .iter()
+                                .map(|t| {
+                                    Value::obj(vec![
+                                        ("name", Value::str(t.name.clone())),
+                                        ("weight", Value::float(t.weight)),
+                                        ("slo", Value::str(t.slo.as_str())),
+                                    ])
+                                })
+                                .collect(),
+                        ),
                     ),
                     ("sessions", Value::int(self.workload.sessions as i64)),
                     (
@@ -625,6 +643,9 @@ impl SimConfig {
         ])
     }
 
+    /// Parse a config written by [`SimConfig::to_json`]. Also accepts the
+    /// pre-workload-engine schema where the workload carried a flat
+    /// `arrival` object instead of `traffic`.
     pub fn from_json(v: &Value) -> anyhow::Result<SimConfig> {
         let name = v.get("name").as_str().unwrap_or("unnamed").to_string();
         let seed = v.get("seed").as_u64().unwrap_or(0);
@@ -658,19 +679,29 @@ impl SimConfig {
         };
 
         let w = v.get("workload");
-        let arrival = {
-            let a = w.get("arrival");
-            match a.get("kind").as_str().unwrap_or("poisson") {
-                "poisson" => Arrival::Poisson {
-                    rate: a.get("rate").as_f64().unwrap_or(10.0),
-                },
-                "uniform" => Arrival::Uniform {
-                    rate: a.get("rate").as_f64().unwrap_or(10.0),
-                },
-                "burst" => Arrival::Burst,
-                k => anyhow::bail!("unknown arrival kind '{k}'"),
-            }
+        let traffic = if !w.get("traffic").is_null() {
+            traffic_from_json(w.get("traffic"))?
+        } else if !w.get("arrival").is_null() {
+            // legacy schema: flat arrival object
+            Traffic::Open(arrival_from_json(w.get("arrival"))?)
+        } else {
+            Traffic::poisson(10.0)
         };
+        let mut tenants = vec![];
+        for tv in w.get("tenants").as_arr().unwrap_or(&[]) {
+            tenants.push(TenantSpec {
+                name: tv
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("tenant missing 'name'"))?
+                    .to_string(),
+                weight: tv.get("weight").as_f64().unwrap_or(1.0),
+                slo: match tv.get("slo").as_str() {
+                    None => SloClass::Interactive,
+                    Some(s) => s.parse::<SloClass>()?,
+                },
+            });
+        }
         let l = w.get("lengths");
         let mut lengths = LengthDist::sharegpt();
         if let Some(x) = l.get("prompt_mu").as_f64() {
@@ -693,10 +724,11 @@ impl SimConfig {
         }
         let workload = WorkloadSpec {
             num_requests: w.get("num_requests").as_u64().unwrap_or(100) as usize,
-            arrival,
+            traffic,
             lengths,
             sessions: w.get("sessions").as_u64().unwrap_or(0) as usize,
             shared_prefix: w.get("shared_prefix").as_u64().unwrap_or(0),
+            tenants,
             seed: w.get("seed").as_u64().unwrap_or(0x5EED),
         };
 
@@ -824,6 +856,121 @@ impl SimConfig {
     }
 }
 
+// ---- traffic JSON (shared by the workload and legacy arrival schemas) ----
+
+fn arrival_to_json(a: &Arrival) -> Value {
+    match a {
+        Arrival::Poisson { rate } => Value::obj(vec![
+            ("kind", Value::str("poisson")),
+            ("rate", Value::float(*rate)),
+        ]),
+        Arrival::Uniform { rate } => Value::obj(vec![
+            ("kind", Value::str("uniform")),
+            ("rate", Value::float(*rate)),
+        ]),
+        Arrival::Burst => Value::obj(vec![("kind", Value::str("burst"))]),
+        Arrival::Mmpp {
+            rate_on,
+            rate_off,
+            mean_on_s,
+            mean_off_s,
+        } => Value::obj(vec![
+            ("kind", Value::str("mmpp")),
+            ("rate_on", Value::float(*rate_on)),
+            ("rate_off", Value::float(*rate_off)),
+            ("mean_on_s", Value::float(*mean_on_s)),
+            ("mean_off_s", Value::float(*mean_off_s)),
+        ]),
+        Arrival::Diurnal {
+            base_rate,
+            amplitude,
+            period_s,
+        } => Value::obj(vec![
+            ("kind", Value::str("diurnal")),
+            ("base_rate", Value::float(*base_rate)),
+            ("amplitude", Value::float(*amplitude)),
+            ("period_s", Value::float(*period_s)),
+        ]),
+    }
+}
+
+fn arrival_from_json(a: &Value) -> anyhow::Result<Arrival> {
+    Ok(match a.get("kind").as_str().unwrap_or("poisson") {
+        "poisson" => Arrival::Poisson {
+            rate: a.get("rate").as_f64().unwrap_or(10.0),
+        },
+        "uniform" => Arrival::Uniform {
+            rate: a.get("rate").as_f64().unwrap_or(10.0),
+        },
+        "burst" => Arrival::Burst,
+        "mmpp" => Arrival::Mmpp {
+            rate_on: a.get("rate_on").as_f64().unwrap_or(40.0),
+            rate_off: a.get("rate_off").as_f64().unwrap_or(0.0),
+            mean_on_s: a.get("mean_on_s").as_f64().unwrap_or(2.0),
+            mean_off_s: a.get("mean_off_s").as_f64().unwrap_or(6.0),
+        },
+        "diurnal" => Arrival::Diurnal {
+            base_rate: a.get("base_rate").as_f64().unwrap_or(10.0),
+            amplitude: a.get("amplitude").as_f64().unwrap_or(0.8),
+            period_s: a.get("period_s").as_f64().unwrap_or(60.0),
+        },
+        k => anyhow::bail!("unknown arrival kind '{k}'"),
+    })
+}
+
+fn traffic_to_json(t: &Traffic) -> Value {
+    match t {
+        Traffic::Open(a) => arrival_to_json(a),
+        Traffic::Sessions {
+            start,
+            turns,
+            think_s,
+        } => Value::obj(vec![
+            ("kind", Value::str("sessions")),
+            ("start", arrival_to_json(start)),
+            ("turns", Value::int(*turns as i64)),
+            ("think_s", Value::float(*think_s)),
+        ]),
+        Traffic::Replay { path } => Value::obj(vec![
+            ("kind", Value::str("replay")),
+            ("path", Value::str(path.clone())),
+        ]),
+        Traffic::Custom { name } => Value::obj(vec![
+            ("kind", Value::str("custom")),
+            ("name", Value::str(name.clone())),
+        ]),
+    }
+}
+
+fn traffic_from_json(t: &Value) -> anyhow::Result<Traffic> {
+    Ok(match t.get("kind").as_str().unwrap_or("poisson") {
+        "sessions" => Traffic::Sessions {
+            start: if t.get("start").is_null() {
+                Arrival::Poisson { rate: 2.0 }
+            } else {
+                arrival_from_json(t.get("start"))?
+            },
+            turns: t.get("turns").as_u64().unwrap_or(4) as u32,
+            think_s: t.get("think_s").as_f64().unwrap_or(2.0),
+        },
+        "replay" => Traffic::Replay {
+            path: t
+                .get("path")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("replay traffic needs 'path'"))?
+                .to_string(),
+        },
+        "custom" => Traffic::Custom {
+            name: t
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("custom traffic needs 'name'"))?
+                .to_string(),
+        },
+        _ => Traffic::Open(arrival_from_json(t)?),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -895,6 +1042,55 @@ mod tests {
             let back = SimConfig::from_json(&v).unwrap();
             assert_eq!(cfg, back, "roundtrip mismatch for {}", cfg.name);
         }
+    }
+
+    #[test]
+    fn workload_traffic_and_tenants_roundtrip() {
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.workload.tenants = TenantSpec::mix(3);
+        for traffic in [
+            Traffic::uniform(5.0),
+            Traffic::burst(),
+            Traffic::mmpp(40.0, 1.0, 2.0, 6.0),
+            Traffic::diurnal(10.0, 0.8, 60.0),
+            Traffic::sessions(2.0, 4, 2.0),
+            Traffic::Replay {
+                path: "artifacts/t.json".into(),
+            },
+            Traffic::Custom {
+                name: "surge".into(),
+            },
+        ] {
+            cfg.workload.traffic = traffic;
+            let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(cfg, back, "traffic {:?}", cfg.workload.traffic);
+        }
+    }
+
+    #[test]
+    fn legacy_arrival_schema_still_parses() {
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.workload.traffic = Traffic::poisson(25.0);
+        let mut v = cfg.to_json();
+        // rewrite "traffic" to the pre-engine "arrival" key
+        if let Value::Obj(top) = &mut v {
+            if let Some(Value::Obj(w)) = top.get_mut("workload") {
+                let t = w.remove("traffic").unwrap();
+                w.insert("arrival".to_string(), t);
+            }
+        }
+        let back = SimConfig::from_json(&v).unwrap();
+        assert_eq!(back.workload.traffic, Traffic::poisson(25.0));
+    }
+
+    #[test]
+    fn degenerate_workloads_rejected_at_validate() {
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.workload.traffic = Traffic::poisson(0.0);
+        assert!(cfg.validate().is_err());
+        cfg.workload.traffic = Traffic::poisson(10.0);
+        cfg.workload.tenants = vec![TenantSpec::new("broke", 0.0, SloClass::Batch)];
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 use super::{
     CacheScope, InstanceConfig, PerfBackend, PrefixCacheConfig, Role, SimConfig,
 };
-use crate::workload::WorkloadSpec;
+use crate::workload::{TenantSpec, Traffic, WorkloadSpec};
 
 fn base(name: &str, instances: Vec<InstanceConfig>) -> SimConfig {
     SimConfig {
@@ -100,6 +100,21 @@ pub fn with_prefix_cache(mut cfg: SimConfig, scope: CacheScope) -> SimConfig {
     cfg.workload.shared_prefix = 64;
     if matches!(scope, CacheScope::Global) {
         cfg.router = "prefix-aware".to_string();
+    }
+    cfg
+}
+
+/// Turn any serving config into a multi-tenant bursty scenario: `tenants`
+/// weighted tenants with alternating interactive/batch SLO classes, MMPP
+/// on/off arrivals peaking at 4x `rate`, SLO-deadline scheduling on every
+/// instance. The workload-engine counterpart of the `* + PC` transformer.
+pub fn multi_tenant_bursty(mut cfg: SimConfig, tenants: usize, rate: f64) -> SimConfig {
+    cfg.name = format!("{}+MT", cfg.name);
+    cfg.workload.traffic = Traffic::for_name("mmpp", rate)
+        .expect("mmpp is a built-in traffic source");
+    cfg.workload.tenants = TenantSpec::mix(tenants.max(1));
+    for i in &mut cfg.instances {
+        i.sched = "slo".to_string();
     }
     cfg
 }
@@ -217,6 +232,16 @@ mod tests {
             assert_eq!(&cfg.name, name);
         }
         assert!(by_name("X(Q)", "tiny-dense", "tiny-moe", "rtx3090").is_none());
+    }
+
+    #[test]
+    fn multi_tenant_transformer_sets_traffic_and_sched() {
+        let cfg = multi_tenant_bursty(multi_dense("tiny-dense", "rtx3090"), 3, 10.0);
+        assert_eq!(cfg.name, "M(D)+MT");
+        assert_eq!(cfg.workload.traffic.kind_name(), "mmpp");
+        assert_eq!(cfg.workload.tenants.len(), 3);
+        assert!(cfg.instances.iter().all(|i| i.sched == "slo"));
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::perf::PerfModel;
 use crate::policy::{EvictionPolicy, PolicyRegistry, RoutePolicy, SchedulePolicy};
 use crate::router::{GlobalRouter, InstanceView};
 use crate::sim::{Event, EventQueue, Nanos};
-use crate::workload::Request;
+use crate::workload::{Request, TrafficSource};
 
 /// Build the per-instance performance model for `backend`.
 ///
@@ -94,7 +94,12 @@ pub struct Simulation {
     inter_fabric: Fabric,
     queue: EventQueue,
     metrics: MetricsCollector,
-    requests: HashMap<u64, Request>,
+    /// Streaming request source: the run loop pulls the next request only
+    /// after scheduling the previous one, so workloads of any size run in
+    /// memory bounded by in-flight state (no upfront `Vec<Request>`).
+    source: Box<dyn TrafficSource>,
+    /// The pulled-but-not-yet-arrived head of the stream.
+    next_arrival: Option<Request>,
     busy: Vec<bool>,
     pending: Vec<Option<StepOutcome>>,
     /// In-flight P/D hand-offs: req id -> (request, destination instance).
@@ -140,6 +145,7 @@ pub struct SimulationBuilder {
     sched: Option<Box<dyn Fn() -> Box<dyn SchedulePolicy>>>,
     evict: Option<Box<dyn Fn() -> Box<dyn EvictionPolicy>>>,
     perf: Option<PerfFactoryFn>,
+    traffic: Option<Box<dyn TrafficSource>>,
 }
 
 impl SimulationBuilder {
@@ -176,6 +182,14 @@ impl SimulationBuilder {
         self
     }
 
+    /// Use `source` as the request stream, ignoring the config's workload
+    /// traffic (the trait-object analogue of registering a custom traffic
+    /// source — see [`crate::policy::register_traffic_source`]).
+    pub fn with_traffic_source(mut self, source: Box<dyn TrafficSource>) -> Self {
+        self.traffic = Some(source);
+        self
+    }
+
     /// Use a custom perf-model factory instead of [`build_perf`] (the
     /// ground-truth engine and ablations that pin models per instance).
     pub fn with_perf_factory(
@@ -201,11 +215,18 @@ impl SimulationBuilder {
             sched,
             evict,
             perf,
+            traffic,
         } = self;
         cfg.validate()?;
         let registry = registry.unwrap_or_else(crate::policy::snapshot);
         let perf_factory: PerfFactoryFn =
             perf.unwrap_or_else(|| Box::new(build_perf));
+        // Resolve the traffic source up front: bad replay paths and unknown
+        // custom names fail here, with candidates, not mid-run.
+        let source = match traffic {
+            Some(s) => s,
+            None => registry.make_traffic(&cfg.workload)?,
+        };
 
         let mut instances = vec![];
         let mut caches: Vec<PrefixCache> = vec![];
@@ -284,7 +305,8 @@ impl SimulationBuilder {
             inter_fabric: Fabric::new(inter_topo),
             queue: EventQueue::new(),
             metrics: MetricsCollector::new(),
-            requests: HashMap::new(),
+            source,
+            next_arrival: None,
             busy: vec![false; n],
             pending: (0..n).map(|_| None).collect(),
             kv_in_flight: HashMap::new(),
@@ -314,6 +336,7 @@ impl Simulation {
             sched: None,
             evict: None,
             perf: None,
+            traffic: None,
         }
     }
 
@@ -410,25 +433,31 @@ impl Simulation {
         self.kick(i, now);
     }
 
-    /// Run to completion and produce the report.
-    pub fn run(&mut self) -> Report {
-        let reqs = self.cfg.workload.generate();
-        for r in &reqs {
-            self.requests.insert(r.id, r.clone());
+    /// Pull the next request off the traffic source and schedule its
+    /// arrival event. One request is in the "pulled, not arrived" state at
+    /// a time — the streaming contract that bounds memory.
+    fn prime_next_arrival(&mut self) {
+        debug_assert!(self.next_arrival.is_none());
+        if let Some(r) = self.source.next_request() {
             self.queue
                 .schedule_at(r.arrival, Event::RequestArrival { request_id: r.id });
+            self.next_arrival = Some(r);
         }
+    }
+
+    /// Run to completion and produce the report.
+    pub fn run(&mut self) -> Report {
+        self.prime_next_arrival();
 
         while let Some((now, event)) = self.queue.pop() {
             match event {
                 Event::RequestArrival { request_id } => {
-                    let req = self.requests[&request_id].clone();
-                    self.metrics.on_arrival(
-                        request_id,
-                        now,
-                        req.prompt_tokens,
-                        req.output_tokens,
-                    );
+                    let req = self
+                        .next_arrival
+                        .take()
+                        .expect("arrival event without a pulled request");
+                    debug_assert_eq!(req.id, request_id);
+                    self.metrics.on_arrival(&req, now);
                     let views = self.views(Some(&req));
                     match self.router.dispatch(&req, &views) {
                         Some(i) => {
@@ -440,6 +469,7 @@ impl Simulation {
                             log::error!("no instance can serve request {request_id}")
                         }
                     }
+                    self.prime_next_arrival();
                 }
                 Event::StepComplete { instance } => {
                     self.complete_step(instance, now);
@@ -464,14 +494,15 @@ impl Simulation {
         }
 
         let makespan = self.queue.now();
-        let unfinished = self.requests.len() - self.metrics.num_finished();
+        let unfinished = self.metrics.num_in_flight();
         if unfinished > 0 {
             log::warn!(
                 "simulation drained with {unfinished} unfinished requests \
                  (KV pool too small for the workload?)"
             );
         }
-        self.metrics.report(makespan)
+        self.metrics
+            .report(makespan, &self.cfg.workload.tenant_names())
     }
 
     // ---- introspection ---------------------------------------------------
@@ -579,7 +610,7 @@ mod tests {
     fn multi_instance_spreads_load() {
         let mut cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
         // burst arrivals force queueing so least-outstanding actually spreads
-        cfg.workload.arrival = crate::workload::Arrival::Burst;
+        cfg.workload.traffic = crate::workload::Traffic::burst();
         let mut sim = Simulation::new(cfg).unwrap();
         let report = sim.run();
         assert_eq!(report.num_finished, 20);
@@ -681,6 +712,61 @@ mod tests {
             away.to_json().to_string(),
             "thread migration must not perturb the report"
         );
+    }
+
+    #[test]
+    fn multi_tenant_bursty_reports_breakdowns() {
+        use crate::workload::{SloClass, TenantSpec, Traffic};
+        let mut cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        cfg.workload.num_requests = 40;
+        cfg.workload.traffic = Traffic::mmpp(80.0, 0.0, 1.0, 3.0);
+        cfg.workload.tenants = TenantSpec::mix(3);
+        for i in &mut cfg.instances {
+            i.sched = "slo".to_string();
+        }
+        let (report, _) = run_config(cfg).unwrap();
+        assert_eq!(report.num_finished, 40);
+        assert!(!report.per_tenant.is_empty());
+        assert!(!report.per_class.is_empty());
+        let finished: usize = report.per_tenant.iter().map(|t| t.num_finished).sum();
+        assert_eq!(finished, 40, "tenant partition must cover all requests");
+        let by_class: usize = report.per_class.iter().map(|c| c.num_finished).sum();
+        assert_eq!(by_class, 40);
+        assert!(report.goodput_tps <= report.throughput_tps + 1e-9);
+        assert!(report
+            .per_class
+            .iter()
+            .any(|c| c.class == SloClass::Batch));
+    }
+
+    #[test]
+    fn custom_traffic_source_injects_via_builder() {
+        use crate::workload::{ReplaySource, Traffic};
+        let mut cfg = small(presets::single_dense("tiny-dense", "rtx3090"));
+        // the config names an unregistered source, but the builder override
+        // wins, mirroring the policy-override contract
+        cfg.workload.traffic = Traffic::Custom {
+            name: "not-registered".into(),
+        };
+        let reqs = {
+            let mut spec = cfg.workload.clone();
+            spec.traffic = Traffic::burst();
+            spec.num_requests = 8;
+            spec.generate().unwrap()
+        };
+        let mut sim = Simulation::builder(cfg)
+            .with_traffic_source(Box::new(ReplaySource::from_requests(reqs)))
+            .build()
+            .unwrap();
+        let report = sim.run();
+        assert_eq!(report.num_finished, 8);
+        // and without the override, the unknown name fails with candidates
+        let mut cfg = small(presets::single_dense("tiny-dense", "rtx3090"));
+        cfg.workload.traffic = Traffic::Custom {
+            name: "not-registered".into(),
+        };
+        let e = Simulation::new(cfg).unwrap_err().to_string();
+        assert!(e.contains("not-registered") && e.contains("poisson"), "{e}");
     }
 
     #[test]

@@ -731,7 +731,7 @@ mod tests {
             prompt_tokens: prompt,
             output_tokens: output,
             session: id,
-            shared_prefix: 0,
+            ..Request::default()
         }
     }
 

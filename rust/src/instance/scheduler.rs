@@ -70,6 +70,33 @@ impl SchedulePolicy for Priority {
     }
 }
 
+/// Earliest-TTFT-deadline-first over the request SLO classes: each
+/// sequence's deadline is `arrival + slo_class.ttft_target_ns()`, so
+/// interactive requests overtake batch requests until a batch request's
+/// (much later) deadline finally comes due — EDF with two classes, and the
+/// anti-starvation property falls out of the deadline arithmetic.
+#[derive(Debug, Default)]
+pub struct SloDeadline;
+
+impl SchedulePolicy for SloDeadline {
+    fn name(&self) -> &str {
+        "slo"
+    }
+    fn order(&mut self, wait: &mut [u64], seqs: &HashMap<u64, SeqState>, _now: Nanos) {
+        wait.sort_by_key(|id| {
+            let s = &seqs[id];
+            (priority_class(s), deadline(s), s.req.id)
+        });
+    }
+}
+
+/// TTFT deadline of a sequence (saturating).
+pub fn deadline(s: &SeqState) -> Nanos {
+    s.req
+        .arrival
+        .saturating_add(s.req.slo_class.ttft_target_ns())
+}
+
 /// Admission class shared by the built-in orders: preemption victims first,
 /// then P/D hand-offs (already holding a user stream), then fresh prefills.
 pub fn priority_class(s: &SeqState) -> u8 {
@@ -100,7 +127,7 @@ mod tests {
                     prompt_tokens: prompt,
                     output_tokens: 4,
                     session: id,
-                    shared_prefix: 0,
+                    ..Request::default()
                 },
                 phase: Phase::Prefill { done: 0 },
                 cached_tokens: 0,
@@ -112,7 +139,12 @@ mod tests {
     }
 
     fn builtin_policies() -> Vec<Box<dyn SchedulePolicy>> {
-        vec![Box::new(Fcfs), Box::new(Sjf), Box::new(Priority)]
+        vec![
+            Box::new(Fcfs),
+            Box::new(Sjf),
+            Box::new(Priority),
+            Box::new(SloDeadline),
+        ]
     }
 
     #[test]
@@ -152,6 +184,27 @@ mod tests {
         let mut wait = vec![0, 1];
         Priority.order(&mut wait, &seqs, 1_000_000_000);
         assert_eq!(wait[0], 0, "aged long prompt should rank first");
+    }
+
+    #[test]
+    fn slo_prefers_interactive_until_batch_deadline_passes() {
+        use crate::workload::SloClass;
+        // batch arrived first, interactive second: EDF still runs the
+        // interactive request first (tighter TTFT target).
+        let mut m: HashMap<u64, SeqState> = [seq(0, 10, 0), seq(1, 10, 1000)].into();
+        m.get_mut(&0).unwrap().req.slo_class = SloClass::Batch;
+        let mut wait = vec![0, 1];
+        SloDeadline.order(&mut wait, &m, 2000);
+        assert_eq!(wait, vec![1, 0]);
+
+        // but a batch request whose deadline comes due beats a much newer
+        // interactive request (no starvation).
+        let late = SloClass::Batch.ttft_target_ns() + 1000;
+        let mut m: HashMap<u64, SeqState> = [seq(0, 10, 0), seq(1, 10, late)].into();
+        m.get_mut(&0).unwrap().req.slo_class = SloClass::Batch;
+        let mut wait = vec![1, 0];
+        SloDeadline.order(&mut wait, &m, late);
+        assert_eq!(wait, vec![0, 1], "aged batch deadline must win");
     }
 
     #[test]

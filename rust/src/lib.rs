@@ -17,12 +17,20 @@
 //! every individual simulation sequential and bit-deterministic.
 //!
 //! Every serving decision point — request routing, wait-queue scheduling,
-//! prefix-cache eviction — is a named, registered trait object (see
-//! [`policy`]): configs store policy *names*, a [`policy::PolicyRegistry`]
-//! maps names to factories, and resolution happens once when a
-//! [`coordinator::Simulation`] is built. Custom policies plug in through
-//! [`policy::register_route_policy`] & friends or per-simulation via
-//! [`coordinator::Simulation::builder`], with zero core edits.
+//! prefix-cache eviction, and traffic generation — is a named, registered
+//! trait object (see [`policy`]): configs store policy *names*, a
+//! [`policy::PolicyRegistry`] maps names to factories, and resolution
+//! happens once when a [`coordinator::Simulation`] is built. Custom
+//! policies plug in through [`policy::register_route_policy`] & friends or
+//! per-simulation via [`coordinator::Simulation::builder`], with zero core
+//! edits.
+//!
+//! The [`workload`] engine streams requests into the coordinator (a
+//! pull-based [`workload::TrafficSource`] — Poisson, bursty MMPP, diurnal,
+//! closed-loop sessions, trace replay, or custom), annotated with tenants
+//! and SLO classes that flow through scheduling into per-class/per-tenant
+//! SLO-attainment and goodput reporting. Million-request scenarios run in
+//! memory bounded by in-flight state.
 
 pub mod cli;
 pub mod config;

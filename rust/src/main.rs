@@ -42,17 +42,24 @@ COMMANDS:
              [--hardware-tag TAG] [--reps N] [--warmup N]
   simulate   (--preset NAME | --config FILE) [--model M] [--moe-model M]
              [--hardware H] [--perf analytical|cycle|cycle-replay|trace:PATH]
-             [--requests N] [--rate R] [--seed S] [--out FILE]
+             [--requests N] [--rate R] [--workload W] [--tenants N]
+             [--seed S] [--out FILE]
+             (--workload takes a registered traffic source: poisson,
+              uniform, burst, mmpp, diurnal, sessions, or a custom name;
+              --tenants N splits traffic over N weighted tenants with
+              alternating interactive/batch SLO classes)
   sweep      [--presets A,B,..] [--hardware H1,H2,..] [--rates R1,R2,..]
-             [--routers P1,P2,..|all] [--scheds S1,S2,..|all]
-             [--evict E1,E2,..|all] [--perf B1,B2,..] [--model M]
-             [--moe-model M] [--requests N] [--seed S] [--threads T]
-             [--baseline NAME] [--out FILE] [--quick]
-             (policy axes take registry names; `all` sweeps every
-              registered policy, including custom ones)
+             [--workloads W1,W2,..|all] [--routers P1,P2,..|all]
+             [--scheds S1,S2,..|all] [--evict E1,E2,..|all]
+             [--perf B1,B2,..] [--model M] [--moe-model M] [--requests N]
+             [--seed S] [--threads T] [--baseline NAME] [--out FILE]
+             [--quick]
+             (policy/workload axes take registry names; `all` sweeps every
+              registered entry, including custom ones)
   validate   --model <preset> [--artifacts DIR] [--trace FILE]
              [--requests N] [--rate R]
-  gen-trace  [--requests N] [--rate R] [--seed S] --out FILE
+  gen-trace  [--requests N] [--rate R] [--workload W] [--tenants N]
+             [--seed S] --out FILE
   presets    (lists models, hardware, serving configs)
   help
 ";
@@ -141,11 +148,32 @@ fn resolve_config(args: &Args) -> anyhow::Result<SimConfig> {
         cfg.workload.num_requests = n.parse()?;
     }
     if let Some(r) = args.str_flag("rate") {
-        cfg.workload.arrival = workload::Arrival::Poisson { rate: r.parse()? };
+        cfg.workload.traffic = workload::Traffic::poisson(r.parse()?);
     }
+    apply_workload_flags(args, &mut cfg.workload)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Apply `--workload NAME` / `--tenants N` to a workload spec. The name
+/// resolves like a sweep axis value: built-in default parameters at the
+/// spec's `--rate`, otherwise a registered custom source.
+fn apply_workload_flags(
+    args: &Args,
+    spec: &mut workload::WorkloadSpec,
+) -> anyhow::Result<()> {
+    if let Some(w) = args.str_flag("workload") {
+        policy::snapshot().check_traffic(w)?;
+        let rate = args.f64_or("rate", 10.0)?;
+        spec.traffic = workload::Traffic::for_name(w, rate)
+            .unwrap_or_else(|| workload::Traffic::Custom { name: w.to_string() });
+    }
+    let tenants = args.u64_or("tenants", 0)? as usize;
+    if tenants > 0 {
+        spec.tenants = workload::TenantSpec::mix(tenants);
+    }
+    Ok(())
 }
 
 /// Split a comma-separated flag value, dropping empty segments.
@@ -199,6 +227,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     // `expand()` with the registered candidates. `all` sweeps everything
     // currently registered (built-ins + user registrations).
     let registry = policy::snapshot();
+    spec.axes.workloads = policy_axis(args, "workloads", registry.traffic_names());
     spec.axes.routers = policy_axis(args, "routers", registry.route_names());
     spec.axes.scheds = policy_axis(args, "scheds", registry.sched_names());
     spec.axes.evictions = policy_axis(args, "evict", registry.evict_names());
@@ -285,6 +314,10 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "throughput".into(),
         format!("{:.1} tok/s", report.throughput_tps),
     ]);
+    t.row(&[
+        "goodput".into(),
+        format!("{:.1} tok/s", report.goodput_tps),
+    ]);
     t.row(&["engine steps".into(), summary.steps.to_string()]);
     t.row(&["sim events".into(), summary.events.to_string()]);
     t.row(&[
@@ -298,6 +331,32 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     t.print();
+
+    if report.per_class.len() > 1 || !report.per_tenant.is_empty() {
+        let mut t = Table::new(&["SLO class", "finished", "attainment %", "goodput tok/s"]);
+        for c in &report.per_class {
+            t.row(&[
+                c.class.as_str().to_string(),
+                c.num_finished.to_string(),
+                format!("{:.1}", c.slo_attainment * 100.0),
+                format!("{:.1}", c.goodput_tps),
+            ]);
+        }
+        t.print();
+    }
+    if report.per_tenant.len() > 1 {
+        let mut t = Table::new(&["tenant", "finished", "tok/s", "SLO %", "TTFT ms"]);
+        for tr in &report.per_tenant {
+            t.row(&[
+                tr.name.clone(),
+                tr.num_finished.to_string(),
+                format!("{:.1}", tr.throughput_tps),
+                format!("{:.1}", tr.slo_attainment * 100.0),
+                format!("{:.3}", tr.ttft_ns_mean / 1e6),
+            ]);
+        }
+        t.print();
+    }
 
     if let Some(out) = args.str_flag("out") {
         json::save_file(Path::new(out), &report.to_json())?;
@@ -315,7 +374,7 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     // Ground truth: real execution on CPU-PJRT.
     let mut cfg = presets::single_dense(&model, "cpu-pjrt");
     cfg.workload.num_requests = requests;
-    cfg.workload.arrival = workload::Arrival::Poisson { rate };
+    cfg.workload.traffic = workload::Traffic::poisson(rate);
     cfg.workload.lengths = workload::LengthDist::short();
 
     println!("running ground-truth execution engine ({model}) ...");
@@ -377,8 +436,9 @@ fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("gen-trace needs --out FILE"))?;
     let mut spec = workload::WorkloadSpec::sharegpt_100(args.f64_or("rate", 10.0)?);
     spec.num_requests = args.u64_or("requests", 100)? as usize;
+    apply_workload_flags(args, &mut spec)?;
     spec.seed = args.u64_or("seed", spec.seed)?;
-    let reqs = spec.generate();
+    let reqs = spec.generate()?;
     workload::save_trace(Path::new(out), &reqs)?;
     println!("wrote {} requests to {out}", reqs.len());
     Ok(())
@@ -409,8 +469,9 @@ fn cmd_presets() -> anyhow::Result<()> {
     }
     let registry = policy::snapshot();
     println!("policies (registry; custom registrations appear here too):");
-    println!("  router: {}", registry.route_names().join(", "));
-    println!("  sched:  {}", registry.sched_names().join(", "));
-    println!("  evict:  {}", registry.evict_names().join(", "));
+    println!("  router:  {}", registry.route_names().join(", "));
+    println!("  sched:   {}", registry.sched_names().join(", "));
+    println!("  evict:   {}", registry.evict_names().join(", "));
+    println!("  traffic: {}", registry.traffic_names().join(", "));
     Ok(())
 }

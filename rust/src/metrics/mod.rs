@@ -1,6 +1,7 @@
 //! Serving metrics: TTFT, TPOT, ITL, end-to-end latency, token throughput,
-//! per-instance utilization, and cache statistics — the quantities Fig. 2
-//! reports (average TPOT, ITL, and token generation throughput).
+//! per-instance utilization, SLO attainment/goodput, and per-tenant /
+//! per-class breakdowns — the quantities Fig. 2 reports (average TPOT, ITL,
+//! and token generation throughput) plus the multi-tenant extensions.
 //!
 //! Definitions (matching vLLM's benchmark conventions, which the paper
 //! compares against):
@@ -8,14 +9,26 @@
 //! * **TPOT** — (end-to-end latency - TTFT) / (output tokens - 1).
 //! * **ITL**  — individual gaps between consecutive output tokens.
 //! * **Throughput** — total generated tokens / makespan.
+//! * **SLO attainment** — fraction of finished requests meeting both the
+//!   TTFT and TPOT targets of their [`SloClass`].
+//! * **Goodput** — throughput counting only tokens of SLO-met requests
+//!   (the useful work actually delivered within objectives).
+//!
+//! Memory contract: the collector is **streaming**. Per-request state lives
+//! only while a request is in flight; at finish it is folded into scalar
+//! aggregates and bounded [`SampleSet`] reservoirs (exact below
+//! [`SAMPLE_RESERVOIR_CAP`](crate::util::stats::SAMPLE_RESERVOIR_CAP)
+//! samples, deterministic sampling beyond). Million-request workloads
+//! therefore run in memory bounded by in-flight requests, not by history.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::sim::{nanos_to_secs, Nanos};
 use crate::util::json::Value;
-use crate::util::stats::{self, Summary};
+use crate::util::stats::{self, SampleSet, Summary};
+use crate::workload::{Request, SloClass};
 
-/// Lifecycle timestamps for one request.
+/// Lifecycle timestamps for one in-flight request.
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub id: u64,
@@ -28,6 +41,8 @@ pub struct RequestRecord {
     pub output_tokens: u64,
     /// Prompt tokens served from the prefix cache (any tier).
     pub cached_tokens: u64,
+    pub tenant: u32,
+    pub slo_class: SloClass,
 }
 
 impl RequestRecord {
@@ -61,14 +76,66 @@ impl RequestRecord {
     pub fn is_finished(&self) -> bool {
         self.finished.is_some()
     }
+
+    /// `(ttft_ok, tpot_ok)` against the class targets — the single source
+    /// of truth for SLO semantics (a request with no first token misses
+    /// TTFT; a single-token output meets TPOT vacuously).
+    fn slo_flags(&self) -> (bool, bool) {
+        let ttft_ok = self
+            .ttft()
+            .is_some_and(|t| t <= self.slo_class.ttft_target_ns());
+        let tpot_ok = self
+            .tpot()
+            .is_none_or(|t| t <= self.slo_class.tpot_target_ns() as f64);
+        (ttft_ok, tpot_ok)
+    }
+
+    /// Whether this (finished) request met its class's TTFT/TPOT targets.
+    pub fn meets_slo(&self) -> bool {
+        let (ttft_ok, tpot_ok) = self.slo_flags();
+        ttft_ok && tpot_ok
+    }
+}
+
+/// Streaming per-class aggregates.
+#[derive(Debug, Clone, Default)]
+struct ClassAgg {
+    finished: u64,
+    gen_tokens: u64,
+    ttft_ok: u64,
+    tpot_ok: u64,
+    slo_ok: u64,
+    good_tokens: u64,
+}
+
+/// Streaming per-tenant aggregates.
+#[derive(Debug, Clone, Default)]
+struct TenantAgg {
+    finished: u64,
+    gen_tokens: u64,
+    slo_ok: u64,
+    ttft_sum: f64,
+    ttft_n: u64,
 }
 
 /// Collects per-request lifecycle events during a simulation.
 #[derive(Debug, Default)]
 pub struct MetricsCollector {
+    /// In-flight records only; folded into aggregates at finish.
     records: HashMap<u64, RequestRecord>,
     /// Per-instance busy time accumulation.
     busy: HashMap<usize, Nanos>,
+    arrivals: usize,
+    finished: usize,
+    gen_tokens: u64,
+    cached_tokens: u64,
+    good_tokens: u64,
+    ttft: SampleSet,
+    tpot: SampleSet,
+    itl: SampleSet,
+    e2e: SampleSet,
+    classes: BTreeMap<SloClass, ClassAgg>,
+    tenants: BTreeMap<u32, TenantAgg>,
 }
 
 impl MetricsCollector {
@@ -76,19 +143,22 @@ impl MetricsCollector {
         Self::default()
     }
 
-    pub fn on_arrival(&mut self, id: u64, at: Nanos, prompt: u64, output: u64) {
+    pub fn on_arrival(&mut self, req: &Request, at: Nanos) {
+        self.arrivals += 1;
         self.records.insert(
-            id,
+            req.id,
             RequestRecord {
-                id,
+                id: req.id,
                 arrival: at,
                 dispatched: None,
                 instance: None,
                 token_times: vec![],
                 finished: None,
-                prompt_tokens: prompt,
-                output_tokens: output,
+                prompt_tokens: req.prompt_tokens,
+                output_tokens: req.output_tokens,
                 cached_tokens: 0,
+                tenant: req.tenant,
+                slo_class: req.slo_class,
             },
         );
     }
@@ -112,9 +182,56 @@ impl MetricsCollector {
         }
     }
 
+    /// Finish a request: fold its record into the streaming aggregates and
+    /// drop the per-request state.
     pub fn on_finish(&mut self, id: u64, at: Nanos) {
-        if let Some(r) = self.records.get_mut(&id) {
-            r.finished = Some(at);
+        let Some(mut r) = self.records.remove(&id) else {
+            return;
+        };
+        r.finished = Some(at);
+        self.finished += 1;
+        let tokens = r.token_times.len() as u64;
+        self.gen_tokens += tokens;
+        self.cached_tokens += r.cached_tokens;
+
+        let ttft = r.ttft();
+        let tpot = r.tpot();
+        if let Some(t) = ttft {
+            self.ttft.push(t as f64);
+        }
+        if let Some(t) = tpot {
+            self.tpot.push(t);
+        }
+        if let Some(t) = r.e2e() {
+            self.e2e.push(t as f64);
+        }
+        for gap in r.itls() {
+            self.itl.push(gap);
+        }
+
+        let (ttft_ok, tpot_ok) = r.slo_flags();
+        let slo_ok = ttft_ok && tpot_ok;
+        if slo_ok {
+            self.good_tokens += tokens;
+        }
+
+        let c = self.classes.entry(r.slo_class).or_default();
+        c.finished += 1;
+        c.gen_tokens += tokens;
+        c.ttft_ok += ttft_ok as u64;
+        c.tpot_ok += tpot_ok as u64;
+        c.slo_ok += slo_ok as u64;
+        if slo_ok {
+            c.good_tokens += tokens;
+        }
+
+        let t = self.tenants.entry(r.tenant).or_default();
+        t.finished += 1;
+        t.gen_tokens += tokens;
+        t.slo_ok += slo_ok as u64;
+        if let Some(x) = ttft {
+            t.ttft_sum += x as f64;
+            t.ttft_n += 1;
         }
     }
 
@@ -122,54 +239,110 @@ impl MetricsCollector {
         *self.busy.entry(instance).or_insert(0) += dur;
     }
 
+    /// In-flight record lookup (finished records are folded and dropped).
     pub fn record(&self, id: u64) -> Option<&RequestRecord> {
         self.records.get(&id)
     }
 
     pub fn num_finished(&self) -> usize {
-        self.records.values().filter(|r| r.is_finished()).count()
+        self.finished
     }
 
-    /// Build the final report. `makespan` is the simulation end time.
-    pub fn report(&self, makespan: Nanos) -> Report {
-        let finished: Vec<&RequestRecord> = {
-            let mut v: Vec<&RequestRecord> =
-                self.records.values().filter(|r| r.is_finished()).collect();
-            v.sort_by_key(|r| r.id);
-            v
-        };
-        let ttft: Vec<f64> = finished
-            .iter()
-            .filter_map(|r| r.ttft().map(|t| t as f64))
-            .collect();
-        let tpot: Vec<f64> = finished.iter().filter_map(|r| r.tpot()).collect();
-        let itl: Vec<f64> = finished.iter().flat_map(|r| r.itls()).collect();
-        let e2e: Vec<f64> = finished
-            .iter()
-            .filter_map(|r| r.e2e().map(|t| t as f64))
-            .collect();
-        let gen_tokens: u64 = finished.iter().map(|r| r.token_times.len() as u64).sum();
-        let cached_tokens: u64 = finished.iter().map(|r| r.cached_tokens).sum();
+    pub fn num_in_flight(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Build the final report. `makespan` is the simulation end time;
+    /// `tenant_names` labels tenant indices (out-of-range indices name
+    /// themselves).
+    pub fn report(&self, makespan: Nanos, tenant_names: &[String]) -> Report {
         let secs = nanos_to_secs(makespan).max(1e-12);
         let utilization: HashMap<usize, f64> = self
             .busy
             .iter()
             .map(|(&i, &b)| (i, (b as f64 / makespan.max(1) as f64).min(1.0)))
             .collect();
+        let per_class = self
+            .classes
+            .iter()
+            .map(|(&class, c)| {
+                let f = c.finished.max(1) as f64;
+                ClassReport {
+                    class,
+                    num_finished: c.finished as usize,
+                    generated_tokens: c.gen_tokens,
+                    ttft_attainment: c.ttft_ok as f64 / f,
+                    tpot_attainment: c.tpot_ok as f64 / f,
+                    slo_attainment: c.slo_ok as f64 / f,
+                    goodput_tps: c.good_tokens as f64 / secs,
+                }
+            })
+            .collect();
+        let per_tenant = self
+            .tenants
+            .iter()
+            .map(|(&tenant, t)| TenantReport {
+                tenant,
+                name: tenant_names
+                    .get(tenant as usize)
+                    .cloned()
+                    .unwrap_or_else(|| format!("tenant{tenant}")),
+                num_finished: t.finished as usize,
+                generated_tokens: t.gen_tokens,
+                throughput_tps: t.gen_tokens as f64 / secs,
+                slo_attainment: t.slo_ok as f64 / t.finished.max(1) as f64,
+                ttft_ns_mean: if t.ttft_n > 0 {
+                    t.ttft_sum / t.ttft_n as f64
+                } else {
+                    0.0
+                },
+            })
+            .collect();
         Report {
-            num_requests: self.records.len(),
-            num_finished: finished.len(),
+            num_requests: self.arrivals,
+            num_finished: self.finished,
             makespan,
-            ttft_ns: Summary::of(&ttft),
-            tpot_ns: Summary::of(&tpot),
-            itl_ns: Summary::of(&itl),
-            e2e_ns: Summary::of(&e2e),
-            generated_tokens: gen_tokens,
-            cached_tokens,
-            throughput_tps: gen_tokens as f64 / secs,
+            ttft_ns: self.ttft.summary(),
+            tpot_ns: self.tpot.summary(),
+            itl_ns: self.itl.summary(),
+            e2e_ns: self.e2e.summary(),
+            generated_tokens: self.gen_tokens,
+            cached_tokens: self.cached_tokens,
+            throughput_tps: self.gen_tokens as f64 / secs,
+            goodput_tps: self.good_tokens as f64 / secs,
             utilization,
+            per_class,
+            per_tenant,
         }
     }
+}
+
+/// Per-SLO-class slice of a report.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: SloClass,
+    pub num_finished: usize,
+    pub generated_tokens: u64,
+    /// Fraction of finished requests meeting the TTFT target.
+    pub ttft_attainment: f64,
+    /// Fraction meeting the TPOT target.
+    pub tpot_attainment: f64,
+    /// Fraction meeting both targets.
+    pub slo_attainment: f64,
+    /// Tokens/s from SLO-met requests of this class.
+    pub goodput_tps: f64,
+}
+
+/// Per-tenant slice of a report.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub tenant: u32,
+    pub name: String,
+    pub num_finished: usize,
+    pub generated_tokens: u64,
+    pub throughput_tps: f64,
+    pub slo_attainment: f64,
+    pub ttft_ns_mean: f64,
 }
 
 /// Final simulation report (one Fig. 2 data point).
@@ -186,7 +359,13 @@ pub struct Report {
     pub cached_tokens: u64,
     /// Output tokens per second.
     pub throughput_tps: f64,
+    /// Output tokens per second from requests that met their SLO.
+    pub goodput_tps: f64,
     pub utilization: HashMap<usize, f64>,
+    /// Per-SLO-class breakdown, ordered by class.
+    pub per_class: Vec<ClassReport>,
+    /// Per-tenant breakdown, ordered by tenant index.
+    pub per_tenant: Vec<TenantReport>,
 }
 
 impl Report {
@@ -214,6 +393,7 @@ impl Report {
             ("generated_tokens", Value::int(self.generated_tokens as i64)),
             ("cached_tokens", Value::int(self.cached_tokens as i64)),
             ("throughput_tps", Value::float(self.throughput_tps)),
+            ("goodput_tps", Value::float(self.goodput_tps)),
             (
                 "utilization",
                 Value::arr(
@@ -222,6 +402,50 @@ impl Report {
                             Value::obj(vec![
                                 ("instance", Value::int(k as i64)),
                                 ("busy", Value::float(v)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "slo_classes",
+                Value::arr(
+                    self.per_class
+                        .iter()
+                        .map(|c| {
+                            Value::obj(vec![
+                                ("class", Value::str(c.class.as_str())),
+                                ("num_finished", Value::int(c.num_finished as i64)),
+                                (
+                                    "generated_tokens",
+                                    Value::int(c.generated_tokens as i64),
+                                ),
+                                ("ttft_attainment", Value::float(c.ttft_attainment)),
+                                ("tpot_attainment", Value::float(c.tpot_attainment)),
+                                ("slo_attainment", Value::float(c.slo_attainment)),
+                                ("goodput_tps", Value::float(c.goodput_tps)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "tenants",
+                Value::arr(
+                    self.per_tenant
+                        .iter()
+                        .map(|t| {
+                            Value::obj(vec![
+                                ("tenant", Value::int(t.tenant as i64)),
+                                ("name", Value::str(t.name.clone())),
+                                ("num_finished", Value::int(t.num_finished as i64)),
+                                (
+                                    "generated_tokens",
+                                    Value::int(t.generated_tokens as i64),
+                                ),
+                                ("throughput_tps", Value::float(t.throughput_tps)),
+                                ("slo_attainment", Value::float(t.slo_attainment)),
+                                ("ttft_ns_mean", Value::float(t.ttft_ns_mean)),
                             ])
                         })
                         .collect(),
@@ -261,9 +485,22 @@ impl ValidationError {
 mod tests {
     use super::*;
 
+    fn arrive(m: &mut MetricsCollector, id: u64, at: Nanos, prompt: u64, output: u64) {
+        m.on_arrival(
+            &Request {
+                id,
+                arrival: at,
+                prompt_tokens: prompt,
+                output_tokens: output,
+                ..Request::default()
+            },
+            at,
+        );
+    }
+
     fn collect_one() -> MetricsCollector {
         let mut m = MetricsCollector::new();
-        m.on_arrival(0, 1000, 32, 4);
+        arrive(&mut m, 0, 1000, 32, 4);
         m.on_dispatch(0, 1500, 0);
         m.on_token(0, 2000);
         m.on_token(0, 2500);
@@ -273,44 +510,78 @@ mod tests {
         m
     }
 
+    fn hand_record() -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            arrival: 1000,
+            dispatched: Some(1500),
+            instance: Some(0),
+            token_times: vec![2000, 2500, 3100, 3600],
+            finished: Some(3600),
+            prompt_tokens: 32,
+            output_tokens: 4,
+            cached_tokens: 0,
+            tenant: 0,
+            slo_class: SloClass::Interactive,
+        }
+    }
+
     #[test]
     fn ttft_tpot_itl() {
-        let m = collect_one();
-        let r = m.record(0).unwrap();
+        let r = hand_record();
         assert_eq!(r.ttft(), Some(1000));
         assert_eq!(r.e2e(), Some(2600));
         // tpot = (2600-1000)/3
         assert!((r.tpot().unwrap() - 1600.0 / 3.0).abs() < 1e-9);
         assert_eq!(r.itls(), vec![500.0, 600.0, 500.0]);
+        assert!(r.meets_slo(), "ns-scale latencies beat interactive targets");
     }
 
     #[test]
     fn single_token_has_no_tpot() {
-        let mut m = MetricsCollector::new();
-        m.on_arrival(0, 0, 8, 1);
-        m.on_token(0, 100);
-        m.on_finish(0, 100);
-        assert!(m.record(0).unwrap().tpot().is_none());
+        let mut r = hand_record();
+        r.token_times = vec![100];
+        assert!(r.tpot().is_none());
+        assert!(r.meets_slo(), "TPOT vacuously met for single-token output");
+    }
+
+    #[test]
+    fn slo_miss_detected() {
+        let mut r = hand_record();
+        // push TTFT past the interactive 500 ms target
+        r.token_times = vec![1000 + SloClass::Interactive.ttft_target_ns() + 1];
+        assert!(!r.meets_slo());
+        // the same latency is fine for batch
+        r.slo_class = SloClass::Batch;
+        assert!(r.meets_slo());
     }
 
     #[test]
     fn report_aggregates() {
         let m = collect_one();
-        let rep = m.report(10_000);
+        let rep = m.report(10_000, &[]);
         assert_eq!(rep.num_finished, 1);
         assert_eq!(rep.generated_tokens, 4);
         assert!((rep.throughput_tps - 4.0 / 1e-5).abs() < 1.0);
         assert_eq!(rep.ttft_ns.mean, 1000.0);
+        // summary percentiles match the exact path below the reservoir cap
+        assert_eq!(rep.itl_ns.count, 3);
+        assert_eq!(rep.itl_ns.p50, 500.0);
+        // all requests met SLO → goodput == throughput
+        assert!((rep.goodput_tps - rep.throughput_tps).abs() < 1e-9);
     }
 
     #[test]
     fn unfinished_requests_excluded() {
         let mut m = collect_one();
-        m.on_arrival(1, 2000, 16, 8);
+        arrive(&mut m, 1, 2000, 16, 8);
         m.on_token(1, 3000);
-        let rep = m.report(10_000);
+        let rep = m.report(10_000, &[]);
         assert_eq!(rep.num_requests, 2);
         assert_eq!(rep.num_finished, 1);
+        assert_eq!(m.num_in_flight(), 1, "unfinished stays in flight");
+        assert!(m.record(1).is_some());
+        assert!(m.record(0).is_none(), "finished records are folded away");
     }
 
     #[test]
@@ -318,14 +589,106 @@ mod tests {
         let mut m = collect_one();
         m.on_busy(0, 5_000);
         m.on_busy(0, 4_000);
-        let rep = m.report(10_000);
+        let rep = m.report(10_000, &[]);
         assert!((rep.utilization[&0] - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_class_attainment_and_goodput() {
+        let mut m = MetricsCollector::new();
+        // interactive hit: instant tokens
+        m.on_arrival(
+            &Request {
+                id: 0,
+                prompt_tokens: 8,
+                output_tokens: 2,
+                ..Request::default()
+            },
+            0,
+        );
+        m.on_token(0, 100);
+        m.on_token(0, 200);
+        m.on_finish(0, 200);
+        // interactive miss: first token far past the 500 ms target
+        m.on_arrival(
+            &Request {
+                id: 1,
+                prompt_tokens: 8,
+                output_tokens: 2,
+                ..Request::default()
+            },
+            0,
+        );
+        let late = SloClass::Interactive.ttft_target_ns() * 2;
+        m.on_token(1, late);
+        m.on_token(1, late + 100);
+        m.on_finish(1, late + 100);
+        // batch hit with the same lateness
+        m.on_arrival(
+            &Request {
+                id: 2,
+                prompt_tokens: 8,
+                output_tokens: 2,
+                slo_class: SloClass::Batch,
+                ..Request::default()
+            },
+            0,
+        );
+        m.on_token(2, late);
+        m.on_token(2, late + 100);
+        m.on_finish(2, late + 100);
+
+        let rep = m.report(late + 100, &[]);
+        assert_eq!(rep.per_class.len(), 2);
+        let inter = &rep.per_class[0];
+        assert_eq!(inter.class, SloClass::Interactive);
+        assert_eq!(inter.num_finished, 2);
+        assert!((inter.ttft_attainment - 0.5).abs() < 1e-9);
+        assert!((inter.slo_attainment - 0.5).abs() < 1e-9);
+        let batch = &rep.per_class[1];
+        assert_eq!(batch.class, SloClass::Batch);
+        assert!((batch.slo_attainment - 1.0).abs() < 1e-9);
+        // goodput counts 4 of the 6 tokens (ids 0 and 2)
+        let secs = nanos_to_secs(late + 100);
+        assert!((rep.goodput_tps - 4.0 / secs).abs() < 1e-6);
+        assert!((rep.throughput_tps - 6.0 / secs).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_tenant_aggregation_with_names() {
+        let mut m = MetricsCollector::new();
+        for (id, tenant) in [(0u64, 0u32), (1, 1), (2, 1)] {
+            m.on_arrival(
+                &Request {
+                    id,
+                    prompt_tokens: 8,
+                    output_tokens: 1,
+                    tenant,
+                    ..Request::default()
+                },
+                0,
+            );
+            m.on_token(id, 50 + id);
+            m.on_finish(id, 50 + id);
+        }
+        let rep = m.report(1_000, &["alpha".into(), "beta".into()]);
+        assert_eq!(rep.per_tenant.len(), 2);
+        assert_eq!(rep.per_tenant[0].name, "alpha");
+        assert_eq!(rep.per_tenant[0].num_finished, 1);
+        assert_eq!(rep.per_tenant[1].name, "beta");
+        assert_eq!(rep.per_tenant[1].num_finished, 2);
+        assert_eq!(rep.per_tenant[1].generated_tokens, 2);
+        assert!((rep.per_tenant[1].ttft_ns_mean - 51.5).abs() < 1e-9);
+        assert!((rep.per_tenant[0].slo_attainment - 1.0).abs() < 1e-9);
+        // unnamed tenants label themselves
+        let rep = m.report(1_000, &[]);
+        assert_eq!(rep.per_tenant[1].name, "tenant1");
     }
 
     #[test]
     fn error_vs_reference() {
         let m = collect_one();
-        let a = m.report(10_000);
+        let a = m.report(10_000, &[]);
         let mut b = a.clone();
         b.throughput_tps *= 1.10;
         let err = b.error_vs(&a);
@@ -335,9 +698,15 @@ mod tests {
 
     #[test]
     fn report_json_shape() {
-        let rep = collect_one().report(10_000);
+        let rep = collect_one().report(10_000, &["default".into()]);
         let v = rep.to_json();
         assert_eq!(v.get("num_finished").as_i64(), Some(1));
         assert!(v.get("tpot_ns").get("mean").as_f64().is_some());
+        assert!(v.get("goodput_tps").as_f64().is_some());
+        let classes = v.get("slo_classes").as_arr().unwrap();
+        assert_eq!(classes.len(), 1);
+        assert_eq!(classes[0].get("class").as_str(), Some("interactive"));
+        let tenants = v.get("tenants").as_arr().unwrap();
+        assert_eq!(tenants[0].get("name").as_str(), Some("default"));
     }
 }

@@ -6,8 +6,9 @@
 //! | Decision point        | Trait              | Built-in names |
 //! |-----------------------|--------------------|----------------|
 //! | global request routing| [`RoutePolicy`]    | `round-robin`, `least-outstanding`, `least-kv`, `prefix-aware`, `session-affinity` |
-//! | wait-queue ordering   | [`SchedulePolicy`] | `fcfs`, `sjf`, `priority` |
+//! | wait-queue ordering   | [`SchedulePolicy`] | `fcfs`, `sjf`, `priority`, `slo` |
 //! | prefix-cache eviction | [`EvictionPolicy`] | `lru`, `lfu`, `largest` |
+//! | traffic generation    | [`TrafficSource`]  | `burst`, `diurnal`, `mmpp`, `poisson`, `sessions`, `uniform` |
 //!
 //! [`SimConfig`](crate::config::SimConfig) stores policy *names* (plain
 //! strings, so JSON round-trip and presets keep working); a
@@ -33,6 +34,7 @@ use crate::sim::Nanos;
 
 pub use crate::memory::radix::CacheLeaf;
 pub use crate::router::{InstanceView, RoutePolicy};
+pub use crate::workload::{Traffic, TrafficSource, WorkloadSpec};
 
 // ---------------------------------------------------------------------------
 // Traits
@@ -83,6 +85,11 @@ pub type RouteFactory = Arc<dyn Fn() -> Box<dyn RoutePolicy> + Send + Sync>;
 pub type SchedFactory = Arc<dyn Fn() -> Box<dyn SchedulePolicy> + Send + Sync>;
 /// Factory for eviction policies.
 pub type EvictFactory = Arc<dyn Fn() -> Box<dyn EvictionPolicy> + Send + Sync>;
+/// Factory for traffic sources. Unlike the other decision points, a
+/// traffic source is parameterized by the workload it generates, so the
+/// factory receives the full [`WorkloadSpec`].
+pub type TrafficFactory =
+    Arc<dyn Fn(&WorkloadSpec) -> anyhow::Result<Box<dyn TrafficSource>> + Send + Sync>;
 
 /// Maps policy names to factory closures for all three decision points.
 ///
@@ -95,6 +102,7 @@ pub struct PolicyRegistry {
     route: BTreeMap<String, RouteFactory>,
     sched: BTreeMap<String, SchedFactory>,
     evict: BTreeMap<String, EvictFactory>,
+    traffic: BTreeMap<String, TrafficFactory>,
 }
 
 impl Default for PolicyRegistry {
@@ -110,6 +118,7 @@ impl std::fmt::Debug for PolicyRegistry {
             .field("route", &self.route_names())
             .field("sched", &self.sched_names())
             .field("evict", &self.evict_names())
+            .field("traffic", &self.traffic_names())
             .finish()
     }
 }
@@ -128,6 +137,7 @@ impl PolicyRegistry {
             route: BTreeMap::new(),
             sched: BTreeMap::new(),
             evict: BTreeMap::new(),
+            traffic: BTreeMap::new(),
         }
     }
 
@@ -159,6 +169,15 @@ impl PolicyRegistry {
         for e in crate::memory::EvictPolicy::all() {
             let e = *e;
             r.register_evict(e.as_str(), move || e.to_policy());
+        }
+        // Built-in traffic sources are the parameter-free-sweepable kinds;
+        // replay stays structural (it needs a trace path) and resolves
+        // directly in `make_traffic`.
+        for name in Traffic::builtin_names() {
+            let n = *name;
+            r.register_traffic(n, move |spec: &WorkloadSpec| {
+                crate::workload::source::build_builtin(n, spec)
+            });
         }
         r
     }
@@ -192,6 +211,18 @@ impl PolicyRegistry {
         self.evict.insert(name.into(), Arc::new(factory));
     }
 
+    /// Register (or replace) a traffic-source factory under `name`.
+    pub fn register_traffic(
+        &mut self,
+        name: impl Into<String>,
+        factory: impl Fn(&WorkloadSpec) -> anyhow::Result<Box<dyn TrafficSource>>
+            + Send
+            + Sync
+            + 'static,
+    ) {
+        self.traffic.insert(name.into(), Arc::new(factory));
+    }
+
     // ---- resolution -------------------------------------------------------
 
     /// Instantiate the route policy registered as `name`.
@@ -218,6 +249,23 @@ impl PolicyRegistry {
         }
     }
 
+    /// Build the traffic source for `spec`: replay resolves structurally
+    /// (it carries its own path), every other kind — built-in or custom —
+    /// resolves by name.
+    pub fn make_traffic(
+        &self,
+        spec: &WorkloadSpec,
+    ) -> anyhow::Result<Box<dyn TrafficSource>> {
+        if matches!(spec.traffic, Traffic::Replay { .. }) {
+            return crate::workload::source::build(&spec.traffic, spec);
+        }
+        let name = spec.traffic.kind_name();
+        match self.traffic.get(name) {
+            Some(f) => f(spec),
+            None => Err(unknown("traffic", name, &self.traffic_names())),
+        }
+    }
+
     pub fn has_route(&self, name: &str) -> bool {
         self.route.contains_key(name)
     }
@@ -226,6 +274,9 @@ impl PolicyRegistry {
     }
     pub fn has_evict(&self, name: &str) -> bool {
         self.evict.contains_key(name)
+    }
+    pub fn has_traffic(&self, name: &str) -> bool {
+        self.traffic.contains_key(name)
     }
 
     // ---- validation without instantiation ---------------------------------
@@ -261,6 +312,25 @@ impl PolicyRegistry {
         }
     }
 
+    /// Error (with the candidate list) unless `name` is a registered
+    /// traffic source. `replay` is rejected with a pointer to its
+    /// structural spelling — it needs a trace path, so it cannot be
+    /// selected by bare name.
+    pub fn check_traffic(&self, name: &str) -> anyhow::Result<()> {
+        if name == "replay" {
+            anyhow::bail!(
+                "traffic 'replay' needs a trace path; set the workload's \
+                 traffic to {{\"kind\": \"replay\", \"path\": ...}} in a \
+                 config file instead of selecting it by name"
+            );
+        }
+        if self.has_traffic(name) {
+            Ok(())
+        } else {
+            Err(unknown("traffic", name, &self.traffic_names()))
+        }
+    }
+
     // ---- enumeration (sorted, deterministic) ------------------------------
 
     /// All registered route-policy names, sorted.
@@ -276,6 +346,11 @@ impl PolicyRegistry {
     /// All registered eviction-policy names, sorted.
     pub fn evict_names(&self) -> Vec<String> {
         self.evict.keys().cloned().collect()
+    }
+
+    /// All registered traffic-source names, sorted.
+    pub fn traffic_names(&self) -> Vec<String> {
+        self.traffic.keys().cloned().collect()
     }
 }
 
@@ -333,6 +408,22 @@ pub fn register_evict_policy(
         .register_evict(name, factory);
 }
 
+/// Register a traffic source in the global registry (last wins). Configs
+/// select it with [`Traffic::Custom`] and sweep `--workloads` axes
+/// enumerate it alongside the built-ins.
+pub fn register_traffic_source(
+    name: impl Into<String>,
+    factory: impl Fn(&WorkloadSpec) -> anyhow::Result<Box<dyn TrafficSource>>
+        + Send
+        + Sync
+        + 'static,
+) {
+    global()
+        .write()
+        .expect("policy registry lock poisoned")
+        .register_traffic(name, factory);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -376,8 +467,66 @@ mod tests {
         let mut sorted = names.clone();
         sorted.sort();
         assert_eq!(names, sorted);
-        assert_eq!(reg.sched_names(), vec!["fcfs", "priority", "sjf"]);
+        assert_eq!(reg.sched_names(), vec!["fcfs", "priority", "sjf", "slo"]);
         assert_eq!(reg.evict_names(), vec!["largest", "lfu", "lru"]);
+        assert_eq!(
+            reg.traffic_names(),
+            Traffic::builtin_names()
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn builtin_traffic_resolves_and_matches_spec() {
+        let reg = PolicyRegistry::builtins();
+        let mut spec = crate::workload::WorkloadSpec::sharegpt_100(10.0);
+        spec.num_requests = 5;
+        for name in reg.traffic_names() {
+            spec.traffic = Traffic::Custom { name: name.clone() };
+            let mut src = reg.make_traffic(&spec).unwrap();
+            assert_eq!(src.name(), name);
+            assert!(src.next_request().is_some(), "{name} yields nothing");
+        }
+        // unknown names error with candidates; replay-by-name errors with a
+        // pointer to its structural spelling (it resolves via the Traffic
+        // enum, not the registry)
+        spec.traffic = Traffic::Custom { name: "surge".into() };
+        let e = reg.make_traffic(&spec).unwrap_err().to_string();
+        assert!(e.contains("surge") && e.contains("poisson"), "{e}");
+        let e = reg.check_traffic("replay").unwrap_err().to_string();
+        assert!(e.contains("path"), "{e}");
+        assert!(reg.check_traffic("surge").is_err());
+    }
+
+    #[test]
+    fn custom_traffic_registers_globally() {
+        use crate::workload::{ReplaySource, Request};
+        register_traffic_source("test-two-requests", |_spec| {
+            Ok(Box::new(ReplaySource::from_requests(vec![
+                Request {
+                    id: 0,
+                    prompt_tokens: 8,
+                    output_tokens: 2,
+                    ..Request::default()
+                },
+                Request {
+                    id: 1,
+                    arrival: 10,
+                    prompt_tokens: 8,
+                    output_tokens: 2,
+                    ..Request::default()
+                },
+            ])))
+        });
+        let mut spec = crate::workload::WorkloadSpec::sharegpt_100(10.0);
+        spec.traffic = Traffic::Custom {
+            name: "test-two-requests".into(),
+        };
+        let reqs = spec.generate().unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert!(snapshot().traffic_names().contains(&"test-two-requests".to_string()));
     }
 
     #[test]

@@ -249,11 +249,10 @@ mod tests {
     fn req(id: u64, session: u64) -> Request {
         Request {
             id,
-            arrival: 0,
             prompt_tokens: 64,
             output_tokens: 8,
             session,
-            shared_prefix: 0,
+            ..Request::default()
         }
     }
 

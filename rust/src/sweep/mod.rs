@@ -37,7 +37,7 @@ use crate::metrics::Report;
 use crate::policy::PolicyRegistry;
 use crate::util::bench::Table;
 use crate::util::json::Value;
-use crate::workload::{Arrival, LengthDist};
+use crate::workload::{LengthDist, Traffic};
 
 /// Hardware preset substituted when the hardware axis is empty.
 pub const DEFAULT_HARDWARE: &str = "rtx3090";
@@ -64,6 +64,12 @@ pub struct SweepAxes {
     pub evictions: Vec<String>,
     /// Performance-model backends.
     pub backends: Vec<PerfBackend>,
+    /// Traffic-source names (resolved through the policy registry, like
+    /// the policy axes): built-ins (`poisson`, `mmpp`, `diurnal`,
+    /// `sessions`, ...) and user-registered sources sweep identically.
+    /// Each grid point's source runs at the rate axis value in effect (or
+    /// 10 req/s when the rate axis is empty).
+    pub workloads: Vec<String>,
 }
 
 impl SweepAxes {
@@ -82,6 +88,15 @@ impl SweepAxes {
         self.routers = registry.route_names();
         self.scheds = registry.sched_names();
         self.evictions = registry.evict_names();
+        self
+    }
+
+    /// Fill the workload axis with every traffic source registered in
+    /// `registry` (built-ins plus user registrations; the same global-
+    /// registry caveat as [`with_all_policies`](Self::with_all_policies)
+    /// applies).
+    pub fn with_all_workloads(mut self, registry: &PolicyRegistry) -> Self {
+        self.workloads = registry.traffic_names();
         self
     }
 }
@@ -138,6 +153,7 @@ impl SweepSpec {
         f(self.axes.presets.len())
             * f(self.axes.hardware.len())
             * f(self.axes.rates.len())
+            * f(self.axes.workloads.len())
             * f(self.axes.routers.len())
             * f(self.axes.scheds.len())
             * f(self.axes.evictions.len())
@@ -166,27 +182,34 @@ impl SweepSpec {
         for e in &self.axes.evictions {
             registry.check_evict(e)?;
         }
+        for w in &self.axes.workloads {
+            // rejects unknown names with candidates, and 'replay' with a
+            // pointer to its structural config spelling
+            registry.check_traffic(w)?;
+        }
         let mut out: Vec<SimConfig> = vec![];
         let mut seen: HashSet<String> = HashSet::new();
         for preset in &self.axes.presets {
             for hw in axis(&self.axes.hardware) {
                 for rate in axis(&self.axes.rates) {
-                    for router in axis(&self.axes.routers) {
-                        for sched in axis(&self.axes.scheds) {
-                            for evict in axis(&self.axes.evictions) {
-                                for backend in axis(&self.axes.backends) {
-                                    let cfg = self.point(
-                                        preset, hw, rate, router, sched, evict,
-                                        backend,
-                                    )?;
-                                    if !seen.insert(cfg.name.clone()) {
-                                        anyhow::bail!(
-                                            "duplicate sweep point '{}' \
-                                             (repeated axis value?)",
-                                            cfg.name
-                                        );
+                    for workload in axis(&self.axes.workloads) {
+                        for router in axis(&self.axes.routers) {
+                            for sched in axis(&self.axes.scheds) {
+                                for evict in axis(&self.axes.evictions) {
+                                    for backend in axis(&self.axes.backends) {
+                                        let cfg = self.point(
+                                            preset, hw, rate, workload, router,
+                                            sched, evict, backend,
+                                        )?;
+                                        if !seen.insert(cfg.name.clone()) {
+                                            anyhow::bail!(
+                                                "duplicate sweep point '{}' \
+                                                 (repeated axis value?)",
+                                                cfg.name
+                                            );
+                                        }
+                                        out.push(cfg);
                                     }
-                                    out.push(cfg);
                                 }
                             }
                         }
@@ -203,6 +226,7 @@ impl SweepSpec {
         preset: &str,
         hw: Option<&String>,
         rate: Option<&f64>,
+        workload: Option<&String>,
         router: Option<&String>,
         sched: Option<&String>,
         evict: Option<&String>,
@@ -227,8 +251,16 @@ impl SweepSpec {
             name.push_str(&format!("|hw={h}"));
         }
         if let Some(r) = rate {
-            cfg.workload.arrival = Arrival::Poisson { rate: *r };
+            cfg.workload.traffic = Traffic::poisson(*r);
             name.push_str(&format!("|rate={r}"));
+        }
+        if let Some(w) = workload {
+            // the workload axis consumes the rate axis value (or the
+            // 10 req/s default) as its nominal rate
+            let r = rate.copied().unwrap_or(10.0);
+            cfg.workload.traffic = Traffic::for_name(w, r)
+                .unwrap_or_else(|| Traffic::Custom { name: w.clone() });
+            name.push_str(&format!("|wl={w}"));
         }
         if let Some(p) = router {
             cfg.router = p.clone();
@@ -649,12 +681,56 @@ mod tests {
         assert!(names.contains("M(D)|rate=20|router=least-outstanding"));
         // the axes actually landed in the configs
         for cfg in &cfgs {
-            match &cfg.workload.arrival {
-                Arrival::Poisson { rate } => {
+            match &cfg.workload.traffic {
+                Traffic::Open(crate::workload::Arrival::Poisson { rate }) => {
                     assert!(*rate == 5.0 || *rate == 20.0)
                 }
-                other => panic!("unexpected arrival {other:?}"),
+                other => panic!("unexpected traffic {other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn workload_axis_expands_and_feeds_the_rate() {
+        let mut spec = quick_spec();
+        spec.axes.rates = vec![8.0];
+        spec.axes.workloads = vec!["mmpp".into(), "sessions".into()];
+        let cfgs = spec.expand().unwrap();
+        assert_eq!(cfgs.len(), 2);
+        assert_eq!(cfgs[0].name, "S(D)|rate=8|wl=mmpp");
+        assert_eq!(cfgs[0].workload.traffic.kind_name(), "mmpp");
+        match &cfgs[0].workload.traffic {
+            Traffic::Open(crate::workload::Arrival::Mmpp { rate_on, .. }) => {
+                assert_eq!(*rate_on, 32.0, "mmpp peaks at 4x the nominal rate")
+            }
+            other => panic!("unexpected traffic {other:?}"),
+        }
+        assert_eq!(cfgs[1].workload.traffic.kind_name(), "sessions");
+        // unknown and non-sweepable names are rejected up front
+        let mut spec = quick_spec();
+        spec.axes.workloads = vec!["surge-nonexistent".into()];
+        let e = spec.expand().unwrap_err().to_string();
+        assert!(e.contains("surge-nonexistent") && e.contains("poisson"), "{e}");
+        let mut spec = quick_spec();
+        spec.axes.workloads = vec!["replay".into()];
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn all_workloads_axis_enumerates_registry() {
+        let registry = crate::policy::snapshot();
+        let mut spec = quick_spec();
+        spec.axes = spec.axes.with_all_workloads(&registry);
+        // drop any custom registrations without default params from other
+        // tests: keep only names `for_name` understands plus customs, all
+        // of which expand (customs resolve at build time)
+        let cfgs = spec.expand().unwrap();
+        assert_eq!(cfgs.len(), spec.axes.workloads.len());
+        for name in Traffic::builtin_names() {
+            assert!(
+                cfgs.iter().any(|c| c.name.contains(&format!("wl={name}"))),
+                "workload '{name}' missing from grid"
+            );
         }
     }
 

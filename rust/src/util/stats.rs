@@ -154,6 +154,88 @@ impl Online {
     }
 }
 
+/// Bounded-memory sample accumulator: exact count/mean/std/min/max
+/// (Welford) plus a deterministic reservoir for percentiles.
+///
+/// Below the reservoir capacity every sample is retained, so summaries are
+/// *exact* — identical to [`Summary::of`] over the same values. Past the
+/// capacity, percentiles come from uniform reservoir sampling driven by a
+/// private fixed-seed [`Rng`], so results stay byte-reproducible for a
+/// given push sequence (worker threads never share a `SampleSet`). This is
+/// what lets the metrics pipeline ingest hundreds of millions of
+/// inter-token gaps from million-request streaming workloads in O(cap)
+/// memory.
+#[derive(Debug, Clone)]
+pub struct SampleSet {
+    online: Online,
+    reservoir: Vec<f64>,
+    cap: usize,
+    rng: crate::util::rng::Rng,
+}
+
+/// Default reservoir capacity: exact percentiles for every workload the
+/// test suite and the paper's figures run, bounded memory beyond.
+pub const SAMPLE_RESERVOIR_CAP: usize = 65_536;
+
+impl Default for SampleSet {
+    fn default() -> Self {
+        SampleSet::new(SAMPLE_RESERVOIR_CAP)
+    }
+}
+
+impl SampleSet {
+    pub fn new(cap: usize) -> SampleSet {
+        assert!(cap > 0);
+        SampleSet {
+            online: Online::new(),
+            reservoir: Vec::new(),
+            cap,
+            rng: crate::util::rng::Rng::new(0x5A4D_17E5),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.online.push(x);
+        if self.reservoir.len() < self.cap {
+            self.reservoir.push(x);
+        } else {
+            // classic Algorithm R: keep each of the n seen samples with
+            // probability cap/n
+            let j = self.rng.below(self.online.count());
+            if (j as usize) < self.cap {
+                self.reservoir[j as usize] = x;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.online.count()
+    }
+
+    /// True iff percentiles are exact (no sample has been dropped).
+    pub fn is_exact(&self) -> bool {
+        self.online.count() as usize <= self.cap
+    }
+
+    pub fn summary(&self) -> Summary {
+        if self.online.count() == 0 {
+            return Summary::of(&[]);
+        }
+        let mut sorted = self.reservoir.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            count: self.online.count() as usize,
+            mean: self.online.mean(),
+            std: self.online.std(),
+            min: self.online.min(),
+            max: self.online.max(),
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+}
+
 /// Absolute percentage error: `|a - b| / |b| * 100` (b = reference).
 pub fn ape(measured: f64, reference: f64) -> f64 {
     if reference == 0.0 {
@@ -286,6 +368,47 @@ mod tests {
         let s = Summary::of(&all);
         assert!((a.mean() - s.mean).abs() < 1e-9);
         assert!((a.std() - s.std).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_set_exact_below_cap() {
+        let xs: Vec<f64> = (0..100).map(|i| (i * 7 % 100) as f64).collect();
+        let mut s = SampleSet::new(256);
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!(s.is_exact());
+        let got = s.summary();
+        let want = Summary::of(&xs);
+        assert_eq!(got.count, want.count);
+        assert!((got.mean - want.mean).abs() < 1e-9);
+        assert!((got.std - want.std).abs() < 1e-9);
+        assert_eq!(got.p50, want.p50);
+        assert_eq!(got.p90, want.p90);
+        assert_eq!(got.p99, want.p99);
+        assert_eq!((got.min, got.max), (want.min, want.max));
+    }
+
+    #[test]
+    fn sample_set_bounded_and_deterministic_past_cap() {
+        let mk = || {
+            let mut s = SampleSet::new(64);
+            for i in 0..10_000u64 {
+                s.push((i % 1000) as f64);
+            }
+            s
+        };
+        let a = mk();
+        let b = mk();
+        assert!(!a.is_exact());
+        assert_eq!(a.count(), 10_000);
+        assert_eq!(a.summary(), b.summary(), "reservoir must be deterministic");
+        // mean/min/max stay exact; percentiles approximate the uniform
+        let s = a.summary();
+        assert!((s.mean - 499.55).abs() < 1.0, "mean={}", s.mean);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 999.0);
+        assert!((s.p50 - 500.0).abs() < 150.0, "p50={}", s.p50);
     }
 
     #[test]

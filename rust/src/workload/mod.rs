@@ -1,19 +1,136 @@
-//! Workload generation: requests, arrival processes, and trace I/O.
+//! Workload engine: requests, SLO classes, tenants, arrival processes,
+//! traffic sources, and trace I/O.
 //!
 //! The paper evaluates with 100 requests sampled from ShareGPT and Poisson
-//! arrivals at 10 req/s. ShareGPT itself is an external dataset; per the
-//! substitution rule we ship a deterministic sampler whose prompt/output
-//! length marginals are log-normal fits to published ShareGPT statistics
-//! (median prompt ≈ 130 tokens, heavy right tail; median output ≈ 200
-//! tokens). Real traces can be loaded from JSON with the same schema the
-//! generator writes, so users can substitute the genuine dataset.
+//! arrivals at 10 req/s, but positions the simulator as infrastructure that
+//! "captures the breadth of approaches in modern LLM serving". This module
+//! is therefore a composable engine rather than a flat generator:
+//!
+//! * [`Arrival`] — the open-loop timestamp process (Poisson, fixed-gap,
+//!   burst, bursty MMPP on/off, diurnal rate curve). All processes share
+//!   one clock implementation that guarantees **monotone non-decreasing**
+//!   arrival times, saturating instead of wrapping at extreme rates.
+//! * [`Traffic`] — what a workload *is*: an open-loop process, closed-loop
+//!   multi-turn [sessions](Traffic::Sessions), a [replay](Traffic::Replay)
+//!   of a JSON trace, or a [custom](Traffic::Custom) source registered in
+//!   the [policy registry](crate::policy) under a name (exactly like
+//!   routing/scheduling/eviction policies).
+//! * [`TrafficSource`](source::TrafficSource) — the streaming contract:
+//!   sources are pulled one request at a time by the coordinator, so
+//!   million-request scenarios run in bounded memory. Eager generation
+//!   ([`WorkloadSpec::generate`]) is defined as collecting the stream, so
+//!   the two can never diverge.
+//! * [`TenantSpec`]/[`SloClass`] — every request carries a tenant and an
+//!   SLO class (interactive/batch with TTFT/TPOT targets) that flow into
+//!   scheduler priority and per-tenant / per-class report breakdowns.
+//!
+//! ShareGPT itself is an external dataset; per the substitution rule we
+//! ship a deterministic sampler whose prompt/output length marginals are
+//! log-normal fits to published ShareGPT statistics (median prompt ≈ 130
+//! tokens, heavy right tail; median output ≈ 200 tokens). Real traces load
+//! from JSON with the same schema the generator writes.
+
+pub mod source;
+
+pub use source::{OpenLoopSource, ReplaySource, SessionSource, TrafficSource};
 
 use crate::sim::{secs_to_nanos, Nanos};
 use crate::util::json::{self, Value};
 use crate::util::rng::Rng;
 
-/// One inference request.
+/// Service-level-objective class of a request. Targets follow common
+/// serving-SLO studies: interactive traffic is latency-bound, batch traffic
+/// is throughput-bound with loose latency targets.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    /// Chat-style traffic: tight TTFT/TPOT targets.
+    #[default]
+    Interactive,
+    /// Offline/analytics traffic: loose targets, throughput-oriented.
+    Batch,
+}
+
+impl SloClass {
+    pub fn all() -> &'static [SloClass] {
+        &[SloClass::Interactive, SloClass::Batch]
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Time-to-first-token target.
+    pub fn ttft_target_ns(self) -> Nanos {
+        match self {
+            SloClass::Interactive => 500 * crate::sim::MILLI,
+            SloClass::Batch => 30 * crate::sim::SECOND,
+        }
+    }
+
+    /// Time-per-output-token target.
+    pub fn tpot_target_ns(self) -> Nanos {
+        match self {
+            SloClass::Interactive => 100 * crate::sim::MILLI,
+            SloClass::Batch => crate::sim::SECOND,
+        }
+    }
+}
+
+impl std::str::FromStr for SloClass {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<SloClass, Self::Err> {
+        Ok(match s {
+            "interactive" => SloClass::Interactive,
+            "batch" => SloClass::Batch,
+            _ => anyhow::bail!("unknown SLO class '{s}' (interactive|batch)"),
+        })
+    }
+}
+
+/// One tenant sharing the deployment: requests are attributed to tenants by
+/// weighted draw, and every tenant pins an SLO class for its traffic.
 #[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Unnormalized share of the request stream (must be > 0).
+    pub weight: f64,
+    pub slo: SloClass,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, weight: f64, slo: SloClass) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            weight,
+            slo,
+        }
+    }
+
+    /// A skewed `n`-tenant mix alternating interactive/batch classes
+    /// (tenant i has weight 1/(i+1) — a few heavy tenants, a long tail).
+    pub fn mix(n: usize) -> Vec<TenantSpec> {
+        (0..n)
+            .map(|i| {
+                TenantSpec::new(
+                    &format!("tenant{i}"),
+                    1.0 / (i + 1) as f64,
+                    if i % 2 == 0 {
+                        SloClass::Interactive
+                    } else {
+                        SloClass::Batch
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Request {
     pub id: u64,
     /// Arrival time at the global router.
@@ -29,6 +146,10 @@ pub struct Request {
     pub session: u64,
     /// Tokens of the prompt shared with other requests in the same session.
     pub shared_prefix: u64,
+    /// Tenant index (into [`WorkloadSpec::tenants`]; 0 when single-tenant).
+    pub tenant: u32,
+    /// SLO class driving scheduler priority and attainment accounting.
+    pub slo_class: SloClass,
 }
 
 impl Request {
@@ -60,7 +181,11 @@ impl Request {
     }
 }
 
-/// Arrival process for synthesizing request timestamps.
+// ---------------------------------------------------------------------------
+// Arrival processes
+// ---------------------------------------------------------------------------
+
+/// Open-loop arrival process for synthesizing request timestamps.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Arrival {
     /// Poisson process with `rate` requests/second (the paper's setup).
@@ -69,24 +194,343 @@ pub enum Arrival {
     Uniform { rate: f64 },
     /// Everything arrives at t=0 (offline/batch evaluation).
     Burst,
+    /// Markov-modulated Poisson on/off process: exponential dwell times in
+    /// an on state (`rate_on`) and an off state (`rate_off`, may be 0) —
+    /// the classic bursty-traffic model.
+    Mmpp {
+        rate_on: f64,
+        rate_off: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    },
+    /// Inhomogeneous Poisson with a sinusoidal (diurnal) rate curve:
+    /// `rate(t) = base_rate * (1 + amplitude * sin(2πt / period_s))`,
+    /// sampled by thinning against the peak rate.
+    Diurnal {
+        base_rate: f64,
+        amplitude: f64,
+        period_s: f64,
+    },
 }
 
 impl Arrival {
-    /// Generate `n` monotone arrival timestamps.
-    pub fn timestamps(&self, n: usize, rng: &mut Rng) -> Vec<Nanos> {
-        let mut out = Vec::with_capacity(n);
-        let mut t = 0.0f64;
-        for _ in 0..n {
-            match self {
-                Arrival::Poisson { rate } => t += rng.exp(*rate),
-                Arrival::Uniform { rate } => t += 1.0 / rate,
-                Arrival::Burst => {}
-            }
-            out.push(secs_to_nanos(t));
+    /// Registry-style name of this process kind.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Arrival::Poisson { .. } => "poisson",
+            Arrival::Uniform { .. } => "uniform",
+            Arrival::Burst => "burst",
+            Arrival::Mmpp { .. } => "mmpp",
+            Arrival::Diurnal { .. } => "diurnal",
         }
-        out
+    }
+
+    /// Reject parameters that would produce a degenerate process.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let pos = |v: f64, what: &str| -> anyhow::Result<()> {
+            if !v.is_finite() || v <= 0.0 {
+                anyhow::bail!("{} arrival: {what} must be finite and > 0, got {v}",
+                    self.kind_name());
+            }
+            Ok(())
+        };
+        match self {
+            Arrival::Poisson { rate } | Arrival::Uniform { rate } => {
+                pos(*rate, "rate")
+            }
+            Arrival::Burst => Ok(()),
+            Arrival::Mmpp {
+                rate_on,
+                rate_off,
+                mean_on_s,
+                mean_off_s,
+            } => {
+                pos(*rate_on, "rate_on")?;
+                if !rate_off.is_finite() || *rate_off < 0.0 {
+                    anyhow::bail!(
+                        "mmpp arrival: rate_off must be finite and >= 0, got {rate_off}"
+                    );
+                }
+                pos(*mean_on_s, "mean_on_s")?;
+                pos(*mean_off_s, "mean_off_s")
+            }
+            Arrival::Diurnal {
+                base_rate,
+                amplitude,
+                period_s,
+            } => {
+                pos(*base_rate, "base_rate")?;
+                if !amplitude.is_finite() || !(0.0..=1.0).contains(amplitude) {
+                    anyhow::bail!(
+                        "diurnal arrival: amplitude must be in [0,1], got {amplitude}"
+                    );
+                }
+                pos(*period_s, "period_s")
+            }
+        }
+    }
+
+    /// Generate `n` arrival timestamps. Guaranteed monotone non-decreasing
+    /// (saturating at `u64::MAX` ns rather than wrapping or going
+    /// backwards), even at extreme rates.
+    pub fn timestamps(&self, n: usize, rng: &mut Rng) -> Vec<Nanos> {
+        let mut clock = ArrivalClock::new(self.clone());
+        (0..n).map(|_| clock.next(rng)).collect()
     }
 }
+
+/// Streaming clock over an [`Arrival`] process: the single implementation
+/// behind both [`Arrival::timestamps`] and the pull-based traffic sources,
+/// so eager and incremental generation can never diverge.
+///
+/// Invariant: `next` never returns a value smaller than the previous one.
+/// Non-finite or negative gaps (degenerate parameters at extreme rates)
+/// saturate to `u64::MAX` ns instead of corrupting the order.
+#[derive(Debug, Clone)]
+pub struct ArrivalClock {
+    arrival: Arrival,
+    /// Elapsed seconds (the sampling domain).
+    t: f64,
+    /// Last emitted timestamp — the monotonicity clamp.
+    prev: Nanos,
+    /// MMPP state: currently in the on state, remaining dwell seconds.
+    mmpp_on: bool,
+    dwell_left: f64,
+}
+
+impl ArrivalClock {
+    pub fn new(arrival: Arrival) -> ArrivalClock {
+        ArrivalClock {
+            arrival,
+            t: 0.0,
+            prev: 0,
+            mmpp_on: true,
+            dwell_left: f64::NAN, // initialized lazily from the rng
+        }
+    }
+
+    /// Advance the clock by one arrival and return its timestamp.
+    pub fn next(&mut self, rng: &mut Rng) -> Nanos {
+        let gap = self.next_gap(rng);
+        // Degenerate gaps (NaN from pathological parameters) saturate the
+        // clock; negative gaps are impossible from the samplers but are
+        // clamped anyway so monotonicity is unconditional.
+        if gap.is_nan() {
+            self.t = f64::INFINITY;
+        } else if gap > 0.0 {
+            self.t += gap;
+        }
+        let at = secs_to_nanos(self.t).max(self.prev);
+        self.prev = at;
+        at
+    }
+
+    fn next_gap(&mut self, rng: &mut Rng) -> f64 {
+        match &self.arrival {
+            Arrival::Poisson { rate } => rng.exp(rate.max(f64::MIN_POSITIVE)),
+            Arrival::Uniform { rate } => 1.0 / rate,
+            Arrival::Burst => 0.0,
+            Arrival::Mmpp {
+                rate_on,
+                rate_off,
+                mean_on_s,
+                mean_off_s,
+            } => {
+                if self.dwell_left.is_nan() {
+                    self.dwell_left = rng.exp(1.0 / mean_on_s.max(f64::MIN_POSITIVE));
+                }
+                let mut gap = 0.0f64;
+                // A sane process sees O(1) phase switches per arrival; if
+                // thousands of dwell periods pass without one (rates
+                // vanishingly small vs. dwell times), the next arrival is
+                // effectively "never" — saturate instead of spinning.
+                for _ in 0..10_000 {
+                    let rate = if self.mmpp_on { *rate_on } else { *rate_off };
+                    let to_arrival = if rate > 0.0 {
+                        rng.exp(rate)
+                    } else {
+                        f64::INFINITY
+                    };
+                    if to_arrival <= self.dwell_left {
+                        self.dwell_left -= to_arrival;
+                        return gap + to_arrival;
+                    }
+                    // phase switch before the next arrival
+                    gap += self.dwell_left;
+                    self.mmpp_on = !self.mmpp_on;
+                    let mean = if self.mmpp_on { *mean_on_s } else { *mean_off_s };
+                    self.dwell_left = rng.exp(1.0 / mean.max(f64::MIN_POSITIVE));
+                    if !gap.is_finite() {
+                        return gap; // saturated; caller clamps
+                    }
+                }
+                f64::INFINITY
+            }
+            Arrival::Diurnal {
+                base_rate,
+                amplitude,
+                period_s,
+            } => {
+                // Thinning against the peak rate.
+                let peak = base_rate * (1.0 + amplitude);
+                if !peak.is_finite() {
+                    return 0.0; // effectively infinite rate: back-to-back
+                }
+                let mut gap = 0.0f64;
+                loop {
+                    gap += rng.exp(peak.max(f64::MIN_POSITIVE));
+                    let phase = (self.t + gap) / period_s * std::f64::consts::TAU;
+                    let r = base_rate * (1.0 + amplitude * phase.sin());
+                    if !gap.is_finite() || rng.chance((r / peak).clamp(0.0, 1.0)) {
+                        return gap;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Traffic selection
+// ---------------------------------------------------------------------------
+
+/// What kind of traffic a workload produces. Open-loop processes wrap an
+/// [`Arrival`]; sessions model closed-loop multi-turn conversations; replay
+/// streams a JSON trace; custom names resolve through the
+/// [policy registry](crate::policy) like every other pluggable decision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Traffic {
+    /// Independent requests from an open-loop arrival process.
+    Open(Arrival),
+    /// Closed-loop multi-turn conversations: sessions start from `start`,
+    /// each runs `turns` turns spaced by exponential think times (mean
+    /// `think_s` seconds), and each turn's prompt re-sends the growing
+    /// conversation context as a shared prefix (so the radix prefix cache
+    /// sees realistic multi-turn reuse).
+    Sessions {
+        start: Arrival,
+        turns: u32,
+        think_s: f64,
+    },
+    /// Replay a JSON request trace (see [`load_trace`]).
+    Replay { path: String },
+    /// A source registered under `name` via
+    /// [`crate::policy::register_traffic_source`].
+    Custom { name: String },
+}
+
+impl Traffic {
+    pub fn poisson(rate: f64) -> Traffic {
+        Traffic::Open(Arrival::Poisson { rate })
+    }
+
+    pub fn uniform(rate: f64) -> Traffic {
+        Traffic::Open(Arrival::Uniform { rate })
+    }
+
+    pub fn burst() -> Traffic {
+        Traffic::Open(Arrival::Burst)
+    }
+
+    /// Bursty on/off traffic alternating `rate_on` and `rate_off` phases.
+    pub fn mmpp(rate_on: f64, rate_off: f64, mean_on_s: f64, mean_off_s: f64) -> Traffic {
+        Traffic::Open(Arrival::Mmpp {
+            rate_on,
+            rate_off,
+            mean_on_s,
+            mean_off_s,
+        })
+    }
+
+    /// Sinusoidal diurnal rate curve around `base_rate`.
+    pub fn diurnal(base_rate: f64, amplitude: f64, period_s: f64) -> Traffic {
+        Traffic::Open(Arrival::Diurnal {
+            base_rate,
+            amplitude,
+            period_s,
+        })
+    }
+
+    /// Multi-turn sessions starting at Poisson `rate` sessions/second.
+    pub fn sessions(rate: f64, turns: u32, think_s: f64) -> Traffic {
+        Traffic::Sessions {
+            start: Arrival::Poisson { rate },
+            turns,
+            think_s,
+        }
+    }
+
+    /// The registry name of this traffic kind (custom traffic reports its
+    /// registered name).
+    pub fn kind_name(&self) -> &str {
+        match self {
+            Traffic::Open(a) => a.kind_name(),
+            Traffic::Sessions { .. } => "sessions",
+            Traffic::Replay { .. } => "replay",
+            Traffic::Custom { name } => name,
+        }
+    }
+
+    /// Built-in source names sweepable without extra parameters (replay
+    /// needs a trace path, so it is configured explicitly instead).
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["burst", "diurnal", "mmpp", "poisson", "sessions", "uniform"]
+    }
+
+    /// Default-parameter traffic for a built-in name at `rate` req/s —
+    /// the mapping behind the sweep engine's `--workloads` axis.
+    pub fn for_name(name: &str, rate: f64) -> Option<Traffic> {
+        Some(match name {
+            "poisson" => Traffic::poisson(rate),
+            "uniform" => Traffic::uniform(rate),
+            "burst" => Traffic::burst(),
+            // on at 4x the nominal rate for 1/4 of the time: same average
+            // load as `poisson`, very different queueing behavior.
+            "mmpp" => Traffic::mmpp(rate * 4.0, 0.0, 2.0, 6.0),
+            "diurnal" => Traffic::diurnal(rate, 0.8, 60.0),
+            "sessions" => Traffic::sessions(rate / 4.0, 4, 2.0),
+            _ => return None,
+        })
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            Traffic::Open(a) => a.validate(),
+            Traffic::Sessions {
+                start,
+                turns,
+                think_s,
+            } => {
+                start.validate()?;
+                if *turns == 0 {
+                    anyhow::bail!("sessions traffic: turns must be >= 1");
+                }
+                if !think_s.is_finite() || *think_s < 0.0 {
+                    anyhow::bail!(
+                        "sessions traffic: think_s must be finite and >= 0, got {think_s}"
+                    );
+                }
+                Ok(())
+            }
+            Traffic::Replay { path } => {
+                if path.is_empty() {
+                    anyhow::bail!("replay traffic: path must not be empty");
+                }
+                Ok(())
+            }
+            Traffic::Custom { name } => {
+                if name.is_empty() {
+                    anyhow::bail!("custom traffic: name must not be empty");
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Length distribution
+// ---------------------------------------------------------------------------
 
 /// Length distribution configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -128,24 +572,40 @@ impl LengthDist {
         }
     }
 
+    pub(crate) fn sample_prompt(&self, rng: &mut Rng) -> u64 {
+        self.sample(self.prompt_mu, self.prompt_sigma, rng)
+    }
+
+    pub(crate) fn sample_output(&self, rng: &mut Rng) -> u64 {
+        self.sample(self.output_mu, self.output_sigma, rng)
+    }
+
     fn sample(&self, mu: f64, sigma: f64, rng: &mut Rng) -> u64 {
         let x = rng.lognormal(mu, sigma).round() as u64;
         x.clamp(self.min_tokens, self.max_tokens)
     }
 }
 
+// ---------------------------------------------------------------------------
+// Workload specification
+// ---------------------------------------------------------------------------
+
 /// Workload generator configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadSpec {
     pub num_requests: usize,
-    pub arrival: Arrival,
+    pub traffic: Traffic,
     pub lengths: LengthDist,
-    /// Number of distinct sessions; requests are assigned Zipf-1.0 over
-    /// sessions. 0 disables sessions (every request unique).
+    /// Number of distinct sessions for open-loop traffic; requests are
+    /// assigned Zipf-1.0 over sessions. 0 disables sessions (every request
+    /// unique). Session traffic manages its own conversation ids instead.
     pub sessions: usize,
     /// Shared system-prompt prefix length per session (tokens); enables
     /// prefix-caching studies.
     pub shared_prefix: u64,
+    /// Tenants sharing the deployment; empty = a single anonymous
+    /// interactive tenant.
+    pub tenants: Vec<TenantSpec>,
     pub seed: u64,
 }
 
@@ -153,56 +613,55 @@ impl WorkloadSpec {
     pub fn sharegpt_100(rate: f64) -> WorkloadSpec {
         WorkloadSpec {
             num_requests: 100,
-            arrival: Arrival::Poisson { rate },
+            traffic: Traffic::poisson(rate),
             lengths: LengthDist::sharegpt(),
             sessions: 0,
             shared_prefix: 0,
+            tenants: vec![],
             seed: 0x5EED,
         }
     }
 
-    /// Generate the request list (sorted by arrival).
-    pub fn generate(&self) -> Vec<Request> {
-        let mut rng = Rng::new(self.seed);
-        let times = self.arrival.timestamps(self.num_requests, &mut rng);
-        let zipf = if self.sessions > 0 {
-            Some(crate::util::rng::ZipfTable::new(self.sessions, 1.0))
+    /// Display names for tenant indices (index 0.. maps to the spec's
+    /// tenants; out-of-range indices name themselves).
+    pub fn tenant_names(&self) -> Vec<String> {
+        if self.tenants.is_empty() {
+            vec!["default".to_string()]
         } else {
-            None
-        };
-        times
-            .into_iter()
-            .enumerate()
-            .map(|(i, arrival)| {
-                let prompt = self.lengths.sample(
-                    self.lengths.prompt_mu,
-                    self.lengths.prompt_sigma,
-                    &mut rng,
+            self.tenants.iter().map(|t| t.name.clone()).collect()
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.traffic.validate()?;
+        for t in &self.tenants {
+            if !t.weight.is_finite() || t.weight <= 0.0 {
+                anyhow::bail!(
+                    "tenant '{}': weight must be finite and > 0, got {}",
+                    t.name,
+                    t.weight
                 );
-                let output = self.lengths.sample(
-                    self.lengths.output_mu,
-                    self.lengths.output_sigma,
-                    &mut rng,
-                );
-                let session = match &zipf {
-                    Some(z) => z.sample(&mut rng) as u64,
-                    None => i as u64,
-                };
-                let shared = if self.sessions > 0 {
-                    self.shared_prefix.min(prompt)
-                } else {
-                    0
-                };
-                Request {
-                    id: i as u64,
-                    arrival,
-                    prompt_tokens: prompt.max(shared + 1),
-                    output_tokens: output,
-                    session,
-                    shared_prefix: shared,
-                }
-            })
-            .collect()
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the streaming source for this spec, resolving custom traffic
+    /// names against a snapshot of the global policy registry.
+    pub fn source(&self) -> anyhow::Result<Box<dyn TrafficSource>> {
+        crate::policy::snapshot().make_traffic(self)
+    }
+
+    /// Generate the full request list eagerly. Defined as collecting the
+    /// streaming source, so eager and incremental generation are
+    /// byte-identical by construction.
+    pub fn generate(&self) -> anyhow::Result<Vec<Request>> {
+        let mut src = self.source()?;
+        let mut out = Vec::new();
+        while let Some(r) = src.next_request() {
+            out.push(r);
+        }
+        Ok(out)
     }
 }
 
@@ -222,13 +681,17 @@ pub fn to_json(reqs: &[Request]) -> Value {
                     ("output_tokens", Value::int(r.output_tokens as i64)),
                     ("session", Value::int(r.session as i64)),
                     ("shared_prefix", Value::int(r.shared_prefix as i64)),
+                    ("tenant", Value::int(r.tenant as i64)),
+                    ("slo", Value::str(r.slo_class.as_str())),
                 ])
             })
             .collect(),
     )
 }
 
-/// Parse requests from the JSON trace schema.
+/// Parse requests from the JSON trace schema. `tenant`/`slo` are optional
+/// (default: tenant 0, interactive) so pre-multi-tenant traces still load;
+/// present-but-malformed values are rejected.
 pub fn from_json(v: &Value) -> anyhow::Result<Vec<Request>> {
     let arr = v
         .as_arr()
@@ -240,6 +703,23 @@ pub fn from_json(v: &Value) -> anyhow::Result<Vec<Request>> {
                 .as_u64()
                 .ok_or_else(|| anyhow::anyhow!("request {i}: missing/invalid '{k}'"))
         };
+        let tenant = match item.get("tenant") {
+            Value::Null => 0,
+            t => t
+                .as_u64()
+                .and_then(|v| u32::try_from(v).ok())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("request {i}: invalid 'tenant' (want u32)")
+                })?,
+        };
+        let slo_class = match item.get("slo") {
+            Value::Null => SloClass::Interactive,
+            s => s
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("request {i}: invalid 'slo' (want string)"))?
+                .parse::<SloClass>()
+                .map_err(|e| anyhow::anyhow!("request {i}: {e}"))?,
+        };
         out.push(Request {
             id: field("id")?,
             arrival: field("arrival_ns")?,
@@ -247,6 +727,8 @@ pub fn from_json(v: &Value) -> anyhow::Result<Vec<Request>> {
             output_tokens: field("output_tokens")?,
             session: item.get("session").as_u64().unwrap_or(i as u64),
             shared_prefix: item.get("shared_prefix").as_u64().unwrap_or(0),
+            tenant,
+            slo_class,
         });
     }
     out.sort_by_key(|r| r.arrival);
@@ -277,16 +759,104 @@ mod tests {
     }
 
     #[test]
+    fn mmpp_average_rate_between_phases() {
+        let mut rng = Rng::new(4);
+        let a = Arrival::Mmpp {
+            rate_on: 40.0,
+            rate_off: 0.0,
+            mean_on_s: 2.0,
+            mean_off_s: 6.0,
+        };
+        let ts = a.timestamps(5000, &mut rng);
+        let span = crate::sim::nanos_to_secs(*ts.last().unwrap());
+        let rate = 5000.0 / span;
+        // duty cycle 2/(2+6) = 0.25 → average ≈ 10 req/s
+        assert!((5.0..20.0).contains(&rate), "rate={rate}");
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates_around_base() {
+        let mut rng = Rng::new(5);
+        let a = Arrival::Diurnal {
+            base_rate: 20.0,
+            amplitude: 0.8,
+            period_s: 10.0,
+        };
+        let ts = a.timestamps(4000, &mut rng);
+        let span = crate::sim::nanos_to_secs(*ts.last().unwrap());
+        let rate = 4000.0 / span;
+        assert!((12.0..30.0).contains(&rate), "rate={rate}");
+    }
+
+    fn all_arrivals(rate: f64) -> Vec<Arrival> {
+        vec![
+            Arrival::Poisson { rate },
+            Arrival::Uniform { rate },
+            Arrival::Burst,
+            Arrival::Mmpp {
+                rate_on: rate,
+                rate_off: 0.0,
+                mean_on_s: 1.0,
+                mean_off_s: 1.0,
+            },
+            Arrival::Diurnal {
+                base_rate: rate,
+                amplitude: 0.9,
+                period_s: 30.0,
+            },
+        ]
+    }
+
+    #[test]
     fn arrivals_monotone() {
         let mut rng = Rng::new(2);
-        for arrival in [
-            Arrival::Poisson { rate: 100.0 },
-            Arrival::Uniform { rate: 100.0 },
-            Arrival::Burst,
-        ] {
-            let ts = arrival.timestamps(100, &mut rng);
-            assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+        for arrival in all_arrivals(100.0) {
+            let ts = arrival.timestamps(200, &mut rng);
+            assert!(
+                ts.windows(2).all(|w| w[0] <= w[1]),
+                "{} not monotone",
+                arrival.kind_name()
+            );
         }
+    }
+
+    #[test]
+    fn arrivals_monotone_at_extreme_rates() {
+        // Boundary satellite: rate → 0 must saturate (not wrap or go
+        // backwards), and enormous rates must stay non-decreasing even
+        // when every gap rounds to the same nanosecond.
+        let mut rng = Rng::new(3);
+        for rate in [1e-300, 1e-12, 1e12, 1e300, f64::MAX] {
+            for arrival in all_arrivals(rate) {
+                let ts = arrival.timestamps(64, &mut rng);
+                assert!(
+                    ts.windows(2).all(|w| w[0] <= w[1]),
+                    "{} unsorted at rate {rate}",
+                    arrival.kind_name()
+                );
+            }
+        }
+        // rate so small every timestamp saturates
+        let ts = Arrival::Poisson { rate: 1e-300 }.timestamps(4, &mut rng);
+        assert!(ts.iter().all(|&t| t == u64::MAX), "{ts:?}");
+    }
+
+    #[test]
+    fn degenerate_rates_rejected_by_validate() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(Arrival::Poisson { rate: bad }.validate().is_err(), "{bad}");
+            assert!(Arrival::Uniform { rate: bad }.validate().is_err(), "{bad}");
+        }
+        assert!(Arrival::Burst.validate().is_ok());
+        assert!(Arrival::Diurnal {
+            base_rate: 10.0,
+            amplitude: 1.5,
+            period_s: 60.0
+        }
+        .validate()
+        .is_err());
+        assert!(Traffic::sessions(1.0, 0, 1.0).validate().is_err());
+        assert!(Traffic::Replay { path: String::new() }.validate().is_err());
     }
 
     #[test]
@@ -299,14 +869,14 @@ mod tests {
     #[test]
     fn generate_deterministic() {
         let spec = WorkloadSpec::sharegpt_100(10.0);
-        assert_eq!(spec.generate(), spec.generate());
+        assert_eq!(spec.generate().unwrap(), spec.generate().unwrap());
     }
 
     #[test]
     fn sharegpt_lengths_plausible() {
         let mut spec = WorkloadSpec::sharegpt_100(10.0);
         spec.num_requests = 2000;
-        let reqs = spec.generate();
+        let reqs = spec.generate().unwrap();
         let mut prompts: Vec<f64> =
             reqs.iter().map(|r| r.prompt_tokens as f64).collect();
         prompts.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -324,13 +894,14 @@ mod tests {
     fn sessions_and_prefix() {
         let spec = WorkloadSpec {
             num_requests: 200,
-            arrival: Arrival::Burst,
+            traffic: Traffic::burst(),
             lengths: LengthDist::short(),
             sessions: 5,
             shared_prefix: 32,
+            tenants: vec![],
             seed: 9,
         };
-        let reqs = spec.generate();
+        let reqs = spec.generate().unwrap();
         let distinct: std::collections::HashSet<u64> =
             reqs.iter().map(|r| r.session).collect();
         assert!(distinct.len() <= 5);
@@ -342,9 +913,28 @@ mod tests {
     }
 
     #[test]
+    fn tenant_mix_assigns_classes_and_weights() {
+        let mut spec = WorkloadSpec::sharegpt_100(10.0);
+        spec.num_requests = 400;
+        spec.lengths = LengthDist::short();
+        spec.tenants = TenantSpec::mix(3);
+        let reqs = spec.generate().unwrap();
+        let mut counts = [0usize; 3];
+        for r in &reqs {
+            counts[r.tenant as usize] += 1;
+            let expect = spec.tenants[r.tenant as usize].slo;
+            assert_eq!(r.slo_class, expect, "class must follow the tenant");
+        }
+        // weights 1, 1/2, 1/3 → tenant0 busiest, tenant2 quietest
+        assert!(counts[0] > counts[1] && counts[1] > counts[2], "{counts:?}");
+    }
+
+    #[test]
     fn trace_roundtrip() {
-        let spec = WorkloadSpec::sharegpt_100(10.0);
-        let reqs = spec.generate();
+        let mut spec = WorkloadSpec::sharegpt_100(10.0);
+        spec.tenants = TenantSpec::mix(2);
+        let reqs = spec.generate().unwrap();
+        assert!(reqs.iter().any(|r| r.slo_class == SloClass::Batch));
         let v = to_json(&reqs);
         let parsed = from_json(&v).unwrap();
         assert_eq!(reqs, parsed);
@@ -354,7 +944,7 @@ mod tests {
     fn trace_file_roundtrip() {
         let dir = std::env::temp_dir().join("llmss_test_trace");
         let path = dir.join("t.json");
-        let reqs = WorkloadSpec::sharegpt_100(5.0).generate();
+        let reqs = WorkloadSpec::sharegpt_100(5.0).generate().unwrap();
         save_trace(&path, &reqs).unwrap();
         let loaded = load_trace(&path).unwrap();
         assert_eq!(reqs, loaded);
@@ -365,11 +955,11 @@ mod tests {
     fn token_ids_share_session_prefix() {
         let mk = |id, session, shared| Request {
             id,
-            arrival: 0,
             prompt_tokens: 64,
             output_tokens: 8,
             session,
             shared_prefix: shared,
+            ..Request::default()
         };
         let a = mk(1, 7, 32);
         let b = mk(2, 7, 32);
@@ -386,5 +976,41 @@ mod tests {
         assert!(from_json(&Value::int(3)).is_err());
         let bad = json::parse(r#"[{"id": 1}]"#).unwrap();
         assert!(from_json(&bad).is_err());
+        // malformed tenant/slo are rejected, not defaulted
+        let bad = json::parse(
+            r#"[{"id":1,"arrival_ns":0,"prompt_tokens":4,"output_tokens":2,"slo":"gold"}]"#,
+        )
+        .unwrap();
+        assert!(from_json(&bad).unwrap_err().to_string().contains("gold"));
+        let bad = json::parse(
+            r#"[{"id":1,"arrival_ns":0,"prompt_tokens":4,"output_tokens":2,"tenant":"a"}]"#,
+        )
+        .unwrap();
+        assert!(from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn slo_class_targets_and_parse() {
+        assert!(SloClass::Interactive.ttft_target_ns() < SloClass::Batch.ttft_target_ns());
+        assert!(SloClass::Interactive.tpot_target_ns() < SloClass::Batch.tpot_target_ns());
+        for c in SloClass::all() {
+            assert_eq!(c.as_str().parse::<SloClass>().unwrap(), *c);
+        }
+        assert!("gold".parse::<SloClass>().is_err());
+    }
+
+    #[test]
+    fn traffic_names_roundtrip_through_for_name() {
+        for name in Traffic::builtin_names() {
+            let t = Traffic::for_name(name, 12.0)
+                .unwrap_or_else(|| panic!("builtin '{name}' has no default"));
+            assert_eq!(t.kind_name(), *name);
+            t.validate().unwrap();
+        }
+        assert!(Traffic::for_name("replay", 1.0).is_none());
+        assert_eq!(
+            Traffic::Custom { name: "surge".into() }.kind_name(),
+            "surge"
+        );
     }
 }

@@ -1,0 +1,531 @@
+//! Streaming traffic sources: the pull-based generators behind the
+//! workload engine.
+//!
+//! A [`TrafficSource`] yields requests one at a time in non-decreasing
+//! arrival order. The coordinator pulls the next request only after
+//! scheduling the previous one, so a million-request scenario never holds
+//! an upfront `Vec<Request>` — memory is bounded by in-flight state.
+//!
+//! Sources are `Send` (they ride inside a `Simulation` across sweep worker
+//! threads) and deterministic: all randomness comes from a [`Rng`] seeded
+//! by the [`WorkloadSpec`], and a given seed produces the same stream
+//! whether the source is drained eagerly or pulled incrementally (there is
+//! only one code path).
+//!
+//! Built-ins (registered in the [policy registry](crate::policy) under the
+//! names of [`Traffic::builtin_names`]):
+//! * [`OpenLoopSource`] — independent requests from any [`Arrival`]
+//!   process (`poisson`, `uniform`, `burst`, `mmpp`, `diurnal`).
+//! * [`SessionSource`] — closed-loop multi-turn conversations
+//!   (`sessions`): each turn re-sends the growing conversation context as
+//!   a shared prefix, so radix prefix caches see realistic reuse.
+//! * [`ReplaySource`] — streams a JSON trace loaded via
+//!   [`load_trace`](super::load_trace).
+//!
+//! Custom sources implement the trait in their own file and register via
+//! [`crate::policy::register_traffic_source`]; configs select them with
+//! [`Traffic::Custom`] and sweeps enumerate them alongside built-ins.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::{secs_to_nanos, Nanos};
+use crate::util::rng::{Rng, ZipfTable};
+
+use super::{
+    Arrival, ArrivalClock, LengthDist, Request, SloClass, TenantSpec, Traffic,
+    WorkloadSpec,
+};
+
+/// A pull-based request stream (see module docs). Implementations must
+/// yield non-decreasing `arrival` timestamps and unique request ids.
+pub trait TrafficSource: Send {
+    /// Registry/report name of this source (e.g. `"mmpp"`).
+    fn name(&self) -> &str;
+
+    /// The next request, or `None` when the stream is exhausted.
+    fn next_request(&mut self) -> Option<Request>;
+}
+
+impl Iterator for Box<dyn TrafficSource> {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        self.next_request()
+    }
+}
+
+/// Build the source for `traffic` with the shared knobs from `spec`.
+/// [`Traffic::Custom`] cannot be built structurally — resolve it through
+/// [`crate::policy::PolicyRegistry::make_traffic`] instead.
+pub fn build(
+    traffic: &Traffic,
+    spec: &WorkloadSpec,
+) -> anyhow::Result<Box<dyn TrafficSource>> {
+    traffic.validate()?;
+    spec.validate()?;
+    Ok(match traffic {
+        Traffic::Open(arrival) => Box::new(OpenLoopSource::new(arrival.clone(), spec)),
+        Traffic::Sessions {
+            start,
+            turns,
+            think_s,
+        } => Box::new(SessionSource::new(start.clone(), *turns, *think_s, spec)),
+        Traffic::Replay { path } => Box::new(ReplaySource::load(
+            std::path::Path::new(path),
+            spec.num_requests,
+        )?),
+        Traffic::Custom { name } => anyhow::bail!(
+            "custom traffic '{name}' must resolve through the policy registry"
+        ),
+    })
+}
+
+/// Registry factory for the built-in source named `name`: uses the spec's
+/// own traffic when it already is that kind, otherwise default parameters
+/// at 10 req/s (the sweep axis path, where the name arrives as a
+/// [`Traffic::Custom`] selection).
+pub fn build_builtin(
+    name: &str,
+    spec: &WorkloadSpec,
+) -> anyhow::Result<Box<dyn TrafficSource>> {
+    let structural = !matches!(spec.traffic, Traffic::Custom { .. });
+    let traffic = if structural && spec.traffic.kind_name() == name {
+        spec.traffic.clone()
+    } else {
+        Traffic::for_name(name, 10.0)
+            .ok_or_else(|| anyhow::anyhow!("no default parameters for traffic '{name}'"))?
+    };
+    build(&traffic, spec)
+}
+
+/// Per-request body sampling shared by the synthetic sources: lengths,
+/// Zipf session assignment, and weighted tenant attribution.
+struct BodySampler {
+    lengths: LengthDist,
+    sessions: usize,
+    zipf: Option<ZipfTable>,
+    shared_prefix: u64,
+    tenants: Vec<TenantSpec>,
+    weights: Vec<f64>,
+}
+
+impl BodySampler {
+    fn new(spec: &WorkloadSpec) -> BodySampler {
+        BodySampler {
+            lengths: spec.lengths.clone(),
+            sessions: spec.sessions,
+            zipf: if spec.sessions > 0 {
+                Some(ZipfTable::new(spec.sessions, 1.0))
+            } else {
+                None
+            },
+            shared_prefix: spec.shared_prefix,
+            tenants: spec.tenants.clone(),
+            weights: spec.tenants.iter().map(|t| t.weight).collect(),
+        }
+    }
+
+    /// Weighted tenant draw; single-tenant specs consume no randomness.
+    fn tenant(&self, rng: &mut Rng) -> (u32, SloClass) {
+        if self.tenants.is_empty() {
+            return (0, SloClass::Interactive);
+        }
+        let i = rng.weighted(&self.weights);
+        (i as u32, self.tenants[i].slo)
+    }
+
+    /// One open-loop request body (draw order: prompt, output, session,
+    /// tenant — keep stable, it is part of the determinism contract).
+    fn request(&self, id: u64, arrival: Nanos, rng: &mut Rng) -> Request {
+        let prompt = self.lengths.sample_prompt(rng);
+        let output = self.lengths.sample_output(rng);
+        let session = match &self.zipf {
+            Some(z) => z.sample(rng) as u64,
+            None => id,
+        };
+        let shared = if self.sessions > 0 {
+            self.shared_prefix.min(prompt)
+        } else {
+            0
+        };
+        let (tenant, slo_class) = self.tenant(rng);
+        Request {
+            id,
+            arrival,
+            prompt_tokens: prompt.max(shared + 1),
+            output_tokens: output,
+            session,
+            shared_prefix: shared,
+            tenant,
+            slo_class,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop
+// ---------------------------------------------------------------------------
+
+/// Independent requests from an open-loop [`Arrival`] process.
+pub struct OpenLoopSource {
+    name: &'static str,
+    remaining: usize,
+    clock: ArrivalClock,
+    body: BodySampler,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl OpenLoopSource {
+    pub fn new(arrival: Arrival, spec: &WorkloadSpec) -> OpenLoopSource {
+        OpenLoopSource {
+            name: arrival.kind_name(),
+            remaining: spec.num_requests,
+            clock: ArrivalClock::new(arrival),
+            body: BodySampler::new(spec),
+            rng: Rng::new(spec.seed),
+            next_id: 0,
+        }
+    }
+}
+
+impl TrafficSource for OpenLoopSource {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn next_request(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let at = self.clock.next(&mut self.rng);
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(self.body.request(id, at, &mut self.rng))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Closed-loop sessions
+// ---------------------------------------------------------------------------
+
+/// A conversation turn waiting to be emitted.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct PendingTurn {
+    at: Nanos,
+    /// Session ordinal — the deterministic tie-break at equal times.
+    session: u64,
+    turn: u32,
+    /// Conversation context (prompt + output tokens of all prior turns),
+    /// re-sent as the shared prefix of the next turn.
+    ctx_tokens: u64,
+    tenant: u32,
+    slo: SloClass,
+}
+
+/// Closed-loop multi-turn conversations. Sessions start from an arrival
+/// process; each session runs a fixed number of turns spaced by
+/// exponential think times (an approximation of user think time — the
+/// generator does not observe simulated completions). Turn `k` re-sends
+/// the conversation context of turns `0..k` as its shared prefix, so
+/// sessions exercise the radix prefix cache exactly like multi-turn chat.
+pub struct SessionSource {
+    remaining: usize,
+    turns: u32,
+    think_s: f64,
+    clock: ArrivalClock,
+    /// Next session start time (pre-drawn so the merge is one comparison).
+    next_start: Nanos,
+    pending: BinaryHeap<Reverse<PendingTurn>>,
+    body: BodySampler,
+    /// Context cap: conversations stop growing past this many tokens.
+    ctx_cap: u64,
+    rng: Rng,
+    next_id: u64,
+    next_session: u64,
+    prev_at: Nanos,
+}
+
+impl SessionSource {
+    pub fn new(
+        start: Arrival,
+        turns: u32,
+        think_s: f64,
+        spec: &WorkloadSpec,
+    ) -> SessionSource {
+        let mut rng = Rng::new(spec.seed);
+        let mut clock = ArrivalClock::new(start);
+        let first = clock.next(&mut rng);
+        SessionSource {
+            remaining: spec.num_requests,
+            turns: turns.max(1),
+            think_s,
+            clock,
+            next_start: first,
+            pending: BinaryHeap::new(),
+            body: BodySampler::new(spec),
+            ctx_cap: spec.lengths.max_tokens.saturating_mul(4),
+            rng,
+            next_id: 0,
+            next_session: 0,
+            prev_at: 0,
+        }
+    }
+
+    fn think_gap(&mut self) -> Nanos {
+        if self.think_s <= 0.0 {
+            return 0;
+        }
+        secs_to_nanos(self.rng.exp(1.0 / self.think_s))
+    }
+}
+
+impl TrafficSource for SessionSource {
+    fn name(&self) -> &str {
+        "sessions"
+    }
+
+    fn next_request(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+
+        // Merge: earliest of (next session start, earliest pending turn);
+        // ties go to the pending turn (older session) for determinism.
+        let take_pending = self
+            .pending
+            .peek()
+            .is_some_and(|r| r.0.at <= self.next_start);
+        let turn = if take_pending {
+            self.pending.pop().unwrap().0
+        } else {
+            // Open a new session at `next_start`.
+            let (tenant, slo) = self.body.tenant(&mut self.rng);
+            let t = PendingTurn {
+                at: self.next_start,
+                session: self.next_session,
+                turn: 0,
+                ctx_tokens: 0,
+                tenant,
+                slo,
+            };
+            self.next_session += 1;
+            self.next_start = self.clock.next(&mut self.rng);
+            t
+        };
+
+        let fresh = self.body.lengths.sample_prompt(&mut self.rng);
+        let output = self.body.lengths.sample_output(&mut self.rng);
+        let shared = if turn.turn == 0 {
+            // first turn: system prompt only (if the spec shares one)
+            self.body.shared_prefix
+        } else {
+            turn.ctx_tokens.min(self.ctx_cap)
+        };
+        let prompt = shared + fresh.max(1);
+        // arrivals must be globally monotone even if heap/start interleave
+        // at saturated times
+        let at = turn.at.max(self.prev_at);
+        self.prev_at = at;
+        let id = self.next_id;
+        self.next_id += 1;
+
+        if turn.turn + 1 < self.turns {
+            let gap = self.think_gap();
+            self.pending.push(Reverse(PendingTurn {
+                at: at.saturating_add(gap),
+                session: turn.session,
+                turn: turn.turn + 1,
+                ctx_tokens: prompt + output,
+                tenant: turn.tenant,
+                slo: turn.slo,
+            }));
+        }
+
+        Some(Request {
+            id,
+            arrival: at,
+            prompt_tokens: prompt,
+            output_tokens: output,
+            session: turn.session,
+            shared_prefix: shared,
+            tenant: turn.tenant,
+            slo_class: turn.slo,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace replay
+// ---------------------------------------------------------------------------
+
+/// Streams a pre-loaded request trace (arrival-sorted by
+/// [`from_json`](super::from_json)), truncated to the spec's request
+/// budget when the trace is longer.
+pub struct ReplaySource {
+    reqs: std::vec::IntoIter<Request>,
+}
+
+impl ReplaySource {
+    pub fn load(path: &std::path::Path, limit: usize) -> anyhow::Result<ReplaySource> {
+        let mut reqs = super::load_trace(path)?;
+        if limit > 0 && reqs.len() > limit {
+            reqs.truncate(limit);
+        }
+        Ok(ReplaySource {
+            reqs: reqs.into_iter(),
+        })
+    }
+
+    /// Replay an in-memory request list (must be arrival-sorted).
+    pub fn from_requests(reqs: Vec<Request>) -> ReplaySource {
+        ReplaySource {
+            reqs: reqs.into_iter(),
+        }
+    }
+}
+
+impl TrafficSource for ReplaySource {
+    fn name(&self) -> &str {
+        "replay"
+    }
+
+    fn next_request(&mut self) -> Option<Request> {
+        self.reqs.next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(traffic: Traffic) -> WorkloadSpec {
+        WorkloadSpec {
+            num_requests: 120,
+            traffic,
+            lengths: LengthDist::short(),
+            sessions: 0,
+            shared_prefix: 16,
+            tenants: TenantSpec::mix(2),
+            seed: 0xFEED,
+        }
+    }
+
+    fn drain(src: &mut dyn TrafficSource) -> Vec<Request> {
+        std::iter::from_fn(|| src.next_request()).collect()
+    }
+
+    #[test]
+    fn every_builtin_streams_monotone_unique_ids() {
+        for name in Traffic::builtin_names() {
+            let s = spec(Traffic::for_name(name, 20.0).unwrap());
+            let mut src = build(&s.traffic, &s).unwrap();
+            assert_eq!(src.name(), *name);
+            let reqs = drain(src.as_mut());
+            assert_eq!(reqs.len(), 120, "{name}");
+            assert!(
+                reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+                "{name} not monotone"
+            );
+            let ids: std::collections::HashSet<u64> =
+                reqs.iter().map(|r| r.id).collect();
+            assert_eq!(ids.len(), 120, "{name} ids not unique");
+            assert!(src.next_request().is_none(), "{name} must stay exhausted");
+        }
+    }
+
+    #[test]
+    fn eager_equals_incremental() {
+        for name in Traffic::builtin_names() {
+            let s = spec(Traffic::for_name(name, 15.0).unwrap());
+            let eager = s.generate().unwrap();
+            let mut src = build(&s.traffic, &s).unwrap();
+            let mut pulled = Vec::new();
+            while let Some(r) = src.next_request() {
+                pulled.push(r);
+            }
+            assert_eq!(eager, pulled, "{name} eager != incremental");
+        }
+    }
+
+    #[test]
+    fn sessions_share_growing_prefixes() {
+        let s = spec(Traffic::sessions(2.0, 4, 1.0));
+        let reqs = s.generate().unwrap();
+        // group by session; later turns must carry the prior context
+        use std::collections::HashMap;
+        let mut by_session: HashMap<u64, Vec<&Request>> = HashMap::new();
+        for r in &reqs {
+            by_session.entry(r.session).or_default().push(r);
+        }
+        let mut grew = false;
+        let mut saw_multi_turn = false;
+        for turns in by_session.values() {
+            for pair in turns.windows(2) {
+                saw_multi_turn = true;
+                assert!(
+                    pair[1].shared_prefix >= pair[0].shared_prefix,
+                    "conversation context must not shrink"
+                );
+                grew |= pair[1].shared_prefix > pair[0].shared_prefix;
+                assert!(pair[1].arrival >= pair[0].arrival);
+                // the session-deterministic prefix actually coincides in
+                // token-id space (radix-cache contract)
+                let a = pair[0].token_ids();
+                let b = pair[1].token_ids();
+                let n = pair[0].shared_prefix as usize;
+                assert_eq!(a[..n], b[..n], "turns must share prefix token ids");
+            }
+        }
+        assert!(saw_multi_turn, "expected at least one multi-turn session");
+        assert!(grew, "context must grow across turns somewhere");
+    }
+
+    #[test]
+    fn sessions_respect_turn_budget_and_tenancy() {
+        let s = spec(Traffic::sessions(5.0, 3, 0.5));
+        let reqs = s.generate().unwrap();
+        use std::collections::HashMap;
+        let mut turns: HashMap<u64, usize> = HashMap::new();
+        for r in &reqs {
+            *turns.entry(r.session).or_default() += 1;
+            // a session's tenant/class never changes mid-conversation
+        }
+        assert!(turns.values().all(|&n| n <= 3), "{turns:?}");
+        let mut tenant_of: HashMap<u64, (u32, SloClass)> = HashMap::new();
+        for r in &reqs {
+            let e = tenant_of.entry(r.session).or_insert((r.tenant, r.slo_class));
+            assert_eq!(*e, (r.tenant, r.slo_class), "session switched tenant");
+        }
+    }
+
+    #[test]
+    fn replay_streams_trace_in_order() {
+        let s = spec(Traffic::poisson(30.0));
+        let reqs = s.generate().unwrap();
+        let mut src = ReplaySource::from_requests(reqs.clone());
+        assert_eq!(src.name(), "replay");
+        let replayed = drain(&mut src);
+        assert_eq!(replayed, reqs);
+    }
+
+    #[test]
+    fn replay_truncates_to_budget() {
+        let dir = std::env::temp_dir().join("llmss_replay_src");
+        let path = dir.join("trace.json");
+        let s = spec(Traffic::poisson(30.0));
+        super::super::save_trace(&path, &s.generate().unwrap()).unwrap();
+        let mut short = ReplaySource::load(&path, 7).unwrap();
+        assert_eq!(drain(&mut short).len(), 7);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn custom_traffic_needs_registry() {
+        let s = spec(Traffic::Custom { name: "surge".into() });
+        assert!(build(&s.traffic, &s).is_err());
+    }
+}

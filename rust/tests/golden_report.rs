@@ -1,0 +1,72 @@
+//! Golden-report snapshot (ISSUE 3 satellite): the `sharegpt_100` workload
+//! on the `rtx3090` preset must reproduce its checked-in report JSON
+//! byte-for-byte. Any perf-model, scheduler, event-ordering, or metrics
+//! change that shifts a single nanosecond fails this test loudly instead
+//! of drifting silently.
+//!
+//! Workflow:
+//! * fixture present  → assert byte equality; on mismatch, the actual
+//!   report is written next to the target dir
+//!   (`target/golden_report_actual.json` — CI uploads it as an artifact)
+//!   and the test panics with both paths.
+//! * fixture absent   → it is generated and written (self-blessing first
+//!   run; commit the file). Refresh intentionally with
+//!   `UPDATE_GOLDEN=1 cargo test -q --test golden_report`.
+
+use std::path::PathBuf;
+
+use llmservingsim::config::presets;
+use llmservingsim::coordinator::run_config;
+
+fn manifest_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// The pinned scenario: the paper's §III-A evaluation workload (100
+/// ShareGPT-like requests, Poisson 10 req/s) on a single RTX3090 instance.
+fn golden_config() -> llmservingsim::config::SimConfig {
+    let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+    cfg.workload = llmservingsim::workload::WorkloadSpec::sharegpt_100(10.0);
+    cfg
+}
+
+#[test]
+fn sharegpt_100_rtx3090_matches_golden_report() {
+    let fixture = manifest_path("tests/fixtures/golden_sharegpt100_rtx3090.json");
+    let (report, _) = run_config(golden_config()).unwrap();
+    let actual = report.to_json().to_string();
+
+    let update = std::env::var_os("UPDATE_GOLDEN").is_some();
+    if update || !fixture.exists() {
+        std::fs::create_dir_all(fixture.parent().unwrap()).unwrap();
+        std::fs::write(&fixture, &actual).unwrap();
+        eprintln!(
+            "golden fixture {} at {} — commit it so future runs pin the report",
+            if update { "refreshed" } else { "blessed" },
+            fixture.display()
+        );
+        return;
+    }
+
+    let expected = std::fs::read_to_string(&fixture).unwrap();
+    if actual != expected {
+        let out = manifest_path("target/golden_report_actual.json");
+        std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+        std::fs::write(&out, &actual).unwrap();
+        panic!(
+            "golden report mismatch for sharegpt_100/rtx3090:\n  expected: {}\n  \
+             actual written to: {}\nIf the change is intentional, refresh with \
+             UPDATE_GOLDEN=1 cargo test -q --test golden_report",
+            fixture.display(),
+            out.display()
+        );
+    }
+}
+
+#[test]
+fn golden_scenario_is_reproducible_in_process() {
+    // the snapshot is only meaningful if the scenario is deterministic
+    let (a, _) = run_config(golden_config()).unwrap();
+    let (b, _) = run_config(golden_config()).unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+}

@@ -142,7 +142,9 @@ fn unknown_policy_names_load_but_fail_to_build_with_candidates() {
 #[test]
 fn workload_trace_files_interoperate_with_cli_schema() {
     // gen-trace writes the same schema load_trace reads
-    let reqs = llmservingsim::workload::WorkloadSpec::sharegpt_100(10.0).generate();
+    let reqs = llmservingsim::workload::WorkloadSpec::sharegpt_100(10.0)
+        .generate()
+        .unwrap();
     let path = tmp("trace");
     llmservingsim::workload::save_trace(&path, &reqs).unwrap();
     let loaded = llmservingsim::workload::load_trace(&path).unwrap();

@@ -169,7 +169,7 @@ fn custom_and_builtin_sched_policies_differ_observably() {
         let mut cfg = small(presets::single_dense("tiny-dense", "rtx3090"), 30);
         // burst arrivals + tiny batch so admission order matters; constant
         // decode lengths make SJF provably optimal for mean TTFT here
-        cfg.workload.arrival = llmservingsim::workload::Arrival::Burst;
+        cfg.workload.traffic = llmservingsim::workload::Traffic::burst();
         cfg.workload.lengths.output_sigma = 0.0;
         for i in &mut cfg.instances {
             i.sched = sched.to_string();

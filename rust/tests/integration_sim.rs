@@ -7,7 +7,7 @@ use llmservingsim::config::{
     SimConfig,
 };
 use llmservingsim::coordinator::{run_config, Simulation};
-use llmservingsim::workload::{Arrival, LengthDist, WorkloadSpec};
+use llmservingsim::workload::{LengthDist, Traffic, WorkloadSpec};
 
 fn small(mut cfg: SimConfig, n: usize) -> SimConfig {
     cfg.workload.num_requests = n;
@@ -24,6 +24,7 @@ fn token_conservation_across_all_presets() {
         let expected: u64 = cfg
             .workload
             .generate()
+            .unwrap()
             .iter()
             .map(|r| r.output_tokens)
             .sum();
@@ -36,7 +37,7 @@ fn token_conservation_across_all_presets() {
 #[test]
 fn makespan_bounded_by_arrivals_plus_service() {
     let cfg = small(presets::single_dense("tiny-dense", "rtx3090"), 50);
-    let last_arrival = cfg.workload.generate().last().unwrap().arrival;
+    let last_arrival = cfg.workload.generate().unwrap().last().unwrap().arrival;
     let (report, _) = run_config(cfg).unwrap();
     assert!(report.makespan >= last_arrival);
     // sanity ceiling: tiny model on GPU-like perf shouldn't take > 1000 s
@@ -67,7 +68,7 @@ fn seeds_change_results_configs_stay_deterministic() {
 fn higher_rate_does_not_reduce_throughput() {
     let mk = |rate: f64| {
         let mut cfg = small(presets::single_dense("tiny-dense", "rtx3090"), 60);
-        cfg.workload.arrival = Arrival::Poisson { rate };
+        cfg.workload.traffic = Traffic::poisson(rate);
         run_config(cfg).unwrap().0
     };
     let slow = mk(5.0);
@@ -81,7 +82,7 @@ fn tp_instance_serves_faster_under_load() {
         let mut cfg = small(presets::single_dense("llama3.1-8b", "rtx3090"), 30);
         cfg.instances[0].devices = tp;
         cfg.instances[0].tp = tp;
-        cfg.workload.arrival = Arrival::Burst;
+        cfg.workload.traffic = Traffic::burst();
         run_config(cfg).unwrap().0
     };
     let tp1 = mk(1);
@@ -169,7 +170,7 @@ fn memory_pressure_still_finishes_all_requests() {
     cfg.instances[0].mem_capacity = Some(
         llmservingsim::model::ModelSpec::tiny_dense().param_bytes() + (4 << 20),
     );
-    cfg.workload.arrival = Arrival::Burst;
+    cfg.workload.traffic = Traffic::burst();
     let (r, _) = run_config(cfg).unwrap();
     assert_eq!(r.num_finished, 40);
 }
@@ -186,10 +187,11 @@ fn prefix_cache_hit_rate_increases_with_sharing() {
         );
         cfg.workload = WorkloadSpec {
             num_requests: 60,
-            arrival: Arrival::Poisson { rate: 10.0 },
+            traffic: Traffic::poisson(10.0),
             lengths: LengthDist::short(),
             sessions,
             shared_prefix: 48,
+            tenants: vec![],
             seed: 7,
         };
         let (_, s) = run_config(cfg).unwrap();
@@ -219,7 +221,7 @@ fn analytical_vs_cycle_backends_agree_on_tokens() {
 #[test]
 fn af_disaggregation_changes_attention_pricing() {
     let mut plain = small(presets::single_dense("llama3.1-8b", "rtx3090"), 10);
-    plain.workload.arrival = Arrival::Burst;
+    plain.workload.traffic = Traffic::burst();
     let mut af = plain.clone();
     af.instances[0].af_disagg = true;
     let (p, _) = run_config(plain).unwrap();

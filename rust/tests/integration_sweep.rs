@@ -111,6 +111,55 @@ fn sweep_summary_and_json_cover_the_grid() {
 }
 
 #[test]
+fn workloads_axis_all_sources_byte_identical_at_any_worker_count() {
+    // The acceptance contract of the workload engine: `--workloads all`
+    // enumerates every registered traffic source, and each grid point's
+    // report is byte-identical at 1 and 8 workers (and to a standalone
+    // run).
+    let registry = llmservingsim::policy::snapshot();
+    let mut spec = SweepSpec {
+        num_requests: 12,
+        quick: true,
+        seed: 0xB0B5,
+        ..SweepSpec::default()
+    };
+    spec.axes = spec.axes.with_all_workloads(&registry);
+    let cfgs = spec.expand().unwrap();
+    assert_eq!(
+        cfgs.len(),
+        registry.traffic_names().len(),
+        "every registered traffic source must become a grid point"
+    );
+    for name in ["poisson", "uniform", "burst", "mmpp", "diurnal", "sessions"] {
+        assert!(
+            cfgs.iter().any(|c| c.name.ends_with(&format!("wl={name}"))),
+            "built-in '{name}' missing from the grid"
+        );
+    }
+
+    let reference: Vec<(String, String)> = cfgs
+        .iter()
+        .map(|cfg| {
+            let (report, _) = run_config(cfg.clone()).unwrap();
+            (cfg.name.clone(), report.to_json().to_string())
+        })
+        .collect();
+    for threads in [1, 8] {
+        let swept = report_jsons(&cfgs, threads);
+        assert_eq!(swept, reference, "workload sweep diverged at {threads} threads");
+    }
+    // every source actually finished its requests
+    for (name, json) in &reference {
+        let v = llmservingsim::util::json::parse(json).unwrap();
+        assert_eq!(
+            v.get("num_finished").as_i64(),
+            Some(12),
+            "point '{name}' dropped requests"
+        );
+    }
+}
+
+#[test]
 fn eviction_and_backend_axes_expand() {
     // A second grid shape touching the other axes: prefix-cache preset x
     // eviction policy x perf backend.

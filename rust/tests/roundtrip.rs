@@ -1,0 +1,213 @@
+//! Round-trip tests for the two JSON codecs users feed external data
+//! through (ISSUE 3 satellite): `workload::to_json/from_json` (request
+//! traces, now carrying `tenant`/`slo` fields) and
+//! `TraceDb::to_json/from_json` (profiled latency tables) — including
+//! rejection of malformed input with actionable errors.
+
+use llmservingsim::model::OpKind;
+use llmservingsim::perf::trace::TraceDb;
+use llmservingsim::util::json;
+use llmservingsim::workload::{
+    self, Request, SloClass, TenantSpec, Traffic, WorkloadSpec,
+};
+
+// ---------------------------------------------------------------------------
+// workload trace codec
+// ---------------------------------------------------------------------------
+
+fn tenant_spec() -> WorkloadSpec {
+    let mut spec = WorkloadSpec::sharegpt_100(20.0);
+    spec.num_requests = 50;
+    spec.tenants = TenantSpec::mix(3);
+    spec.sessions = 4;
+    spec.shared_prefix = 24;
+    spec
+}
+
+#[test]
+fn workload_roundtrip_preserves_tenant_and_slo() {
+    let reqs = tenant_spec().generate().unwrap();
+    assert!(reqs.iter().any(|r| r.tenant > 0), "mix must use >1 tenant");
+    assert!(
+        reqs.iter().any(|r| r.slo_class == SloClass::Batch),
+        "mix must use both classes"
+    );
+    let parsed = workload::from_json(&workload::to_json(&reqs)).unwrap();
+    assert_eq!(reqs, parsed);
+    // and the serialized form is stable across serializations
+    assert_eq!(
+        workload::to_json(&reqs).to_string(),
+        workload::to_json(&parsed).to_string()
+    );
+}
+
+#[test]
+fn workload_roundtrip_through_replay_traffic() {
+    let dir = std::env::temp_dir().join("llmss_roundtrip_replay");
+    let path = dir.join("trace.json");
+    let reqs = tenant_spec().generate().unwrap();
+    workload::save_trace(&path, &reqs).unwrap();
+
+    // a replay workload streams exactly the saved trace
+    let mut spec = tenant_spec();
+    spec.traffic = Traffic::Replay {
+        path: path.to_string_lossy().into_owned(),
+    };
+    let replayed = spec.generate().unwrap();
+    assert_eq!(reqs, replayed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn workload_missing_tenant_fields_default() {
+    // pre-multi-tenant traces (no tenant/slo keys) still load
+    let v = json::parse(
+        r#"[{"id": 3, "arrival_ns": 9, "prompt_tokens": 5, "output_tokens": 2}]"#,
+    )
+    .unwrap();
+    let reqs = workload::from_json(&v).unwrap();
+    assert_eq!(reqs[0].tenant, 0);
+    assert_eq!(reqs[0].slo_class, SloClass::Interactive);
+    assert_eq!(reqs[0].session, 0, "session defaults to the index");
+}
+
+#[test]
+fn workload_rejects_malformed() {
+    // not an array
+    assert!(workload::from_json(&json::parse(r#"{"id": 1}"#).unwrap()).is_err());
+    // missing required numeric field
+    let e = workload::from_json(
+        &json::parse(r#"[{"id": 1, "arrival_ns": 5, "prompt_tokens": 4}]"#).unwrap(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("output_tokens"), "{e}");
+    // wrong type for a required field
+    assert!(workload::from_json(
+        &json::parse(
+            r#"[{"id": "one", "arrival_ns": 5, "prompt_tokens": 4, "output_tokens": 2}]"#
+        )
+        .unwrap()
+    )
+    .is_err());
+    // malformed optional fields are errors, not silent defaults
+    let e = workload::from_json(
+        &json::parse(
+            r#"[{"id": 1, "arrival_ns": 5, "prompt_tokens": 4, "output_tokens": 2,
+                 "slo": "platinum"}]"#,
+        )
+        .unwrap(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("platinum") && e.contains("interactive"), "{e}");
+    assert!(workload::from_json(
+        &json::parse(
+            r#"[{"id": 1, "arrival_ns": 5, "prompt_tokens": 4, "output_tokens": 2,
+                 "tenant": -3}]"#
+        )
+        .unwrap()
+    )
+    .is_err());
+    // out-of-u32-range tenant is rejected, not silently truncated
+    assert!(workload::from_json(
+        &json::parse(
+            r#"[{"id": 1, "arrival_ns": 5, "prompt_tokens": 4, "output_tokens": 2,
+                 "tenant": 4294967297}]"#
+        )
+        .unwrap()
+    )
+    .is_err());
+}
+
+#[test]
+fn workload_from_json_sorts_by_arrival() {
+    let v = json::parse(
+        r#"[{"id": 0, "arrival_ns": 100, "prompt_tokens": 4, "output_tokens": 1},
+            {"id": 1, "arrival_ns": 5,   "prompt_tokens": 4, "output_tokens": 1}]"#,
+    )
+    .unwrap();
+    let reqs = workload::from_json(&v).unwrap();
+    assert_eq!(reqs[0].id, 1, "trace must come back arrival-sorted");
+    assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+}
+
+#[test]
+fn request_default_is_single_tenant_interactive() {
+    let r = Request::default();
+    assert_eq!(r.tenant, 0);
+    assert_eq!(r.slo_class, SloClass::Interactive);
+}
+
+// ---------------------------------------------------------------------------
+// TraceDb codec
+// ---------------------------------------------------------------------------
+
+fn sample_db() -> TraceDb {
+    let mut db = TraceDb::new("test-hw", "tiny-dense");
+    db.add_tokens(OpKind::QkvProj, 64, 1_200);
+    db.add_tokens(OpKind::QkvProj, 128, 2_300);
+    db.add_tokens(OpKind::AttnPrefill, 64, 9_000);
+    db.add_batch_ctx(OpKind::AttnDecode, 4, 256, 3_100);
+    db.add_batch_ctx(OpKind::AttnDecode, 8, 512, 6_400);
+    db
+}
+
+#[test]
+fn trace_db_roundtrip() {
+    let db = sample_db();
+    let back = TraceDb::from_json(&db.to_json()).unwrap();
+    assert_eq!(back.hardware, db.hardware);
+    assert_eq!(back.model, db.model);
+    // the parsed DB serializes to identical bytes
+    assert_eq!(db.to_json().to_string(), back.to_json().to_string());
+    assert_eq!(
+        db.samples(OpKind::AttnDecode),
+        back.samples(OpKind::AttnDecode),
+        "decode grid lost in roundtrip"
+    );
+    assert_eq!(db.samples(OpKind::QkvProj), back.samples(OpKind::QkvProj));
+    assert!(back.has(OpKind::AttnPrefill));
+}
+
+#[test]
+fn trace_db_rejects_malformed() {
+    // missing top-level fields
+    let e = TraceDb::from_json(&json::parse(r#"{"model": "m"}"#).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("hardware"), "{e}");
+    assert!(TraceDb::from_json(
+        &json::parse(r#"{"hardware": "h", "model": "m"}"#).unwrap()
+    )
+    .is_err());
+    // unknown op kind
+    let e = TraceDb::from_json(
+        &json::parse(
+            r#"{"hardware": "h", "model": "m",
+                "ops": {"warp-drive": {"grid": "tokens", "points": []}}}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("warp-drive"), "{e}");
+    // unknown grid kind
+    assert!(TraceDb::from_json(
+        &json::parse(
+            r#"{"hardware": "h", "model": "m",
+                "ops": {"qkv_proj": {"grid": "hypercube", "points": []}}}"#
+        )
+        .unwrap()
+    )
+    .is_err());
+    // malformed point tuple
+    assert!(TraceDb::from_json(
+        &json::parse(
+            r#"{"hardware": "h", "model": "m",
+                "ops": {"qkv_proj": {"grid": "tokens", "points": [[64]]}}}"#
+        )
+        .unwrap()
+    )
+    .is_err());
+}
