@@ -255,7 +255,9 @@ pub struct InstanceConfig {
     pub name: String,
     /// Model preset name (see [`ModelSpec::preset_names`]).
     pub model: String,
-    /// Hardware preset name (see [`HardwareSpec::preset_names`]).
+    /// Hardware name: a built-in preset ([`HardwareSpec::preset_names`])
+    /// or any bundle registered in the
+    /// [`hardware registry`](crate::perf::hardware).
     pub hardware: String,
     /// Devices in this instance.
     pub devices: usize,
@@ -324,10 +326,14 @@ impl InstanceConfig {
             .ok_or_else(|| anyhow::anyhow!("unknown model preset '{}'", self.model))
     }
 
-    /// Resolve hardware with overrides applied.
+    /// Resolve hardware with overrides applied. Names resolve through the
+    /// global [`hardware registry`](crate::perf::hardware) — built-in
+    /// presets plus registered bundles — so a freshly imported device works
+    /// here with zero config-schema changes; unknown names error with the
+    /// candidate list.
     pub fn hardware_spec(&self) -> anyhow::Result<HardwareSpec> {
-        let mut hw = HardwareSpec::preset(&self.hardware).ok_or_else(|| {
-            anyhow::anyhow!("unknown hardware preset '{}'", self.hardware)
+        let mut hw = HardwareSpec::resolve(&self.hardware).map_err(|e| {
+            anyhow::anyhow!("instance '{}': {e}", self.name)
         })?;
         if let Some(c) = self.mem_capacity {
             hw.mem_capacity = c;
@@ -1015,6 +1021,17 @@ mod tests {
         assert!(i.validate().is_err());
         let i = InstanceConfig::basic("a", "tiny-dense", "bogus-hw");
         assert!(i.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_hardware_errors_name_candidates() {
+        // registry-backed resolution: the error names the instance, the bad
+        // value, and the registered candidates (PR 2 policy-error style)
+        let i = InstanceConfig::basic("inst7", "tiny-dense", "abacus");
+        let e = i.hardware_spec().unwrap_err().to_string();
+        assert!(e.contains("inst7"), "{e}");
+        assert!(e.contains("abacus"), "{e}");
+        assert!(e.contains("rtx3090") && e.contains("tpu-v6e"), "{e}");
     }
 
     #[test]

@@ -41,6 +41,13 @@ use crate::workload::{Request, TrafficSource};
 /// it prices ops directly; otherwise the roofline is calibrated with the
 /// DB's measured efficiency factors (tiny-model traces extended to
 /// paper-scale configs — DESIGN.md §1).
+///
+/// For the default (analytical) backend, the instance's hardware name is
+/// looked up in the global [`hardware registry`](crate::perf::hardware):
+/// a registered bundle carrying profiled data prices ops through it —
+/// trace interpolation where samples exist, calibrated roofline elsewhere
+/// (DESIGN.md §8). Built-in presets carry no profiled data, so their
+/// pricing is the pure roofline, exactly as before.
 pub fn build_perf(
     backend: &PerfBackend,
     model: &ModelSpec,
@@ -48,7 +55,10 @@ pub fn build_perf(
 ) -> anyhow::Result<Arc<dyn PerfModel>> {
     Ok(match backend {
         PerfBackend::Analytical => {
-            Arc::new(Roofline::new(hw.clone(), model.clone()))
+            match crate::perf::hardware::bundle_for(&hw.name) {
+                Some(bundle) if bundle.has_perf_data() => bundle.perf_on(hw, model),
+                _ => Arc::new(Roofline::new(hw.clone(), model.clone())),
+            }
         }
         PerfBackend::Cycle => {
             Arc::new(CycleSim::new(SystolicSpec::default(), model.clone()))

@@ -25,6 +25,15 @@
 //! per-simulation via [`coordinator::Simulation::builder`], with zero core
 //! edits.
 //!
+//! Hardware is the third registered axis (see [`perf::hardware`]): the
+//! four built-in device presets live in a global `HardwareRegistry`
+//! alongside user-profiled devices imported as **hardware bundles** (spec
+//! + trace samples + calibration factors, one JSON file emitted by
+//! `profile --emit-bundle`). A registered device resolves by name in
+//! configs, `simulate --hardware`, and `sweep --hardware all`, priced by
+//! trace interpolation where samples exist and calibrated roofline
+//! elsewhere — the paper's single-command accelerator integration.
+//!
 //! The [`workload`] engine streams requests into the coordinator (a
 //! pull-based [`workload::TrafficSource`] — Poisson, bursty MMPP, diurnal,
 //! closed-loop sessions, trace replay, or custom), annotated with tenants

@@ -3,7 +3,11 @@
 //! Commands:
 //!   profile   — run the operator-level profiler on the PJRT backend and
 //!               write a latency-trace DB (the paper's "single command"
-//!               hardware integration, §II-A).
+//!               hardware integration, §II-A). `--emit-bundle` additionally
+//!               packages spec + trace + calibration into a hardware
+//!               bundle usable by name everywhere a preset is.
+//!   import-hardware — validate + register a hardware bundle; optionally
+//!               install it into a bundle directory.
 //!   simulate  — run a serving simulation from a preset or config file.
 //!   validate  — Fig. 2 style: run the ground-truth execution engine and
 //!               the trace-driven simulator on the same config; print the
@@ -22,9 +26,12 @@ use llmservingsim::config::{presets, PerfBackend, SimConfig};
 use llmservingsim::coordinator::{run_config, Simulation};
 use llmservingsim::groundtruth::ExecPerfModel;
 use llmservingsim::model::ModelSpec;
+use llmservingsim::perf::hardware;
 use llmservingsim::perf::HardwareSpec;
 use llmservingsim::policy;
-use llmservingsim::runtime::profiler::{profile_to_file, ProfileOptions};
+use llmservingsim::runtime::profiler::{
+    emit_bundle, profile_to_file, ProfileOptions,
+};
 use llmservingsim::sweep::{
     render_table, run_sweep, summarize, sweep_json, SweepSpec,
 };
@@ -40,22 +47,34 @@ USAGE: llmservingsim <command> [flags]
 COMMANDS:
   profile    --model <preset> [--artifacts DIR] [--out FILE]
              [--hardware-tag TAG] [--reps N] [--warmup N]
+             [--emit-bundle FILE] [--peak-tflops X] [--mem-gbps X]
+             [--mem-gb X] [--host-gbps X] [--kernel-overhead-ns N]
+             (--emit-bundle packages hardware spec + trace + calibration
+              into one file; the spec flags override the roofline-fallback
+              numbers recorded for TAG)
+  import-hardware --bundle FILE [--dir DIR]
+             (validate + register a profiled hardware bundle; --dir
+              installs it so --hardware-dir runs pick it up)
   simulate   (--preset NAME | --config FILE) [--model M] [--moe-model M]
-             [--hardware H] [--perf analytical|cycle|cycle-replay|trace:PATH]
+             [--hardware H] [--hardware-dir DIR]
+             [--perf analytical|cycle|cycle-replay|trace:PATH]
              [--requests N] [--rate R] [--workload W] [--tenants N]
              [--seed S] [--out FILE]
              (--workload takes a registered traffic source: poisson,
               uniform, burst, mmpp, diurnal, sessions, or a custom name;
               --tenants N splits traffic over N weighted tenants with
-              alternating interactive/batch SLO classes)
-  sweep      [--presets A,B,..] [--hardware H1,H2,..] [--rates R1,R2,..]
+              alternating interactive/batch SLO classes; --hardware-dir
+              loads every bundle in DIR so profiled devices resolve by
+              name in --hardware and config files)
+  sweep      [--presets A,B,..] [--hardware H1,H2,..|all]
+             [--hardware-dir DIR] [--rates R1,R2,..]
              [--workloads W1,W2,..|all] [--routers P1,P2,..|all]
              [--scheds S1,S2,..|all] [--evict E1,E2,..|all]
              [--perf B1,B2,..] [--model M] [--moe-model M] [--requests N]
              [--seed S] [--threads T] [--baseline NAME] [--out FILE]
              [--quick]
-             (policy/workload axes take registry names; `all` sweeps every
-              registered entry, including custom ones)
+             (policy/workload/hardware axes take registry names; `all`
+              sweeps every registered entry, including imported bundles)
   validate   --model <preset> [--artifacts DIR] [--trace FILE]
              [--requests N] [--rate R]
   gen-trace  [--requests N] [--rate R] [--workload W] [--tenants N]
@@ -87,6 +106,7 @@ fn main() {
 fn run(args: &Args) -> anyhow::Result<()> {
     match args.command.as_str() {
         "profile" => cmd_profile(args),
+        "import-hardware" => cmd_import_hardware(args),
         "simulate" => cmd_simulate(args),
         "sweep" => cmd_sweep(args),
         "validate" => cmd_validate(args),
@@ -111,7 +131,7 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     let opts = ProfileOptions {
         warmup: args.u64_or("warmup", 2)? as usize,
         reps: args.u64_or("reps", 7)? as usize,
-        hardware_tag: tag,
+        hardware_tag: tag.clone(),
     };
     println!("profiling {model} on the PJRT backend ...");
     let outcome = profile_to_file(&artifacts_dir(args), &model, &out, &opts)?;
@@ -126,6 +146,118 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         t.row(&[k.to_string(), format!("{e:.2}")]);
     }
     t.print();
+    // The one-command onboarding pipeline (DESIGN.md §8): package the
+    // profiled trace + spec + derived calibration into a hardware bundle
+    // that simulate/sweep load by name.
+    if let Some(bundle_out) = args.str_flag("emit-bundle") {
+        let spec = hardware_spec_for_tag(args, &tag)?;
+        let bundle = emit_bundle(&outcome.db, spec, Path::new(bundle_out))?;
+        let ops = bundle
+            .trace
+            .as_ref()
+            .map(|db| db.kinds().count())
+            .unwrap_or(0);
+        println!(
+            "hardware bundle '{}' ({} profiled op kinds, {} calibration \
+             factors) -> {bundle_out}",
+            bundle.spec.name,
+            ops,
+            bundle.calibration.len()
+        );
+        println!(
+            "next: `import-hardware --bundle {bundle_out} --dir artifacts/hardware` \
+             then `simulate --hardware {} --hardware-dir artifacts/hardware`",
+            bundle.spec.name
+        );
+    }
+    Ok(())
+}
+
+/// The roofline-fallback spec recorded in an emitted bundle: the built-in
+/// preset of the same name when one exists, otherwise CPU-PJRT-class
+/// defaults renamed to `tag` (the profiled trace is the authoritative
+/// pricing source; the spec seeds the roofline fallback and the memory
+/// model). The `--peak-tflops`/`--mem-gbps`/`--mem-gb`/`--host-gbps`/
+/// `--kernel-overhead-ns` flags override individual numbers.
+fn hardware_spec_for_tag(args: &Args, tag: &str) -> anyhow::Result<HardwareSpec> {
+    let mut spec = HardwareSpec::preset(tag).unwrap_or_else(|| HardwareSpec {
+        name: tag.to_string(),
+        ..HardwareSpec::cpu_pjrt()
+    });
+    const GB: f64 = (1u64 << 30) as f64;
+    spec.peak_flops = args.f64_or("peak-tflops", spec.peak_flops / 1e12)? * 1e12;
+    spec.mem_bw = args.f64_or("mem-gbps", spec.mem_bw / 1e9)? * 1e9;
+    spec.mem_capacity =
+        (args.f64_or("mem-gb", spec.mem_capacity as f64 / GB)? * GB) as u64;
+    spec.host_bw = args.f64_or("host-gbps", spec.host_bw / 1e9)? * 1e9;
+    spec.kernel_overhead = args.u64_or("kernel-overhead-ns", spec.kernel_overhead)?;
+    Ok(spec)
+}
+
+fn cmd_import_hardware(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .str_flag("bundle")
+        .ok_or_else(|| anyhow::anyhow!("import-hardware needs --bundle FILE"))?;
+    let bundle = hardware::import_bundle_file(Path::new(path))?;
+    println!("imported hardware '{}':", bundle.spec.name);
+    let mut t = Table::new(&["field", "value"]);
+    t.row(&[
+        "peak TFLOP/s".into(),
+        format!("{:.1}", bundle.spec.peak_flops / 1e12),
+    ]);
+    t.row(&[
+        "mem bandwidth GB/s".into(),
+        format!("{:.0}", bundle.spec.mem_bw / 1e9),
+    ]);
+    t.row(&[
+        "mem capacity GB".into(),
+        (bundle.spec.mem_capacity >> 30).to_string(),
+    ]);
+    t.row(&[
+        "host bandwidth GB/s".into(),
+        format!("{:.0}", bundle.spec.host_bw / 1e9),
+    ]);
+    t.row(&[
+        "profiled op kinds".into(),
+        bundle
+            .trace
+            .as_ref()
+            .map(|db| db.kinds().count())
+            .unwrap_or(0)
+            .to_string(),
+    ]);
+    t.row(&[
+        "calibration factors".into(),
+        bundle.calibration.len().to_string(),
+    ]);
+    t.print();
+    if let Some(dir) = args.str_flag("dir") {
+        let dest = Path::new(dir).join(format!("{}.json", bundle.spec.name));
+        bundle.save(&dest)?;
+        println!(
+            "installed to {} — load it in any run with --hardware-dir {dir}",
+            dest.display()
+        );
+    }
+    println!(
+        "'{}' now resolves by name in simulate/sweep/configs for this process",
+        bundle.spec.name
+    );
+    Ok(())
+}
+
+/// Apply `--hardware-dir DIR`: load every bundle in DIR into the global
+/// hardware registry so the rest of the command sees profiled devices by
+/// name. Shared by simulate and sweep.
+fn load_hardware_flags(args: &Args) -> anyhow::Result<()> {
+    if let Some(dir) = args.str_flag("hardware-dir") {
+        let names = hardware::load_bundle_dir(Path::new(dir))?;
+        if names.is_empty() {
+            println!("no hardware bundles found in {dir}");
+        } else {
+            println!("loaded hardware bundles: {}", names.join(", "));
+        }
+    }
     Ok(())
 }
 
@@ -207,6 +339,7 @@ fn policy_axis(args: &Args, flag: &str, all_names: Vec<String>) -> Vec<String> {
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    load_hardware_flags(args)?;
     let mut spec = SweepSpec {
         dense_model: args.str_or("model", "tiny-dense").to_string(),
         moe_model: args.str_or("moe-model", "tiny-moe").to_string(),
@@ -219,9 +352,10 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     if let Some(p) = args.str_flag("presets") {
         spec.axes.presets = csv(p).into_iter().map(str::to_string).collect();
     }
-    if let Some(h) = args.str_flag("hardware") {
-        spec.axes.hardware = csv(h).into_iter().map(str::to_string).collect();
-    }
+    // The hardware axis resolves like a policy axis: registry names, with
+    // `all` expanding to every registered device (built-ins + bundles
+    // loaded via --hardware-dir / import-hardware).
+    spec.axes.hardware = policy_axis(args, "hardware", hardware::registered_names());
     spec.axes.rates = csv_parse::<f64>(args, "rates")?;
     // Policy axes take registry names; unknown names are rejected by
     // `expand()` with the registered candidates. `all` sweeps everything
@@ -285,6 +419,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    load_hardware_flags(args)?;
     let cfg = resolve_config(args)?;
     let name = cfg.name.clone();
     let t0 = std::time::Instant::now();
@@ -453,11 +588,17 @@ fn cmd_presets() -> anyhow::Result<()> {
             s.hidden, s.heads, s.layers, s.experts
         );
     }
-    println!("hardware:");
-    for h in HardwareSpec::preset_names() {
-        let s = HardwareSpec::preset(h).unwrap();
+    println!("hardware (registry; imported bundles appear here too):");
+    let hw_registry = hardware::snapshot();
+    for h in hw_registry.names() {
+        let b = hw_registry.bundle(&h).expect("listed name resolves");
+        let s = &b.spec;
+        let profiled = match &b.trace {
+            Some(db) => format!(", {} profiled op kinds", db.kinds().count()),
+            None => String::new(),
+        };
         println!(
-            "  {h}: {:.0} TFLOP/s, {:.0} GB/s, {} GB",
+            "  {h}: {:.0} TFLOP/s, {:.0} GB/s, {} GB{profiled}",
             s.peak_flops / 1e12,
             s.mem_bw / 1e9,
             s.mem_capacity >> 30

@@ -1,0 +1,714 @@
+//! Hardware registry + bundle format: the third first-class plugin axis.
+//!
+//! PR 2 made policies name-registered, PR 3 did the same for traffic
+//! sources; this module closes the loop for the paper's headline claim —
+//! "integration of new accelerators with a single command" (§II-A). A
+//! device becomes usable *by name* everywhere a built-in preset is
+//! (configs, `simulate --hardware`, `sweep --hardware all`,
+//! heterogeneous-fleet instance configs) through two pieces:
+//!
+//! * [`HardwareRegistry`] — mirrors [`PolicyRegistry`](crate::policy):
+//!   a global `OnceLock<RwLock<..>>` pre-seeded with the four built-in
+//!   [`HardwareSpec`] presets, `BTreeMap` storage so enumeration is
+//!   deterministic, [`register_hardware`] for customs, and candidate-list
+//!   errors for unknown names.
+//! * [`HardwareBundle`] — the serializable artifact of the profile
+//!   pipeline: one JSON file carrying the [`HardwareSpec`], the device's
+//!   profiled [`TraceDb`] samples, and the derived per-op calibration
+//!   factors (measured / roofline). `profile --emit-bundle FILE` writes
+//!   one; `import-hardware` / `--hardware-dir DIR` load them back into the
+//!   registry.
+//!
+//! Pricing semantics ([`HardwareBundle::perf_on`]): where the bundle's
+//! trace has samples for the simulated model, invocations are priced by
+//! trace interpolation; everywhere else (unprofiled op kinds, or a
+//! different model than the one profiled) the calibrated roofline takes
+//! over, scaled by the bundle's measured efficiency factors. Built-in
+//! presets carry no trace, so their pricing under every backend is exactly
+//! what it was before this module existed.
+//!
+//! Determinism: registry reads are lock-guarded snapshots of immutable
+//! `Arc<HardwareBundle>` entries, so sweep workers resolving the same name
+//! always see the same bytes — sweeps over registered hardware stay
+//! byte-identical at any worker count.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::analytical::{Calibrated, Roofline};
+use super::trace::TraceDb;
+use super::{HardwareSpec, PerfModel};
+use crate::model::{ModelSpec, OpInvocation, OpKind};
+use crate::sim::Nanos;
+use crate::util::json::{self, Value};
+
+/// Schema tag stamped into every bundle file; loads reject anything else.
+pub const BUNDLE_SCHEMA: &str = "hardware-bundle-v1";
+
+// ---------------------------------------------------------------------------
+// HardwareSpec JSON (lives here so perf/mod.rs stays a pure data module)
+// ---------------------------------------------------------------------------
+
+/// Serialize a [`HardwareSpec`] to the bundle's `hardware` object.
+pub fn spec_to_json(spec: &HardwareSpec) -> Value {
+    Value::obj(vec![
+        ("name", Value::str(spec.name.clone())),
+        ("peak_flops", Value::float(spec.peak_flops)),
+        ("mem_bw", Value::float(spec.mem_bw)),
+        ("mem_capacity", Value::int(spec.mem_capacity as i64)),
+        ("host_bw", Value::float(spec.host_bw)),
+        ("kernel_overhead_ns", Value::int(spec.kernel_overhead as i64)),
+    ])
+}
+
+/// Parse a [`HardwareSpec`] from the bundle's `hardware` object, rejecting
+/// missing names and non-positive / non-finite rates.
+pub fn spec_from_json(v: &Value) -> anyhow::Result<HardwareSpec> {
+    let name = v
+        .get("name")
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("hardware spec missing 'name'"))?
+        .to_string();
+    let spec = HardwareSpec {
+        name,
+        peak_flops: v.get("peak_flops").as_f64().unwrap_or(0.0),
+        mem_bw: v.get("mem_bw").as_f64().unwrap_or(0.0),
+        mem_capacity: v.get("mem_capacity").as_u64().unwrap_or(0),
+        host_bw: v.get("host_bw").as_f64().unwrap_or(0.0),
+        kernel_overhead: v.get("kernel_overhead_ns").as_u64().unwrap_or(0),
+    };
+    validate_spec(&spec)?;
+    Ok(spec)
+}
+
+fn validate_spec(spec: &HardwareSpec) -> anyhow::Result<()> {
+    if spec.name.is_empty() {
+        anyhow::bail!("hardware spec has an empty name");
+    }
+    for (field, v) in [
+        ("peak_flops", spec.peak_flops),
+        ("mem_bw", spec.mem_bw),
+        ("host_bw", spec.host_bw),
+    ] {
+        if !(v.is_finite() && v > 0.0) {
+            anyhow::bail!(
+                "hardware '{}': {field} must be finite and > 0 (got {v})",
+                spec.name
+            );
+        }
+    }
+    if spec.mem_capacity == 0 {
+        anyhow::bail!("hardware '{}': mem_capacity must be > 0", spec.name);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// HardwareBundle
+// ---------------------------------------------------------------------------
+
+/// One hardware target, fully described: spec + profiled trace samples +
+/// derived per-op calibration factors. Built-in presets are spec-only
+/// bundles; `profile --emit-bundle` produces trace-backed ones.
+#[derive(Debug, Clone)]
+pub struct HardwareBundle {
+    pub spec: HardwareSpec,
+    /// Profiled samples for this device (for one model); `None` for
+    /// spec-only bundles. `Arc`-shared so every simulation instance (and
+    /// every sweep grid point) prices through the same immutable DB
+    /// instead of deep-copying the sample vectors.
+    pub trace: Option<Arc<TraceDb>>,
+    /// Measured/roofline efficiency per op kind, derived from the trace at
+    /// bundle-emission time and stored in the file so loaders do not need
+    /// the profiled model preset to recompute it.
+    pub calibration: Vec<(OpKind, f64)>,
+}
+
+impl HardwareBundle {
+    /// A bundle carrying only the spec (how built-ins are registered).
+    pub fn spec_only(spec: HardwareSpec) -> HardwareBundle {
+        HardwareBundle {
+            spec,
+            trace: None,
+            calibration: vec![],
+        }
+    }
+
+    /// Build a bundle from a profiled trace DB: derives the calibration
+    /// factors against the roofline of `spec` for the profiled model. The
+    /// trace's hardware tag must match `spec.name` (that name is the
+    /// registry key), and the profiled model must be a known preset.
+    pub fn from_trace(spec: HardwareSpec, trace: TraceDb) -> anyhow::Result<HardwareBundle> {
+        validate_spec(&spec)?;
+        if trace.hardware != spec.name {
+            anyhow::bail!(
+                "trace was profiled on '{}' but the bundle spec is named '{}'",
+                trace.hardware,
+                spec.name
+            );
+        }
+        let model = ModelSpec::preset(&trace.model).ok_or_else(|| {
+            anyhow::anyhow!(
+                "trace profiled unknown model '{}' (known: {:?})",
+                trace.model,
+                ModelSpec::preset_names()
+            )
+        })?;
+        let roofline = Roofline::new(spec.clone(), model);
+        let calibration = trace.calibration(&roofline);
+        let bundle = HardwareBundle {
+            spec,
+            trace: Some(Arc::new(trace)),
+            calibration,
+        };
+        bundle.validate()?;
+        Ok(bundle)
+    }
+
+    /// True when the bundle carries profiled data (trace samples and/or
+    /// calibration factors) — i.e. pricing through it differs from the
+    /// pure roofline of its spec.
+    pub fn has_perf_data(&self) -> bool {
+        self.trace.is_some() || !self.calibration.is_empty()
+    }
+
+    /// Full consistency check, applied on construction and on every load:
+    /// valid spec, matching trace tag, non-empty + duplicate-free trace
+    /// grids, finite positive calibration factors.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        validate_spec(&self.spec)?;
+        if let Some(db) = &self.trace {
+            if db.hardware != self.spec.name {
+                anyhow::bail!(
+                    "bundle '{}': trace hardware tag is '{}'",
+                    self.spec.name,
+                    db.hardware
+                );
+            }
+            if db.is_empty() {
+                anyhow::bail!(
+                    "bundle '{}': trace section has no samples (drop it or re-profile)",
+                    self.spec.name
+                );
+            }
+            for kind in db.kinds().collect::<Vec<_>>() {
+                let samples = db.samples(kind);
+                for w in samples.windows(2) {
+                    if w[0].0 == w[1].0 && w[0].1 == w[1].1 {
+                        anyhow::bail!(
+                            "bundle '{}': duplicate {kind} sample at grid point \
+                             ({}, {})",
+                            self.spec.name,
+                            w[0].0,
+                            w[0].1
+                        );
+                    }
+                }
+            }
+        }
+        for (kind, f) in &self.calibration {
+            if !(f.is_finite() && *f > 0.0) {
+                anyhow::bail!(
+                    "bundle '{}': calibration factor for {kind} must be finite \
+                     and > 0 (got {f})",
+                    self.spec.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The performance model this bundle implies for `model` on the
+    /// (possibly override-adjusted) spec `hw`: trace interpolation where
+    /// the profiled samples apply, calibrated roofline everywhere else.
+    pub fn perf_on(&self, hw: &HardwareSpec, model: &ModelSpec) -> Arc<dyn PerfModel> {
+        Arc::new(BundlePerf::new(self, hw, model))
+    }
+
+    // ---- persistence ------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("schema", Value::str(BUNDLE_SCHEMA)),
+            ("hardware", spec_to_json(&self.spec)),
+            (
+                "calibration",
+                Value::obj(
+                    self.calibration
+                        .iter()
+                        .map(|(k, f)| (k.as_str(), Value::float(*f)))
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(db) = &self.trace {
+            fields.push(("trace", db.to_json()));
+        }
+        Value::obj(fields)
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<HardwareBundle> {
+        match v.get("schema").as_str() {
+            Some(BUNDLE_SCHEMA) => {}
+            Some(other) => anyhow::bail!(
+                "unsupported hardware-bundle schema '{other}' (expected \
+                 '{BUNDLE_SCHEMA}')"
+            ),
+            None => anyhow::bail!(
+                "not a hardware bundle: missing 'schema' field (expected \
+                 '{BUNDLE_SCHEMA}')"
+            ),
+        }
+        let spec = spec_from_json(v.get("hardware"))?;
+        // Bundle files are canonical artifacts straight from the profiler:
+        // grid points arrive sorted and duplicate-free. Reject scrambled
+        // files (usually a hand-edit or truncation) instead of silently
+        // re-sorting them.
+        if let Some(ops) = v.get("trace").get("ops").as_obj() {
+            for (op_name, op) in ops {
+                let grid = op.get("grid").as_str().unwrap_or("tokens");
+                let pts = op.get("points").as_arr().unwrap_or(&[]);
+                for i in 1..pts.len() {
+                    let coord = |p: &Value| -> (i64, i64) {
+                        match grid {
+                            "batch_ctx" => (
+                                p.idx(0).as_i64().unwrap_or(0),
+                                p.idx(1).as_i64().unwrap_or(0),
+                            ),
+                            _ => (p.idx(0).as_i64().unwrap_or(0), 0),
+                        }
+                    };
+                    if coord(&pts[i]) <= coord(&pts[i - 1]) {
+                        anyhow::bail!(
+                            "bundle trace op '{op_name}': grid points must be \
+                             strictly increasing (sorted, duplicate-free); \
+                             point {i} is out of order"
+                        );
+                    }
+                }
+            }
+        }
+        let trace = if v.get("trace").is_null() {
+            None
+        } else {
+            Some(Arc::new(TraceDb::from_json(v.get("trace"))?))
+        };
+        let mut calibration = vec![];
+        if let Some(obj) = v.get("calibration").as_obj() {
+            for (name, fv) in obj {
+                let kind = OpKind::from_str(name).ok_or_else(|| {
+                    anyhow::anyhow!("calibration names unknown op kind '{name}'")
+                })?;
+                let f = fv
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("calibration factor for '{name}' is not a number"))?;
+                calibration.push((kind, f));
+            }
+        }
+        // canonical order = OpKind declaration order (what
+        // `TraceDb::calibration` emits), not the JSON object's
+        // string-sorted key order — keeps round trips exact
+        calibration.sort_by_key(|&(k, _)| k);
+        let bundle = HardwareBundle {
+            spec,
+            trace,
+            calibration,
+        };
+        bundle.validate()?;
+        Ok(bundle)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<HardwareBundle> {
+        Self::from_json(&json::load_file(path)?)
+            .map_err(|e| anyhow::anyhow!("loading bundle {}: {e}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        json::save_file(path, &self.to_json())
+    }
+}
+
+/// Bundle-backed performance model: per-invocation trace lookup with
+/// calibrated-roofline fallback. The trace applies only when it was
+/// profiled for the simulated model; otherwise every op falls back.
+pub struct BundlePerf {
+    trace: Option<Arc<TraceDb>>,
+    fallback: Calibrated,
+    name: String,
+}
+
+impl BundlePerf {
+    pub fn new(bundle: &HardwareBundle, hw: &HardwareSpec, model: &ModelSpec) -> BundlePerf {
+        // Arc clone: every instance shares the bundle's immutable DB.
+        let trace = match &bundle.trace {
+            Some(db) if db.model == model.name => Some(Arc::clone(db)),
+            _ => None,
+        };
+        let fallback = Calibrated::new(
+            Roofline::new(hw.clone(), model.clone()),
+            bundle.calibration.clone(),
+        );
+        let name = format!("bundle[{}/{}]", bundle.spec.name, model.name);
+        BundlePerf {
+            trace,
+            fallback,
+            name,
+        }
+    }
+}
+
+impl PerfModel for BundlePerf {
+    fn op_latency(&self, inv: OpInvocation) -> Nanos {
+        if let Some(db) = &self.trace {
+            if let Some(ns) = db.lookup(inv) {
+                return ns.round() as Nanos;
+            }
+        }
+        self.fallback.op_latency(inv)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Maps hardware names to bundles. Entries are `Arc`-shared so cloning the
+/// registry (snapshots) is cheap and resolved bundles are immutable.
+#[derive(Debug, Clone)]
+pub struct HardwareRegistry {
+    entries: BTreeMap<String, Arc<HardwareBundle>>,
+}
+
+impl Default for HardwareRegistry {
+    /// The built-in registry ([`HardwareRegistry::builtins`]).
+    fn default() -> Self {
+        Self::builtins()
+    }
+}
+
+impl HardwareRegistry {
+    /// A registry with no entries.
+    pub fn empty() -> Self {
+        HardwareRegistry {
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// A registry pre-seeded with the four built-in presets (spec-only —
+    /// their pricing is whatever the selected perf backend computes).
+    pub fn builtins() -> Self {
+        let mut r = Self::empty();
+        for name in HardwareSpec::preset_names() {
+            let spec = HardwareSpec::preset(name).expect("built-in preset resolves");
+            r.entries
+                .insert(spec.name.clone(), Arc::new(HardwareBundle::spec_only(spec)));
+        }
+        r
+    }
+
+    /// Register (or replace — last wins) a bundle under its spec name.
+    ///
+    /// Replacing a **built-in** preset is allowed (re-profiling `cpu-pjrt`
+    /// itself is the honest default workflow) but logged loudly: from that
+    /// point the name prices through the bundle, not the pure roofline.
+    pub fn register(&mut self, bundle: HardwareBundle) -> anyhow::Result<()> {
+        bundle.validate()?;
+        if HardwareSpec::preset_names().contains(&bundle.spec.name.as_str())
+            && bundle.has_perf_data()
+        {
+            log::warn!(
+                "hardware bundle '{}' shadows the built-in preset of the same \
+                 name: it now prices through the bundle's trace/calibration \
+                 instead of the pure roofline",
+                bundle.spec.name
+            );
+        }
+        self.entries
+            .insert(bundle.spec.name.clone(), Arc::new(bundle));
+        Ok(())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// All registered hardware names, sorted (deterministic enumeration —
+    /// this is what `sweep --hardware all` expands to).
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// The full bundle registered under `name`.
+    pub fn bundle(&self, name: &str) -> Option<Arc<HardwareBundle>> {
+        self.entries.get(name).cloned()
+    }
+
+    /// Resolve `name` to its spec, erroring with the candidate list.
+    pub fn resolve(&self, name: &str) -> anyhow::Result<HardwareSpec> {
+        match self.entries.get(name) {
+            Some(b) => Ok(b.spec.clone()),
+            None => Err(self.unknown(name)),
+        }
+    }
+
+    /// Error (with the candidate list) unless `name` is registered.
+    /// Existence check only — nothing is cloned.
+    pub fn check(&self, name: &str) -> anyhow::Result<()> {
+        if self.has(name) {
+            Ok(())
+        } else {
+            Err(self.unknown(name))
+        }
+    }
+
+    fn unknown(&self, name: &str) -> anyhow::Error {
+        anyhow::anyhow!(
+            "unknown hardware '{name}' (registered: {}; profile a device and \
+             load its bundle with `import-hardware` or `--hardware-dir`)",
+            self.names().join("|")
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global registry
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<RwLock<HardwareRegistry>> = OnceLock::new();
+
+/// The process-wide hardware registry, pre-seeded with the built-ins.
+pub fn global() -> &'static RwLock<HardwareRegistry> {
+    GLOBAL.get_or_init(|| RwLock::new(HardwareRegistry::builtins()))
+}
+
+/// A point-in-time copy of the global registry (cheap: bundles are
+/// `Arc`-shared).
+pub fn snapshot() -> HardwareRegistry {
+    global()
+        .read()
+        .expect("hardware registry lock poisoned")
+        .clone()
+}
+
+/// Register a hardware bundle in the global registry (last wins). After
+/// this call the device's name resolves in configs, `simulate --hardware`,
+/// and `sweep --hardware all` exactly like a built-in preset.
+pub fn register_hardware(bundle: HardwareBundle) -> anyhow::Result<()> {
+    global()
+        .write()
+        .expect("hardware registry lock poisoned")
+        .register(bundle)
+}
+
+/// Resolve a hardware name against the global registry, erroring with the
+/// candidate list. This is the single resolution path behind
+/// [`HardwareSpec::resolve`] and every config/sweep lookup.
+pub fn resolve(name: &str) -> anyhow::Result<HardwareSpec> {
+    global()
+        .read()
+        .expect("hardware registry lock poisoned")
+        .resolve(name)
+}
+
+/// The bundle registered under `name` in the global registry, if any.
+pub fn bundle_for(name: &str) -> Option<Arc<HardwareBundle>> {
+    global()
+        .read()
+        .expect("hardware registry lock poisoned")
+        .bundle(name)
+}
+
+/// All hardware names registered globally, sorted.
+pub fn registered_names() -> Vec<String> {
+    global()
+        .read()
+        .expect("hardware registry lock poisoned")
+        .names()
+}
+
+/// Load every `*.json` bundle in `dir` (sorted by file name, so
+/// registration order — and last-wins conflicts — are deterministic) into
+/// the global registry. Returns the registered hardware names.
+pub fn load_bundle_dir(dir: &Path) -> anyhow::Result<Vec<String>> {
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading hardware dir {}: {e}", dir.display()))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    files.sort();
+    let mut names = vec![];
+    for path in files {
+        let bundle = HardwareBundle::load(&path)?;
+        names.push(bundle.spec.name.clone());
+        register_hardware(bundle)?;
+    }
+    Ok(names)
+}
+
+/// Load, validate, and globally register a single bundle file. Returns the
+/// bundle for reporting.
+pub fn import_bundle_file(path: &Path) -> anyhow::Result<HardwareBundle> {
+    let bundle = HardwareBundle::load(path)?;
+    register_hardware(bundle.clone())?;
+    Ok(bundle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::OpKind;
+
+    fn trace_for(hw: &str) -> TraceDb {
+        let mut db = TraceDb::new(hw, "tiny-dense");
+        for t in [1u64, 4, 16, 64] {
+            db.add_tokens(OpKind::Ffn, t, 2_000 * t);
+            db.add_tokens(OpKind::QkvProj, t, 1_000 * t);
+        }
+        for b in [1u64, 2, 4] {
+            for c in [64u64, 256] {
+                db.add_batch_ctx(OpKind::AttnDecode, b, c, 40 * b * c);
+            }
+        }
+        db
+    }
+
+    fn spec_named(name: &str) -> HardwareSpec {
+        HardwareSpec {
+            name: name.to_string(),
+            ..HardwareSpec::cpu_pjrt()
+        }
+    }
+
+    #[test]
+    fn builtins_preseeded_and_sorted() {
+        let reg = HardwareRegistry::builtins();
+        let names = reg.names();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        for n in HardwareSpec::preset_names() {
+            assert!(reg.has(n), "built-in '{n}' missing");
+            assert_eq!(reg.resolve(n).unwrap(), HardwareSpec::preset(n).unwrap());
+            assert!(!reg.bundle(n).unwrap().has_perf_data());
+        }
+    }
+
+    #[test]
+    fn unknown_names_error_with_candidates() {
+        let reg = HardwareRegistry::builtins();
+        let e = reg.resolve("abacus").unwrap_err().to_string();
+        assert!(e.contains("abacus") && e.contains("rtx3090"), "{e}");
+        let e = reg.check("warp-drive").unwrap_err().to_string();
+        assert!(e.contains("warp-drive") && e.contains("tpu-v6e"), "{e}");
+    }
+
+    #[test]
+    fn bundle_json_roundtrip() {
+        let bundle =
+            HardwareBundle::from_trace(spec_named("unit-npu"), trace_for("unit-npu"))
+                .unwrap();
+        assert!(bundle.has_perf_data());
+        assert!(!bundle.calibration.is_empty());
+        let back = HardwareBundle::from_json(&bundle.to_json()).unwrap();
+        assert_eq!(back.spec, bundle.spec);
+        assert_eq!(back.calibration, bundle.calibration);
+        let (a, b) = (back.trace.unwrap(), bundle.trace.clone().unwrap());
+        assert_eq!(a.samples(OpKind::Ffn), b.samples(OpKind::Ffn));
+        assert_eq!(a.samples(OpKind::AttnDecode), b.samples(OpKind::AttnDecode));
+    }
+
+    #[test]
+    fn bundle_rejects_malformed() {
+        // wrong/missing schema
+        let e = HardwareBundle::from_json(&json::parse("{}").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("schema"), "{e}");
+        let e = HardwareBundle::from_json(
+            &json::parse(r#"{"schema": "hardware-bundle-v0"}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("hardware-bundle-v0"), "{e}");
+        // tag mismatch
+        let e = HardwareBundle::from_trace(spec_named("npu-a"), trace_for("npu-b"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("npu-a") && e.contains("npu-b"), "{e}");
+        // degenerate spec numbers
+        let mut spec = spec_named("npu-a");
+        spec.peak_flops = 0.0;
+        assert!(HardwareBundle::spec_only(spec).validate().is_err());
+        // empty trace section
+        let empty = HardwareBundle {
+            spec: spec_named("npu-a"),
+            trace: Some(Arc::new(TraceDb::new("npu-a", "tiny-dense"))),
+            calibration: vec![],
+        };
+        let e = empty.validate().unwrap_err().to_string();
+        assert!(e.contains("no samples"), "{e}");
+        // non-positive calibration
+        let bad = HardwareBundle {
+            spec: spec_named("npu-a"),
+            trace: None,
+            calibration: vec![(OpKind::Ffn, -1.0)],
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn bundle_perf_prefers_trace_and_falls_back() {
+        let bundle =
+            HardwareBundle::from_trace(spec_named("unit-npu"), trace_for("unit-npu"))
+                .unwrap();
+        let model = ModelSpec::tiny_dense();
+        let perf = bundle.perf_on(&bundle.spec, &model);
+        assert!(perf.name().starts_with("bundle[unit-npu/"));
+        // profiled op at a grid point: exact trace value
+        assert_eq!(perf.op_latency(OpInvocation::tokens(OpKind::Ffn, 16)), 32_000);
+        // unprofiled op kind: calibrated roofline, not a panic
+        assert!(perf.op_latency(OpInvocation::tokens(OpKind::LmHead, 16)) > 0);
+        // different model: trace does not apply, fallback prices everything
+        let other = ModelSpec::llama31_8b();
+        let perf_other = bundle.perf_on(&bundle.spec, &other);
+        assert!(perf_other.op_latency(OpInvocation::tokens(OpKind::Ffn, 16)) > 0);
+    }
+
+    #[test]
+    fn global_registration_resolves_and_lists() {
+        let bundle =
+            HardwareBundle::from_trace(spec_named("unit-global-npu"), trace_for("unit-global-npu"))
+                .unwrap();
+        register_hardware(bundle).unwrap();
+        assert!(registered_names().contains(&"unit-global-npu".to_string()));
+        let spec = resolve("unit-global-npu").unwrap();
+        assert_eq!(spec.name, "unit-global-npu");
+        assert!(bundle_for("unit-global-npu").unwrap().has_perf_data());
+        // unknown names list the custom entry among the candidates now
+        let e = resolve("nonexistent-npu").unwrap_err().to_string();
+        assert!(e.contains("unit-global-npu"), "{e}");
+    }
+
+    #[test]
+    fn bundle_dir_loads_sorted() {
+        let dir = std::env::temp_dir().join("llmss_hw_unit_dir");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["unit-dir-b", "unit-dir-a"] {
+            let bundle =
+                HardwareBundle::from_trace(spec_named(name), trace_for(name)).unwrap();
+            bundle.save(&dir.join(format!("{name}.json"))).unwrap();
+        }
+        // non-json files are ignored
+        std::fs::write(dir.join("notes.txt"), "not a bundle").unwrap();
+        let names = load_bundle_dir(&dir).unwrap();
+        assert_eq!(names, vec!["unit-dir-a", "unit-dir-b"], "sorted by file name");
+        assert!(resolve("unit-dir-a").is_ok() && resolve("unit-dir-b").is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

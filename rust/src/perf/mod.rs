@@ -12,6 +12,7 @@
 
 pub mod analytical;
 pub mod cycle;
+pub mod hardware;
 pub mod replay;
 pub mod trace;
 
@@ -109,6 +110,8 @@ impl HardwareSpec {
         }
     }
 
+    /// The four *built-in* presets only; user-profiled hardware resolves
+    /// through [`HardwareSpec::resolve`] / the [`hardware`] registry.
     pub fn preset(name: &str) -> Option<HardwareSpec> {
         match name {
             "rtx3090" => Some(Self::rtx3090()),
@@ -121,6 +124,14 @@ impl HardwareSpec {
 
     pub fn preset_names() -> &'static [&'static str] {
         &["rtx3090", "tpu-v6e", "cpu-pjrt", "pim"]
+    }
+
+    /// Resolve `name` against the global [`hardware`] registry: built-in
+    /// presets plus every registered bundle (profiled devices). Unknown
+    /// names error with the full candidate list — this is the resolution
+    /// path behind config validation, sweep axes, and the CLI.
+    pub fn resolve(name: &str) -> anyhow::Result<HardwareSpec> {
+        hardware::resolve(name)
     }
 }
 
@@ -135,6 +146,18 @@ mod tests {
             assert!(h.peak_flops > 0.0 && h.mem_bw > 0.0);
         }
         assert!(HardwareSpec::preset("abacus").is_none());
+    }
+
+    #[test]
+    fn resolve_covers_builtins_and_errors_with_candidates() {
+        for n in HardwareSpec::preset_names() {
+            assert_eq!(
+                HardwareSpec::resolve(n).unwrap(),
+                HardwareSpec::preset(n).unwrap()
+            );
+        }
+        let e = HardwareSpec::resolve("abacus").unwrap_err().to_string();
+        assert!(e.contains("abacus") && e.contains("rtx3090"), "{e}");
     }
 
     #[test]

@@ -321,6 +321,21 @@ impl TraceDb {
                 }
             }
         }
+        // Reject ambiguous grids: duplicate coordinates would make
+        // interpolation divide by a zero-width segment (inf/NaN latencies
+        // downstream). Insertion sorts samples, so duplicates are adjacent.
+        for kind in db.kinds().collect::<Vec<_>>() {
+            let samples = db.samples(kind);
+            for w in samples.windows(2) {
+                if w[0].0 == w[1].0 && w[0].1 == w[1].1 {
+                    anyhow::bail!(
+                        "trace op '{kind}' has duplicate grid point ({}, {})",
+                        w[0].0,
+                        w[0].1
+                    );
+                }
+            }
+        }
         Ok(db)
     }
 

@@ -16,7 +16,9 @@
 use std::path::Path;
 
 use crate::model::OpKind;
+use crate::perf::hardware::HardwareBundle;
 use crate::perf::trace::TraceDb;
+use crate::perf::HardwareSpec;
 use crate::util::stats;
 
 use super::{Manifest, Runtime};
@@ -120,6 +122,23 @@ pub fn profile_to_file(
     Ok(outcome)
 }
 
+/// Package a profiled trace DB into a hardware bundle at `out`: spec +
+/// samples + derived per-op calibration factors, one file. This is the
+/// second half of the one-command onboarding pipeline
+/// (`profile --emit-bundle`, DESIGN.md §8); `import-hardware` /
+/// `--hardware-dir` load the file back into the
+/// [`hardware registry`](crate::perf::hardware) so the device resolves by
+/// name in simulate, sweep, and heterogeneous-fleet configs.
+pub fn emit_bundle(
+    db: &TraceDb,
+    spec: HardwareSpec,
+    out: &Path,
+) -> anyhow::Result<HardwareBundle> {
+    let bundle = HardwareBundle::from_trace(spec, db.clone())?;
+    bundle.save(out)?;
+    Ok(bundle)
+}
+
 /// Leave-one-out interpolation error per op kind: re-predict each measured
 /// grid point from the other points and compare.
 pub fn leave_one_out_error(db: &TraceDb) -> Vec<(OpKind, f64)> {
@@ -170,6 +189,27 @@ mod tests {
 
     fn artifacts_root() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn emit_bundle_roundtrips_without_a_backend() {
+        // The bundle-emission half of the pipeline needs no PJRT runtime:
+        // package a synthetic trace, reload it, and check it registers.
+        let mut db = TraceDb::new("profiler-test-npu", "tiny-dense");
+        for t in [1u64, 8, 64] {
+            db.add_tokens(OpKind::Ffn, t, 3_000 * t);
+        }
+        let spec = HardwareSpec {
+            name: "profiler-test-npu".into(),
+            ..HardwareSpec::cpu_pjrt()
+        };
+        let path = std::env::temp_dir().join("llmss_profiler_bundle_test.json");
+        let bundle = emit_bundle(&db, spec, &path).unwrap();
+        assert!(bundle.has_perf_data());
+        let back = HardwareBundle::load(&path).unwrap();
+        assert_eq!(back.spec.name, "profiler-test-npu");
+        assert_eq!(back.calibration, bundle.calibration);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -49,7 +49,10 @@ pub struct SweepAxes {
     /// Table II serving-config names ([`presets::by_name`]). Must be
     /// non-empty — it anchors every grid point.
     pub presets: Vec<String>,
-    /// Hardware preset names ([`crate::perf::HardwareSpec::preset`]).
+    /// Hardware names, resolved through the global
+    /// [`hardware registry`](crate::perf::hardware): built-in presets and
+    /// registered bundles (profiled devices) sweep identically. Unknown
+    /// names are rejected by [`SweepSpec::expand`] with the candidate list.
     pub hardware: Vec<String>,
     /// Poisson arrival rates, requests/second.
     pub rates: Vec<f64>,
@@ -97,6 +100,17 @@ impl SweepAxes {
     /// applies).
     pub fn with_all_workloads(mut self, registry: &PolicyRegistry) -> Self {
         self.workloads = registry.traffic_names();
+        self
+    }
+
+    /// Fill the hardware axis with every device in `registry` — the four
+    /// built-in presets plus every imported bundle. This is what the CLI's
+    /// `sweep --hardware all` expands to. Sweep execution resolves names
+    /// through the **global** hardware registry, so pass
+    /// [`crate::perf::hardware::snapshot`] here (or globally register any
+    /// custom entries first).
+    pub fn with_all_hardware(mut self, registry: &crate::perf::hardware::HardwareRegistry) -> Self {
+        self.hardware = registry.names();
         self
     }
 }
@@ -186,6 +200,12 @@ impl SweepSpec {
             // rejects unknown names with candidates, and 'replay' with a
             // pointer to its structural config spelling
             registry.check_traffic(w)?;
+        }
+        // Hardware names resolve through their own registry (built-ins +
+        // imported bundles); same up-front rejection with candidates.
+        let hw_registry = crate::perf::hardware::snapshot();
+        for h in &self.axes.hardware {
+            hw_registry.check(h)?;
         }
         let mut out: Vec<SimConfig> = vec![];
         let mut seen: HashSet<String> = HashSet::new();
@@ -764,6 +784,24 @@ mod tests {
         spec.axes.evictions = vec!["lru".into()];
         let e = spec.expand().unwrap_err().to_string();
         assert!(e.contains("prefix cache") && e.contains("S(D)"), "{e}");
+    }
+
+    #[test]
+    fn hardware_axis_validates_against_registry() {
+        let mut spec = quick_spec();
+        spec.axes.hardware = vec!["warp-drive".into()];
+        let e = spec.expand().unwrap_err().to_string();
+        assert!(e.contains("warp-drive") && e.contains("rtx3090"), "{e}");
+        // `with_all_hardware` enumerates at least the built-ins
+        let mut spec = quick_spec();
+        spec.axes = spec
+            .axes
+            .with_all_hardware(&crate::perf::hardware::snapshot());
+        for n in crate::perf::HardwareSpec::preset_names() {
+            assert!(spec.axes.hardware.contains(&n.to_string()), "{n} missing");
+        }
+        let cfgs = spec.expand().unwrap();
+        assert_eq!(cfgs.len(), spec.axes.hardware.len());
     }
 
     #[test]

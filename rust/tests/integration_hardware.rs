@@ -1,0 +1,220 @@
+//! Hardware-onboarding round trip (ISSUE 4 acceptance): profile-style
+//! bundle emission → import (`--hardware-dir` / `import-hardware`) → the
+//! new device resolves by name in `simulate` and in `sweep --hardware all`,
+//! with byte-identical sweep reports at 1 and 8 workers.
+//!
+//! The profile step is synthesized (no PJRT backend in CI): the bundle is
+//! built through the same `HardwareBundle::from_trace` +
+//! `profiler::emit_bundle` path the `profile --emit-bundle` command uses,
+//! then written to disk and loaded back exactly like the CLI does.
+//!
+//! Bundle files land under `target/test-hardware-bundles/` so CI can
+//! upload them as artifacts on failure.
+
+use std::path::PathBuf;
+
+use llmservingsim::config::{presets, PerfBackend};
+use llmservingsim::coordinator::{build_perf, run_config};
+use llmservingsim::model::{ModelSpec, OpKind};
+use llmservingsim::perf::hardware::{self, HardwareBundle};
+use llmservingsim::perf::trace::TraceDb;
+use llmservingsim::perf::{HardwareSpec, PerfModel};
+use llmservingsim::runtime::profiler::emit_bundle;
+use llmservingsim::sweep::{run_sweep, SweepSpec};
+
+/// Where emitted bundles go (kept after the run; CI uploads on failure).
+fn bundle_dir(sub: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target/test-hardware-bundles")
+        .join(sub);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A synthetic operator-level profile for `tag`, shaped like the real
+/// profiler's output for `tiny-dense` (1-D grids + decode batch/ctx grid).
+fn synthetic_profile(tag: &str) -> TraceDb {
+    let mut db = TraceDb::new(tag, "tiny-dense");
+    for (kind, per_token) in [
+        (OpKind::QkvProj, 900u64),
+        (OpKind::AttnPrefill, 1_500),
+        (OpKind::OutProj, 700),
+        (OpKind::Ffn, 2_100),
+        (OpKind::LmHead, 4_000),
+        (OpKind::RmsNorm, 120),
+    ] {
+        for t in [1u64, 4, 16, 64, 256] {
+            db.add_tokens(kind, t, per_token * t + 5_000);
+        }
+    }
+    for b in [1u64, 2, 4, 8] {
+        for c in [64u64, 256, 1024] {
+            db.add_batch_ctx(OpKind::AttnDecode, b, c, 30 * b * c + 5_000);
+        }
+    }
+    db
+}
+
+fn spec_named(name: &str) -> HardwareSpec {
+    HardwareSpec {
+        name: name.to_string(),
+        ..HardwareSpec::cpu_pjrt()
+    }
+}
+
+#[test]
+fn one_command_roundtrip_profile_import_simulate_sweep() {
+    let name = "it-npu-roundtrip";
+    let dir = bundle_dir(name);
+
+    // 1. "profile --emit-bundle": trace + spec -> one bundle file.
+    let db = synthetic_profile(name);
+    let emitted =
+        emit_bundle(&db, spec_named(name), &dir.join(format!("{name}.json"))).unwrap();
+    assert!(emitted.has_perf_data());
+    assert!(!emitted.calibration.is_empty());
+
+    // 2. "--hardware-dir DIR": the bundle registers under its device name.
+    let loaded = hardware::load_bundle_dir(&dir).unwrap();
+    assert!(loaded.contains(&name.to_string()), "loaded: {loaded:?}");
+    assert!(hardware::registered_names().contains(&name.to_string()));
+
+    // 3. The name resolves wherever a built-in preset would.
+    let spec = HardwareSpec::resolve(name).unwrap();
+    assert_eq!(spec.name, name);
+
+    // 3a. simulate: a preset config on the new device completes, priced
+    // through the bundle (trace + calibrated-roofline fallback).
+    let model = ModelSpec::tiny_dense();
+    let perf = build_perf(&PerfBackend::Analytical, &model, &spec).unwrap();
+    assert!(
+        perf.name().starts_with(&format!("bundle[{name}/")),
+        "expected bundle pricing, got '{}'",
+        perf.name()
+    );
+    let mut cfg = presets::single_dense("tiny-dense", name);
+    cfg.workload.num_requests = 25;
+    cfg.workload.lengths = llmservingsim::workload::LengthDist::short();
+    let (report, _) = run_config(cfg).unwrap();
+    assert_eq!(report.num_finished, 25);
+
+    // 3b. sweep --hardware all: the device is a grid point alongside the
+    // built-ins, and reports are byte-identical at 1 and 8 workers.
+    let mut sweep = SweepSpec {
+        num_requests: 12,
+        quick: true,
+        seed: 0x4A4D,
+        ..SweepSpec::default()
+    };
+    sweep.axes = sweep.axes.with_all_hardware(&hardware::snapshot());
+    assert!(sweep.axes.hardware.contains(&name.to_string()));
+    for builtin in HardwareSpec::preset_names() {
+        assert!(sweep.axes.hardware.contains(&builtin.to_string()));
+    }
+    let cfgs = sweep.expand().unwrap();
+    assert!(cfgs.iter().any(|c| c.name == format!("S(D)|hw={name}")));
+
+    let solo = run_sweep(&cfgs, 1).unwrap();
+    let pool = run_sweep(&cfgs, 8).unwrap();
+    assert_eq!(solo.points.len(), pool.points.len());
+    for (a, b) in solo.points.iter().zip(&pool.points) {
+        assert_eq!(a.name, b.name, "slot order must follow expansion");
+        assert_eq!(
+            a.report.to_json().to_string(),
+            b.report.to_json().to_string(),
+            "point '{}' diverged between 1 and 8 workers",
+            a.name
+        );
+    }
+    // the custom device's point actually finished its work
+    let custom = solo
+        .points
+        .iter()
+        .find(|p| p.name.contains(name))
+        .expect("custom hardware point present");
+    assert_eq!(custom.report.num_finished, 12);
+}
+
+#[test]
+fn import_bundle_file_registers_and_validates() {
+    let name = "it-npu-import";
+    let dir = bundle_dir(name);
+    let path = dir.join(format!("{name}.json"));
+    HardwareBundle::from_trace(spec_named(name), synthetic_profile(name))
+        .unwrap()
+        .save(&path)
+        .unwrap();
+
+    let bundle = hardware::import_bundle_file(&path).unwrap();
+    assert_eq!(bundle.spec.name, name);
+    assert!(HardwareSpec::resolve(name).is_ok());
+
+    // corrupt files are rejected with the path in the error
+    let bad = dir.join("corrupt.json");
+    std::fs::write(&bad, "{\"schema\": \"hardware-bundle-v1\"}").unwrap();
+    let e = hardware::import_bundle_file(&bad).unwrap_err().to_string();
+    assert!(e.contains("corrupt.json"), "{e}");
+    std::fs::remove_file(&bad).unwrap();
+}
+
+#[test]
+fn unknown_hardware_everywhere_reports_candidates() {
+    // config resolution
+    let cfg = presets::single_dense("tiny-dense", "it-npu-not-registered");
+    let e = run_config(cfg).unwrap_err().to_string();
+    assert!(
+        e.contains("it-npu-not-registered") && e.contains("rtx3090"),
+        "{e}"
+    );
+    // sweep axis, rejected at expand (not mid-sweep)
+    let mut sweep = SweepSpec {
+        quick: true,
+        ..SweepSpec::default()
+    };
+    sweep.axes.hardware = vec!["it-npu-not-registered".into()];
+    let e = sweep.expand().unwrap_err().to_string();
+    assert!(
+        e.contains("it-npu-not-registered") && e.contains("tpu-v6e"),
+        "{e}"
+    );
+    // direct resolution mentions the import pathway
+    let e = HardwareSpec::resolve("it-npu-not-registered")
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("import-hardware") || e.contains("hardware-dir"), "{e}");
+}
+
+#[test]
+fn heterogeneous_fleet_mixes_builtin_and_imported_hardware() {
+    let name = "it-npu-fleet";
+    let db = synthetic_profile(name);
+    let bundle = HardwareBundle::from_trace(spec_named(name), db).unwrap();
+    hardware::register_hardware(bundle).unwrap();
+
+    // one built-in GPU instance + one imported-device instance behind the
+    // router; both must serve traffic.
+    let mut cfg = presets::multi_dense("tiny-dense", "rtx3090");
+    cfg.instances[1] =
+        llmservingsim::config::InstanceConfig::basic("npu0", "tiny-dense", name);
+    cfg.workload.num_requests = 30;
+    cfg.workload.lengths = llmservingsim::workload::LengthDist::short();
+    cfg.workload.traffic = llmservingsim::workload::Traffic::burst();
+    let (report, _) = run_config(cfg).unwrap();
+    assert_eq!(report.num_finished, 30);
+    assert!(report.utilization.get(&0).copied().unwrap_or(0.0) > 0.0);
+    assert!(report.utilization.get(&1).copied().unwrap_or(0.0) > 0.0);
+}
+
+#[test]
+fn registered_hardware_simulation_is_reproducible() {
+    let name = "it-npu-repro";
+    let bundle =
+        HardwareBundle::from_trace(spec_named(name), synthetic_profile(name)).unwrap();
+    hardware::register_hardware(bundle).unwrap();
+    let mut cfg = presets::single_dense("tiny-dense", name);
+    cfg.workload.num_requests = 20;
+    cfg.workload.lengths = llmservingsim::workload::LengthDist::short();
+    let (a, _) = run_config(cfg.clone()).unwrap();
+    let (b, _) = run_config(cfg).unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+}

@@ -1,0 +1,205 @@
+//! Cross-backend consistency (ISSUE 4 satellite): the four pricing paths
+//! (cycle, memoized replay, trace interpolation, calibrated roofline) must
+//! agree with each other where their contracts overlap:
+//!
+//! * `replay` is byte-identical to `cycle` — per invocation (repeated) and
+//!   for whole simulation reports;
+//! * calibration factors are finite and positive for every `OpKind`;
+//! * trace pricing and calibrated-analytical pricing agree within the
+//!   calibration factor at profiled shapes.
+
+use llmservingsim::config::{presets, PerfBackend};
+use llmservingsim::coordinator::run_config;
+use llmservingsim::model::{ModelSpec, OpInvocation, OpKind};
+use llmservingsim::perf::analytical::{Calibrated, Roofline};
+use llmservingsim::perf::cycle::{CycleSim, SystolicSpec};
+use llmservingsim::perf::hardware::HardwareBundle;
+use llmservingsim::perf::replay::Replay;
+use llmservingsim::perf::trace::TraceDb;
+use llmservingsim::perf::{HardwareSpec, PerfModel};
+
+/// Invocation shapes covering every op kind, with deliberate repeats so the
+/// replay cache serves hits.
+fn shape_sweep() -> Vec<OpInvocation> {
+    let mut invs = vec![];
+    for &kind in OpKind::all() {
+        if kind.is_decode_grid() {
+            for (b, c) in [(1u64, 64u64), (4, 256), (8, 1024), (4, 256)] {
+                invs.push(OpInvocation::decode(b, c));
+            }
+        } else if kind == OpKind::AttnPrefill {
+            for t in [8u64, 64, 256, 64] {
+                invs.push(OpInvocation::prefill(t));
+            }
+        } else {
+            for t in [1u64, 16, 128, 16] {
+                invs.push(OpInvocation::tokens(kind, t));
+            }
+        }
+    }
+    invs
+}
+
+#[test]
+fn replay_matches_cycle_on_every_invocation_repeatedly() {
+    let model = ModelSpec::tiny_moe();
+    let cycle = CycleSim::new(SystolicSpec::default(), model.clone());
+    let replay = Replay::new(CycleSim::new(SystolicSpec::default(), model));
+    for inv in shape_sweep() {
+        let want = cycle.op_latency(inv);
+        // first call populates the cache, later calls replay it — all three
+        // must be bit-identical to the uncached cycle result
+        for round in 0..3 {
+            let got = replay.op_latency(inv);
+            assert_eq!(got, want, "{inv:?} diverged on round {round}");
+        }
+    }
+    let (hits, misses) = replay.stats();
+    assert!(hits > 0, "repeated shapes must hit the replay cache");
+    assert!(misses > 0);
+}
+
+#[test]
+fn replay_and_cycle_simulation_reports_are_byte_identical() {
+    let mk = |perf: PerfBackend| {
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.workload.num_requests = 6;
+        cfg.workload.lengths = llmservingsim::workload::LengthDist::short();
+        cfg.perf = perf;
+        let (report, _) = run_config(cfg).unwrap();
+        report.to_json().to_string()
+    };
+    let cycle = mk(PerfBackend::Cycle);
+    let replay_a = mk(PerfBackend::CycleReplay);
+    let replay_b = mk(PerfBackend::CycleReplay);
+    assert_eq!(cycle, replay_a, "memoization must not change a single byte");
+    assert_eq!(replay_a, replay_b, "replay must be reproducible across runs");
+}
+
+/// A trace whose every sample is exactly `factor` x the roofline latency of
+/// `hw`/`model` at that shape.
+fn scaled_trace(hw: &HardwareSpec, model: &ModelSpec, factor: f64) -> TraceDb {
+    let roof = Roofline::new(hw.clone(), model.clone());
+    let mut db = TraceDb::new(&hw.name, &model.name);
+    for &kind in OpKind::all() {
+        if kind.is_decode_grid() {
+            for b in [1u64, 2, 4, 8] {
+                for c in [64u64, 256, 1024] {
+                    let inv = OpInvocation::decode(b, c);
+                    let ns = (roof.raw_latency(inv) * factor * 1e9).round() as u64;
+                    db.add_batch_ctx(kind, b, c, ns.max(1));
+                }
+            }
+        } else {
+            for t in [4u64, 16, 64, 256] {
+                let inv = if kind == OpKind::AttnPrefill {
+                    OpInvocation::prefill(t)
+                } else {
+                    OpInvocation::tokens(kind, t)
+                };
+                let ns = (roof.raw_latency(inv) * factor * 1e9).round() as u64;
+                db.add_tokens(kind, t, ns.max(1));
+            }
+        }
+    }
+    db
+}
+
+#[test]
+fn calibration_factors_finite_and_positive_for_every_opkind() {
+    // tiny-moe exercises the MoE op kinds with real expert dimensions
+    let model = ModelSpec::tiny_moe();
+    let hw = HardwareSpec::cpu_pjrt();
+    let db = scaled_trace(&hw, &model, 3.0);
+    let factors = db.calibration(&Roofline::new(hw.clone(), model.clone()));
+    for &kind in OpKind::all() {
+        let (_, f) = factors
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .unwrap_or_else(|| panic!("no calibration factor for {kind}"));
+        assert!(f.is_finite() && *f > 0.0, "{kind}: factor {f}");
+        assert!((*f - 3.0).abs() < 0.1, "{kind}: factor {f} should be ~3.0");
+    }
+    // the Calibrated wrapper keeps every kind finite/positive, measured or
+    // not (unmeasured kinds fall back to 1.0)
+    let cal = Calibrated::new(Roofline::new(hw, model), factors);
+    for &kind in OpKind::all() {
+        let f = cal.factor(kind);
+        assert!(f.is_finite() && f > 0.0, "{kind}: wrapped factor {f}");
+    }
+}
+
+#[test]
+fn trace_and_calibrated_roofline_agree_at_profiled_shapes() {
+    let model = ModelSpec::tiny_dense();
+    let hw = HardwareSpec::cpu_pjrt();
+    let factor = 2.5;
+    let db = scaled_trace(&hw, &model, factor);
+    let roof = Roofline::new(hw.clone(), model.clone());
+    let cal = Calibrated::new(roof.clone(), db.calibration(&roof));
+
+    for &kind in OpKind::all() {
+        let invs: Vec<OpInvocation> = if kind.is_decode_grid() {
+            vec![OpInvocation::decode(2, 256), OpInvocation::decode(8, 1024)]
+        } else if kind == OpKind::AttnPrefill {
+            vec![OpInvocation::prefill(16), OpInvocation::prefill(256)]
+        } else {
+            vec![
+                OpInvocation::tokens(kind, 16),
+                OpInvocation::tokens(kind, 256),
+            ]
+        };
+        for inv in invs {
+            let traced = db.op_latency(inv) as f64;
+            // strip the fixed kernel overhead the analytical family adds;
+            // the trace measures it inside its samples by construction
+            let calibrated = cal.op_latency(inv).saturating_sub(hw.kernel_overhead) as f64;
+            let rel = (traced - calibrated).abs() / traced.max(1.0);
+            assert!(
+                rel < 0.02,
+                "{inv:?}: trace {traced} vs calibrated {calibrated} ({:.2}% off)",
+                rel * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn bundle_pricing_is_trace_where_profiled_calibrated_elsewhere() {
+    let model = ModelSpec::tiny_dense();
+    let hw = HardwareSpec {
+        name: "consistency-npu".into(),
+        ..HardwareSpec::cpu_pjrt()
+    };
+    let mut db = scaled_trace(&hw, &model, 2.0);
+    // renaming: scaled_trace tags with hw.name already; drop one op kind so
+    // the fallback path is exercised
+    db = {
+        let mut partial = TraceDb::new(&db.hardware, &db.model);
+        for kind in db.kinds().collect::<Vec<_>>() {
+            if kind == OpKind::LmHead {
+                continue;
+            }
+            for (a, b, ns) in db.samples(kind) {
+                if kind.is_decode_grid() {
+                    partial.add_batch_ctx(kind, a, b, ns);
+                } else {
+                    partial.add_tokens(kind, a, ns);
+                }
+            }
+        }
+        partial
+    };
+    let bundle = HardwareBundle::from_trace(hw.clone(), db.clone()).unwrap();
+    let perf = bundle.perf_on(&hw, &model);
+    // profiled shape: exact trace value
+    let inv = OpInvocation::tokens(OpKind::Ffn, 64);
+    assert_eq!(perf.op_latency(inv), db.op_latency(inv));
+    // unprofiled kind: calibrated roofline value, bit-for-bit
+    let cal = Calibrated::new(
+        Roofline::new(hw.clone(), model.clone()),
+        bundle.calibration.clone(),
+    );
+    let inv = OpInvocation::tokens(OpKind::LmHead, 64);
+    assert_eq!(perf.op_latency(inv), cal.op_latency(inv));
+}

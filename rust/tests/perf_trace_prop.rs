@@ -1,0 +1,310 @@
+//! Property suite for `perf/trace.rs` interpolation (ISSUE 4 satellite):
+//! the trace-driven model is the paper's headline pricing path, so its
+//! numerical behaviour is pinned here:
+//!
+//! * exact at profiled grid points,
+//! * monotone along the token / batch / ctx axes for monotone samples,
+//! * deterministic across calls and clones,
+//! * bounded (linear) extrapolation beyond the last segment,
+//! * strict rejection of malformed / empty / unsorted bundle JSON.
+
+use llmservingsim::model::{OpInvocation, OpKind};
+use llmservingsim::perf::hardware::HardwareBundle;
+use llmservingsim::perf::trace::TraceDb;
+use llmservingsim::perf::PerfModel;
+use llmservingsim::util::json;
+use llmservingsim::util::prop;
+use llmservingsim::util::rng::Rng;
+
+/// Random strictly-increasing token grid with values in [1, 10^6].
+fn gen_grid(rng: &mut Rng, monotone_values: bool) -> Vec<(u64, u64)> {
+    let n = 2 + rng.below(7) as usize;
+    let mut x = 0u64;
+    let mut y = 1 + rng.below(1_000);
+    let mut pts = Vec::with_capacity(n);
+    for _ in 0..n {
+        x += 1 + rng.below(64);
+        if monotone_values {
+            y += rng.below(10_000);
+        } else {
+            y = 1 + rng.below(1_000_000);
+        }
+        pts.push((x, y));
+    }
+    pts
+}
+
+fn db_from(pts: &[(u64, u64)]) -> TraceDb {
+    let mut db = TraceDb::new("prop-hw", "tiny-dense");
+    for &(t, ns) in pts {
+        db.add_tokens(OpKind::Ffn, t, ns);
+    }
+    db
+}
+
+fn lookup(db: &TraceDb, t: u64) -> f64 {
+    db.lookup(OpInvocation::tokens(OpKind::Ffn, t))
+        .expect("profiled op kind must price")
+}
+
+#[test]
+fn prop_exact_at_grid_points() {
+    prop::check(
+        "trace-exact-at-grid",
+        256,
+        |rng| gen_grid(rng, false),
+        |pts| {
+            let db = db_from(pts);
+            for &(t, ns) in pts {
+                let v = lookup(&db, t);
+                let tol = 1e-6 * (ns as f64).max(1.0);
+                if (v - ns as f64).abs() > tol {
+                    return Err(format!("f({t}) = {v}, profiled {ns}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_monotone_along_token_axis() {
+    prop::check(
+        "trace-monotone-tokens",
+        256,
+        |rng| {
+            let pts = gen_grid(rng, true);
+            let hi = pts.last().unwrap().0 * 2; // include extrapolation range
+            let q1 = 1 + rng.below(hi);
+            let q2 = 1 + rng.below(hi);
+            (pts, q1.min(q2), q1.max(q2))
+        },
+        |(pts, q1, q2)| {
+            let db = db_from(pts);
+            let (v1, v2) = (lookup(&db, *q1), lookup(&db, *q2));
+            if v1 > v2 + 1e-6 {
+                return Err(format!("f({q1})={v1} > f({q2})={v2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deterministic_across_calls_and_clones() {
+    prop::check(
+        "trace-deterministic",
+        128,
+        |rng| {
+            let pts = gen_grid(rng, false);
+            let q = 1 + rng.below(pts.last().unwrap().0 * 2);
+            (pts, q)
+        },
+        |(pts, q)| {
+            let db = db_from(pts);
+            let twin = db.clone();
+            let a = db.op_latency(OpInvocation::tokens(OpKind::Ffn, *q));
+            let b = db.op_latency(OpInvocation::tokens(OpKind::Ffn, *q));
+            let c = twin.op_latency(OpInvocation::tokens(OpKind::Ffn, *q));
+            if a != b || a != c {
+                return Err(format!("latencies diverged: {a} / {b} / {c}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_extrapolation_is_linear_in_last_segment() {
+    prop::check(
+        "trace-bounded-extrapolation",
+        256,
+        |rng| {
+            let pts = gen_grid(rng, false);
+            let last = pts.last().unwrap().0;
+            let q = last + 1 + rng.below(last.max(4) * 4);
+            (pts, q)
+        },
+        |(pts, q)| {
+            let db = db_from(pts);
+            let v = lookup(&db, *q);
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("f({q}) = {v} invalid"));
+            }
+            // beyond the grid, the model extends the LAST segment linearly
+            // (clamped at zero) — never a higher-order blowup
+            let (x0, y0) = pts[pts.len() - 2];
+            let (x1, y1) = pts[pts.len() - 1];
+            let slope = (y1 as f64 - y0 as f64) / (x1 as f64 - x0 as f64);
+            let expect = (y1 as f64 + slope * (*q - x1) as f64).max(0.0);
+            let tol = 1e-6 * expect.abs().max(1.0);
+            if (v - expect).abs() > tol {
+                return Err(format!("f({q}) = {v}, linear extension {expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_decode_grid_exact_and_monotone_in_batch_and_ctx() {
+    prop::check(
+        "trace-decode-bilinear",
+        128,
+        |rng| {
+            // full (batch, ctx) grid with coefficients making the surface
+            // strictly increasing along both axes
+            let a = 1 + rng.below(40);
+            let b = 1 + rng.below(500);
+            let c = 1 + rng.below(500);
+            let q_b = 1 + rng.below(16);
+            let q_c = 1 + rng.below(2_048);
+            (a, b, c, q_b, q_c)
+        },
+        |&(a, b, c, q_b, q_c)| {
+            let mut db = TraceDb::new("prop-hw", "tiny-dense");
+            let batches = [1u64, 2, 4, 8, 16];
+            let ctxs = [64u64, 256, 1024, 2048];
+            for &bb in &batches {
+                for &cc in &ctxs {
+                    db.add_batch_ctx(OpKind::AttnDecode, bb, cc, a * bb * cc + b * bb + c * cc);
+                }
+            }
+            // exact on every grid point
+            for &bb in &batches {
+                for &cc in &ctxs {
+                    let v = db.lookup(OpInvocation::decode(bb, cc)).unwrap();
+                    let want = (a * bb * cc + b * bb + c * cc) as f64;
+                    if (v - want).abs() > 1e-9 * want.max(1.0) {
+                        return Err(format!("grid ({bb},{cc}): {v} != {want}"));
+                    }
+                }
+            }
+            // monotone: raising batch or ctx never lowers the estimate
+            let v = db.lookup(OpInvocation::decode(q_b, q_c)).unwrap();
+            let v_b = db.lookup(OpInvocation::decode(q_b + 1, q_c)).unwrap();
+            let v_c = db.lookup(OpInvocation::decode(q_b, q_c + 64)).unwrap();
+            if v_b + 1e-6 < v {
+                return Err(format!("batch: f({},{q_c})={v_b} < f({q_b},{q_c})={v}", q_b + 1));
+            }
+            if v_c + 1e-6 < v {
+                return Err(format!("ctx: f({q_b},{})={v_c} < f({q_b},{q_c})={v}", q_c + 64));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Malformed / empty / unsorted input rejection
+// ---------------------------------------------------------------------------
+
+fn trace_json_err(src: &str) -> String {
+    TraceDb::from_json(&json::parse(src).unwrap())
+        .expect_err("malformed trace must be rejected")
+        .to_string()
+}
+
+#[test]
+fn trace_json_rejects_malformed() {
+    // missing required fields
+    assert!(trace_json_err(r#"{}"#).contains("hardware"));
+    assert!(trace_json_err(r#"{"hardware": "hw"}"#).contains("model"));
+    assert!(trace_json_err(r#"{"hardware": "hw", "model": "m"}"#).contains("ops"));
+    // unknown op kind
+    let e = trace_json_err(
+        r#"{"hardware": "hw", "model": "m",
+            "ops": {"warp_core": {"grid": "tokens", "points": [[1, 10]]}}}"#,
+    );
+    assert!(e.contains("warp_core"), "{e}");
+    // unknown grid kind
+    let e = trace_json_err(
+        r#"{"hardware": "hw", "model": "m",
+            "ops": {"ffn": {"grid": "hexagonal", "points": [[1, 10]]}}}"#,
+    );
+    assert!(e.contains("hexagonal"), "{e}");
+    // non-numeric / truncated points
+    let e = trace_json_err(
+        r#"{"hardware": "hw", "model": "m",
+            "ops": {"ffn": {"grid": "tokens", "points": [["one", 10]]}}}"#,
+    );
+    assert!(e.contains("ffn"), "{e}");
+    let e = trace_json_err(
+        r#"{"hardware": "hw", "model": "m",
+            "ops": {"attn_decode": {"grid": "batch_ctx", "points": [[1, 64]]}}}"#,
+    );
+    assert!(e.contains("attn_decode"), "{e}");
+    // ops must be an object
+    assert!(TraceDb::from_json(
+        &json::parse(r#"{"hardware": "hw", "model": "m", "ops": [1, 2]}"#).unwrap()
+    )
+    .is_err());
+    // duplicate grid coordinates: a zero-width segment would make the
+    // interpolator divide by zero, so the trace layer itself rejects them
+    // (not just the stricter bundle loader)
+    let e = trace_json_err(
+        r#"{"hardware": "hw", "model": "m",
+            "ops": {"ffn": {"grid": "tokens", "points": [[4, 40], [4, 50]]}}}"#,
+    );
+    assert!(e.contains("duplicate"), "{e}");
+    let e = trace_json_err(
+        r#"{"hardware": "hw", "model": "m",
+            "ops": {"attn_decode": {"grid": "batch_ctx",
+                    "points": [[2, 64, 10], [2, 64, 12]]}}}"#,
+    );
+    assert!(e.contains("duplicate"), "{e}");
+}
+
+fn bundle_src(trace_ops: &str) -> String {
+    format!(
+        r#"{{"schema": "hardware-bundle-v1",
+            "hardware": {{"name": "prop-npu", "peak_flops": 1e12,
+                          "mem_bw": 1e11, "mem_capacity": 1073741824,
+                          "host_bw": 1e10, "kernel_overhead_ns": 5000}},
+            "trace": {{"hardware": "prop-npu", "model": "tiny-dense",
+                       "ops": {trace_ops}}}}}"#
+    )
+}
+
+fn bundle_err(src: &str) -> String {
+    HardwareBundle::from_json(&json::parse(src).unwrap())
+        .expect_err("malformed bundle must be rejected")
+        .to_string()
+}
+
+#[test]
+fn bundle_json_rejects_empty_and_unsorted() {
+    // a well-formed bundle parses (control)
+    let good = bundle_src(r#"{"ffn": {"grid": "tokens", "points": [[1, 10], [4, 40]]}}"#);
+    HardwareBundle::from_json(&json::parse(&good).unwrap()).unwrap();
+
+    // empty trace section
+    let e = bundle_err(&bundle_src("{}"));
+    assert!(e.contains("no samples"), "{e}");
+
+    // unsorted grid points
+    let e = bundle_err(&bundle_src(
+        r#"{"ffn": {"grid": "tokens", "points": [[4, 40], [1, 10]]}}"#,
+    ));
+    assert!(e.contains("out of order"), "{e}");
+    let e = bundle_err(&bundle_src(
+        r#"{"attn_decode": {"grid": "batch_ctx",
+            "points": [[2, 64, 10], [1, 64, 5]]}}"#,
+    ));
+    assert!(e.contains("out of order"), "{e}");
+
+    // duplicate grid points (ambiguous samples)
+    let e = bundle_err(&bundle_src(
+        r#"{"ffn": {"grid": "tokens", "points": [[4, 40], [4, 50]]}}"#,
+    ));
+    assert!(e.contains("out of order") || e.contains("duplicate"), "{e}");
+
+    // spec-level garbage: zero bandwidth
+    let e = bundle_err(
+        r#"{"schema": "hardware-bundle-v1",
+            "hardware": {"name": "prop-npu", "peak_flops": 1e12,
+                         "mem_bw": 0, "mem_capacity": 1073741824,
+                         "host_bw": 1e10, "kernel_overhead_ns": 5000}}"#,
+    );
+    assert!(e.contains("mem_bw"), "{e}");
+}
