@@ -1,0 +1,73 @@
+//! Autoscaling walkthrough (DESIGN.md §9): drive a bursty multi-tenant
+//! workload through the stepped `SimDriver`, watching the `queue-threshold`
+//! controller grow and shrink the fleet between slices, then print the
+//! controller timeline from the final report.
+//!
+//! Run with: `cargo run --example autoscale`
+
+use llmservingsim::config::presets;
+use llmservingsim::coordinator::Simulation;
+use llmservingsim::sim::MILLI;
+
+fn main() -> anyhow::Result<()> {
+    // The bursty autoscale scenario: MMPP bursts far above one instance's
+    // service rate, quiet phases long enough to drain, `queue-threshold`
+    // controller on a 10 ms tick.
+    let cfg = presets::autoscale_bursty();
+    println!(
+        "scenario '{}': {} requests, controller '{}', tick {} ms, fleet {}..{}",
+        cfg.name,
+        cfg.workload.num_requests,
+        cfg.cluster.controller,
+        cfg.cluster.tick_ms,
+        cfg.cluster.min_instances,
+        cfg.cluster.max_instances,
+    );
+
+    let mut sim = Simulation::new(cfg)?;
+    let mut driver = sim.driver();
+
+    // Step the simulation in 50 ms slices; the driver exposes a read-only
+    // ClusterView between slices — the same snapshot the controller sees.
+    println!("\n  t (ms) | active | waiting | in-flight | finished");
+    let mut t = 0;
+    while !driver.is_done() {
+        t += 50 * MILLI;
+        driver.run_until(t);
+        let view = driver.view();
+        println!(
+            "  {:>6.0} | {:>6} | {:>7} | {:>9} | {:>8}",
+            t as f64 / 1e6,
+            view.active(),
+            view.total_waiting(),
+            view.in_flight,
+            view.finished,
+        );
+    }
+    let report = driver.finish();
+
+    println!("\ncontroller timeline (actions only):");
+    for e in report.timeline.iter().filter(|e| e.kind != "sample") {
+        println!(
+            "  t={:>7.1} ms  {:<13} instance={:<3} active={} {}",
+            e.at as f64 / 1e6,
+            e.kind,
+            e.instance.map(|i| i.to_string()).unwrap_or_default(),
+            e.active,
+            e.detail,
+        );
+    }
+
+    println!(
+        "\nfinished {}/{} requests; fleet peaked at {} instances, ended with {} active",
+        report.num_finished,
+        report.num_requests,
+        sim.peak_instances(),
+        sim.num_active_instances(),
+    );
+    println!(
+        "throughput {:.1} tok/s, goodput {:.1} tok/s, controller '{}'",
+        report.throughput_tps, report.goodput_tps, report.controller
+    );
+    Ok(())
+}

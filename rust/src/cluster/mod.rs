@@ -1,0 +1,700 @@
+//! Cluster controllers: the fourth plugin axis (DESIGN.md §9).
+//!
+//! The first three axes (policies, traffic, hardware) decide *how* a fixed
+//! fleet serves requests. This axis opens the fleet itself: a
+//! [`ClusterController`] is invoked on a configurable tick with a
+//! read-only [`ClusterView`] snapshot and returns typed [`ClusterAction`]s
+//! — scale up, drain, fail, recover, retune — that the coordinator applies
+//! between events. Instances gain a lifecycle
+//! (`Starting(warmup) -> Active -> Draining -> Stopped`); the router only
+//! targets `Active` instances, and displaced requests are re-routed
+//! deterministically.
+//!
+//! Controllers are registered in the
+//! [`PolicyRegistry`](crate::policy::PolicyRegistry) by name, exactly like
+//! routing/scheduling/eviction policies and traffic sources. Built-ins:
+//!
+//! | name              | behavior |
+//! |-------------------|----------|
+//! | `static`          | no ticks, no actions — byte-identical to the pre-driver run loop |
+//! | `queue-threshold` | autoscaler: scale up when the average wait queue per live instance exceeds a threshold, drain back down when it falls below another |
+//! | `failure-replay`  | scripted fault injection from `cluster.failures` (fail at an exact time, optionally recover later) |
+//!
+//! Determinism contract: controllers see only the [`ClusterView`] and the
+//! tick time, ticks land on a fixed grid in *simulated* time, and actions
+//! are applied in returned order — so a controlled simulation is exactly as
+//! reproducible as a static one, at any sweep worker count.
+
+use crate::config::{ClusterConfig, Role};
+use crate::memory::CacheStats;
+use crate::sim::{Nanos, MILLI};
+use crate::util::json::Value;
+
+// ---------------------------------------------------------------------------
+// Lifecycle
+// ---------------------------------------------------------------------------
+
+/// Lifecycle state of a serving instance in a dynamic fleet.
+///
+/// `Starting -> Active -> Draining -> Stopped`, with `Stopped -> Starting`
+/// on recovery. Only `Active` instances are router targets; `Draining`
+/// instances finish their running batch but admit nothing new; `Stopped`
+/// instances hold no requests and report no load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Warming up (model load, KV pool init); becomes `Active` at `until`.
+    Starting { until: Nanos },
+    /// Serving normally; the only state the router dispatches to.
+    Active,
+    /// Finishing its running batch; waiting requests were re-routed.
+    Draining,
+    /// Out of the fleet (drained to empty, failed, or scaled down).
+    Stopped,
+}
+
+impl Lifecycle {
+    pub fn is_active(self) -> bool {
+        matches!(self, Lifecycle::Active)
+    }
+
+    pub fn is_stopped(self) -> bool {
+        matches!(self, Lifecycle::Stopped)
+    }
+
+    /// Whether the instance may run engine steps (`Active` or `Draining`).
+    pub fn can_run(self) -> bool {
+        matches!(self, Lifecycle::Active | Lifecycle::Draining)
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Lifecycle::Starting { .. } => "starting",
+            Lifecycle::Active => "active",
+            Lifecycle::Draining => "draining",
+            Lifecycle::Stopped => "stopped",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster view
+// ---------------------------------------------------------------------------
+
+/// Controller-visible snapshot of one instance.
+#[derive(Debug, Clone)]
+pub struct InstanceSnapshot {
+    pub id: usize,
+    pub name: String,
+    pub hardware: String,
+    pub role: Role,
+    pub lifecycle: Lifecycle,
+    /// Requests waiting for admission.
+    pub waiting: usize,
+    /// Sequences in the running batch.
+    pub running: usize,
+    /// Whether an engine step is in flight.
+    pub busy: bool,
+    /// KV pool utilization in [0, 1].
+    pub kv_utilization: f64,
+    /// Current continuous-batching sequence cap (`SetBatchCap` target).
+    pub max_batch_seqs: usize,
+    /// Prefix-cache stats, if the instance has a cache attached.
+    pub cache: Option<CacheStats>,
+}
+
+/// Read-only cluster snapshot handed to controllers between steps.
+#[derive(Debug, Clone)]
+pub struct ClusterView {
+    /// Simulated time of the snapshot.
+    pub now: Nanos,
+    /// Every instance ever created, indexed by id (including `Stopped`).
+    pub instances: Vec<InstanceSnapshot>,
+    /// Requests arrived but not yet finished.
+    pub in_flight: usize,
+    /// Requests finished so far.
+    pub finished: usize,
+    /// Requests arrived so far.
+    pub arrivals: usize,
+    /// SLO attainment over finished requests so far (1.0 when none).
+    pub slo_attainment: f64,
+}
+
+impl ClusterView {
+    /// Instances currently `Active`.
+    pub fn active(&self) -> usize {
+        self.instances
+            .iter()
+            .filter(|i| i.lifecycle.is_active())
+            .count()
+    }
+
+    /// Instances that are (or are about to be) serving capacity:
+    /// `Active` + `Starting`.
+    pub fn live(&self) -> usize {
+        self.instances
+            .iter()
+            .filter(|i| {
+                matches!(i.lifecycle, Lifecycle::Active | Lifecycle::Starting { .. })
+            })
+            .count()
+    }
+
+    /// Total waiting requests across non-stopped instances.
+    pub fn total_waiting(&self) -> usize {
+        self.instances
+            .iter()
+            .filter(|i| !i.lifecycle.is_stopped())
+            .map(|i| i.waiting)
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Actions + timeline
+// ---------------------------------------------------------------------------
+
+/// A typed fleet mutation returned by a controller tick. Actions referring
+/// to unknown or wrong-state instances are logged and skipped — a
+/// controller bug must not crash the simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterAction {
+    /// Add an instance. The new instance clones the config of the first
+    /// existing instance with the same role (hardware overridable) and
+    /// warms up for `cluster.warmup_ms` before joining the router's
+    /// candidate set.
+    ScaleUp {
+        /// Hardware-registry name; `None` keeps the template's hardware.
+        hardware: Option<String>,
+        role: Role,
+    },
+    /// Gracefully remove an instance: re-route its waiting requests,
+    /// finish the running batch, then stop.
+    ScaleDown { instance: usize },
+    /// Same mechanics as [`ScaleDown`](ClusterAction::ScaleDown), recorded
+    /// separately in the timeline (operational drain, not capacity change).
+    Drain { instance: usize },
+    /// Hard failure at absolute time `at` (>= now; past times apply
+    /// immediately): all resident requests are lost and re-routed
+    /// recompute-style, the instance goes `Stopped`.
+    Fail { instance: usize, at: Nanos },
+    /// Bring a `Stopped` instance back: it warms up for
+    /// `cluster.warmup_ms`, then rejoins as `Active`.
+    Recover { instance: usize },
+    /// Retune an instance's continuous-batching sequence cap.
+    SetBatchCap { instance: usize, max_seqs: usize },
+}
+
+impl ClusterAction {
+    /// Timeline kind tag for this action.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ClusterAction::ScaleUp { .. } => "scale-up",
+            ClusterAction::ScaleDown { .. } => "scale-down",
+            ClusterAction::Drain { .. } => "drain",
+            ClusterAction::Fail { .. } => "fail",
+            ClusterAction::Recover { .. } => "recover",
+            ClusterAction::SetBatchCap { .. } => "set-batch-cap",
+        }
+    }
+}
+
+/// One entry of the controller timeline threaded into
+/// [`Report`](crate::metrics::Report): an applied action, a lifecycle
+/// transition, or a periodic fleet-size sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineEntry {
+    pub at: Nanos,
+    /// `"sample"`, an action kind ([`ClusterAction::kind`]), or a
+    /// transition tag (`"ready"`, `"drained"`).
+    pub kind: String,
+    /// Target instance, if the entry concerns one.
+    pub instance: Option<usize>,
+    /// `Active` instance count after the entry took effect.
+    pub active: usize,
+    /// Human-readable detail (hardware name, thresholds, cap values, ...).
+    pub detail: String,
+}
+
+impl TimelineEntry {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("at_ns", Value::int(self.at as i64)),
+            ("kind", Value::str(self.kind.clone())),
+            (
+                "instance",
+                match self.instance {
+                    Some(i) => Value::int(i as i64),
+                    None => Value::Null,
+                },
+            ),
+            ("active", Value::int(self.active as i64)),
+            ("detail", Value::str(self.detail.clone())),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The controller trait
+// ---------------------------------------------------------------------------
+
+/// A cluster controller: the fourth registered plugin axis.
+///
+/// Implementations are `Send` and object-safe, registered by name in the
+/// [`PolicyRegistry`](crate::policy::PolicyRegistry)
+/// (see [`register_cluster_controller`](crate::policy::register_cluster_controller)),
+/// and resolved once when a simulation is built from
+/// `cluster.controller` in the config.
+///
+/// Determinism contract: `on_tick` must depend only on its arguments and
+/// the controller's own state (which in turn was built from the config and
+/// earlier ticks). Break ties on instance id.
+pub trait ClusterController: Send {
+    /// Registry/report name of this controller.
+    fn name(&self) -> &str;
+
+    /// Whether the driver schedules periodic `ControllerTick` events for
+    /// this controller. `false` (the `static` built-in) keeps the event
+    /// stream — and therefore every report — byte-identical to a run
+    /// without any controller.
+    fn wants_ticks(&self) -> bool {
+        true
+    }
+
+    /// Invoked on each tick with a read-only cluster snapshot; returns the
+    /// actions to apply, in order.
+    fn on_tick(&mut self, now: Nanos, view: &ClusterView) -> Vec<ClusterAction>;
+
+    /// Whether the controller still intends future actions. Keeps the tick
+    /// train alive when the event queue is otherwise drained (e.g. a
+    /// scripted recovery after the last failure emptied the fleet).
+    fn has_pending(&self, now: Nanos) -> bool {
+        let _ = now;
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in: static
+// ---------------------------------------------------------------------------
+
+/// Today's behavior: a frozen fleet. No ticks are scheduled, so the event
+/// stream — and every report — is byte-identical to the pre-driver loop.
+#[derive(Debug, Default)]
+pub struct StaticController;
+
+impl ClusterController for StaticController {
+    fn name(&self) -> &str {
+        "static"
+    }
+
+    fn wants_ticks(&self) -> bool {
+        false
+    }
+
+    fn on_tick(&mut self, _now: Nanos, _view: &ClusterView) -> Vec<ClusterAction> {
+        vec![]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in: queue-threshold autoscaler
+// ---------------------------------------------------------------------------
+
+/// Reactive autoscaler on wait-queue pressure: scale up (cloning the first
+/// `Unified`-role instance) when the average waiting count per live
+/// instance exceeds `scale_up_queue`, drain the highest-id active instance
+/// when it falls below `scale_down_queue`. A cooldown of
+/// [`QueueThreshold::COOLDOWN_TICKS`] ticks between actions damps
+/// oscillation, and the fleet stays within
+/// `[min_instances, max_instances]`.
+#[derive(Debug)]
+pub struct QueueThreshold {
+    scale_up_queue: f64,
+    scale_down_queue: f64,
+    min_instances: usize,
+    max_instances: usize,
+    ticks_since_action: u32,
+}
+
+impl QueueThreshold {
+    /// Ticks that must pass after an action before the next one.
+    pub const COOLDOWN_TICKS: u32 = 2;
+
+    pub fn from_config(cfg: &ClusterConfig) -> QueueThreshold {
+        QueueThreshold {
+            scale_up_queue: cfg.scale_up_queue,
+            scale_down_queue: cfg.scale_down_queue,
+            min_instances: cfg.min_instances,
+            max_instances: cfg.max_instances,
+            ticks_since_action: Self::COOLDOWN_TICKS,
+        }
+    }
+}
+
+impl ClusterController for QueueThreshold {
+    fn name(&self) -> &str {
+        "queue-threshold"
+    }
+
+    fn on_tick(&mut self, _now: Nanos, view: &ClusterView) -> Vec<ClusterAction> {
+        self.ticks_since_action = self.ticks_since_action.saturating_add(1);
+        if self.ticks_since_action <= Self::COOLDOWN_TICKS {
+            return vec![];
+        }
+        let live = view.live();
+        let waiting = view.total_waiting();
+        let avg = waiting as f64 / live.max(1) as f64;
+        let starting = view
+            .instances
+            .iter()
+            .any(|i| matches!(i.lifecycle, Lifecycle::Starting { .. }));
+
+        if avg > self.scale_up_queue && live < self.max_instances {
+            self.ticks_since_action = 0;
+            return vec![ClusterAction::ScaleUp {
+                hardware: None,
+                role: Role::Unified,
+            }];
+        }
+        // Never drain while capacity is still warming up — the queue dip
+        // may just be the burst ending before the new instance arrived.
+        if avg < self.scale_down_queue && !starting && view.active() > self.min_instances
+        {
+            // Highest-id active *Unified* instance: scaled-up instances
+            // leave first, the original fleet last (deterministic
+            // tie-break by id). Prefill/Decode instances are never
+            // victims — draining the only Decode instance of a P/D fleet
+            // would strand every subsequent handoff, and this controller
+            // only ever adds Unified capacity anyway.
+            if let Some(victim) = view
+                .instances
+                .iter()
+                .filter(|i| i.lifecycle.is_active() && i.role == Role::Unified)
+                .map(|i| i.id)
+                .max()
+            {
+                self.ticks_since_action = 0;
+                return vec![ClusterAction::ScaleDown { instance: victim }];
+            }
+        }
+        vec![]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in: failure-replay
+// ---------------------------------------------------------------------------
+
+/// Scripted fault injection from `cluster.failures`: each entry fails one
+/// instance at an exact simulated time and optionally recovers it later.
+/// Failures are all emitted on the first tick — which the driver fires at
+/// t=0 — carrying their exact `at` times; the coordinator schedules them
+/// as events, so every failure lands nanosecond-exact regardless of the
+/// tick period. Recoveries are emitted on the first tick at or after
+/// their time (tick-quantized: recovery precision, unlike failure
+/// precision, is bounded by `cluster.tick_ms`).
+#[derive(Debug)]
+pub struct FailureReplay {
+    /// (instance, fail_at, recover_at)
+    script: Vec<(usize, Nanos, Option<Nanos>)>,
+    fail_emitted: Vec<bool>,
+    recover_emitted: Vec<bool>,
+}
+
+impl FailureReplay {
+    pub fn from_config(cfg: &ClusterConfig) -> FailureReplay {
+        let script: Vec<(usize, Nanos, Option<Nanos>)> = cfg
+            .failures
+            .iter()
+            .map(|f| {
+                (
+                    f.instance,
+                    f.at_ms * MILLI,
+                    f.recover_ms.map(|r| r * MILLI),
+                )
+            })
+            .collect();
+        let n = script.len();
+        FailureReplay {
+            script,
+            fail_emitted: vec![false; n],
+            recover_emitted: vec![false; n],
+        }
+    }
+}
+
+impl ClusterController for FailureReplay {
+    fn name(&self) -> &str {
+        "failure-replay"
+    }
+
+    fn on_tick(&mut self, now: Nanos, _view: &ClusterView) -> Vec<ClusterAction> {
+        let mut actions = vec![];
+        for (i, &(instance, at, recover)) in self.script.iter().enumerate() {
+            if !self.fail_emitted[i] {
+                self.fail_emitted[i] = true;
+                actions.push(ClusterAction::Fail { instance, at });
+            }
+            if let Some(r) = recover {
+                if !self.recover_emitted[i] && now >= r {
+                    self.recover_emitted[i] = true;
+                    actions.push(ClusterAction::Recover { instance });
+                }
+            }
+        }
+        actions
+    }
+
+    fn has_pending(&self, _now: Nanos) -> bool {
+        self.fail_emitted.iter().any(|e| !e)
+            || self
+                .script
+                .iter()
+                .zip(&self.recover_emitted)
+                .any(|((_, _, r), emitted)| r.is_some() && !emitted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FailureSpec;
+
+    fn snap(id: usize, lifecycle: Lifecycle, waiting: usize) -> InstanceSnapshot {
+        InstanceSnapshot {
+            id,
+            name: format!("inst{id}"),
+            hardware: "rtx3090".into(),
+            role: Role::Unified,
+            lifecycle,
+            waiting,
+            running: 0,
+            busy: false,
+            kv_utilization: 0.0,
+            max_batch_seqs: 64,
+            cache: None,
+        }
+    }
+
+    fn view(instances: Vec<InstanceSnapshot>) -> ClusterView {
+        ClusterView {
+            now: 0,
+            instances,
+            in_flight: 0,
+            finished: 0,
+            arrivals: 0,
+            slo_attainment: 1.0,
+        }
+    }
+
+    #[test]
+    fn static_controller_never_ticks_or_acts() {
+        let mut c = StaticController;
+        assert_eq!(c.name(), "static");
+        assert!(!c.wants_ticks());
+        assert!(!c.has_pending(0));
+        assert!(c
+            .on_tick(0, &view(vec![snap(0, Lifecycle::Active, 100)]))
+            .is_empty());
+    }
+
+    #[test]
+    fn queue_threshold_scales_up_then_down() {
+        let cfg = ClusterConfig::default();
+        let mut c = QueueThreshold::from_config(&cfg);
+        // pressure above the up threshold -> scale up (after warm start)
+        let hot = view(vec![snap(0, Lifecycle::Active, 20)]);
+        let a = c.on_tick(0, &hot);
+        assert_eq!(
+            a,
+            vec![ClusterAction::ScaleUp {
+                hardware: None,
+                role: Role::Unified
+            }]
+        );
+        // cooldown: immediate next tick does nothing even under pressure
+        assert!(c.on_tick(1, &hot).is_empty());
+        assert!(c.on_tick(2, &hot).is_empty());
+        // while the new instance warms up, an idle queue does NOT drain
+        let warming = view(vec![
+            snap(0, Lifecycle::Active, 0),
+            snap(1, Lifecycle::Starting { until: 99 }, 0),
+        ]);
+        assert!(c.on_tick(3, &warming).is_empty());
+        // once active and idle, the highest-id instance drains first
+        let idle = view(vec![
+            snap(0, Lifecycle::Active, 0),
+            snap(1, Lifecycle::Active, 0),
+        ]);
+        let a = c.on_tick(4, &idle);
+        assert_eq!(a, vec![ClusterAction::ScaleDown { instance: 1 }]);
+        // fleet never drains below min_instances
+        let single = view(vec![snap(0, Lifecycle::Active, 0)]);
+        assert!(c.on_tick(10, &single).is_empty());
+        assert!(c.on_tick(11, &single).is_empty());
+        assert!(c.on_tick(12, &single).is_empty());
+    }
+
+    #[test]
+    fn queue_threshold_never_drains_pd_role_instances() {
+        let mut c = QueueThreshold::from_config(&ClusterConfig::default());
+        // An idle P/D fleet: both instances above min_instances, but
+        // neither is Unified — the autoscaler must not touch them (a
+        // drained Decode instance would strand every future handoff).
+        let mut prefill = snap(0, Lifecycle::Active, 0);
+        prefill.role = Role::Prefill;
+        let mut decode = snap(1, Lifecycle::Active, 0);
+        decode.role = Role::Decode;
+        let pd = view(vec![prefill, decode]);
+        for t in 0..5 {
+            assert!(c.on_tick(t, &pd).is_empty(), "tick {t} acted on P/D");
+        }
+        // With a Unified instance present, only that one is the victim —
+        // never the higher-id Decode instance.
+        let mut decode = snap(2, Lifecycle::Active, 0);
+        decode.role = Role::Decode;
+        let mixed = view(vec![
+            snap(0, Lifecycle::Active, 0),
+            snap(1, Lifecycle::Active, 0),
+            decode,
+        ]);
+        let a = c.on_tick(10, &mixed);
+        assert_eq!(a, vec![ClusterAction::ScaleDown { instance: 1 }]);
+    }
+
+    #[test]
+    fn queue_threshold_respects_max_instances() {
+        let cfg = ClusterConfig {
+            max_instances: 2,
+            ..Default::default()
+        };
+        let mut c = QueueThreshold::from_config(&cfg);
+        let hot = view(vec![
+            snap(0, Lifecycle::Active, 50),
+            snap(1, Lifecycle::Active, 50),
+        ]);
+        assert!(c.on_tick(0, &hot).is_empty(), "at max: no further scale-up");
+        assert!(!c.has_pending(0));
+    }
+
+    #[test]
+    fn failure_replay_emits_script_exactly_once() {
+        let cfg = ClusterConfig {
+            failures: vec![
+                FailureSpec {
+                    instance: 0,
+                    at_ms: 5,
+                    recover_ms: Some(20),
+                },
+                FailureSpec {
+                    instance: 1,
+                    at_ms: 10,
+                    recover_ms: None,
+                },
+            ],
+            ..Default::default()
+        };
+        let mut c = FailureReplay::from_config(&cfg);
+        assert!(c.has_pending(0));
+        let v = view(vec![snap(0, Lifecycle::Active, 0)]);
+        // first tick: both failures emitted with exact times; no recovery yet
+        let a = c.on_tick(0, &v);
+        assert_eq!(
+            a,
+            vec![
+                ClusterAction::Fail {
+                    instance: 0,
+                    at: 5 * MILLI
+                },
+                ClusterAction::Fail {
+                    instance: 1,
+                    at: 10 * MILLI
+                },
+            ]
+        );
+        // recovery pending keeps the tick train alive
+        assert!(c.has_pending(6 * MILLI));
+        assert!(c.on_tick(10 * MILLI, &v).is_empty());
+        // at/after the recover time, exactly one Recover fires
+        let a = c.on_tick(20 * MILLI, &v);
+        assert_eq!(a, vec![ClusterAction::Recover { instance: 0 }]);
+        assert!(!c.has_pending(21 * MILLI));
+        assert!(c.on_tick(30 * MILLI, &v).is_empty());
+    }
+
+    #[test]
+    fn lifecycle_predicates() {
+        assert!(Lifecycle::Active.is_active());
+        assert!(Lifecycle::Active.can_run());
+        assert!(Lifecycle::Draining.can_run());
+        assert!(!Lifecycle::Draining.is_active());
+        assert!(!Lifecycle::Starting { until: 5 }.can_run());
+        assert!(Lifecycle::Stopped.is_stopped());
+        assert_eq!(Lifecycle::Starting { until: 5 }.as_str(), "starting");
+        assert_eq!(Lifecycle::Stopped.as_str(), "stopped");
+    }
+
+    #[test]
+    fn view_aggregates() {
+        let v = view(vec![
+            snap(0, Lifecycle::Active, 3),
+            snap(1, Lifecycle::Starting { until: 9 }, 2),
+            snap(2, Lifecycle::Draining, 1),
+            snap(3, Lifecycle::Stopped, 7),
+        ]);
+        assert_eq!(v.active(), 1);
+        assert_eq!(v.live(), 2);
+        // stopped instances contribute no waiting
+        assert_eq!(v.total_waiting(), 6);
+    }
+
+    #[test]
+    fn timeline_entry_serializes() {
+        let e = TimelineEntry {
+            at: 42,
+            kind: "scale-up".into(),
+            instance: Some(3),
+            active: 2,
+            detail: "hw=rtx3090".into(),
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("at_ns").as_i64(), Some(42));
+        assert_eq!(j.get("kind").as_str(), Some("scale-up"));
+        assert_eq!(j.get("instance").as_i64(), Some(3));
+        let none = TimelineEntry {
+            instance: None,
+            ..e
+        };
+        assert!(none.to_json().get("instance").is_null());
+    }
+
+    #[test]
+    fn action_kinds_are_stable() {
+        assert_eq!(
+            ClusterAction::ScaleUp {
+                hardware: None,
+                role: Role::Unified
+            }
+            .kind(),
+            "scale-up"
+        );
+        assert_eq!(ClusterAction::Drain { instance: 0 }.kind(), "drain");
+        assert_eq!(
+            ClusterAction::Fail {
+                instance: 0,
+                at: 0
+            }
+            .kind(),
+            "fail"
+        );
+        assert_eq!(ClusterAction::Recover { instance: 0 }.kind(), "recover");
+        assert_eq!(
+            ClusterAction::SetBatchCap {
+                instance: 0,
+                max_seqs: 8
+            }
+            .kind(),
+            "set-batch-cap"
+        );
+    }
+}

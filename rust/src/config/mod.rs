@@ -215,6 +215,90 @@ pub enum CacheScope {
     Global,
 }
 
+/// One scripted fault for the `failure-replay` cluster controller.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureSpec {
+    /// Instance index (in construction order) to fail.
+    pub instance: usize,
+    /// Failure time, milliseconds of simulated time.
+    pub at_ms: u64,
+    /// Optional recovery time (ms); the instance warms up and rejoins.
+    pub recover_ms: Option<u64>,
+}
+
+/// Cluster-dynamics settings: which
+/// [`ClusterController`](crate::cluster::ClusterController) runs, its
+/// tick cadence, fleet bounds, and controller-specific parameters.
+///
+/// The controller is stored as a *name* resolved through the
+/// [`policy registry`](crate::policy), like every other plugin axis. The
+/// default, `"static"`, schedules no ticks and takes no actions — runs are
+/// byte-identical to a simulator without cluster dynamics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Controller *name* (built-ins: `static`, `queue-threshold`,
+    /// `failure-replay`).
+    pub controller: String,
+    /// Controller tick period, milliseconds of simulated time.
+    pub tick_ms: u64,
+    /// Warmup before a scaled-up/recovered instance turns `Active`, ms.
+    pub warmup_ms: u64,
+    /// Autoscaler floor (active instances).
+    pub min_instances: usize,
+    /// Autoscaler ceiling (active + starting instances).
+    pub max_instances: usize,
+    /// `queue-threshold`: scale up above this average wait-queue depth
+    /// per live instance.
+    pub scale_up_queue: f64,
+    /// `queue-threshold`: scale down below this average depth.
+    pub scale_down_queue: f64,
+    /// `failure-replay`: the fault script.
+    pub failures: Vec<FailureSpec>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            controller: "static".to_string(),
+            tick_ms: 200,
+            warmup_ms: 500,
+            min_instances: 1,
+            max_instances: 8,
+            scale_up_queue: 8.0,
+            scale_down_queue: 1.0,
+            failures: vec![],
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.tick_ms == 0 {
+            anyhow::bail!("cluster.tick_ms must be > 0");
+        }
+        if self.min_instances == 0 {
+            anyhow::bail!("cluster.min_instances must be >= 1");
+        }
+        if self.max_instances < self.min_instances {
+            anyhow::bail!(
+                "cluster.max_instances ({}) must be >= min_instances ({})",
+                self.max_instances,
+                self.min_instances
+            );
+        }
+        if !(self.scale_up_queue > self.scale_down_queue && self.scale_down_queue >= 0.0)
+        {
+            anyhow::bail!(
+                "cluster thresholds must satisfy scale_up_queue ({}) > \
+                 scale_down_queue ({}) >= 0",
+                self.scale_up_queue,
+                self.scale_down_queue
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Prefix-cache settings.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PrefixCacheConfig {
@@ -463,6 +547,8 @@ pub struct SimConfig {
     /// Interconnect between instances (router fabric + P/D transfers).
     pub inter_instance_bw: f64,
     pub inter_instance_latency_ns: u64,
+    /// Cluster-dynamics settings (controller name, tick, fleet bounds).
+    pub cluster: ClusterConfig,
 }
 
 impl SimConfig {
@@ -485,6 +571,9 @@ impl SimConfig {
         if self.block_size == 0 {
             anyhow::bail!("config '{}': block_size must be > 0", self.name);
         }
+        self.cluster
+            .validate()
+            .map_err(|e| anyhow::anyhow!("config '{}': {e}", self.name))?;
         self.workload
             .validate()
             .map_err(|e| anyhow::anyhow!("config '{}': {e}", self.name))?;
@@ -571,6 +660,52 @@ impl SimConfig {
             (
                 "inter_instance_latency_ns",
                 Value::int(self.inter_instance_latency_ns as i64),
+            ),
+            (
+                "cluster",
+                Value::obj(vec![
+                    ("controller", Value::str(self.cluster.controller.clone())),
+                    ("tick_ms", Value::int(self.cluster.tick_ms as i64)),
+                    ("warmup_ms", Value::int(self.cluster.warmup_ms as i64)),
+                    (
+                        "min_instances",
+                        Value::int(self.cluster.min_instances as i64),
+                    ),
+                    (
+                        "max_instances",
+                        Value::int(self.cluster.max_instances as i64),
+                    ),
+                    (
+                        "scale_up_queue",
+                        Value::float(self.cluster.scale_up_queue),
+                    ),
+                    (
+                        "scale_down_queue",
+                        Value::float(self.cluster.scale_down_queue),
+                    ),
+                    (
+                        "failures",
+                        Value::arr(
+                            self.cluster
+                                .failures
+                                .iter()
+                                .map(|f| {
+                                    let mut fields = vec![
+                                        ("instance", Value::int(f.instance as i64)),
+                                        ("at_ms", Value::int(f.at_ms as i64)),
+                                    ];
+                                    if let Some(r) = f.recover_ms {
+                                        fields.push((
+                                            "recover_ms",
+                                            Value::int(r as i64),
+                                        ));
+                                    }
+                                    Value::obj(fields)
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
             ),
             (
                 "perf",
@@ -683,6 +818,48 @@ impl SimConfig {
                 b => anyhow::bail!("unknown perf backend '{b}'"),
             }
         };
+
+        // Cluster block: absent in pre-driver configs -> all defaults
+        // (static controller, frozen fleet).
+        let mut cluster = ClusterConfig::default();
+        {
+            let c = v.get("cluster");
+            if let Some(s) = c.get("controller").as_str() {
+                cluster.controller = s.to_string();
+            }
+            if let Some(x) = c.get("tick_ms").as_u64() {
+                cluster.tick_ms = x;
+            }
+            if let Some(x) = c.get("warmup_ms").as_u64() {
+                cluster.warmup_ms = x;
+            }
+            if let Some(x) = c.get("min_instances").as_u64() {
+                cluster.min_instances = x as usize;
+            }
+            if let Some(x) = c.get("max_instances").as_u64() {
+                cluster.max_instances = x as usize;
+            }
+            if let Some(x) = c.get("scale_up_queue").as_f64() {
+                cluster.scale_up_queue = x;
+            }
+            if let Some(x) = c.get("scale_down_queue").as_f64() {
+                cluster.scale_down_queue = x;
+            }
+            for fv in c.get("failures").as_arr().unwrap_or(&[]) {
+                cluster.failures.push(FailureSpec {
+                    instance: fv
+                        .get("instance")
+                        .as_u64()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("cluster failure missing 'instance'")
+                        })? as usize,
+                    at_ms: fv.get("at_ms").as_u64().ok_or_else(|| {
+                        anyhow::anyhow!("cluster failure missing 'at_ms'")
+                    })?,
+                    recover_ms: fv.get("recover_ms").as_u64(),
+                });
+            }
+        }
 
         let w = v.get("workload");
         let traffic = if !w.get("traffic").is_null() {
@@ -848,6 +1025,7 @@ impl SimConfig {
             block_size,
             inter_instance_bw,
             inter_instance_latency_ns,
+            cluster,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1148,6 +1326,58 @@ mod tests {
             .unwrap_err()
             .to_string()
             .contains("layered"));
+    }
+
+    #[test]
+    fn cluster_block_roundtrips_and_defaults() {
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.controller = "queue-threshold".to_string();
+        cfg.cluster.tick_ms = 50;
+        cfg.cluster.max_instances = 4;
+        cfg.cluster.failures = vec![
+            FailureSpec {
+                instance: 0,
+                at_ms: 100,
+                recover_ms: Some(400),
+            },
+            FailureSpec {
+                instance: 1,
+                at_ms: 250,
+                recover_ms: None,
+            },
+        ];
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // a config written before the cluster block existed parses to the
+        // static defaults
+        let mut v = cfg.to_json();
+        if let Value::Obj(top) = &mut v {
+            top.remove("cluster");
+        }
+        let back = SimConfig::from_json(&v).unwrap();
+        assert_eq!(back.cluster, ClusterConfig::default());
+        assert_eq!(back.cluster.controller, "static");
+    }
+
+    #[test]
+    fn degenerate_cluster_configs_rejected() {
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.tick_ms = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.min_instances = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.min_instances = 4;
+        cfg.cluster.max_instances = 2;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.scale_up_queue = 1.0;
+        cfg.cluster.scale_down_queue = 2.0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //! with tiny (executable) or paper-scale (analytical) models.
 
 use super::{
-    CacheScope, InstanceConfig, PerfBackend, PrefixCacheConfig, Role, SimConfig,
+    CacheScope, ClusterConfig, InstanceConfig, PerfBackend, PrefixCacheConfig, Role,
+    SimConfig,
 };
 use crate::workload::{TenantSpec, Traffic, WorkloadSpec};
 
@@ -26,6 +27,7 @@ fn base(name: &str, instances: Vec<InstanceConfig>) -> SimConfig {
         block_size: 16,
         inter_instance_bw: 32e9, // PCIe 4.0 x16 (paper §III-A)
         inter_instance_latency_ns: 5_000,
+        cluster: ClusterConfig::default(),
     }
 }
 
@@ -116,6 +118,34 @@ pub fn multi_tenant_bursty(mut cfg: SimConfig, tenants: usize, rate: f64) -> Sim
     for i in &mut cfg.instances {
         i.sched = "slo".to_string();
     }
+    cfg
+}
+
+/// The bursty autoscale scenario used by the controller tests,
+/// `examples/autoscale.rs`, and the README walkthrough: a multi-tenant
+/// MMPP workload whose bursts (50 ms at 2000 req/s) far exceed one
+/// instance's service rate, with 300 ms quiet phases long enough to drain,
+/// driven by the `queue-threshold` controller on a tight tick.
+pub fn autoscale_bursty() -> SimConfig {
+    let mut cfg =
+        multi_tenant_bursty(single_dense("tiny-dense", "rtx3090"), 2, 60.0);
+    cfg.name = "autoscale-bursty".to_string();
+    cfg.workload.traffic = Traffic::mmpp(2000.0, 0.0, 0.05, 0.3);
+    cfg.workload.num_requests = 200;
+    cfg.workload.lengths = crate::workload::LengthDist::short();
+    // A small batch cap so backlog shows up as *waiting* requests — the
+    // signal the queue-threshold controller watches.
+    for i in &mut cfg.instances {
+        i.max_batch_seqs = 4;
+    }
+    cfg.cluster.controller = "queue-threshold".to_string();
+    cfg.cluster.tick_ms = 10;
+    cfg.cluster.warmup_ms = 30;
+    cfg.cluster.scale_up_queue = 3.0;
+    cfg.cluster.scale_down_queue = 1.0;
+    // Low enough that the first burst saturates the ceiling — the
+    // fleet-size timeline rises monotonically to max, then drains.
+    cfg.cluster.max_instances = 3;
     cfg
 }
 

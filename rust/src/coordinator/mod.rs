@@ -19,7 +19,13 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::config::{CacheScope, KvTransferPolicy, PerfBackend, SimConfig};
+use crate::cluster::{
+    ClusterAction, ClusterController, ClusterView, InstanceSnapshot, Lifecycle,
+    TimelineEntry,
+};
+use crate::config::{
+    CacheScope, InstanceConfig, KvTransferPolicy, PerfBackend, Role, SimConfig,
+};
 use crate::instance::{ServingInstance, StepOutcome};
 use crate::memory::PrefixCache;
 use crate::metrics::{MetricsCollector, Report};
@@ -32,7 +38,7 @@ use crate::perf::trace::TraceDb;
 use crate::perf::PerfModel;
 use crate::policy::{EvictionPolicy, PolicyRegistry, RoutePolicy, SchedulePolicy};
 use crate::router::{GlobalRouter, InstanceView};
-use crate::sim::{Event, EventQueue, Nanos};
+use crate::sim::{Event, EventQueue, Nanos, MILLI};
 use crate::workload::{Request, TrafficSource};
 
 /// Build the per-instance performance model for `backend`.
@@ -100,6 +106,8 @@ pub struct Simulation {
     /// Prefix caches; `cache_of[i]` maps instance i to its cache index.
     caches: Vec<PrefixCache>,
     cache_of: Vec<Option<usize>>,
+    /// Index of the shared global-scope cache, if one was built.
+    global_cache: Option<usize>,
     router: GlobalRouter,
     inter_fabric: Fabric,
     queue: EventQueue,
@@ -111,20 +119,58 @@ pub struct Simulation {
     /// The pulled-but-not-yet-arrived head of the stream.
     next_arrival: Option<Request>,
     busy: Vec<bool>,
-    pending: Vec<Option<StepOutcome>>,
+    /// In-flight step per instance: (completion time, outcome). The time
+    /// lets a `StepComplete` from *before* a failure be told apart from
+    /// the completion of a step started after recovery.
+    pending: Vec<Option<(Nanos, StepOutcome)>>,
     /// In-flight P/D hand-offs: req id -> (request, destination instance).
     kv_in_flight: HashMap<u64, (Request, usize)>,
+    /// Requests displaced by a drain/failure with no dispatchable target
+    /// yet; retried (in id order) whenever an instance turns `Active`.
+    parked: Vec<Request>,
     pub steps_total: u64,
+    // ---- cluster-dynamics plumbing (DESIGN.md §9) ----
+    /// Registry snapshot kept for resolving policies of scaled-up
+    /// instances exactly like the initial fleet's.
+    registry: PolicyRegistry,
+    perf_factory: PerfFactoryFn,
+    sched_override: Option<SchedFactoryFn>,
+    evict_override: Option<EvictFactoryFn>,
+    controller: Box<dyn ClusterController>,
+    /// Controller tick period (ns); ticks are only scheduled when the
+    /// controller `wants_ticks()`.
+    tick: Nanos,
+    /// Warmup before a scaled-up/recovered instance turns `Active` (ns).
+    warmup: Nanos,
+    timeline: Vec<TimelineEntry>,
+    /// Fleet-size sample entries recorded so far (bounded).
+    samples: u64,
+    peak_active: usize,
+    /// Count of instances added by `ScaleUp` (for deterministic naming).
+    scaled: usize,
+    started: bool,
 }
 
+/// Cap on `"sample"` timeline entries so hour-long simulations cannot grow
+/// the report without bound; action and transition entries are never
+/// dropped.
+const SAMPLE_CAP: u64 = 8192;
+
 /// Boxed perf-model factory (see [`SimulationBuilder::with_perf_factory`]).
+/// `Send` because the simulation keeps it for pricing scaled-up instances
+/// and must stay thread-movable for the sweep engine.
 pub type PerfFactoryFn = Box<
     dyn Fn(
-        &PerfBackend,
-        &ModelSpec,
-        &crate::perf::HardwareSpec,
-    ) -> anyhow::Result<Arc<dyn PerfModel>>,
+            &PerfBackend,
+            &ModelSpec,
+            &crate::perf::HardwareSpec,
+        ) -> anyhow::Result<Arc<dyn PerfModel>>
+        + Send,
 >;
+/// Boxed schedule-policy factory kept for scaled-up instances.
+pub type SchedFactoryFn = Box<dyn Fn() -> Box<dyn SchedulePolicy> + Send>;
+/// Boxed eviction-policy factory kept for scaled-up instances.
+pub type EvictFactoryFn = Box<dyn Fn() -> Box<dyn EvictionPolicy> + Send>;
 
 /// Staged construction of a [`Simulation`] with injectable policies.
 ///
@@ -152,10 +198,11 @@ pub struct SimulationBuilder {
     cfg: SimConfig,
     registry: Option<PolicyRegistry>,
     route: Option<Box<dyn RoutePolicy>>,
-    sched: Option<Box<dyn Fn() -> Box<dyn SchedulePolicy>>>,
-    evict: Option<Box<dyn Fn() -> Box<dyn EvictionPolicy>>>,
+    sched: Option<SchedFactoryFn>,
+    evict: Option<EvictFactoryFn>,
     perf: Option<PerfFactoryFn>,
     traffic: Option<Box<dyn TrafficSource>>,
+    controller: Option<Box<dyn ClusterController>>,
 }
 
 impl SimulationBuilder {
@@ -173,10 +220,11 @@ impl SimulationBuilder {
     }
 
     /// Use `factory()` for every instance's wait-queue ordering, ignoring
-    /// the config's sched names.
+    /// the config's sched names. `Send` because the factory is kept for
+    /// instances a cluster controller scales up mid-run.
     pub fn with_sched_policy(
         mut self,
-        factory: impl Fn() -> Box<dyn SchedulePolicy> + 'static,
+        factory: impl Fn() -> Box<dyn SchedulePolicy> + Send + 'static,
     ) -> Self {
         self.sched = Some(Box::new(factory));
         self
@@ -186,9 +234,17 @@ impl SimulationBuilder {
     /// config's evict names.
     pub fn with_evict_policy(
         mut self,
-        factory: impl Fn() -> Box<dyn EvictionPolicy> + 'static,
+        factory: impl Fn() -> Box<dyn EvictionPolicy> + Send + 'static,
     ) -> Self {
         self.evict = Some(Box::new(factory));
+        self
+    }
+
+    /// Use `controller` for cluster dynamics, ignoring the config's
+    /// `cluster.controller` name (the trait-object analogue of
+    /// [`crate::policy::register_cluster_controller`]).
+    pub fn with_controller(mut self, controller: Box<dyn ClusterController>) -> Self {
+        self.controller = Some(controller);
         self
     }
 
@@ -209,6 +265,7 @@ impl SimulationBuilder {
                 &ModelSpec,
                 &crate::perf::HardwareSpec,
             ) -> anyhow::Result<Arc<dyn PerfModel>>
+            + Send
             + 'static,
     ) -> Self {
         self.perf = Some(Box::new(factory));
@@ -226,6 +283,7 @@ impl SimulationBuilder {
             evict,
             perf,
             traffic,
+            controller,
         } = self;
         cfg.validate()?;
         let registry = registry.unwrap_or_else(crate::policy::snapshot);
@@ -237,6 +295,12 @@ impl SimulationBuilder {
             Some(s) => s,
             None => registry.make_traffic(&cfg.workload)?,
         };
+        // Same for the cluster controller (the fourth axis): an unknown
+        // `cluster.controller` name fails the build with the candidates.
+        let controller = match controller {
+            Some(c) => c,
+            None => registry.make_controller(&cfg.cluster)?,
+        };
 
         let mut instances = vec![];
         let mut caches: Vec<PrefixCache> = vec![];
@@ -244,60 +308,19 @@ impl SimulationBuilder {
         let mut global_cache: Option<usize> = None;
 
         for (i, icfg) in cfg.instances.iter().enumerate() {
-            let model = icfg.model_spec()?;
-            let hw = icfg.hardware_spec()?;
-            let perf = perf_factory(&cfg.perf, &model, &hw)?;
-            let sched_policy = match &sched {
-                Some(f) => f(),
-                None => registry.make_sched(&icfg.sched)?,
-            };
-            let inst = ServingInstance::new(
+            let (inst, slot) = build_instance(
+                icfg,
                 i,
-                icfg.clone(),
-                perf,
+                &cfg.perf,
                 cfg.block_size,
                 cfg.seed,
-                sched_policy,
+                &registry,
+                &perf_factory,
+                sched.as_ref(),
+                evict.as_ref(),
+                &mut caches,
+                &mut global_cache,
             )?;
-            // prefix cache wiring
-            let slot = match &icfg.prefix_cache {
-                None => None,
-                Some(pc) => {
-                    let kv_capacity_tokens =
-                        (inst.blocks.total_blocks() as u64) * cfg.block_size;
-                    let device_tokens =
-                        ((kv_capacity_tokens as f64) * pc.device_fraction).round()
-                            as u64;
-                    let needs_new = match pc.scope {
-                        CacheScope::PerInstance => true,
-                        CacheScope::Global => global_cache.is_none(),
-                    };
-                    if needs_new {
-                        let evict_policy = match &evict {
-                            Some(f) => f(),
-                            None => registry.make_evict(&pc.policy)?,
-                        };
-                        caches.push(PrefixCache::with_policy(
-                            device_tokens.max(64),
-                            pc.host_tokens,
-                            evict_policy,
-                        ));
-                        if pc.scope == CacheScope::Global {
-                            global_cache = Some(caches.len() - 1);
-                        }
-                        Some(caches.len() - 1)
-                    } else {
-                        // Shared global cache already built by an earlier
-                        // instance: that instance's policy wins, but this
-                        // name must still resolve so typos fail the build
-                        // with the candidate list rather than pass silently.
-                        if evict.is_none() {
-                            registry.check_evict(&pc.policy)?;
-                        }
-                        global_cache
-                    }
-                }
-            };
             cache_of.push(slot);
             instances.push(inst);
         }
@@ -310,6 +333,8 @@ impl SimulationBuilder {
         let n = instances.len();
         let inter_topo =
             Topology::switched(n, cfg.inter_instance_bw, cfg.inter_instance_latency_ns);
+        let tick = cfg.cluster.tick_ms * MILLI;
+        let warmup = cfg.cluster.warmup_ms * MILLI;
         Ok(Simulation {
             router: GlobalRouter::new(route_policy),
             inter_fabric: Fabric::new(inter_topo),
@@ -320,13 +345,94 @@ impl SimulationBuilder {
             busy: vec![false; n],
             pending: (0..n).map(|_| None).collect(),
             kv_in_flight: HashMap::new(),
+            parked: vec![],
             steps_total: 0,
+            registry,
+            perf_factory,
+            sched_override: sched,
+            evict_override: evict,
+            controller,
+            tick,
+            warmup,
+            timeline: vec![],
+            samples: 0,
+            peak_active: n,
+            scaled: 0,
+            started: false,
             cfg,
             instances,
             caches,
             cache_of,
+            global_cache,
         })
     }
+}
+
+/// Build one serving instance and wire its prefix cache, resolving the
+/// scheduling/eviction policies exactly like the initial-fleet path.
+/// Shared by [`SimulationBuilder::build`] and `ScaleUp` (so scaled-up
+/// instances behave byte-for-byte like configured ones).
+#[allow(clippy::too_many_arguments)]
+fn build_instance(
+    icfg: &InstanceConfig,
+    id: usize,
+    perf_backend: &PerfBackend,
+    block_size: u64,
+    seed: u64,
+    registry: &PolicyRegistry,
+    perf_factory: &PerfFactoryFn,
+    sched_override: Option<&SchedFactoryFn>,
+    evict_override: Option<&EvictFactoryFn>,
+    caches: &mut Vec<PrefixCache>,
+    global_cache: &mut Option<usize>,
+) -> anyhow::Result<(ServingInstance, Option<usize>)> {
+    let model = icfg.model_spec()?;
+    let hw = icfg.hardware_spec()?;
+    let perf = perf_factory(perf_backend, &model, &hw)?;
+    let sched_policy = match sched_override {
+        Some(f) => f(),
+        None => registry.make_sched(&icfg.sched)?,
+    };
+    let inst =
+        ServingInstance::new(id, icfg.clone(), perf, block_size, seed, sched_policy)?;
+    // prefix cache wiring
+    let slot = match &icfg.prefix_cache {
+        None => None,
+        Some(pc) => {
+            let kv_capacity_tokens = inst.blocks.total_blocks() as u64 * block_size;
+            let device_tokens =
+                ((kv_capacity_tokens as f64) * pc.device_fraction).round() as u64;
+            let needs_new = match pc.scope {
+                CacheScope::PerInstance => true,
+                CacheScope::Global => global_cache.is_none(),
+            };
+            if needs_new {
+                let evict_policy = match evict_override {
+                    Some(f) => f(),
+                    None => registry.make_evict(&pc.policy)?,
+                };
+                caches.push(PrefixCache::with_policy(
+                    device_tokens.max(64),
+                    pc.host_tokens,
+                    evict_policy,
+                ));
+                if pc.scope == CacheScope::Global {
+                    *global_cache = Some(caches.len() - 1);
+                }
+                Some(caches.len() - 1)
+            } else {
+                // Shared global cache already built by an earlier
+                // instance: that instance's policy wins, but this
+                // name must still resolve so typos fail the build
+                // with the candidate list rather than pass silently.
+                if evict_override.is_none() {
+                    registry.check_evict(&pc.policy)?;
+                }
+                *global_cache
+            }
+        }
+    };
+    Ok((inst, slot))
 }
 
 impl Simulation {
@@ -347,10 +453,13 @@ impl Simulation {
             evict: None,
             perf: None,
             traffic: None,
+            controller: None,
         }
     }
 
     /// Router-visible views, computing the prefix match for `req` if given.
+    /// Only `Active` instances are marked compatible — `Starting`,
+    /// `Draining`, and `Stopped` instances never receive new requests.
     fn views(&self, req: Option<&Request>) -> Vec<InstanceView> {
         let toks = req.map(|r| r.token_ids());
         self.instances
@@ -367,14 +476,19 @@ impl Simulation {
                     outstanding: inst.outstanding(),
                     kv_utilization: inst.kv_utilization(),
                     prefix_match,
-                    compatible: true,
+                    compatible: inst.lifecycle().is_active(),
                 }
             })
             .collect()
     }
 
-    /// Start a step on instance `i` if it is idle and has work.
+    /// Start a step on instance `i` if it is idle and has work. `Draining`
+    /// instances keep stepping (they must finish their running batch);
+    /// `Starting`/`Stopped` instances never step.
     fn kick(&mut self, i: usize, now: Nanos) {
+        if !self.instances[i].lifecycle().can_run() {
+            return;
+        }
         if self.busy[i] || !self.instances[i].has_work() {
             return;
         }
@@ -387,14 +501,15 @@ impl Simulation {
         }
         self.steps_total += 1;
         self.busy[i] = true;
+        let due = now.saturating_add(out.duration);
         self.queue
             .schedule_in(out.duration, Event::StepComplete { instance: i });
-        self.pending[i] = Some(out);
+        self.pending[i] = Some((due, out));
     }
 
     /// Apply a completed step's observable effects at time `now`.
     fn complete_step(&mut self, i: usize, now: Nanos) {
-        let out = self.pending[i]
+        let (_, out) = self.pending[i]
             .take()
             .expect("step completion without outcome");
         self.busy[i] = false;
@@ -441,6 +556,7 @@ impl Simulation {
             );
         }
         self.kick(i, now);
+        self.maybe_finish_drain(i, now);
     }
 
     /// Pull the next request off the traffic source and schedule its
@@ -455,54 +571,437 @@ impl Simulation {
         }
     }
 
-    /// Run to completion and produce the report.
+    /// Run to completion and produce the report — a thin wrapper over the
+    /// stepped [`SimDriver`] (`driver().finish()`).
     pub fn run(&mut self) -> Report {
-        self.prime_next_arrival();
+        self.driver().finish()
+    }
 
-        while let Some((now, event)) = self.queue.pop() {
-            match event {
-                Event::RequestArrival { request_id } => {
-                    let req = self
-                        .next_arrival
-                        .take()
-                        .expect("arrival event without a pulled request");
-                    debug_assert_eq!(req.id, request_id);
-                    self.metrics.on_arrival(&req, now);
-                    let views = self.views(Some(&req));
-                    match self.router.dispatch(&req, &views) {
-                        Some(i) => {
-                            self.metrics.on_dispatch(request_id, now, i);
-                            self.instances[i].enqueue(req, now);
-                            self.kick(i, now);
-                        }
-                        None => {
-                            log::error!("no instance can serve request {request_id}")
-                        }
+    /// Open the stepped execution API over this simulation. `step()`,
+    /// `run_until(t)`, and `finish()` process the same event stream `run`
+    /// would, so stepped and one-shot execution are byte-identical.
+    pub fn driver(&mut self) -> SimDriver<'_> {
+        SimDriver { sim: self }
+    }
+
+    /// One-time start: prime the request stream and, for controllers that
+    /// want them, schedule the first tick.
+    fn ensure_started(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        self.peak_active = self.num_active_instances();
+        self.prime_next_arrival();
+        if self.controller.wants_ticks() && self.tick > 0 {
+            // First tick at t=0, then every `tick` ns: a controller that
+            // schedules future work from its first invocation (e.g.
+            // failure-replay emitting `Fail { at }`) can hit any `at > 0`
+            // nanosecond-exact, even one earlier than the tick period.
+            self.queue.schedule_at(0, Event::ControllerTick);
+        }
+    }
+
+    /// Dispatch one popped event. The only mutation entry point of the run
+    /// loop — `run`, `step`, and `run_until` all funnel through here.
+    fn handle_event(&mut self, now: Nanos, event: Event) {
+        match event {
+            Event::RequestArrival { request_id } => {
+                let req = self
+                    .next_arrival
+                    .take()
+                    .expect("arrival event without a pulled request");
+                debug_assert_eq!(req.id, request_id);
+                self.metrics.on_arrival(&req, now);
+                self.dispatch_request(req, now);
+                self.prime_next_arrival();
+            }
+            Event::StepComplete { instance } => {
+                // The completion time doubles as a step identity: a
+                // `StepComplete` whose time does not match the pending
+                // step is stale — its step was wiped by a failure.
+                if let Some((due, _)) = &self.pending[instance] {
+                    if *due == now {
+                        self.complete_step(instance, now);
                     }
-                    self.prime_next_arrival();
                 }
-                Event::StepComplete { instance } => {
-                    self.complete_step(instance, now);
-                }
-                Event::Wake { instance } => {
-                    self.kick(instance, now);
-                }
-                Event::KvTransferDone {
-                    request_id,
-                    dst_instance,
-                } => {
-                    let (req, dst) = self
-                        .kv_in_flight
-                        .remove(&request_id)
-                        .expect("unknown KV transfer");
-                    debug_assert_eq!(dst, dst_instance);
+            }
+            Event::Wake { instance } => {
+                self.kick(instance, now);
+            }
+            Event::KvTransferDone {
+                request_id,
+                dst_instance,
+            } => {
+                let (req, dst) = self
+                    .kv_in_flight
+                    .remove(&request_id)
+                    .expect("unknown KV transfer");
+                debug_assert_eq!(dst, dst_instance);
+                if self.instances[dst].lifecycle().is_active() {
                     self.instances[dst].enqueue_decoded(req, now);
                     self.kick(dst, now);
+                } else {
+                    // The decode target left the fleet while KV was in
+                    // flight: recompute elsewhere (the prefill-side first
+                    // token folds into the prompt, like a preemption).
+                    let mut r = req;
+                    r.prompt_tokens += 1;
+                    r.output_tokens = r.output_tokens.saturating_sub(1).max(1);
+                    self.dispatch_request(r, now);
                 }
-                Event::ExpertFetchDone { .. } | Event::MetricsTick => {}
+            }
+            Event::ControllerTick => self.on_controller_tick(now),
+            Event::InstanceReady { instance } => {
+                self.on_instance_ready(instance, now)
+            }
+            Event::InstanceFail { instance } => self.fail_instance(instance, now),
+            Event::ExpertFetchDone { .. } | Event::MetricsTick => {}
+        }
+    }
+
+    /// Route `req` to an `Active` prefill-capable instance, or park it when
+    /// capacity is on the way (an instance is warming up or the controller
+    /// has pending intent). Used for fresh arrivals and for requests
+    /// displaced by drains/failures alike.
+    fn dispatch_request(&mut self, req: Request, now: Nanos) {
+        let views = self.views(Some(&req));
+        match self.router.dispatch(&req, &views) {
+            Some(i) => {
+                self.metrics.on_dispatch(req.id, now, i);
+                self.instances[i].enqueue(req, now);
+                self.kick(i, now);
+            }
+            None => {
+                let capacity_coming = self.instances.iter().any(|x| {
+                    matches!(x.lifecycle(), Lifecycle::Starting { .. })
+                }) || self.controller.has_pending(now);
+                if capacity_coming {
+                    self.parked.push(req);
+                } else {
+                    log::error!("no instance can serve request {}", req.id);
+                }
             }
         }
+    }
 
+    /// Re-dispatch parked requests (ascending id) after capacity changes.
+    fn unpark(&mut self, now: Nanos) {
+        if self.parked.is_empty() {
+            return;
+        }
+        let mut parked = std::mem::take(&mut self.parked);
+        parked.sort_by_key(|r| r.id);
+        for req in parked {
+            self.dispatch_request(req, now); // may re-park
+        }
+    }
+
+    // ---- cluster-controller machinery (DESIGN.md §9) ---------------------
+
+    /// Build the read-only snapshot controllers (and driver callers) see.
+    pub fn cluster_view(&self, now: Nanos) -> ClusterView {
+        ClusterView {
+            now,
+            instances: self
+                .instances
+                .iter()
+                .enumerate()
+                .map(|(i, inst)| InstanceSnapshot {
+                    id: i,
+                    name: inst.cfg.name.clone(),
+                    hardware: inst.cfg.hardware.clone(),
+                    role: inst.cfg.role,
+                    lifecycle: inst.lifecycle(),
+                    waiting: inst.waiting(),
+                    running: inst.running_count(),
+                    busy: self.busy[i],
+                    kv_utilization: inst.kv_utilization(),
+                    max_batch_seqs: inst.cfg.max_batch_seqs,
+                    cache: self.cache_of[i].map(|c| self.caches[c].stats),
+                })
+                .collect(),
+            in_flight: self.metrics.num_in_flight(),
+            finished: self.metrics.num_finished(),
+            arrivals: self.metrics.num_arrivals(),
+            slo_attainment: self.metrics.slo_attainment_so_far(),
+        }
+    }
+
+    fn on_controller_tick(&mut self, now: Nanos) {
+        let view = self.cluster_view(now);
+        let waiting = view.total_waiting();
+        let actions = self.controller.on_tick(now, &view);
+        for action in actions {
+            self.apply_action(action, now);
+        }
+        // Sample *after* the actions: each entry records the fleet the
+        // next tick interval actually runs with.
+        if self.samples < SAMPLE_CAP {
+            self.samples += 1;
+            let active = self.num_active_instances();
+            self.timeline.push(TimelineEntry {
+                at: now,
+                kind: "sample".to_string(),
+                instance: None,
+                active,
+                detail: format!("waiting={waiting}"),
+            });
+        }
+        // Keep ticking only while something can still happen; otherwise
+        // the tick train would keep an otherwise-finished simulation alive
+        // forever. Idle-but-unstarted work always has a scheduled event
+        // (arrival, step completion, KV transfer, instance warmup), so
+        // dropping the tick never strands progress.
+        if self.tick_pending(now) {
+            self.queue.schedule_in(self.tick, Event::ControllerTick);
+        }
+    }
+
+    /// Whether another controller tick can still observe or cause change.
+    fn tick_pending(&self, now: Nanos) -> bool {
+        self.next_arrival.is_some()
+            || self.busy.iter().any(|b| *b)
+            || !self.kv_in_flight.is_empty()
+            || self.controller.has_pending(now)
+            || self
+                .instances
+                .iter()
+                .any(|x| matches!(x.lifecycle(), Lifecycle::Starting { .. }))
+    }
+
+    /// Apply one controller action. Actions referring to unknown or
+    /// wrong-state instances are logged and skipped — a controller bug
+    /// must not crash the simulation.
+    fn apply_action(&mut self, action: ClusterAction, now: Nanos) {
+        match action {
+            ClusterAction::ScaleUp { hardware, role } => {
+                self.scale_up(hardware, role, now)
+            }
+            ClusterAction::ScaleDown { instance } => {
+                self.drain_instance(instance, now, "scale-down")
+            }
+            ClusterAction::Drain { instance } => {
+                self.drain_instance(instance, now, "drain")
+            }
+            ClusterAction::Fail { instance, at } => {
+                if instance >= self.instances.len() {
+                    log::warn!("fail ignored: no instance {instance}");
+                } else if at <= now {
+                    self.fail_instance(instance, now);
+                } else {
+                    self.queue
+                        .schedule_at(at, Event::InstanceFail { instance });
+                }
+            }
+            ClusterAction::Recover { instance } => self.recover_instance(instance, now),
+            ClusterAction::SetBatchCap { instance, max_seqs } => {
+                if instance >= self.instances.len() {
+                    log::warn!("set-batch-cap ignored: no instance {instance}");
+                    return;
+                }
+                let cap = max_seqs.max(1);
+                self.instances[instance].cfg.max_batch_seqs = cap;
+                self.note_timeline(
+                    now,
+                    "set-batch-cap",
+                    Some(instance),
+                    format!("max_seqs={cap}"),
+                );
+                self.kick(instance, now);
+            }
+        }
+    }
+
+    /// Add an instance cloned from the first existing instance with the
+    /// requested role (hardware overridable); it warms up for
+    /// `cluster.warmup_ms`, then turns `Active` and drains the parking lot.
+    fn scale_up(&mut self, hardware: Option<String>, role: Role, now: Nanos) {
+        // Same capacity definition as ClusterConfig::max_instances and
+        // ClusterView::live — Active + Starting. Draining instances are
+        // leaving and must not block replacement capacity mid-burst.
+        let live = self
+            .instances
+            .iter()
+            .filter(|x| {
+                matches!(
+                    x.lifecycle(),
+                    Lifecycle::Active | Lifecycle::Starting { .. }
+                )
+            })
+            .count();
+        if live >= self.cfg.cluster.max_instances {
+            log::warn!(
+                "scale-up ignored: fleet already at max_instances ({})",
+                self.cfg.cluster.max_instances
+            );
+            return;
+        }
+        let mut icfg = self
+            .instances
+            .iter()
+            .find(|x| x.cfg.role == role)
+            .map(|x| x.cfg.clone())
+            .unwrap_or_else(|| {
+                let mut c = self.instances[0].cfg.clone();
+                c.role = role;
+                c
+            });
+        self.scaled += 1;
+        icfg.name = format!("scaled{}", self.scaled);
+        if let Some(h) = hardware {
+            icfg.hardware = h;
+        }
+        let idx = self.instances.len();
+        let built = build_instance(
+            &icfg,
+            idx,
+            &self.cfg.perf,
+            self.cfg.block_size,
+            self.cfg.seed,
+            &self.registry,
+            &self.perf_factory,
+            self.sched_override.as_ref(),
+            self.evict_override.as_ref(),
+            &mut self.caches,
+            &mut self.global_cache,
+        );
+        let (mut inst, slot) = match built {
+            Ok(x) => x,
+            Err(e) => {
+                log::error!("scale-up of '{}' failed: {e:#}", icfg.name);
+                return;
+            }
+        };
+        let until = now.saturating_add(self.warmup);
+        inst.set_lifecycle(Lifecycle::Starting { until });
+        let detail = format!("hw={} role={}", icfg.hardware, icfg.role.as_str());
+        self.instances.push(inst);
+        self.cache_of.push(slot);
+        self.busy.push(false);
+        self.pending.push(None);
+        // The inter-instance fabric is sized to the fleet; regrow it,
+        // carrying the byte counter over (per-link congestion state resets
+        // — scale-ups are rare, seconds-apart events).
+        let bytes = self.inter_fabric.bytes_moved;
+        self.inter_fabric = Fabric::new(Topology::switched(
+            self.instances.len(),
+            self.cfg.inter_instance_bw,
+            self.cfg.inter_instance_latency_ns,
+        ));
+        self.inter_fabric.bytes_moved = bytes;
+        self.queue
+            .schedule_at(until, Event::InstanceReady { instance: idx });
+        self.note_timeline(now, "scale-up", Some(idx), detail);
+    }
+
+    /// Graceful removal: re-route waiting requests now, let the running
+    /// batch finish, stop when empty.
+    fn drain_instance(&mut self, i: usize, now: Nanos, kind: &str) {
+        if i >= self.instances.len() {
+            log::warn!("{kind} ignored: no instance {i}");
+            return;
+        }
+        if !self.instances[i].lifecycle().is_active() {
+            log::warn!(
+                "{kind} ignored: instance {i} is {}",
+                self.instances[i].lifecycle().as_str()
+            );
+            return;
+        }
+        let displaced = self.instances[i].drain_waiting();
+        // Draining *before* re-dispatch so the router cannot pick i again.
+        self.instances[i].set_lifecycle(Lifecycle::Draining);
+        self.note_timeline(now, kind, Some(i), format!("rerouted={}", displaced.len()));
+        for req in displaced {
+            self.dispatch_request(req, now);
+        }
+        self.maybe_finish_drain(i, now);
+    }
+
+    /// Complete a drain once the running batch has fully finished.
+    fn maybe_finish_drain(&mut self, i: usize, now: Nanos) {
+        if self.instances[i].lifecycle() == Lifecycle::Draining
+            && !self.busy[i]
+            && !self.instances[i].has_work()
+        {
+            self.instances[i].set_lifecycle(Lifecycle::Stopped);
+            self.note_timeline(now, "drained", Some(i), String::new());
+        }
+    }
+
+    /// Hard failure: the in-flight step is wiped, every resident request
+    /// is lost and re-routed recompute-style, the instance stops.
+    fn fail_instance(&mut self, i: usize, now: Nanos) {
+        if self.instances[i].lifecycle().is_stopped() {
+            return; // double fail / fail after drain completed
+        }
+        self.busy[i] = false;
+        self.pending[i] = None; // any queued StepComplete is now stale
+        let displaced = self.instances[i].evacuate();
+        self.instances[i].set_lifecycle(Lifecycle::Stopped);
+        self.note_timeline(now, "fail", Some(i), format!("rerouted={}", displaced.len()));
+        for req in displaced {
+            self.dispatch_request(req, now);
+        }
+    }
+
+    /// Bring a `Stopped` instance back through warmup.
+    fn recover_instance(&mut self, i: usize, now: Nanos) {
+        if i >= self.instances.len() {
+            log::warn!("recover ignored: no instance {i}");
+            return;
+        }
+        if !self.instances[i].lifecycle().is_stopped() {
+            log::warn!(
+                "recover ignored: instance {i} is {}",
+                self.instances[i].lifecycle().as_str()
+            );
+            return;
+        }
+        let until = now.saturating_add(self.warmup);
+        self.instances[i].set_lifecycle(Lifecycle::Starting { until });
+        self.queue
+            .schedule_at(until, Event::InstanceReady { instance: i });
+        self.note_timeline(now, "recover", Some(i), String::new());
+    }
+
+    /// A `Starting` instance finished warmup: activate, retry parked
+    /// requests, and kick (drained work may already be waiting).
+    fn on_instance_ready(&mut self, i: usize, now: Nanos) {
+        // `until <= now` also filters stale ready events: a fail+recover
+        // during warmup leaves the old event pointing at a later Starting.
+        if let Lifecycle::Starting { until } = self.instances[i].lifecycle() {
+            if until > now {
+                return;
+            }
+            self.instances[i].set_lifecycle(Lifecycle::Active);
+            self.note_timeline(now, "ready", Some(i), String::new());
+            self.peak_active = self.peak_active.max(self.num_active_instances());
+            self.unpark(now);
+            self.kick(i, now);
+        }
+    }
+
+    fn note_timeline(
+        &mut self,
+        at: Nanos,
+        kind: &str,
+        instance: Option<usize>,
+        detail: String,
+    ) {
+        let active = self.num_active_instances();
+        self.timeline.push(TimelineEntry {
+            at,
+            kind: kind.to_string(),
+            instance,
+            active,
+            detail,
+        });
+    }
+
+    /// Final accounting shared by `run()` and `SimDriver::finish()`.
+    fn final_report(&mut self) -> Report {
         let makespan = self.queue.now();
         let unfinished = self.metrics.num_in_flight();
         if unfinished > 0 {
@@ -511,14 +1010,59 @@ impl Simulation {
                  (KV pool too small for the workload?)"
             );
         }
-        self.metrics
-            .report(makespan, &self.cfg.workload.tenant_names())
+        if !self.parked.is_empty() {
+            log::error!(
+                "{} displaced requests never found a new instance",
+                self.parked.len()
+            );
+        }
+        let mut report = self
+            .metrics
+            .report(makespan, &self.cfg.workload.tenant_names());
+        report.controller = self.controller.name().to_string();
+        report.timeline = self.timeline.clone();
+        report
     }
 
     // ---- introspection ---------------------------------------------------
 
+    /// Instances currently part of the fleet (not `Stopped`). Under the
+    /// `static` controller this equals the configured instance count; with
+    /// dynamics it tracks lifecycle state — see
+    /// [`Simulation::fleet_size`] for the historical total.
     pub fn num_instances(&self) -> usize {
+        self.instances
+            .iter()
+            .filter(|x| !x.lifecycle().is_stopped())
+            .count()
+    }
+
+    /// Every instance ever created, including `Stopped` ones (stable ids).
+    pub fn fleet_size(&self) -> usize {
         self.instances.len()
+    }
+
+    /// Instances currently `Active` (router targets).
+    pub fn num_active_instances(&self) -> usize {
+        self.instances
+            .iter()
+            .filter(|x| x.lifecycle().is_active())
+            .count()
+    }
+
+    /// Highest concurrently-`Active` instance count seen so far.
+    pub fn peak_instances(&self) -> usize {
+        self.peak_active
+    }
+
+    /// Name of the resolved cluster controller.
+    pub fn controller_name(&self) -> &str {
+        self.controller.name()
+    }
+
+    /// Controller actions, lifecycle transitions, and fleet samples so far.
+    pub fn timeline(&self) -> &[TimelineEntry] {
+        &self.timeline
     }
 
     /// Name reported by the resolved router policy (e.g.
@@ -532,8 +1076,25 @@ impl Simulation {
         &self.instances[i]
     }
 
+    /// Stats of every cache still attached to a live (non-`Stopped`)
+    /// instance, in cache-construction order. A cache whose instances all
+    /// left the fleet reports nothing — introspection tracks the fleet,
+    /// not history.
     pub fn cache_stats(&self) -> Vec<crate::memory::CacheStats> {
-        self.caches.iter().map(|c| c.stats).collect()
+        let mut live = vec![false; self.caches.len()];
+        for (i, slot) in self.cache_of.iter().enumerate() {
+            if let Some(c) = slot {
+                if !self.instances[i].lifecycle().is_stopped() {
+                    live[*c] = true;
+                }
+            }
+        }
+        self.caches
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| live[*i])
+            .map(|(_, c)| c.stats)
+            .collect()
     }
 
     pub fn events_processed(&self) -> u64 {
@@ -542,6 +1103,93 @@ impl Simulation {
 
     pub fn inter_instance_bytes(&self) -> u64 {
         self.inter_fabric.bytes_moved
+    }
+}
+
+/// The stepped execution API over a built [`Simulation`] (DESIGN.md §9).
+///
+/// `run()` is now a thin wrapper over this driver, so stepped and one-shot
+/// execution process the identical event stream:
+///
+/// ```ignore
+/// let mut sim = Simulation::new(cfg)?;
+/// let mut driver = sim.driver();
+/// let mut t = 0;
+/// while !driver.is_done() {
+///     t += sim::SECOND;                    // advance in wall slices —
+///     driver.run_until(t);                 // now() only moves with events
+///     let view = driver.view();            // inspect between steps
+///     println!("active = {}", view.active());
+/// }
+/// let report = driver.finish();
+/// ```
+///
+/// The driver borrows the simulation mutably: drop it to regain access to
+/// the `Simulation`'s introspection methods, or call them through
+/// [`SimDriver::sim`].
+pub struct SimDriver<'a> {
+    sim: &'a mut Simulation,
+}
+
+impl SimDriver<'_> {
+    /// Current simulated time (the timestamp of the last processed event).
+    pub fn now(&self) -> Nanos {
+        self.sim.queue.now()
+    }
+
+    /// Events waiting in the queue (0 once drained).
+    pub fn pending_events(&self) -> usize {
+        self.sim.queue.len()
+    }
+
+    /// Process exactly one event; returns its timestamp, or `None` when
+    /// the simulation is complete. The first call starts the simulation
+    /// (primes the request stream, schedules the first controller tick).
+    pub fn step(&mut self) -> Option<Nanos> {
+        self.sim.ensure_started();
+        let (now, event) = self.sim.queue.pop()?;
+        self.sim.handle_event(now, event);
+        Some(now)
+    }
+
+    /// Process every event with timestamp `<= t`; returns how many ran.
+    /// The clock ends on the last processed event (not advanced to `t` —
+    /// simulated time only moves when events do).
+    pub fn run_until(&mut self, t: Nanos) -> u64 {
+        self.sim.ensure_started();
+        let mut n = 0;
+        while let Some(next) = self.sim.queue.peek_time() {
+            if next > t {
+                break;
+            }
+            let (now, event) = self.sim.queue.pop().expect("peeked event vanished");
+            self.sim.handle_event(now, event);
+            n += 1;
+        }
+        n
+    }
+
+    /// Read-only cluster snapshot at the current time — the same view a
+    /// controller sees on its tick.
+    pub fn view(&self) -> ClusterView {
+        self.sim.cluster_view(self.sim.queue.now())
+    }
+
+    /// Whether every event has been processed (only meaningful after the
+    /// first `step`/`run_until` call started the simulation).
+    pub fn is_done(&self) -> bool {
+        self.sim.started && self.sim.queue.is_empty()
+    }
+
+    /// Drain the remaining events and produce the final report.
+    pub fn finish(&mut self) -> Report {
+        while self.step().is_some() {}
+        self.sim.final_report()
+    }
+
+    /// The underlying simulation (read-only introspection mid-run).
+    pub fn sim(&self) -> &Simulation {
+        self.sim
     }
 }
 
@@ -554,6 +1202,8 @@ pub fn run_config(cfg: SimConfig) -> anyhow::Result<(Report, SimSummary)> {
         events: sim.events_processed(),
         cache_stats: sim.cache_stats(),
         inter_instance_bytes: sim.inter_instance_bytes(),
+        peak_instances: sim.peak_instances(),
+        controller: sim.controller_name().to_string(),
     };
     Ok((report, summary))
 }
@@ -565,6 +1215,10 @@ pub struct SimSummary {
     pub events: u64,
     pub cache_stats: Vec<crate::memory::CacheStats>,
     pub inter_instance_bytes: u64,
+    /// Highest concurrently-`Active` instance count over the run.
+    pub peak_instances: usize,
+    /// Resolved cluster-controller name (`"static"` = frozen fleet).
+    pub controller: String,
 }
 
 // Compile-time guarantee that the simulation core stays thread-movable;
@@ -884,6 +1538,174 @@ mod tests {
         assert_eq!(sim.instance(0).sched_name(), "reverse-id");
         let report = sim.run();
         assert_eq!(report.num_finished, 20);
+    }
+
+    #[test]
+    fn driver_stepped_run_matches_one_shot_under_static() {
+        let cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        let (oneshot, _) = run_config(cfg.clone()).unwrap();
+
+        let mut sim = Simulation::new(cfg).unwrap();
+        let mut driver = sim.driver();
+        // walk the simulation in 2 ms slices, inspecting between steps
+        let mut t = 0;
+        loop {
+            t += 2 * MILLI;
+            driver.run_until(t);
+            let view = driver.view();
+            assert!(view.active() >= 1);
+            if driver.is_done() {
+                break;
+            }
+        }
+        let stepped = driver.finish();
+        assert_eq!(
+            oneshot.to_json().to_string(),
+            stepped.to_json().to_string(),
+            "stepped execution must be byte-identical to run()"
+        );
+        assert_eq!(stepped.controller, "static");
+        assert!(stepped.timeline.is_empty(), "static schedules no ticks");
+    }
+
+    #[test]
+    fn driver_single_steps_every_event() {
+        let cfg = small(presets::single_dense("tiny-dense", "rtx3090"));
+        let (oneshot, summary) = run_config(cfg.clone()).unwrap();
+        let mut sim = Simulation::new(cfg).unwrap();
+        let mut driver = sim.driver();
+        let mut times = vec![];
+        while let Some(t) = driver.step() {
+            times.push(t);
+        }
+        assert!(driver.is_done());
+        let report = driver.finish();
+        assert_eq!(times.len() as u64, summary.events);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "time is monotone");
+        assert_eq!(oneshot.to_json().to_string(), report.to_json().to_string());
+    }
+
+    #[test]
+    fn unknown_controller_name_fails_with_candidates() {
+        let mut cfg = small(presets::single_dense("tiny-dense", "rtx3090"));
+        cfg.cluster.controller = "chaos-monkey".to_string();
+        let e = Simulation::new(cfg).unwrap_err().to_string();
+        assert!(
+            e.contains("chaos-monkey") && e.contains("queue-threshold"),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn failure_replay_reroutes_and_recovers() {
+        use crate::config::FailureSpec;
+        let mut cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        cfg.workload.num_requests = 30;
+        cfg.cluster.controller = "failure-replay".to_string();
+        cfg.cluster.tick_ms = 10;
+        cfg.cluster.warmup_ms = 50;
+        // fail instance 1 early, recover it mid-run
+        cfg.cluster.failures = vec![FailureSpec {
+            instance: 1,
+            at_ms: 40,
+            recover_ms: Some(400),
+        }];
+        let mut sim = Simulation::new(cfg).unwrap();
+        let report = sim.run();
+        assert_eq!(report.num_finished, 30, "failure must not lose requests");
+        assert_eq!(report.controller, "failure-replay");
+        let kinds: Vec<&str> =
+            report.timeline.iter().map(|e| e.kind.as_str()).collect();
+        assert!(kinds.contains(&"fail"), "timeline records the failure");
+        assert!(kinds.contains(&"recover"), "timeline records the recovery");
+        assert!(kinds.contains(&"ready"), "recovered instance turned active");
+        let fail = report
+            .timeline
+            .iter()
+            .find(|e| e.kind == "fail")
+            .unwrap();
+        assert_eq!(fail.instance, Some(1));
+        assert_eq!(fail.at, 40 * MILLI, "scripted failures are ns-exact");
+        assert_eq!(fail.active, 1, "one active instance right after the kill");
+        // deterministic across runs
+        let mut cfg2 = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        cfg2.workload.num_requests = 30;
+        cfg2.cluster = sim.cfg.cluster.clone();
+        let (b, _) = run_config(cfg2).unwrap();
+        assert_eq!(report.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn builder_injected_controller_drains_and_retunes() {
+        use crate::cluster::{ClusterAction, ClusterController, ClusterView};
+
+        /// Drains instance 1 on the first tick and caps instance 0's batch.
+        struct DrainOnce {
+            fired: bool,
+        }
+        impl ClusterController for DrainOnce {
+            fn name(&self) -> &str {
+                "drain-once"
+            }
+            fn on_tick(
+                &mut self,
+                _now: Nanos,
+                _view: &ClusterView,
+            ) -> Vec<ClusterAction> {
+                if self.fired {
+                    return vec![];
+                }
+                self.fired = true;
+                vec![
+                    ClusterAction::Drain { instance: 1 },
+                    ClusterAction::SetBatchCap {
+                        instance: 0,
+                        max_seqs: 2,
+                    },
+                ]
+            }
+        }
+
+        let mut cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        cfg.workload.num_requests = 24;
+        cfg.cluster.tick_ms = 5;
+        let mut sim = Simulation::builder(cfg)
+            .with_controller(Box::new(DrainOnce { fired: false }))
+            .build()
+            .unwrap();
+        let report = sim.run();
+        assert_eq!(report.num_finished, 24, "drained requests are re-routed");
+        assert_eq!(report.controller, "drain-once");
+        assert_eq!(sim.instance(0).cfg.max_batch_seqs, 2);
+        assert!(sim.instance(1).lifecycle().is_stopped());
+        assert_eq!(sim.num_instances(), 1, "stopped instances leave the fleet");
+        assert_eq!(sim.fleet_size(), 2, "but stay addressable by id");
+        let kinds: Vec<&str> =
+            report.timeline.iter().map(|e| e.kind.as_str()).collect();
+        assert!(kinds.contains(&"drain"));
+        assert!(kinds.contains(&"drained"));
+        assert!(kinds.contains(&"set-batch-cap"));
+        assert!(kinds.contains(&"sample"));
+    }
+
+    #[test]
+    fn queue_threshold_scales_fleet_up_and_down() {
+        let (report, summary) = run_config(presets::autoscale_bursty()).unwrap();
+        assert_eq!(report.num_finished, 200);
+        assert_eq!(summary.controller, "queue-threshold");
+        assert!(
+            summary.peak_instances > 1,
+            "burst pressure must scale the fleet up (peak {})",
+            summary.peak_instances
+        );
+        let kinds: Vec<&str> =
+            report.timeline.iter().map(|e| e.kind.as_str()).collect();
+        assert!(kinds.contains(&"scale-up"));
+        assert!(
+            kinds.contains(&"scale-down"),
+            "quiet phases must drain the extra capacity: {kinds:?}"
+        );
+        assert!(kinds.contains(&"sample"), "fleet-size samples recorded");
     }
 
     #[test]

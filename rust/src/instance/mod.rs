@@ -16,6 +16,7 @@ pub mod scheduler;
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::cluster::Lifecycle;
 use crate::config::{InstanceConfig, OffloadPolicy, Role};
 use crate::memory::{BlockManager, PrefixCache};
 use crate::model::{ModelSpec, OpInvocation, OpKind, DTYPE_BYTES};
@@ -108,6 +109,9 @@ pub struct ServingInstance {
     wait: Vec<u64>,
     running: Vec<u64>,
     seqs: HashMap<u64, SeqState>,
+    /// Fleet-lifecycle state (DESIGN.md §9); `Active` unless a cluster
+    /// controller says otherwise. Only the coordinator mutates this.
+    lifecycle: Lifecycle,
     /// Monotone counter for deterministic admission order.
     pub steps: u64,
     pub preemptions: u64,
@@ -222,6 +226,7 @@ impl ServingInstance {
             wait: vec![],
             running: vec![],
             seqs: HashMap::new(),
+            lifecycle: Lifecycle::Active,
             steps: 0,
             preemptions: 0,
         })
@@ -232,11 +237,74 @@ impl ServingInstance {
         self.sched.name()
     }
 
+    // ---- lifecycle --------------------------------------------------------
+
+    pub fn lifecycle(&self) -> Lifecycle {
+        self.lifecycle
+    }
+
+    /// Transition lifecycle state. The coordinator owns the state machine
+    /// (`Starting -> Active -> Draining -> Stopped`, `Stopped -> Starting`
+    /// on recovery); the instance just records it.
+    pub fn set_lifecycle(&mut self, l: Lifecycle) {
+        self.lifecycle = l;
+    }
+
+    /// Pull every waiting (not yet admitted) request off this instance for
+    /// re-routing, in ascending request-id order. Waiting sequences hold no
+    /// KV blocks, so nothing is freed. Used when draining.
+    pub fn drain_waiting(&mut self) -> Vec<Request> {
+        let mut ids = std::mem::take(&mut self.wait);
+        ids.sort_unstable();
+        ids.iter()
+            .map(|id| {
+                self.seqs
+                    .remove(id)
+                    .expect("waiting seq missing from table")
+                    .req
+            })
+            .collect()
+    }
+
+    /// Hard-failure evacuation: remove *every* resident sequence (running
+    /// and waiting), free its KV, and return the requests for re-routing
+    /// in ascending id order. Partially decoded sequences are reset
+    /// recompute-style (generated tokens fold into the prompt), exactly
+    /// like a preemption.
+    pub fn evacuate(&mut self) -> Vec<Request> {
+        let mut ids: Vec<u64> = self.seqs.keys().copied().collect();
+        ids.sort_unstable();
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            let mut s = self.seqs.remove(&id).expect("seq vanished");
+            self.blocks.free_seq(id);
+            if let Phase::Decode { generated } = s.phase {
+                s.req.prompt_tokens += generated;
+                s.req.output_tokens =
+                    s.req.output_tokens.saturating_sub(generated).max(1);
+            }
+            out.push(s.req);
+        }
+        self.wait.clear();
+        self.running.clear();
+        out
+    }
+
     // ---- router-visible load signals ------------------------------------
 
     /// Outstanding requests (waiting + running).
     pub fn outstanding(&self) -> usize {
         self.wait.len() + self.running.len()
+    }
+
+    /// Requests waiting for admission.
+    pub fn waiting(&self) -> usize {
+        self.wait.len()
+    }
+
+    /// Sequences in the running batch.
+    pub fn running_count(&self) -> usize {
+        self.running.len()
     }
 
     /// KV-pool utilization in [0, 1].
@@ -950,6 +1018,48 @@ mod tests {
         let la = a.begin_step(0, None).duration;
         let lb = b.begin_step(0, None).duration;
         assert!(lb < la, "tp2 {lb} !< tp1 {la}");
+    }
+
+    #[test]
+    fn evacuate_resets_decode_recompute_style() {
+        let mut inst = dense_instance();
+        assert!(inst.lifecycle().is_active());
+        inst.enqueue(req(0, 0, 64, 8), 0);
+        inst.enqueue(req(1, 0, 32, 4), 0);
+        // run two steps: seq 0/1 finish prefill + one decode token each
+        let out = inst.begin_step(0, None);
+        inst.begin_step(out.duration, None);
+        let evacuated = inst.evacuate();
+        assert_eq!(evacuated.len(), 2);
+        assert_eq!(evacuated[0].id, 0, "ascending id order");
+        // 2 tokens generated folded into the prompt, output shrunk
+        assert_eq!(evacuated[0].prompt_tokens, 66);
+        assert_eq!(evacuated[0].output_tokens, 6);
+        assert_eq!(inst.outstanding(), 0);
+        assert_eq!(inst.blocks.used_blocks(), 0);
+        inst.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn drain_waiting_leaves_running_batch() {
+        let mut inst = dense_instance();
+        inst.cfg.max_batch_seqs = 1;
+        for i in 0..3 {
+            inst.enqueue(req(i, 0, 16, 4), 0);
+        }
+        inst.begin_step(0, None); // admits seq 0 only
+        let displaced = inst.drain_waiting();
+        assert_eq!(
+            displaced.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        assert_eq!(inst.waiting(), 0);
+        assert_eq!(inst.running_count(), 1, "running batch keeps draining");
+        inst.check_invariants().unwrap();
+        inst.set_lifecycle(Lifecycle::Draining);
+        assert!(inst.lifecycle().can_run());
+        let finished = run_to_completion(&mut inst, 20);
+        assert_eq!(finished, vec![0]);
     }
 
     #[test]

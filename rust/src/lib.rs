@@ -34,6 +34,15 @@
 //! trace interpolation where samples exist and calibrated roofline
 //! elsewhere — the paper's single-command accelerator integration.
 //!
+//! The fleet itself is open too: execution is a stepped
+//! [`coordinator::SimDriver`] (`step`/`run_until`/`finish`) over the event
+//! queue, and a [`cluster::ClusterController`] — the fourth registered
+//! axis — is invoked on a configurable tick with a read-only
+//! [`cluster::ClusterView`], returning typed [`cluster::ClusterAction`]s
+//! (scale up/down, drain, fail, recover, retune). Instances carry a
+//! lifecycle (`Starting -> Active -> Draining -> Stopped`); the `static`
+//! built-in reproduces the frozen-fleet behavior byte for byte.
+//!
 //! The [`workload`] engine streams requests into the coordinator (a
 //! pull-based [`workload::TrafficSource`] — Poisson, bursty MMPP, diurnal,
 //! closed-loop sessions, trace replay, or custom), annotated with tenants
@@ -42,6 +51,7 @@
 //! memory bounded by in-flight state.
 
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod groundtruth;

@@ -59,22 +59,26 @@ COMMANDS:
              [--hardware H] [--hardware-dir DIR]
              [--perf analytical|cycle|cycle-replay|trace:PATH]
              [--requests N] [--rate R] [--workload W] [--tenants N]
-             [--seed S] [--out FILE]
+             [--controller C] [--tick-ms N] [--seed S] [--out FILE]
              (--workload takes a registered traffic source: poisson,
               uniform, burst, mmpp, diurnal, sessions, or a custom name;
               --tenants N splits traffic over N weighted tenants with
               alternating interactive/batch SLO classes; --hardware-dir
               loads every bundle in DIR so profiled devices resolve by
-              name in --hardware and config files)
+              name in --hardware and config files; --controller runs a
+              registered cluster controller — static, queue-threshold,
+              failure-replay — on a --tick-ms cadence)
   sweep      [--presets A,B,..] [--hardware H1,H2,..|all]
              [--hardware-dir DIR] [--rates R1,R2,..]
              [--workloads W1,W2,..|all] [--routers P1,P2,..|all]
              [--scheds S1,S2,..|all] [--evict E1,E2,..|all]
-             [--perf B1,B2,..] [--model M] [--moe-model M] [--requests N]
+             [--controllers C1,C2,..|all] [--perf B1,B2,..]
+             [--model M] [--moe-model M] [--requests N]
              [--seed S] [--threads T] [--baseline NAME] [--out FILE]
              [--quick]
-             (policy/workload/hardware axes take registry names; `all`
-              sweeps every registered entry, including imported bundles)
+             (policy/workload/hardware/controller axes take registry
+              names; `all` sweeps every registered entry, including
+              imported bundles)
   validate   --model <preset> [--artifacts DIR] [--trace FILE]
              [--requests N] [--rate R]
   gen-trace  [--requests N] [--rate R] [--workload W] [--tenants N]
@@ -283,6 +287,12 @@ fn resolve_config(args: &Args) -> anyhow::Result<SimConfig> {
         cfg.workload.traffic = workload::Traffic::poisson(r.parse()?);
     }
     apply_workload_flags(args, &mut cfg.workload)?;
+    if let Some(c) = args.str_flag("controller") {
+        // fail here with the candidate list, not mid-build
+        policy::snapshot().check_controller(c)?;
+        cfg.cluster.controller = c.to_string();
+    }
+    cfg.cluster.tick_ms = args.u64_or("tick-ms", cfg.cluster.tick_ms)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.validate()?;
     Ok(cfg)
@@ -365,6 +375,8 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     spec.axes.routers = policy_axis(args, "routers", registry.route_names());
     spec.axes.scheds = policy_axis(args, "scheds", registry.sched_names());
     spec.axes.evictions = policy_axis(args, "evict", registry.evict_names());
+    spec.axes.controllers =
+        policy_axis(args, "controllers", registry.controller_names());
     spec.axes.backends = csv_parse::<PerfBackend>(args, "perf")?;
 
     let cfgs = spec.expand()?;
@@ -455,6 +467,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     ]);
     t.row(&["engine steps".into(), summary.steps.to_string()]);
     t.row(&["sim events".into(), summary.events.to_string()]);
+    if summary.controller != "static" {
+        t.row(&["controller".into(), summary.controller.clone()]);
+        t.row(&[
+            "peak instances".into(),
+            summary.peak_instances.to_string(),
+        ]);
+    }
     t.row(&[
         "sim wall-clock".into(),
         format!("{:.3} s", wall.as_secs_f64()),
@@ -488,6 +507,27 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 format!("{:.1}", tr.throughput_tps),
                 format!("{:.1}", tr.slo_attainment * 100.0),
                 format!("{:.3}", tr.ttft_ns_mean / 1e6),
+            ]);
+        }
+        t.print();
+    }
+
+    // Controller timeline: every action and lifecycle transition (samples
+    // stay in the JSON report, where plotting tools want them).
+    let actions: Vec<_> = report
+        .timeline
+        .iter()
+        .filter(|e| e.kind != "sample")
+        .collect();
+    if !actions.is_empty() {
+        let mut t = Table::new(&["t (ms)", "action", "instance", "active", "detail"]);
+        for e in &actions {
+            t.row(&[
+                format!("{:.1}", e.at as f64 / 1e6),
+                e.kind.clone(),
+                e.instance.map(|i| i.to_string()).unwrap_or_default(),
+                e.active.to_string(),
+                e.detail.clone(),
             ]);
         }
         t.print();
@@ -614,5 +654,6 @@ fn cmd_presets() -> anyhow::Result<()> {
     println!("  sched:   {}", registry.sched_names().join(", "));
     println!("  evict:   {}", registry.evict_names().join(", "));
     println!("  traffic: {}", registry.traffic_names().join(", "));
+    println!("  cluster: {}", registry.controller_names().join(", "));
     Ok(())
 }

@@ -23,6 +23,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 
+use crate::cluster::TimelineEntry;
 use crate::sim::{nanos_to_secs, Nanos};
 use crate::util::json::Value;
 use crate::util::stats::{self, SampleSet, Summary};
@@ -252,6 +253,23 @@ impl MetricsCollector {
         self.records.len()
     }
 
+    pub fn num_arrivals(&self) -> usize {
+        self.arrivals
+    }
+
+    /// SLO attainment over requests finished *so far* (1.0 when none) —
+    /// the mid-run signal cluster controllers see in their
+    /// [`ClusterView`](crate::cluster::ClusterView).
+    pub fn slo_attainment_so_far(&self) -> f64 {
+        let finished: u64 = self.classes.values().map(|c| c.finished).sum();
+        if finished == 0 {
+            1.0
+        } else {
+            self.classes.values().map(|c| c.slo_ok).sum::<u64>() as f64
+                / finished as f64
+        }
+    }
+
     /// Build the final report. `makespan` is the simulation end time;
     /// `tenant_names` labels tenant indices (out-of-range indices name
     /// themselves).
@@ -313,6 +331,8 @@ impl MetricsCollector {
             utilization,
             per_class,
             per_tenant,
+            controller: "static".to_string(),
+            timeline: vec![],
         }
     }
 }
@@ -366,6 +386,14 @@ pub struct Report {
     pub per_class: Vec<ClassReport>,
     /// Per-tenant breakdown, ordered by tenant index.
     pub per_tenant: Vec<TenantReport>,
+    /// Name of the cluster controller that ran (`"static"` = frozen
+    /// fleet; the coordinator overwrites this after the run).
+    pub controller: String,
+    /// Controller actions, lifecycle transitions, and fleet-size samples
+    /// in event order. Empty under the `static` controller — and omitted
+    /// from the JSON then, keeping static reports byte-identical to
+    /// pre-driver output.
+    pub timeline: Vec<TimelineEntry>,
 }
 
 impl Report {
@@ -382,7 +410,7 @@ impl Report {
         let mut util: Vec<(usize, f64)> =
             self.utilization.iter().map(|(&k, &v)| (k, v)).collect();
         util.sort_by_key(|&(k, _)| k);
-        Value::obj(vec![
+        let mut fields = vec![
             ("num_requests", Value::int(self.num_requests as i64)),
             ("num_finished", Value::int(self.num_finished as i64)),
             ("makespan_ns", Value::int(self.makespan as i64)),
@@ -451,7 +479,17 @@ impl Report {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        // Cluster-dynamics keys only when a controller actually ran:
+        // static reports stay byte-identical to pre-driver output.
+        if self.controller != "static" || !self.timeline.is_empty() {
+            fields.push(("controller", Value::str(self.controller.clone())));
+            fields.push((
+                "timeline",
+                Value::arr(self.timeline.iter().map(|e| e.to_json()).collect()),
+            ));
+        }
+        Value::obj(fields)
     }
 
     /// Mean absolute percentage error of headline metrics vs a reference
@@ -683,6 +721,48 @@ mod tests {
         // unnamed tenants label themselves
         let rep = m.report(1_000, &[]);
         assert_eq!(rep.per_tenant[1].name, "tenant1");
+    }
+
+    #[test]
+    fn cluster_keys_omitted_for_static_and_emitted_otherwise() {
+        let rep = collect_one().report(10_000, &[]);
+        // static + empty timeline -> no cluster keys, byte-stable output
+        assert_eq!(rep.controller, "static");
+        let v = rep.to_json();
+        assert!(v.get("controller").is_null());
+        assert!(v.get("timeline").is_null());
+        // a controller run emits both keys
+        let mut rep = rep;
+        rep.controller = "queue-threshold".to_string();
+        rep.timeline.push(TimelineEntry {
+            at: 7,
+            kind: "scale-up".into(),
+            instance: Some(1),
+            active: 2,
+            detail: String::new(),
+        });
+        let v = rep.to_json();
+        assert_eq!(v.get("controller").as_str(), Some("queue-threshold"));
+        let tl = v.get("timeline").as_arr().unwrap();
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl[0].get("kind").as_str(), Some("scale-up"));
+    }
+
+    #[test]
+    fn slo_attainment_so_far_tracks_finishes() {
+        let mut m = MetricsCollector::new();
+        assert_eq!(m.slo_attainment_so_far(), 1.0, "vacuous before finishes");
+        // one fast hit
+        arrive(&mut m, 0, 0, 8, 1);
+        m.on_token(0, 100);
+        m.on_finish(0, 100);
+        assert_eq!(m.num_arrivals(), 1);
+        assert_eq!(m.slo_attainment_so_far(), 1.0);
+        // one interactive miss
+        arrive(&mut m, 1, 0, 8, 1);
+        m.on_token(1, SloClass::Interactive.ttft_target_ns() * 2);
+        m.on_finish(1, SloClass::Interactive.ttft_target_ns() * 2);
+        assert!((m.slo_attainment_so_far() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! | wait-queue ordering   | [`SchedulePolicy`] | `fcfs`, `sjf`, `priority`, `slo` |
 //! | prefix-cache eviction | [`EvictionPolicy`] | `lru`, `lfu`, `largest` |
 //! | traffic generation    | [`TrafficSource`]  | `burst`, `diurnal`, `mmpp`, `poisson`, `sessions`, `uniform` |
+//! | cluster dynamics      | [`ClusterController`] | `static`, `queue-threshold`, `failure-replay` |
 //!
 //! [`SimConfig`](crate::config::SimConfig) stores policy *names* (plain
 //! strings, so JSON round-trip and presets keep working); a
@@ -30,8 +31,12 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock, RwLock};
 
+use crate::config::ClusterConfig;
 use crate::sim::Nanos;
 
+pub use crate::cluster::{
+    ClusterAction, ClusterController, ClusterView, InstanceSnapshot,
+};
 pub use crate::memory::radix::CacheLeaf;
 pub use crate::router::{InstanceView, RoutePolicy};
 pub use crate::workload::{Traffic, TrafficSource, WorkloadSpec};
@@ -90,6 +95,14 @@ pub type EvictFactory = Arc<dyn Fn() -> Box<dyn EvictionPolicy> + Send + Sync>;
 /// factory receives the full [`WorkloadSpec`].
 pub type TrafficFactory =
     Arc<dyn Fn(&WorkloadSpec) -> anyhow::Result<Box<dyn TrafficSource>> + Send + Sync>;
+/// Factory for cluster controllers. Like traffic sources, controllers are
+/// parameterized by config — the factory receives the full
+/// [`ClusterConfig`] (thresholds, fleet bounds, failure script).
+pub type ControllerFactory = Arc<
+    dyn Fn(&ClusterConfig) -> anyhow::Result<Box<dyn ClusterController>>
+        + Send
+        + Sync,
+>;
 
 /// Maps policy names to factory closures for all three decision points.
 ///
@@ -103,6 +116,7 @@ pub struct PolicyRegistry {
     sched: BTreeMap<String, SchedFactory>,
     evict: BTreeMap<String, EvictFactory>,
     traffic: BTreeMap<String, TrafficFactory>,
+    controller: BTreeMap<String, ControllerFactory>,
 }
 
 impl Default for PolicyRegistry {
@@ -119,6 +133,7 @@ impl std::fmt::Debug for PolicyRegistry {
             .field("sched", &self.sched_names())
             .field("evict", &self.evict_names())
             .field("traffic", &self.traffic_names())
+            .field("controller", &self.controller_names())
             .finish()
     }
 }
@@ -138,6 +153,7 @@ impl PolicyRegistry {
             sched: BTreeMap::new(),
             evict: BTreeMap::new(),
             traffic: BTreeMap::new(),
+            controller: BTreeMap::new(),
         }
     }
 
@@ -179,6 +195,21 @@ impl PolicyRegistry {
                 crate::workload::source::build_builtin(n, spec)
             });
         }
+        // The fourth axis: cluster controllers (DESIGN.md §9). `static`
+        // schedules no ticks, so it reproduces the pre-driver event stream
+        // byte for byte.
+        r.register_controller("static", |_cfg: &ClusterConfig| {
+            Ok(Box::new(crate::cluster::StaticController)
+                as Box<dyn ClusterController>)
+        });
+        r.register_controller("queue-threshold", |cfg: &ClusterConfig| {
+            Ok(Box::new(crate::cluster::QueueThreshold::from_config(cfg))
+                as Box<dyn ClusterController>)
+        });
+        r.register_controller("failure-replay", |cfg: &ClusterConfig| {
+            Ok(Box::new(crate::cluster::FailureReplay::from_config(cfg))
+                as Box<dyn ClusterController>)
+        });
         r
     }
 
@@ -221,6 +252,18 @@ impl PolicyRegistry {
             + 'static,
     ) {
         self.traffic.insert(name.into(), Arc::new(factory));
+    }
+
+    /// Register (or replace) a cluster-controller factory under `name`.
+    pub fn register_controller(
+        &mut self,
+        name: impl Into<String>,
+        factory: impl Fn(&ClusterConfig) -> anyhow::Result<Box<dyn ClusterController>>
+            + Send
+            + Sync
+            + 'static,
+    ) {
+        self.controller.insert(name.into(), Arc::new(factory));
     }
 
     // ---- resolution -------------------------------------------------------
@@ -266,6 +309,22 @@ impl PolicyRegistry {
         }
     }
 
+    /// Build the cluster controller named by `cluster.controller`, handing
+    /// the factory the full cluster config (thresholds, failure script).
+    pub fn make_controller(
+        &self,
+        cluster: &ClusterConfig,
+    ) -> anyhow::Result<Box<dyn ClusterController>> {
+        match self.controller.get(&cluster.controller) {
+            Some(f) => f(cluster),
+            None => Err(unknown(
+                "controller",
+                &cluster.controller,
+                &self.controller_names(),
+            )),
+        }
+    }
+
     pub fn has_route(&self, name: &str) -> bool {
         self.route.contains_key(name)
     }
@@ -277,6 +336,9 @@ impl PolicyRegistry {
     }
     pub fn has_traffic(&self, name: &str) -> bool {
         self.traffic.contains_key(name)
+    }
+    pub fn has_controller(&self, name: &str) -> bool {
+        self.controller.contains_key(name)
     }
 
     // ---- validation without instantiation ---------------------------------
@@ -331,6 +393,16 @@ impl PolicyRegistry {
         }
     }
 
+    /// Error (with the candidate list) unless `name` is a registered
+    /// cluster controller.
+    pub fn check_controller(&self, name: &str) -> anyhow::Result<()> {
+        if self.has_controller(name) {
+            Ok(())
+        } else {
+            Err(unknown("controller", name, &self.controller_names()))
+        }
+    }
+
     // ---- enumeration (sorted, deterministic) ------------------------------
 
     /// All registered route-policy names, sorted.
@@ -351,6 +423,11 @@ impl PolicyRegistry {
     /// All registered traffic-source names, sorted.
     pub fn traffic_names(&self) -> Vec<String> {
         self.traffic.keys().cloned().collect()
+    }
+
+    /// All registered cluster-controller names, sorted.
+    pub fn controller_names(&self) -> Vec<String> {
+        self.controller.keys().cloned().collect()
     }
 }
 
@@ -424,6 +501,22 @@ pub fn register_traffic_source(
         .register_traffic(name, factory);
 }
 
+/// Register a cluster controller in the global registry (last wins).
+/// Configs select it with `cluster.controller` and sweep `--controllers`
+/// axes enumerate it alongside the built-ins.
+pub fn register_cluster_controller(
+    name: impl Into<String>,
+    factory: impl Fn(&ClusterConfig) -> anyhow::Result<Box<dyn ClusterController>>
+        + Send
+        + Sync
+        + 'static,
+) {
+    global()
+        .write()
+        .expect("policy registry lock poisoned")
+        .register_controller(name, factory);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -470,6 +563,10 @@ mod tests {
         assert_eq!(reg.sched_names(), vec!["fcfs", "priority", "sjf", "slo"]);
         assert_eq!(reg.evict_names(), vec!["largest", "lfu", "lru"]);
         assert_eq!(
+            reg.controller_names(),
+            vec!["failure-replay", "queue-threshold", "static"]
+        );
+        assert_eq!(
             reg.traffic_names(),
             Traffic::builtin_names()
                 .iter()
@@ -498,6 +595,63 @@ mod tests {
         let e = reg.check_traffic("replay").unwrap_err().to_string();
         assert!(e.contains("path"), "{e}");
         assert!(reg.check_traffic("surge").is_err());
+    }
+
+    #[test]
+    fn builtin_controllers_resolve_and_unknowns_list_candidates() {
+        let reg = PolicyRegistry::builtins();
+        let mut cluster = crate::config::ClusterConfig::default();
+        for name in reg.controller_names() {
+            cluster.controller = name.clone();
+            let c = reg.make_controller(&cluster).unwrap();
+            assert_eq!(c.name(), name);
+        }
+        cluster.controller = "chaos-monkey".into();
+        let e = reg.make_controller(&cluster).unwrap_err().to_string();
+        assert!(
+            e.contains("chaos-monkey") && e.contains("queue-threshold"),
+            "{e}"
+        );
+        let e = reg.check_controller("chaos-monkey").unwrap_err().to_string();
+        assert!(e.contains("static"), "{e}");
+        assert!(reg.check_controller("failure-replay").is_ok());
+    }
+
+    #[test]
+    fn custom_controller_registers_globally() {
+        struct NoopController;
+        impl ClusterController for NoopController {
+            fn name(&self) -> &str {
+                "test-noop-controller"
+            }
+            fn on_tick(
+                &mut self,
+                _now: Nanos,
+                _view: &ClusterView,
+            ) -> Vec<ClusterAction> {
+                vec![]
+            }
+        }
+        register_cluster_controller("test-noop-controller", |_cfg| {
+            Ok(Box::new(NoopController) as Box<dyn ClusterController>)
+        });
+        let snap = snapshot();
+        assert!(snap.has_controller("test-noop-controller"));
+        let cluster = crate::config::ClusterConfig {
+            controller: "test-noop-controller".into(),
+            ..Default::default()
+        };
+        let mut c = snap.make_controller(&cluster).unwrap();
+        assert!(c.wants_ticks(), "trait default: custom controllers tick");
+        let view = ClusterView {
+            now: 0,
+            instances: vec![],
+            in_flight: 0,
+            finished: 0,
+            arrivals: 0,
+            slo_attainment: 1.0,
+        };
+        assert!(c.on_tick(0, &view).is_empty());
     }
 
     #[test]

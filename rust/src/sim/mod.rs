@@ -47,6 +47,14 @@ pub enum Event {
     ExpertFetchDone { instance: usize, layer: u64, expert: u64 },
     /// Periodic metrics sampling tick.
     MetricsTick,
+    /// Periodic cluster-controller invocation (DESIGN.md §9). Never
+    /// scheduled under the `static` controller, so static runs keep the
+    /// pre-driver event stream byte for byte.
+    ControllerTick,
+    /// A `Starting` instance finished warming up and turns `Active`.
+    InstanceReady { instance: usize },
+    /// A scheduled hard failure (`ClusterAction::Fail`) fires.
+    InstanceFail { instance: usize },
 }
 
 #[derive(Debug)]

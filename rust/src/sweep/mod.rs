@@ -73,6 +73,11 @@ pub struct SweepAxes {
     /// Each grid point's source runs at the rate axis value in effect (or
     /// 10 req/s when the rate axis is empty).
     pub workloads: Vec<String>,
+    /// Cluster-controller names (the fourth plugin axis, DESIGN.md §9):
+    /// `static`, `queue-threshold`, `failure-replay`, and user
+    /// registrations. Each grid point runs with that controller on the
+    /// preset's `cluster` settings.
+    pub controllers: Vec<String>,
 }
 
 impl SweepAxes {
@@ -100,6 +105,13 @@ impl SweepAxes {
     /// applies).
     pub fn with_all_workloads(mut self, registry: &PolicyRegistry) -> Self {
         self.workloads = registry.traffic_names();
+        self
+    }
+
+    /// Fill the controller axis with every cluster controller registered
+    /// in `registry` (same global-registry caveat as the other axes).
+    pub fn with_all_controllers(mut self, registry: &PolicyRegistry) -> Self {
+        self.controllers = registry.controller_names();
         self
     }
 
@@ -172,6 +184,7 @@ impl SweepSpec {
             * f(self.axes.scheds.len())
             * f(self.axes.evictions.len())
             * f(self.axes.backends.len())
+            * f(self.axes.controllers.len())
     }
 
     /// Expand the cartesian product into named, validated [`SimConfig`]s.
@@ -201,6 +214,9 @@ impl SweepSpec {
             // pointer to its structural config spelling
             registry.check_traffic(w)?;
         }
+        for c in &self.axes.controllers {
+            registry.check_controller(c)?;
+        }
         // Hardware names resolve through their own registry (built-ins +
         // imported bundles); same up-front rejection with candidates.
         let hw_registry = crate::perf::hardware::snapshot();
@@ -217,18 +233,21 @@ impl SweepSpec {
                             for sched in axis(&self.axes.scheds) {
                                 for evict in axis(&self.axes.evictions) {
                                     for backend in axis(&self.axes.backends) {
-                                        let cfg = self.point(
-                                            preset, hw, rate, workload, router,
-                                            sched, evict, backend,
-                                        )?;
-                                        if !seen.insert(cfg.name.clone()) {
-                                            anyhow::bail!(
-                                                "duplicate sweep point '{}' \
-                                                 (repeated axis value?)",
-                                                cfg.name
-                                            );
+                                        for ctrl in axis(&self.axes.controllers) {
+                                            let cfg = self.point(
+                                                preset, hw, rate, workload,
+                                                router, sched, evict, backend,
+                                                ctrl,
+                                            )?;
+                                            if !seen.insert(cfg.name.clone()) {
+                                                anyhow::bail!(
+                                                    "duplicate sweep point '{}' \
+                                                     (repeated axis value?)",
+                                                    cfg.name
+                                                );
+                                            }
+                                            out.push(cfg);
                                         }
-                                        out.push(cfg);
                                     }
                                 }
                             }
@@ -251,6 +270,7 @@ impl SweepSpec {
         sched: Option<&String>,
         evict: Option<&String>,
         backend: Option<&PerfBackend>,
+        controller: Option<&String>,
     ) -> anyhow::Result<SimConfig> {
         let hw_name = hw.map(String::as_str).unwrap_or(DEFAULT_HARDWARE);
         let mut cfg = presets::by_name(
@@ -315,6 +335,10 @@ impl SweepSpec {
         if let Some(b) = backend {
             cfg.perf = b.clone();
             name.push_str(&format!("|perf={}", b.cli_str()));
+        }
+        if let Some(c) = controller {
+            cfg.cluster.controller = c.clone();
+            name.push_str(&format!("|ctrl={c}"));
         }
 
         cfg.name = name;
@@ -567,7 +591,7 @@ pub fn sweep_json(outcome: &SweepOutcome, summary: &SweepSummary) -> Value {
         .points
         .iter()
         .map(|p| {
-            Value::obj(vec![
+            let mut fields = vec![
                 ("name", Value::str(p.name.clone())),
                 ("steps", Value::int(p.summary.steps as i64)),
                 ("events", Value::int(p.summary.events as i64)),
@@ -575,8 +599,18 @@ pub fn sweep_json(outcome: &SweepOutcome, summary: &SweepSummary) -> Value {
                     "inter_instance_bytes",
                     Value::int(p.summary.inter_instance_bytes as i64),
                 ),
-                ("report", p.report.to_json()),
-            ])
+            ];
+            // Cluster-dynamics keys only when a controller ran, so static
+            // sweep output stays byte-identical to pre-driver reports.
+            if p.summary.controller != "static" {
+                fields.push(("controller", Value::str(p.summary.controller.clone())));
+                fields.push((
+                    "peak_instances",
+                    Value::int(p.summary.peak_instances as i64),
+                ));
+            }
+            fields.push(("report", p.report.to_json()));
+            Value::obj(fields)
         })
         .collect();
     let extremes = summary
@@ -838,6 +872,57 @@ mod tests {
                 "router '{r}' missing from grid"
             );
         }
+    }
+
+    #[test]
+    fn controller_axis_expands_and_validates() {
+        let mut spec = quick_spec();
+        spec.axes.controllers = vec!["static".into(), "queue-threshold".into()];
+        assert_eq!(spec.grid_size(), 2);
+        let cfgs = spec.expand().unwrap();
+        assert_eq!(cfgs.len(), 2);
+        assert_eq!(cfgs[0].name, "S(D)|ctrl=static");
+        assert_eq!(cfgs[0].cluster.controller, "static");
+        assert_eq!(cfgs[1].name, "S(D)|ctrl=queue-threshold");
+        assert_eq!(cfgs[1].cluster.controller, "queue-threshold");
+        // unknown controllers are rejected up front with candidates
+        let mut spec = quick_spec();
+        spec.axes.controllers = vec!["chaos-monkey".into()];
+        let e = spec.expand().unwrap_err().to_string();
+        assert!(e.contains("chaos-monkey") && e.contains("failure-replay"), "{e}");
+        // `with_all_controllers` enumerates the registry
+        let registry = crate::policy::snapshot();
+        let mut spec = quick_spec();
+        spec.axes = spec.axes.with_all_controllers(&registry);
+        for name in ["static", "queue-threshold", "failure-replay"] {
+            assert!(
+                spec.axes.controllers.contains(&name.to_string()),
+                "{name} missing"
+            );
+        }
+        let cfgs = spec.expand().unwrap();
+        assert_eq!(cfgs.len(), spec.axes.controllers.len());
+    }
+
+    #[test]
+    fn controller_points_run_and_static_omits_cluster_keys() {
+        let mut spec = quick_spec();
+        spec.axes.controllers = vec!["static".into(), "queue-threshold".into()];
+        let cfgs = spec.expand().unwrap();
+        let outcome = run_sweep(&cfgs, 2).unwrap();
+        let summary = summarize(&outcome, None).unwrap();
+        let v = sweep_json(&outcome, &summary);
+        let points = v.get("points").as_arr().unwrap();
+        // static point: no controller/peak keys (byte-stable legacy shape)
+        assert!(points[0].get("controller").is_null());
+        assert!(points[0].get("report").get("controller").is_null());
+        // controlled point: both keys present
+        assert_eq!(points[1].get("controller").as_str(), Some("queue-threshold"));
+        assert!(points[1].get("peak_instances").as_i64().is_some());
+        assert_eq!(
+            points[1].get("report").get("controller").as_str(),
+            Some("queue-threshold")
+        );
     }
 
     #[test]

@@ -36,6 +36,17 @@ fn sharegpt_100_rtx3090_matches_golden_report() {
     let (report, _) = run_config(golden_config()).unwrap();
     let actual = report.to_json().to_string();
 
+    // Plain compare mode (CI once the fixture is committed): a missing
+    // fixture is a hard failure, never a silent self-bless.
+    if std::env::var_os("GOLDEN_STRICT").is_some() && !fixture.exists() {
+        panic!(
+            "GOLDEN_STRICT is set but the golden fixture is not committed at \
+             {} — run `cargo test -q --test golden_report` once without \
+             GOLDEN_STRICT and commit the file it writes",
+            fixture.display()
+        );
+    }
+
     let update = std::env::var_os("UPDATE_GOLDEN").is_some();
     if update || !fixture.exists() {
         std::fs::create_dir_all(fixture.parent().unwrap()).unwrap();

@@ -1,0 +1,261 @@
+//! Driver + cluster-controller determinism (ISSUE 5 acceptance contract):
+//!
+//! * `run_until`-stepped execution is byte-identical to one-shot `run()`
+//!   under the `static` controller, standalone and through the sweep
+//!   engine at 1 and 8 workers;
+//! * the `queue-threshold` autoscaler on the bursty multi-tenant scenario
+//!   scales the fleet up and back down, with a monotone-then-decreasing
+//!   (unimodal up to re-bursts) fleet-size timeline, deterministically
+//!   across 1/2/8 sweep workers;
+//! * unknown controller names fail with the candidate list, everywhere a
+//!   name can be spelled (config build, sweep axis).
+//!
+//! The autoscale test also writes the controller timeline to
+//! `target/controller_timeline.json` so CI can upload it as an artifact
+//! when something fails.
+
+use std::path::PathBuf;
+
+use llmservingsim::config::{presets, SimConfig};
+use llmservingsim::coordinator::{run_config, Simulation};
+use llmservingsim::sim::MILLI;
+use llmservingsim::sweep::{run_sweep, SweepSpec};
+use llmservingsim::util::json::Value;
+
+fn small_static(preset: &str) -> SimConfig {
+    let mut cfg =
+        presets::by_name(preset, "tiny-dense", "tiny-moe", "rtx3090").unwrap();
+    cfg.workload.num_requests = 20;
+    cfg.workload.lengths = llmservingsim::workload::LengthDist::short();
+    cfg
+}
+
+#[test]
+fn run_until_stepping_matches_one_shot_across_presets() {
+    // Slice widths chosen to land both on and between event timestamps.
+    for preset in ["S(D)", "M(D)", "PD(D)", "M(D)+PC"] {
+        let cfg = small_static(preset);
+        let (oneshot, _) = run_config(cfg.clone()).unwrap();
+
+        let mut sim = Simulation::new(cfg).unwrap();
+        let mut driver = sim.driver();
+        let mut t = 0;
+        while !driver.is_done() {
+            t += 3 * MILLI;
+            driver.run_until(t);
+            // the driver can observe the cluster between slices
+            assert!(driver.view().active() >= 1);
+        }
+        let stepped = driver.finish();
+        assert_eq!(
+            oneshot.to_json().to_string(),
+            stepped.to_json().to_string(),
+            "stepped vs one-shot diverged for preset '{preset}'"
+        );
+    }
+}
+
+#[test]
+fn stepped_reports_match_sweep_at_1_and_8_workers() {
+    // The same configs through the sweep engine (which uses one-shot
+    // `run()`): per-point reports must equal the stepped references at
+    // any worker count.
+    let mut spec = SweepSpec {
+        num_requests: 15,
+        quick: true,
+        seed: 0xD21,
+        ..SweepSpec::default()
+    };
+    spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+    spec.axes.rates = vec![8.0, 30.0];
+    spec.axes.routers = vec!["round-robin".into(), "least-outstanding".into()];
+    spec.axes.controllers = vec!["static".into()];
+    let cfgs = spec.expand().unwrap();
+    assert_eq!(cfgs.len(), 8, "2 presets x 2 rates x 2 routers x 1 controller");
+
+    let stepped: Vec<(String, String)> = cfgs
+        .iter()
+        .map(|cfg| {
+            let mut sim = Simulation::new(cfg.clone()).unwrap();
+            let mut driver = sim.driver();
+            while driver.step().is_some() {}
+            (cfg.name.clone(), driver.finish().to_json().to_string())
+        })
+        .collect();
+
+    for threads in [1, 8] {
+        let swept: Vec<(String, String)> = run_sweep(&cfgs, threads)
+            .unwrap()
+            .points
+            .into_iter()
+            .map(|p| (p.name, p.report.to_json().to_string()))
+            .collect();
+        assert_eq!(
+            swept, stepped,
+            "sweep at {threads} workers diverged from stepped execution"
+        );
+    }
+}
+
+#[test]
+fn static_controller_leaves_reports_byte_identical() {
+    // `cluster.controller = "static"` (explicit) must not change a single
+    // byte relative to the default config.
+    let base = small_static("M(D)");
+    let mut explicit = base.clone();
+    explicit.cluster.controller = "static".to_string();
+    let (a, sa) = run_config(base).unwrap();
+    let (b, sb) = run_config(explicit).unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    assert_eq!(sa.events, sb.events, "static schedules no extra events");
+    assert_eq!(sb.peak_instances, 2);
+    assert_eq!(sb.controller, "static");
+}
+
+fn timeline_json(report: &llmservingsim::metrics::Report) -> Value {
+    Value::arr(report.timeline.iter().map(|e| e.to_json()).collect())
+}
+
+#[test]
+fn autoscale_scenario_is_deterministic_and_unimodal() {
+    let cfg = presets::autoscale_bursty();
+    let (report, summary) = run_config(cfg.clone()).unwrap();
+
+    // Leave the timeline on disk for CI to upload on failure.
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target/controller_timeline.json");
+    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    std::fs::write(&out, timeline_json(&report).to_string()).unwrap();
+
+    assert_eq!(report.num_finished, 200, "autoscaling must not drop requests");
+    assert_eq!(report.controller, "queue-threshold");
+    assert!(summary.peak_instances > 1, "peak {}", summary.peak_instances);
+    assert!(
+        summary.peak_instances <= cfg.cluster.max_instances,
+        "fleet exceeded max_instances"
+    );
+
+    // Every action lands in the timeline, time-ordered.
+    let ats: Vec<u64> = report.timeline.iter().map(|e| e.at).collect();
+    assert!(ats.windows(2).all(|w| w[0] <= w[1]), "timeline out of order");
+    let kinds: Vec<&str> = report.timeline.iter().map(|e| e.kind.as_str()).collect();
+    assert!(kinds.contains(&"scale-up"));
+    assert!(kinds.contains(&"ready"));
+    assert!(kinds.contains(&"scale-down"), "{kinds:?}");
+
+    // Fleet-size samples: monotone non-decreasing up to the peak before
+    // they first fall — the fleet never flaps during a single burst.
+    let samples: Vec<usize> = report
+        .timeline
+        .iter()
+        .filter(|e| e.kind == "sample")
+        .map(|e| e.active)
+        .collect();
+    assert!(!samples.is_empty());
+    let peak = *samples.iter().max().unwrap();
+    assert!(peak > 1, "samples never saw the scaled-up fleet");
+    let first_peak = samples.iter().position(|&a| a == peak).unwrap();
+    assert!(
+        samples[..=first_peak].windows(2).all(|w| w[0] <= w[1]),
+        "fleet size must grow monotonically up to its first peak: {samples:?}"
+    );
+    // ... and it comes back down by the end of the run.
+    assert!(
+        *samples.last().unwrap() < peak,
+        "fleet never scaled back down: {samples:?}"
+    );
+
+    // Byte-determinism: rerun standalone, then push a 4-seed grid of the
+    // scenario through the sweep engine at 1/2/8 workers (a single-point
+    // grid would clamp the worker count to 1 and prove nothing).
+    let (again, _) = run_config(cfg.clone()).unwrap();
+    assert_eq!(
+        report.to_json().to_string(),
+        again.to_json().to_string()
+    );
+    let grid: Vec<SimConfig> = (0..4)
+        .map(|i| {
+            let mut c = cfg.clone();
+            c.name = format!("autoscale-{i}");
+            c.seed += i;
+            c.workload.seed += i;
+            c
+        })
+        .collect();
+    let reference: Vec<String> = grid
+        .iter()
+        .map(|c| run_config(c.clone()).unwrap().0.to_json().to_string())
+        .collect();
+    for threads in [1, 2, 8] {
+        let swept: Vec<String> = run_sweep(&grid, threads)
+            .unwrap()
+            .points
+            .into_iter()
+            .map(|p| p.report.to_json().to_string())
+            .collect();
+        assert_eq!(
+            swept, reference,
+            "autoscale grid diverged at {threads} sweep workers"
+        );
+    }
+}
+
+#[test]
+fn unknown_controller_names_error_with_candidates_everywhere() {
+    // config build
+    let mut cfg = small_static("S(D)");
+    cfg.cluster.controller = "chaos-monkey".to_string();
+    let e = Simulation::new(cfg).unwrap_err().to_string();
+    assert!(e.contains("chaos-monkey"), "{e}");
+    assert!(
+        e.contains("static") && e.contains("queue-threshold"),
+        "candidate list missing: {e}"
+    );
+
+    // sweep axis (rejected at expand, before anything runs)
+    let mut spec = SweepSpec {
+        quick: true,
+        ..SweepSpec::default()
+    };
+    spec.axes.controllers = vec!["chaos-monkey".into()];
+    let e = spec.expand().unwrap_err().to_string();
+    assert!(e.contains("chaos-monkey") && e.contains("failure-replay"), "{e}");
+}
+
+#[test]
+fn failure_replay_scenario_survives_and_records_the_fault() {
+    use llmservingsim::config::FailureSpec;
+    let mut cfg = small_static("M(D)");
+    cfg.workload.num_requests = 40;
+    cfg.cluster.controller = "failure-replay".to_string();
+    cfg.cluster.tick_ms = 10;
+    cfg.cluster.warmup_ms = 50;
+    cfg.cluster.failures = vec![FailureSpec {
+        instance: 0,
+        at_ms: 100,
+        recover_ms: Some(600),
+    }];
+    let (report, _) = run_config(cfg.clone()).unwrap();
+    assert_eq!(report.num_finished, 40, "fault injection must not lose work");
+    let fail = report.timeline.iter().find(|e| e.kind == "fail").unwrap();
+    assert_eq!(fail.instance, Some(0));
+    assert_eq!(fail.at, 100 * MILLI, "failure lands nanosecond-exact");
+    assert!(
+        report.timeline.iter().any(|e| e.kind == "recover"),
+        "scripted recovery missing"
+    );
+    // deterministic at any worker count (2-point grid so threads > 1)
+    let mut cfg2 = cfg.clone();
+    cfg2.name = "failure-replay-b".to_string();
+    cfg2.seed += 1;
+    cfg2.workload.seed += 1;
+    let grid = vec![cfg, cfg2];
+    let a = run_sweep(&grid, 1).unwrap();
+    let b = run_sweep(&grid, 8).unwrap();
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(
+            pa.report.to_json().to_string(),
+            pb.report.to_json().to_string()
+        );
+    }
+}
