@@ -5,9 +5,8 @@
 //! leaf eviction; token ownership is tracked per node so the cache manager
 //! can convert evictions into freed bytes.
 
-use std::collections::HashMap;
-
 use crate::sim::Nanos;
+use crate::util::fxhash::FxHashMap;
 
 /// Token alphabet (synthetic token ids).
 pub type Token = u32;
@@ -33,7 +32,10 @@ pub struct CacheLeaf {
 struct Node {
     /// Compressed edge label leading into this node (empty at root).
     label: Vec<Token>,
-    children: HashMap<Token, usize>,
+    /// Child index keyed by first label token. Fx-hashed: keys are
+    /// synthetic token ids, so SipHash resistance buys nothing and the
+    /// lookup sits on the per-insert hot path.
+    children: FxHashMap<Token, usize>,
     parent: usize,
     last_access: Nanos,
     access_count: u64,
@@ -53,10 +55,16 @@ pub struct Match {
 pub struct RadixTree {
     nodes: Vec<Option<Node>>,
     free: Vec<usize>,
+    /// Recycled label allocations (from evicted leaves and edge splits),
+    /// so steady-state insert/evict churn stops hitting the allocator.
+    label_pool: Vec<Vec<Token>>,
     total_tokens: u64,
 }
 
 pub const ROOT: usize = 0;
+
+/// Cap on pooled label vectors; beyond this, freed labels drop normally.
+const LABEL_POOL_CAP: usize = 64;
 
 impl Default for RadixTree {
     fn default() -> Self {
@@ -69,13 +77,30 @@ impl RadixTree {
         RadixTree {
             nodes: vec![Some(Node {
                 label: vec![],
-                children: HashMap::new(),
+                children: FxHashMap::default(),
                 parent: ROOT,
                 last_access: 0,
                 access_count: 0,
             })],
             free: vec![],
+            label_pool: vec![],
             total_tokens: 0,
+        }
+    }
+
+    /// A label vector holding a copy of `toks`, reusing a pooled
+    /// allocation when one is available.
+    fn take_label(&mut self, toks: &[Token]) -> Vec<Token> {
+        let mut label = self.label_pool.pop().unwrap_or_default();
+        label.clear();
+        label.extend_from_slice(toks);
+        label
+    }
+
+    /// Return a freed label's allocation to the pool.
+    fn pool_label(&mut self, label: Vec<Token>) {
+        if label.capacity() > 0 && self.label_pool.len() < LABEL_POOL_CAP {
+            self.label_pool.push(label);
         }
     }
 
@@ -162,11 +187,11 @@ impl RadixTree {
             match self.node(cur).children.get(&first).copied() {
                 None => {
                     // new leaf with the remaining suffix
-                    let label: Vec<Token> = seq[pos..].to_vec();
+                    let label = self.take_label(&seq[pos..]);
                     let added = label.len() as u64;
                     let leaf = self.alloc(Node {
                         label,
-                        children: HashMap::new(),
+                        children: FxHashMap::default(),
                         parent: cur,
                         last_access: now,
                         access_count: 1,
@@ -208,15 +233,25 @@ impl RadixTree {
     /// Split `child`'s edge after `common` tokens, introducing a mid node.
     fn split_edge(&mut self, parent: usize, child: usize, common: usize, now: Nanos) {
         debug_assert!(common > 0 && common < self.node(child).label.len());
-        let child_node = self.node_mut(child);
-        let suffix = child_node.label.split_off(common);
-        let prefix = std::mem::take(&mut child_node.label);
+        let (full, la, ac) = {
+            let child_node = self.node_mut(child);
+            (
+                std::mem::take(&mut child_node.label),
+                child_node.last_access,
+                child_node.access_count,
+            )
+        };
+        // Copy the suffix into a pooled vector and truncate the original
+        // allocation in place for the prefix — no fresh allocation unless
+        // the pool is empty.
+        let suffix = self.take_label(&full[common..]);
+        let mut prefix = full;
+        prefix.truncate(common);
         let (first_prefix, first_suffix) = (prefix[0], suffix[0]);
-        let (la, ac) = (child_node.last_access, child_node.access_count);
         // mid node takes the prefix
         let mid = self.alloc(Node {
             label: prefix,
-            children: HashMap::new(),
+            children: FxHashMap::default(),
             parent,
             last_access: now.max(la),
             access_count: ac,
@@ -247,15 +282,26 @@ impl RadixTree {
 
     /// Full token path from the root to (and including) node `id`.
     pub fn path_tokens(&self, id: usize) -> Vec<Token> {
-        let mut labels = vec![];
+        // Two walks: size the output exactly, then fill back-to-front by
+        // slice copy — one allocation instead of one per path node.
+        let mut len = 0usize;
         let mut cur = id;
         while cur != ROOT {
             let n = self.node(cur);
-            labels.push(n.label.clone());
+            len += n.label.len();
             cur = n.parent;
         }
-        labels.reverse();
-        labels.concat()
+        let mut out = vec![0 as Token; len];
+        let mut end = len;
+        cur = id;
+        while cur != ROOT {
+            let n = self.node(cur);
+            let start = end - n.label.len();
+            out[start..end].copy_from_slice(&n.label);
+            end = start;
+            cur = n.parent;
+        }
+        out
     }
 
     /// Remove a leaf node, returning its token count. Panics on non-leaf.
@@ -265,10 +311,12 @@ impl RadixTree {
         assert!(node.children.is_empty(), "remove_leaf on internal node");
         let parent = node.parent;
         let first = node.label[0];
+        let freed = node.label.len() as u64;
         self.node_mut(parent).children.remove(&first);
         self.free.push(id);
-        self.total_tokens -= node.label.len() as u64;
-        node.label.len() as u64
+        self.total_tokens -= freed;
+        self.pool_label(node.label);
+        freed
     }
 
     /// Check structural invariants (tests).

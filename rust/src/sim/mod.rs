@@ -1,9 +1,10 @@
 //! Discrete-event simulation core.
 //!
-//! Time is `u64` nanoseconds ([`Nanos`]). The engine is a binary-heap event
-//! queue with deterministic tie-breaking: events at equal timestamps pop in
-//! insertion order (a monotone sequence number), so simulations are
-//! bit-reproducible regardless of heap internals.
+//! Time is `u64` nanoseconds ([`Nanos`]). The engine is a two-level
+//! calendar queue with deterministic tie-breaking: events at equal
+//! timestamps pop in insertion order (a monotone sequence number), so
+//! simulations are bit-reproducible regardless of queue internals. See
+//! DESIGN.md §10 for the structure and its determinism argument.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -31,9 +32,10 @@ pub fn nanos_to_secs(n: Nanos) -> f64 {
 
 /// An event tag dispatched by the coordinator run loop.
 ///
-/// Keeping the payload a plain enum (rather than boxed closures) keeps the
-/// hot loop allocation-free and the schedule inspectable in tests.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// Keeping the payload a plain `Copy` enum (rather than boxed closures)
+/// keeps the hot loop allocation-free and the schedule inspectable in
+/// tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Event {
     /// A new request arrives at the global router.
     RequestArrival { request_id: u64 },
@@ -57,7 +59,7 @@ pub enum Event {
     InstanceFail { instance: usize },
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone, Copy)]
 struct Scheduled {
     at: Nanos,
     seq: u64,
@@ -85,18 +87,84 @@ impl Ord for Scheduled {
     }
 }
 
+/// Simulated time covered by one calendar bucket: 2^20 ns ≈ 1.05 ms,
+/// matching the natural event spacing (step completions and arrival gaps
+/// are µs-to-ms scale).
+const BUCKET_BITS: u32 = 20;
+/// Near-future ring size (power of two). Horizon = 512 * 2^20 ns ≈ 537 ms;
+/// anything farther (controller ticks on long quiet phases, diurnal
+/// arrivals) waits in the sorted overflow heap.
+const NUM_BUCKETS: usize = 512;
+const SLOT_MASK: usize = NUM_BUCKETS - 1;
+/// Occupancy bitmap words (one bit per bucket slot).
+const WORDS: usize = NUM_BUCKETS / 64;
+
+#[inline]
+fn bucket_of(at: Nanos) -> u64 {
+    at >> BUCKET_BITS
+}
+
+#[inline]
+fn slot_of(bucket: u64) -> usize {
+    (bucket as usize) & SLOT_MASK
+}
+
 /// Deterministic event queue + clock.
-#[derive(Debug, Default)]
+///
+/// A two-level calendar queue: a ring of [`NUM_BUCKETS`] near-future
+/// buckets (each spanning `2^BUCKET_BITS` ns) plus a sorted overflow heap
+/// for events beyond the ring horizon. The total order is exactly
+/// `(at, seq)` — identical to the original binary-heap implementation:
+///
+/// * `base` (the active bucket) only advances in [`pop`](Self::pop), and
+///   [`schedule_at`](Self::schedule_at) clamps to `now`, so no event can
+///   ever target a bucket behind the active one.
+/// * the active bucket is sorted by `(at, seq)` when entered and inserts
+///   into it keep the undrained tail sorted (a new event always carries
+///   the largest `seq`, so its position depends on `at` alone);
+/// * overflow events migrate into their bucket the moment it becomes
+///   active, before the entry sort — so a bucket is always fully
+///   populated when it is ordered.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Scheduled>,
+    /// Near-future FIFO buckets, indexed by `bucket & SLOT_MASK`. Only the
+    /// active bucket is sorted; the rest are insertion-ordered until
+    /// entered.
+    buckets: Vec<Vec<Scheduled>>,
+    /// One bit per occupied slot, for O(words) next-bucket scans.
+    occupied: [u64; WORDS],
+    /// Events currently in the ring (including the active bucket's tail).
+    ring_len: usize,
+    /// Bucket index (`at >> BUCKET_BITS`) of the active bucket.
+    base: u64,
+    /// Drain cursor within the active bucket.
+    head: usize,
+    /// Far-future events (bucket ≥ base + NUM_BUCKETS), earliest first.
+    overflow: BinaryHeap<Scheduled>,
     now: Nanos,
     seq: u64,
     processed: u64,
 }
 
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl EventQueue {
     pub fn new() -> Self {
-        Self::default()
+        EventQueue {
+            buckets: (0..NUM_BUCKETS).map(|_| Vec::new()).collect(),
+            occupied: [0; WORDS],
+            ring_len: 0,
+            base: 0,
+            head: 0,
+            overflow: BinaryHeap::new(),
+            now: 0,
+            seq: 0,
+            processed: 0,
+        }
     }
 
     /// Current simulation time.
@@ -110,23 +178,64 @@ impl EventQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.ring_len + self.overflow.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.ring_len == 0 && self.overflow.is_empty()
+    }
+
+    #[inline]
+    fn mark(&mut self, slot: usize) {
+        self.occupied[slot >> 6] |= 1u64 << (slot & 63);
+    }
+
+    #[inline]
+    fn unmark(&mut self, slot: usize) {
+        self.occupied[slot >> 6] &= !(1u64 << (slot & 63));
+    }
+
+    /// Circular distance (in buckets) from `cur_slot` to the next occupied
+    /// slot. Only called with `ring_len > 0` and the active bucket empty.
+    fn next_occupied_distance(&self, cur_slot: usize) -> u64 {
+        for d in 1..=NUM_BUCKETS as u64 {
+            let slot = (cur_slot + d as usize) & SLOT_MASK;
+            if self.occupied[slot >> 6] & (1u64 << (slot & 63)) != 0 {
+                return d;
+            }
+        }
+        unreachable!("ring_len > 0 but occupancy bitmap is empty");
     }
 
     /// Schedule `event` at absolute time `at` (clamped to now if in the
     /// past — the engine never time-travels).
     pub fn schedule_at(&mut self, at: Nanos, event: Event) {
         let at = at.max(self.now);
-        self.heap.push(Scheduled {
+        let s = Scheduled {
             at,
             seq: self.seq,
             event,
-        });
+        };
         self.seq += 1;
+        let b = bucket_of(at);
+        debug_assert!(b >= self.base, "event behind the active bucket");
+        if b >= self.base.saturating_add(NUM_BUCKETS as u64) {
+            self.overflow.push(s);
+            return;
+        }
+        let slot = slot_of(b);
+        if b == self.base {
+            // Keep the active bucket's undrained tail sorted: the new
+            // event has the largest seq, so it sits after every queued
+            // event with the same timestamp.
+            let bucket = &mut self.buckets[slot];
+            let ins = self.head + bucket[self.head..].partition_point(|e| e.at <= at);
+            bucket.insert(ins, s);
+        } else {
+            self.buckets[slot].push(s);
+        }
+        self.ring_len += 1;
+        self.mark(slot);
     }
 
     /// Schedule `event` `delay` ns from now.
@@ -134,9 +243,60 @@ impl EventQueue {
         self.schedule_at(self.now.saturating_add(delay), event);
     }
 
+    /// Move `base` to the bucket holding the globally earliest event, pull
+    /// that bucket's overflow stragglers in, and sort it. No-op while the
+    /// active bucket still has events.
+    fn advance(&mut self) {
+        let cur_slot = slot_of(self.base);
+        if self.head < self.buckets[cur_slot].len() {
+            return;
+        }
+        let ring_next = if self.ring_len > 0 {
+            Some(self.base + self.next_occupied_distance(cur_slot))
+        } else {
+            None
+        };
+        let over_next = self.overflow.peek().map(|s| bucket_of(s.at));
+        let target = match (ring_next, over_next) {
+            (Some(r), Some(o)) => r.min(o),
+            (Some(r), None) => r,
+            (None, Some(o)) => o,
+            (None, None) => return,
+        };
+        self.base = target;
+        self.head = 0;
+        let slot = slot_of(target);
+        while let Some(s) = self.overflow.peek() {
+            if bucket_of(s.at) != target {
+                break;
+            }
+            let s = *s;
+            self.overflow.pop();
+            self.buckets[slot].push(s);
+            self.ring_len += 1;
+        }
+        if !self.buckets[slot].is_empty() {
+            self.mark(slot);
+            self.buckets[slot].sort_unstable_by_key(|s| (s.at, s.seq));
+        }
+    }
+
     /// Pop the next event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(Nanos, Event)> {
-        let s = self.heap.pop()?;
+        self.advance();
+        let slot = slot_of(self.base);
+        if self.head >= self.buckets[slot].len() {
+            return None; // ring and overflow both empty
+        }
+        let s = self.buckets[slot][self.head];
+        self.head += 1;
+        self.ring_len -= 1;
+        if self.head == self.buckets[slot].len() {
+            // clear() keeps the allocation — steady state reuses it.
+            self.buckets[slot].clear();
+            self.head = 0;
+            self.unmark(slot);
+        }
         debug_assert!(s.at >= self.now, "event queue went backwards");
         self.now = s.at;
         self.processed += 1;
@@ -145,7 +305,25 @@ impl EventQueue {
 
     /// Timestamp of the next event without popping.
     pub fn peek_time(&self) -> Option<Nanos> {
-        self.heap.peek().map(|s| s.at)
+        let bucket = &self.buckets[slot_of(self.base)];
+        if self.head < bucket.len() {
+            return Some(bucket[self.head].at);
+        }
+        // Active bucket drained: the next event is the earliest of the
+        // next occupied ring bucket (unsorted — scan it) and the overflow
+        // head. Cheap because this branch runs at most once per bucket.
+        let ring_min = if self.ring_len > 0 {
+            let d = self.next_occupied_distance(slot_of(self.base));
+            let slot = (slot_of(self.base) + d as usize) & SLOT_MASK;
+            self.buckets[slot].iter().map(|s| s.at).min()
+        } else {
+            None
+        };
+        let over_min = self.overflow.peek().map(|s| s.at);
+        match (ring_min, over_min) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
 }
 
@@ -210,5 +388,145 @@ mod tests {
         q.pop();
         q.pop();
         assert_eq!(q.processed(), 2);
+    }
+
+    // ---- calendar-queue specifics -------------------------------------
+
+    /// One bucket spans 2^BUCKET_BITS ns; the ring spans NUM_BUCKETS of
+    /// them. Times chosen around those edges exercise ring vs overflow.
+    const BUCKET: Nanos = 1 << BUCKET_BITS;
+    const HORIZON: Nanos = BUCKET * NUM_BUCKETS as Nanos;
+
+    #[test]
+    fn far_future_overflow_pops_in_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3 * HORIZON, Event::MetricsTick); // deep overflow
+        q.schedule_at(5, Event::Wake { instance: 1 });
+        q.schedule_at(HORIZON + 7, Event::Wake { instance: 2 }); // just past horizon
+        q.schedule_at(HORIZON - 1, Event::Wake { instance: 3 }); // last ring bucket
+        assert_eq!(q.len(), 4);
+        let order: Vec<Nanos> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![5, HORIZON - 1, HORIZON + 7, 3 * HORIZON]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn overflow_ties_still_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..4 {
+            q.schedule_at(2 * HORIZON, Event::Wake { instance: i });
+        }
+        let order: Vec<Event> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        let expect: Vec<Event> = (0..4).map(|i| Event::Wake { instance: i }).collect();
+        assert_eq!(order, expect);
+    }
+
+    #[test]
+    fn interleaved_push_pop_across_buckets() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10, Event::Wake { instance: 0 });
+        q.schedule_at(5 * BUCKET, Event::Wake { instance: 1 });
+        assert_eq!(q.pop().unwrap().0, 10);
+        // insert into the (drained) active bucket at the current time
+        q.schedule_at(10, Event::Wake { instance: 2 });
+        // and into a bucket between active and the queued one
+        q.schedule_at(2 * BUCKET, Event::Wake { instance: 3 });
+        let order: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|(_, e)| match e {
+                Event::Wake { instance } => instance,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn saturating_far_future_schedule() {
+        let mut q = EventQueue::new();
+        q.schedule_at(100, Event::MetricsTick);
+        q.pop();
+        q.schedule_in(u64::MAX, Event::Wake { instance: 9 }); // saturates
+        q.schedule_in(u64::MAX, Event::Wake { instance: 10 });
+        assert_eq!(q.peek_time(), Some(u64::MAX));
+        assert_eq!(q.pop(), Some((u64::MAX, Event::Wake { instance: 9 })));
+        assert_eq!(q.pop(), Some((u64::MAX, Event::Wake { instance: 10 })));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn peek_matches_pop_when_active_bucket_drained() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1, Event::MetricsTick);
+        q.schedule_at(7 * BUCKET + 3, Event::Wake { instance: 1 });
+        q.schedule_at(HORIZON + 1, Event::Wake { instance: 2 });
+        q.pop(); // drains the active bucket
+        assert_eq!(q.peek_time(), Some(7 * BUCKET + 3));
+        assert_eq!(q.pop().unwrap().0, 7 * BUCKET + 3);
+        assert_eq!(q.peek_time(), Some(HORIZON + 1));
+        assert_eq!(q.pop().unwrap().0, HORIZON + 1);
+        assert_eq!(q.peek_time(), None);
+    }
+
+    /// Mini soak against a sorted reference: random pushes (bursts, near
+    /// and far future) interleaved with pops must match (at, seq) order
+    /// exactly. The full property test lives in tests/queue_equivalence.rs.
+    #[test]
+    fn random_soak_matches_sorted_reference() {
+        let mut q = EventQueue::new();
+        let mut reference: Vec<(Nanos, u64, Event)> = vec![];
+        let mut seq = 0u64;
+        let mut state = 0x2545F4914F6CDD1Du64;
+        let mut rand = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let mut popped = vec![];
+        let mut expect = vec![];
+        for round in 0..2000 {
+            let delay = match rand() % 5 {
+                0 => 0,
+                1 => rand() % 1000,
+                2 => rand() % (4 * BUCKET),
+                3 => rand() % (2 * HORIZON),
+                _ => rand() % (8 * HORIZON),
+            };
+            let ev = Event::Wake {
+                instance: round as usize,
+            };
+            let at = q.now().saturating_add(delay);
+            q.schedule_in(delay, ev);
+            reference.push((at, seq, ev));
+            seq += 1;
+            if rand() % 3 == 0 {
+                // pop the reference minimum and compare
+                if let Some((t, e)) = q.pop() {
+                    popped.push((t, e));
+                    let min_idx = reference
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, &(a, s, _))| (a, s))
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    let (a, _, e) = reference.remove(min_idx);
+                    expect.push((a, e));
+                }
+            }
+        }
+        while let Some((t, e)) = q.pop() {
+            popped.push((t, e));
+            let min_idx = reference
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &(a, s, _))| (a, s))
+                .map(|(i, _)| i)
+                .unwrap();
+            let (a, _, e) = reference.remove(min_idx);
+            expect.push((a, e));
+        }
+        assert!(reference.is_empty());
+        assert_eq!(popped, expect);
     }
 }

@@ -1,0 +1,128 @@
+//! Deterministic fast hashing for hot-path maps.
+//!
+//! `std::collections::HashMap` defaults to SipHash-1-3 with a per-process
+//! random key. That is the right default against untrusted input, but in
+//! the simulator's hot loops (radix-tree child lookups, in-flight KV
+//! transfer tracking) the keys are small trusted integers and SipHash is
+//! pure overhead. This module provides the well-known Fx multiply-rotate
+//! hash (as used by rustc): a few cycles per word and — crucially for
+//! reproducibility — no random state, so map behaviour is identical
+//! across runs and platforms.
+//!
+//! Determinism caveat: code must still never depend on map *iteration*
+//! order (byte-identical reports rely on explicit ordering everywhere);
+//! using a fixed hasher merely removes per-process entropy, it does not
+//! make iteration order part of the contract.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Multiply-rotate hasher with no per-process state.
+#[derive(Debug, Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in chunks.by_ref() {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rest.len()].copy_from_slice(rest);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`]; usable anywhere `RandomState` is.
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` keyed with the deterministic Fx hash. Construct with
+/// `FxHashMap::default()`.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hashes_are_stable_across_hashers() {
+        let a = {
+            let mut h = FxHasher::default();
+            h.write_u64(0xdead_beef);
+            h.finish()
+        };
+        let b = {
+            let mut h = FxHasher::default();
+            h.write_u64(0xdead_beef);
+            h.finish()
+        };
+        assert_eq!(a, b);
+        assert_ne!(a, 0);
+    }
+
+    #[test]
+    fn distinct_inputs_differ() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0u64..1000 {
+            let mut h = FxHasher::default();
+            h.write_u64(i);
+            assert!(seen.insert(h.finish()), "collision at {i}");
+        }
+    }
+
+    #[test]
+    fn byte_writes_cover_tail() {
+        let mut h1 = FxHasher::default();
+        h1.write(b"abcdefghij"); // 8-byte chunk + 2-byte tail
+        let mut h2 = FxHasher::default();
+        h2.write(b"abcdefghik");
+        assert_ne!(h1.finish(), h2.finish());
+    }
+
+    #[test]
+    fn map_works_as_drop_in() {
+        let mut m: FxHashMap<u32, usize> = FxHashMap::default();
+        for i in 0..100u32 {
+            m.insert(i, i as usize * 2);
+        }
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.get(&40), Some(&80));
+        m.remove(&40);
+        assert_eq!(m.get(&40), None);
+    }
+}

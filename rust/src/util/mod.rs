@@ -4,6 +4,7 @@
 //! DESIGN.md §1.
 
 pub mod bench;
+pub mod fxhash;
 pub mod json;
 pub mod logging;
 pub mod prop;

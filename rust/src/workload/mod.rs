@@ -161,6 +161,15 @@ impl Request {
     /// `shared_prefix` tokens are a deterministic function of the session
     /// (so session-mates share them), the remainder unique to the request.
     pub fn token_ids(&self) -> Vec<u32> {
+        let mut out = vec![];
+        self.fill_token_ids(&mut out);
+        out
+    }
+
+    /// [`token_ids`](Self::token_ids) into a caller-owned scratch buffer —
+    /// hot paths (admission-time cache lookups, post-prefill inserts) reuse
+    /// one buffer per instance instead of allocating a `Vec` per request.
+    pub fn fill_token_ids(&self, buf: &mut Vec<u32>) {
         let mix = |a: u64, b: u64| -> u32 {
             let mut x = a
                 .wrapping_mul(0x9E3779B97F4A7C15)
@@ -169,15 +178,15 @@ impl Request {
             x = x.wrapping_mul(0x94D049BB133111EB);
             (x >> 33) as u32
         };
-        (0..self.prompt_tokens)
-            .map(|i| {
-                if i < self.shared_prefix {
-                    mix(self.session.wrapping_add(1) << 1, i)
-                } else {
-                    mix((self.id << 1) | 1, i) | 0x8000_0000 // disjoint space
-                }
-            })
-            .collect()
+        buf.clear();
+        buf.reserve(self.prompt_tokens as usize);
+        for i in 0..self.prompt_tokens {
+            buf.push(if i < self.shared_prefix {
+                mix(self.session.wrapping_add(1) << 1, i)
+            } else {
+                mix((self.id << 1) | 1, i) | 0x8000_0000 // disjoint space
+            });
+        }
     }
 }
 
