@@ -16,7 +16,6 @@
 //!
 //! The loop is fully deterministic given the config seed.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::cluster::{
@@ -39,6 +38,7 @@ use crate::perf::PerfModel;
 use crate::policy::{EvictionPolicy, PolicyRegistry, RoutePolicy, SchedulePolicy};
 use crate::router::{GlobalRouter, InstanceView};
 use crate::sim::{Event, EventQueue, Nanos, MILLI};
+use crate::util::fxhash::FxHashMap;
 use crate::workload::{Request, TrafficSource};
 
 /// Build the per-instance performance model for `backend`.
@@ -124,10 +124,18 @@ pub struct Simulation {
     /// the completion of a step started after recovery.
     pending: Vec<Option<(Nanos, StepOutcome)>>,
     /// In-flight P/D hand-offs: req id -> (request, destination instance).
-    kv_in_flight: HashMap<u64, (Request, usize)>,
+    /// The request is *moved* here from the prefill instance's handoff (it
+    /// lives nowhere else until `KvTransferDone` delivers it), and the map
+    /// uses the deterministic Fx hasher — keys are trusted request ids.
+    kv_in_flight: FxHashMap<u64, (Request, usize)>,
     /// Requests displaced by a drain/failure with no dispatchable target
     /// yet; retried (in id order) whenever an instance turns `Active`.
     parked: Vec<Request>,
+    /// Reused buffer for router-visible instance views (refilled by
+    /// `fill_views` on every dispatch instead of allocating a `Vec`).
+    views_scratch: Vec<InstanceView>,
+    /// Reused token-id buffer for prefix-match routing and cache inserts.
+    tok_scratch: Vec<u32>,
     pub steps_total: u64,
     // ---- cluster-dynamics plumbing (DESIGN.md §9) ----
     /// Registry snapshot kept for resolving policies of scaled-up
@@ -344,8 +352,10 @@ impl SimulationBuilder {
             next_arrival: None,
             busy: vec![false; n],
             pending: (0..n).map(|_| None).collect(),
-            kv_in_flight: HashMap::new(),
+            kv_in_flight: FxHashMap::default(),
             parked: vec![],
+            views_scratch: vec![],
+            tok_scratch: vec![],
             steps_total: 0,
             registry,
             perf_factory,
@@ -457,29 +467,37 @@ impl Simulation {
         }
     }
 
-    /// Router-visible views, computing the prefix match for `req` if given.
-    /// Only `Active` instances are marked compatible — `Starting`,
-    /// `Draining`, and `Stopped` instances never receive new requests.
-    fn views(&self, req: Option<&Request>) -> Vec<InstanceView> {
-        let toks = req.map(|r| r.token_ids());
-        self.instances
-            .iter()
-            .enumerate()
-            .map(|(i, inst)| {
-                let prefix_match = match (&toks, self.cache_of[i]) {
-                    (Some(t), Some(c)) => self.caches[c].peek(t),
-                    _ => 0,
-                };
-                InstanceView {
-                    id: i,
-                    role: inst.cfg.role,
-                    outstanding: inst.outstanding(),
-                    kv_utilization: inst.kv_utilization(),
-                    prefix_match,
-                    compatible: inst.lifecycle().is_active(),
-                }
-            })
-            .collect()
+    /// Refill `views_scratch` with router-visible views, computing the
+    /// prefix match for `req` if given. Only `Active` instances are marked
+    /// compatible — `Starting`, `Draining`, and `Stopped` instances never
+    /// receive new requests.
+    fn fill_views(&mut self, req: Option<&Request>) {
+        // Token ids only matter when some instance has a prefix cache
+        // (`cache_of` is all-None otherwise and every prefix_match is 0);
+        // skipping the fill avoids materializing ids on every arrival of
+        // cache-less presets.
+        let mut use_toks = false;
+        if let Some(r) = req {
+            if !self.caches.is_empty() {
+                r.fill_token_ids(&mut self.tok_scratch);
+                use_toks = true;
+            }
+        }
+        self.views_scratch.clear();
+        for (i, inst) in self.instances.iter().enumerate() {
+            let prefix_match = match self.cache_of[i] {
+                Some(c) if use_toks => self.caches[c].peek(&self.tok_scratch),
+                _ => 0,
+            };
+            self.views_scratch.push(InstanceView {
+                id: i,
+                role: inst.cfg.role,
+                outstanding: inst.outstanding(),
+                kv_utilization: inst.kv_utilization(),
+                prefix_match,
+                compatible: inst.lifecycle().is_active(),
+            });
+        }
     }
 
     /// Start a step on instance `i` if it is idle and has work. `Draining`
@@ -509,7 +527,7 @@ impl Simulation {
 
     /// Apply a completed step's observable effects at time `now`.
     fn complete_step(&mut self, i: usize, now: Nanos) {
-        let (_, out) = self.pending[i]
+        let (_, mut out) = self.pending[i]
             .take()
             .expect("step completion without outcome");
         self.busy[i] = false;
@@ -527,13 +545,16 @@ impl Simulation {
         // prefix-cache inserts for finished prefills
         if let Some(c) = self.cache_of[i] {
             for req in &out.prefill_done {
-                self.caches[c].insert(&req.token_ids(), now);
+                req.fill_token_ids(&mut self.tok_scratch);
+                self.caches[c].insert(&self.tok_scratch, now);
             }
         }
-        // P/D hand-offs
-        for h in &out.handoff {
-            let views = self.views(None);
-            let Some(dst) = self.router.pick_decode(&views) else {
+        // P/D hand-offs: each request moves out of the outcome and into
+        // the in-flight map — the prefill instance already dropped it, so
+        // no clone is needed anywhere on this path.
+        for h in out.handoff.drain(..) {
+            self.fill_views(None);
+            let Some(dst) = self.router.pick_decode(&self.views_scratch) else {
                 log::warn!("no decode instance for request {}", h.req.id);
                 continue;
             };
@@ -546,15 +567,18 @@ impl Simulation {
                 }
             };
             let done = self.inter_fabric.transfer(i, dst, bytes, now);
-            self.kv_in_flight.insert(h.req.id, (h.req.clone(), dst));
+            let request_id = h.req.id;
+            self.kv_in_flight.insert(request_id, (h.req, dst));
             self.queue.schedule_at(
                 done,
                 Event::KvTransferDone {
-                    request_id: h.req.id,
+                    request_id,
                     dst_instance: dst,
                 },
             );
         }
+        // Hand the spent outcome back so the next step reuses its buffers.
+        self.instances[i].recycle_outcome(out);
         self.kick(i, now);
         self.maybe_finish_drain(i, now);
     }
@@ -665,8 +689,8 @@ impl Simulation {
     /// has pending intent). Used for fresh arrivals and for requests
     /// displaced by drains/failures alike.
     fn dispatch_request(&mut self, req: Request, now: Nanos) {
-        let views = self.views(Some(&req));
-        match self.router.dispatch(&req, &views) {
+        self.fill_views(Some(&req));
+        match self.router.dispatch(&req, &self.views_scratch) {
             Some(i) => {
                 self.metrics.on_dispatch(req.id, now, i);
                 self.instances[i].enqueue(req, now);

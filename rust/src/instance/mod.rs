@@ -82,6 +82,23 @@ pub struct StepOutcome {
     pub work: bool,
 }
 
+impl StepOutcome {
+    /// Clear for reuse, keeping every buffer's allocation. The coordinator
+    /// recycles outcomes through
+    /// [`ServingInstance::recycle_outcome`] so steady-state stepping does
+    /// no per-step `Vec` allocation.
+    pub fn reset(&mut self) {
+        self.duration = 0;
+        self.emitted.clear();
+        self.finished.clear();
+        self.handoff.clear();
+        self.prefill_done.clear();
+        self.cache_hits.clear();
+        self.rejected.clear();
+        self.work = false;
+    }
+}
+
 /// KV hand-off descriptor for P/D disaggregation.
 #[derive(Debug, Clone)]
 pub struct KvHandoff {
@@ -115,6 +132,15 @@ pub struct ServingInstance {
     /// Monotone counter for deterministic admission order.
     pub steps: u64,
     pub preemptions: u64,
+    // Reused hot-loop buffers (per-step batch bookkeeping + token-id
+    // materialization); emptied between uses, never shrunk.
+    tok_scratch: Vec<u32>,
+    scratch_prefill: Vec<(u64, u64, u64)>,
+    scratch_decode: Vec<(u64, u64)>,
+    scratch_preempted: Vec<u64>,
+    /// A recycled [`StepOutcome`] returned via
+    /// [`recycle_outcome`](Self::recycle_outcome).
+    spare_out: Option<StepOutcome>,
 }
 
 impl ServingInstance {
@@ -229,7 +255,18 @@ impl ServingInstance {
             lifecycle: Lifecycle::Active,
             steps: 0,
             preemptions: 0,
+            tok_scratch: vec![],
+            scratch_prefill: vec![],
+            scratch_decode: vec![],
+            scratch_preempted: vec![],
+            spare_out: None,
         })
+    }
+
+    /// Hand back a consumed [`StepOutcome`] so the next
+    /// [`begin_step`](Self::begin_step) reuses its buffers.
+    pub fn recycle_outcome(&mut self, out: StepOutcome) {
+        self.spare_out = Some(out);
     }
 
     /// Name of the resolved wait-queue ordering policy.
@@ -367,32 +404,38 @@ impl ServingInstance {
         prefix_cache: Option<&mut PrefixCache>,
     ) -> StepOutcome {
         self.steps += 1;
-        let mut out = StepOutcome::default();
+        let mut out = self.spare_out.take().unwrap_or_default();
+        out.reset();
 
         let mut cache = prefix_cache;
+        // Without a prefix cache the coordinator never reads
+        // `prefill_done`, so skip those `Request` clones entirely.
+        let has_cache = cache.is_some();
         self.admit(now, &mut cache, &mut out);
         if self.running.is_empty() {
             return out;
         }
         out.work = true;
 
-        // Partition the running batch.
-        let mut prefill: Vec<(u64, u64, u64)> = vec![]; // (id, chunk, total_after)
-        let mut decode: Vec<(u64, u64)> = vec![]; // (id, ctx)
+        // Partition the running batch, in reused scratch buffers (moved
+        // out of `self` so `price_iteration(&mut self, ..)` can borrow).
+        let mut prefill = std::mem::take(&mut self.scratch_prefill); // (id, chunk, total_after)
+        let mut decode = std::mem::take(&mut self.scratch_decode); // (id, ctx)
+        let mut preempted = std::mem::take(&mut self.scratch_preempted);
+        prefill.clear();
+        decode.clear();
+        preempted.clear();
         let mut budget = self.cfg.max_batch_tokens;
-        let decode_ids: Vec<u64> = self
-            .running
-            .iter()
-            .filter(|id| matches!(self.seqs[id].phase, Phase::Decode { .. }))
-            .copied()
-            .collect();
         // Decode tokens claim budget first (one per running decode seq).
-        for id in decode_ids {
-            let s = &self.seqs[&id];
-            decode.push((id, s.ctx_tokens()));
-            budget = budget.saturating_sub(1);
+        for i in 0..self.running.len() {
+            let s = &self.seqs[&self.running[i]];
+            if matches!(s.phase, Phase::Decode { .. }) {
+                decode.push((self.running[i], s.ctx_tokens()));
+                budget = budget.saturating_sub(1);
+            }
         }
-        for id in self.running.clone() {
+        for i in 0..self.running.len() {
+            let id = self.running[i];
             let s = &self.seqs[&id];
             if let Phase::Prefill { done } = s.phase {
                 let done_eff = done
@@ -414,7 +457,6 @@ impl ServingInstance {
         }
 
         // KV growth for decode seqs; preempt on memory pressure.
-        let mut preempted: Vec<u64> = vec![];
         for &(id, _) in &decode {
             let s = &self.seqs[&id];
             let new_total = s.ctx_tokens() + 1;
@@ -422,15 +464,15 @@ impl ServingInstance {
                 preempted.push(id);
             }
         }
-        for id in &preempted {
-            self.preempt(*id, now);
+        for i in 0..preempted.len() {
+            self.preempt(preempted[i], now);
         }
-        let decode: Vec<(u64, u64)> = decode
-            .into_iter()
-            .filter(|(id, _)| !preempted.contains(id))
-            .collect();
+        decode.retain(|(id, _)| !preempted.contains(id));
         if decode.is_empty() && prefill.is_empty() {
             out.work = false;
+            self.scratch_prefill = prefill;
+            self.scratch_decode = decode;
+            self.scratch_preempted = preempted;
             return out;
         }
 
@@ -442,43 +484,54 @@ impl ServingInstance {
         out.duration = self.price_iteration(&prefill, &decode, host_load_tokens, now);
 
         // Advance state.
-        for (id, chunk, after) in prefill {
-            let s = self.seqs.get_mut(&id).unwrap();
-            let total = s.req.prompt_tokens;
-            let cached = s.cached_tokens + s.host_cached_tokens;
+        for &(id, _chunk, after) in &prefill {
+            let (total, cached) = {
+                let s = &self.seqs[&id];
+                (s.req.prompt_tokens, s.cached_tokens + s.host_cached_tokens)
+            };
             let done_after = (after.max(cached)).min(total);
-            if done_after >= total {
-                // Prefill complete.
-                out.prefill_done.push(s.req.clone());
-                match self.cfg.role {
-                    Role::Prefill => {
-                        // First token emitted here; KV ships to a decode inst.
-                        let req = s.req.clone();
-                        let kv_bytes =
-                            req.prompt_tokens * self.model.kv_bytes_per_token();
-                        out.emitted.push(id);
-                        out.handoff.push(KvHandoff { req, kv_bytes });
+            if done_after < total {
+                self.seqs.get_mut(&id).unwrap().phase =
+                    Phase::Prefill { done: done_after };
+                continue;
+            }
+            // Prefill complete.
+            match self.cfg.role {
+                Role::Prefill => {
+                    // First token emitted here; KV ships to a decode
+                    // instance. The sequence is done on this instance, so
+                    // the request MOVES into the handoff — no clone.
+                    out.emitted.push(id);
+                    self.running.retain(|&x| x != id);
+                    self.blocks.free_seq(id);
+                    let st = self.seqs.remove(&id).expect("prefill seq vanished");
+                    if has_cache {
+                        out.prefill_done.push(st.req.clone());
+                    }
+                    let kv_bytes =
+                        st.req.prompt_tokens * self.model.kv_bytes_per_token();
+                    out.handoff.push(KvHandoff {
+                        req: st.req,
+                        kv_bytes,
+                    });
+                }
+                _ => {
+                    let s = self.seqs.get_mut(&id).unwrap();
+                    if has_cache {
+                        out.prefill_done.push(s.req.clone());
+                    }
+                    s.phase = Phase::Decode { generated: 1 };
+                    out.emitted.push(id);
+                    if s.req.output_tokens <= 1 {
+                        out.finished.push(id);
                         self.running.retain(|&x| x != id);
                         self.blocks.free_seq(id);
                         self.seqs.remove(&id);
                     }
-                    _ => {
-                        s.phase = Phase::Decode { generated: 1 };
-                        out.emitted.push(id);
-                        if s.req.output_tokens <= 1 {
-                            out.finished.push(id);
-                            self.running.retain(|&x| x != id);
-                            self.blocks.free_seq(id);
-                            self.seqs.remove(&id);
-                        }
-                    }
                 }
-                let _ = chunk;
-            } else {
-                s.phase = Phase::Prefill { done: done_after };
             }
         }
-        for (id, _) in decode {
+        for &(id, _) in &decode {
             let s = self.seqs.get_mut(&id).unwrap();
             if let Phase::Decode { generated } = s.phase {
                 let g = generated + 1;
@@ -492,6 +545,9 @@ impl ServingInstance {
                 }
             }
         }
+        self.scratch_prefill = prefill;
+        self.scratch_decode = decode;
+        self.scratch_preempted = preempted;
         out
     }
 
@@ -525,14 +581,17 @@ impl ServingInstance {
             self.seqs.remove(&id);
             out.rejected.push(id);
         }
-        let mut admitted = vec![];
+        // The admission loop only ever accepts a *prefix* of the ordered
+        // wait queue (every reject is a `break`), so admitted ids can be
+        // drained in one splice instead of a retain() per id.
+        let mut admitted = 0usize;
         let mut prefill_budget = self.cfg.max_batch_tokens;
         let mut free_blocks = self.blocks.free_blocks();
-        for &id in self.wait.iter() {
-            if self.running.len() + admitted.len() >= self.cfg.max_batch_seqs {
+        while admitted < self.wait.len() {
+            if self.running.len() + admitted >= self.cfg.max_batch_seqs {
                 break;
             }
-            let s = &self.seqs[&id];
+            let s = &self.seqs[&self.wait[admitted]];
             let need_tokens = s.ctx_tokens().max(s.req.prompt_tokens) + 1;
             let need_blocks = self.blocks.blocks_for(need_tokens);
             if need_blocks > free_blocks {
@@ -545,21 +604,20 @@ impl ServingInstance {
                 let want = s.req.prompt_tokens.min(
                     self.cfg.chunked_prefill.unwrap_or(s.req.prompt_tokens),
                 );
-                if want > prefill_budget && !admitted.is_empty() {
+                if want > prefill_budget && admitted > 0 {
                     break;
                 }
                 prefill_budget = prefill_budget.saturating_sub(want);
             }
-            admitted.push(id);
+            admitted += 1;
         }
-        for id in admitted {
-            self.wait.retain(|&x| x != id);
+        for id in self.wait.drain(..admitted) {
             // Prefix-cache lookup at admission (prefill seqs only).
             let s = self.seqs.get_mut(&id).unwrap();
             if matches!(s.phase, Phase::Prefill { done: 0 }) && s.preemptions == 0 {
                 if let Some(c) = cache.as_deref_mut() {
-                    let toks = s.req.token_ids();
-                    let hit = c.lookup(&toks, now);
+                    s.req.fill_token_ids(&mut self.tok_scratch);
+                    let hit = c.lookup(&self.tok_scratch, now);
                     // never cache-skip the whole prompt: the last token must
                     // be recomputed to produce the first output logits
                     let max_skip = s.req.prompt_tokens.saturating_sub(1);
@@ -598,8 +656,9 @@ impl ServingInstance {
     }
 
     /// Insert a finished prompt into the prefix cache (post-prefill, §II-D).
-    pub fn cache_insert(&self, cache: &mut PrefixCache, req: &Request, now: Nanos) {
-        cache.insert(&req.token_ids(), now);
+    pub fn cache_insert(&mut self, cache: &mut PrefixCache, req: &Request, now: Nanos) {
+        req.fill_token_ids(&mut self.tok_scratch);
+        cache.insert(&self.tok_scratch, now);
     }
 
     // ---- iteration pricing -------------------------------------------------

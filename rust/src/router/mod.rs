@@ -47,6 +47,9 @@ pub trait RoutePolicy: Send {
 pub struct GlobalRouter {
     policy: Box<dyn RoutePolicy>,
     pub dispatched: u64,
+    /// Reused candidate buffer — dispatch runs once per arrival, so the
+    /// filtered snapshot is rebuilt in place instead of allocated.
+    candidates: Vec<InstanceView>,
 }
 
 impl GlobalRouter {
@@ -56,20 +59,26 @@ impl GlobalRouter {
         GlobalRouter {
             policy,
             dispatched: 0,
+            candidates: vec![],
         }
     }
 
     /// Route an arriving request to a prefill-capable instance.
     pub fn dispatch(&mut self, req: &Request, views: &[InstanceView]) -> Option<usize> {
-        let candidates: Vec<InstanceView> = views
-            .iter()
-            .filter(|v| v.compatible && matches!(v.role, Role::Unified | Role::Prefill))
-            .cloned()
-            .collect();
+        self.candidates.clear();
+        self.candidates.extend(
+            views
+                .iter()
+                .filter(|v| {
+                    v.compatible && matches!(v.role, Role::Unified | Role::Prefill)
+                })
+                .cloned(),
+        );
+        let candidates = &self.candidates;
         if candidates.is_empty() {
             return None;
         }
-        let chosen = self.policy.choose(req, &candidates);
+        let chosen = self.policy.choose(req, candidates);
         // Hard check even in release: custom policies are the headline API,
         // and the natural bug — returning a slice *index* instead of a
         // candidate *id* — would otherwise silently misroute to a filtered
