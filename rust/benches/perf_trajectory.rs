@@ -1,0 +1,202 @@
+//! Perf trajectory: the committed-speed ladder behind `BENCH_<n>.json`.
+//!
+//! Times a fixed scenario ladder (large poisson runs, a 1M-request
+//! multi-tenant bursty day, an autoscaling controller run, and a
+//! radix-heavy multi-turn sessions workload) and writes machine-readable
+//! results to `BENCH_6.json` at the repo root so every PR leaves a perf
+//! datapoint to beat. See DESIGN.md §10.
+//!
+//! Run: `cargo bench --bench perf_trajectory`
+//! Env:
+//!   LLMSS_BENCH_QUICK=1   tiny request counts + 3 iters (CI smoke)
+//!   LLMSS_BENCH_OUT=path  write the JSON somewhere else
+//!
+//! The previous file's measured scenarios (or carried `baseline`) become
+//! the new file's `baseline`, so refreshing the trajectory keeps the
+//! before/after pair in one document.
+
+use std::time::Duration;
+
+use llmservingsim::config::{presets, CacheScope, SimConfig};
+use llmservingsim::coordinator::run_config;
+use llmservingsim::util::bench::{Bencher, Table};
+use llmservingsim::util::json::{self, Value};
+use llmservingsim::workload::{LengthDist, Traffic};
+
+struct Scenario {
+    name: &'static str,
+    cfg: SimConfig,
+}
+
+fn scenarios(quick: bool) -> Vec<Scenario> {
+    // Quick mode shrinks request counts ~50-200x: same code paths, CI-sized.
+    let n = |full: usize, q: usize| if quick { q } else { full };
+    let mut out = vec![];
+
+    // Steady poisson load on a 2-instance fleet, no cache: the pure
+    // event-core + scheduler hot loop.
+    let mut c = presets::multi_dense("tiny-dense", "rtx3090");
+    c.workload.traffic = Traffic::poisson(2000.0);
+    c.workload.lengths = LengthDist::short();
+    c.workload.num_requests = n(100_000, 2_000);
+    out.push(Scenario {
+        name: "poisson_100k",
+        cfg: c,
+    });
+
+    let mut c = presets::multi_dense("tiny-dense", "rtx3090");
+    c.workload.traffic = Traffic::poisson(2000.0);
+    c.workload.lengths = LengthDist::short();
+    c.workload.num_requests = n(1_000_000, 5_000);
+    out.push(Scenario {
+        name: "poisson_1m",
+        cfg: c,
+    });
+
+    // The headline scenario: 1M requests, 4 tenants, MMPP bursts, SLO
+    // scheduling (the acceptance criterion's >= 2x target lives here).
+    let mut c = presets::multi_tenant_bursty(
+        presets::multi_dense("tiny-dense", "rtx3090"),
+        4,
+        2_000.0,
+    );
+    c.workload.lengths = LengthDist::short();
+    c.workload.num_requests = n(1_000_000, 5_000);
+    out.push(Scenario {
+        name: "multi_tenant_bursty_1m",
+        cfg: c,
+    });
+
+    // Controller path: scale-ups/downs, warmups, parked requests.
+    let mut c = presets::autoscale_bursty();
+    c.workload.num_requests = n(20_000, 500);
+    out.push(Scenario {
+        name: "autoscale_bursty",
+        cfg: c,
+    });
+
+    // Radix-heavy: multi-turn sessions re-sending growing prefixes into
+    // per-instance prefix caches (insert/lookup/evict churn).
+    let mut c = presets::with_prefix_cache(
+        presets::multi_dense("tiny-dense", "rtx3090"),
+        CacheScope::PerInstance,
+    );
+    c.workload.traffic = Traffic::sessions(50.0, 6, 0.2);
+    c.workload.lengths = LengthDist::short();
+    c.workload.num_requests = n(50_000, 1_000);
+    out.push(Scenario {
+        name: "radix_sessions",
+        cfg: c,
+    });
+
+    out
+}
+
+/// Peak resident set (VmHWM) in bytes, where the OS exposes it.
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+/// The previous output's measured scenarios (or its carried baseline) — the
+/// comparison point CI regresses against.
+fn carry_baseline(prior: &Value) -> Option<Value> {
+    let provisional = prior.get("provisional").as_bool() == Some(true);
+    if !provisional && prior.get("scenarios").as_obj().is_some() {
+        return Some(prior.get("scenarios").clone());
+    }
+    if prior.get("baseline").as_obj().is_some() {
+        return Some(prior.get("baseline").clone());
+    }
+    None
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("LLMSS_BENCH_QUICK").is_ok_and(|v| v != "0");
+    let out_path = std::env::var("LLMSS_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_6.json")
+        });
+    let bencher = if quick {
+        Bencher::quick()
+    } else {
+        Bencher {
+            warmup_iters: 1,
+            measure_iters: 5,
+            max_total: Duration::from_secs(180),
+        }
+    };
+
+    let baseline = json::load_file(&out_path)
+        .ok()
+        .as_ref()
+        .and_then(carry_baseline);
+
+    let mut table = Table::new(&[
+        "scenario",
+        "requests",
+        "wall median (s)",
+        "events",
+        "events/s",
+    ]);
+    let mut doc_scenarios: Vec<(&str, Value)> = vec![];
+
+    for sc in scenarios(quick) {
+        eprintln!(
+            "[{}] {} requests ...",
+            sc.name, sc.cfg.workload.num_requests
+        );
+        // One metadata run: deterministic counters (events/steps) and a
+        // sanity check that the scenario actually completes work.
+        let (report, summary) = run_config(sc.cfg.clone())?;
+        assert!(report.num_finished > 0, "{}: nothing finished", sc.name);
+        let r = bencher.run(sc.name, || {
+            run_config(sc.cfg.clone()).expect("scenario ran once already")
+        });
+        let wall = r.median_secs();
+        let eps = summary.events as f64 / wall.max(1e-12);
+        table.row(&[
+            sc.name.to_string(),
+            sc.cfg.workload.num_requests.to_string(),
+            format!("{wall:.4}"),
+            summary.events.to_string(),
+            format!("{eps:.0}"),
+        ]);
+        let rss = match peak_rss_bytes() {
+            Some(b) => Value::int(b as i64),
+            None => Value::Null,
+        };
+        doc_scenarios.push((
+            sc.name,
+            Value::obj(vec![
+                ("requests", Value::int(sc.cfg.workload.num_requests as i64)),
+                ("wall_secs_median", Value::float(wall)),
+                ("events_processed", Value::int(summary.events as i64)),
+                ("events_per_sec", Value::float(eps)),
+                ("steps", Value::int(summary.steps as i64)),
+                ("peak_rss_bytes", rss),
+            ]),
+        ));
+    }
+
+    let mut doc = vec![
+        ("bench", Value::str("perf_trajectory")),
+        ("quick", Value::Bool(quick)),
+        ("scenarios", Value::obj(doc_scenarios)),
+    ];
+    if let Some(b) = baseline {
+        doc.push(("baseline", b));
+    }
+    json::save_file(&out_path, &Value::obj(doc))?;
+
+    println!(
+        "\nPerf trajectory ({} mode):",
+        if quick { "quick" } else { "full" }
+    );
+    table.print();
+    println!("\nwrote {}", out_path.display());
+    Ok(())
+}

@@ -1,0 +1,344 @@
+//! ISSUE 6: the calendar event queue must be observably identical to a
+//! trivially-correct sorted reference queue, and the whole-simulation
+//! determinism contract — byte-identical report JSON — must hold across
+//! every serving preset, the {trace, analytical} perf backends, and
+//! 1-vs-8 sweep worker counts.
+//!
+//! The first half drives randomized op streams (same-timestamp bursts,
+//! far-future controller ticks, interleaved push/pop, behind-`now`
+//! schedules) through both queues and compares every observable: pop
+//! stream, `now`, `len`, and `peek_time`. The second half pins the report
+//! bytes the queue ultimately feeds.
+
+use llmservingsim::config::{presets, PerfBackend, SimConfig};
+use llmservingsim::coordinator::run_config;
+use llmservingsim::model::{ModelSpec, OpInvocation, OpKind};
+use llmservingsim::perf::analytical::Roofline;
+use llmservingsim::perf::trace::TraceDb;
+use llmservingsim::perf::HardwareSpec;
+use llmservingsim::sim::{Event, EventQueue, Nanos};
+use llmservingsim::sweep::{run_sweep, SweepSpec};
+use llmservingsim::util::prop;
+use llmservingsim::util::rng::Rng;
+use llmservingsim::workload::LengthDist;
+
+// ---- part 1: calendar queue vs reference model ----------------------------
+
+/// The obviously-correct model: a flat vector, popped by linear min-scan on
+/// `(at, seq)`, with the same `now`-clamping rule as the real queue.
+struct RefQueue {
+    items: Vec<(Nanos, u64, Event)>,
+    now: Nanos,
+    seq: u64,
+}
+
+impl RefQueue {
+    fn new() -> Self {
+        RefQueue {
+            items: vec![],
+            now: 0,
+            seq: 0,
+        }
+    }
+
+    fn schedule_at(&mut self, at: Nanos, event: Event) {
+        let at = at.max(self.now);
+        self.items.push((at, self.seq, event));
+        self.seq += 1;
+    }
+
+    fn schedule_in(&mut self, delay: Nanos, event: Event) {
+        self.schedule_at(self.now.saturating_add(delay), event);
+    }
+
+    fn pop(&mut self) -> Option<(Nanos, Event)> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        for i in 1..self.items.len() {
+            let (at, seq, _) = self.items[i];
+            let (b_at, b_seq, _) = self.items[best];
+            if (at, seq) < (b_at, b_seq) {
+                best = i;
+            }
+        }
+        let (at, _, event) = self.items.remove(best);
+        self.now = at;
+        Some((at, event))
+    }
+
+    fn peek_time(&self) -> Option<Nanos> {
+        self.items.iter().map(|&(at, _, _)| at).min()
+    }
+}
+
+/// Every `Event` variant shows up in the streams, so payloads are compared
+/// through `PartialEq` across the whole enum, not just one arm.
+fn event_for(i: u64, k: u64) -> Event {
+    match k {
+        0 => Event::RequestArrival { request_id: i },
+        1 => Event::StepComplete {
+            instance: (i % 5) as usize,
+        },
+        2 => Event::Wake {
+            instance: (i % 7) as usize,
+        },
+        3 => Event::KvTransferDone {
+            request_id: i,
+            dst_instance: (i % 3) as usize,
+        },
+        4 => Event::ExpertFetchDone {
+            instance: (i % 4) as usize,
+            layer: i % 11,
+            expert: i % 13,
+        },
+        5 => Event::MetricsTick,
+        6 => Event::ControllerTick,
+        7 => Event::InstanceReady {
+            instance: (i % 5) as usize,
+        },
+        _ => Event::InstanceFail {
+            instance: (i % 5) as usize,
+        },
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Op {
+    /// `schedule_in(delay)` — relative, saturating.
+    In(Nanos, Event),
+    /// `schedule_at(at)` — absolute, possibly behind `now` (clamped).
+    At(Nanos, Event),
+    Pop,
+}
+
+/// Delay mixture spanning every queue regime: zero-delay bursts,
+/// sub-bucket, multi-bucket, past-the-ring-horizon (overflow heap), and
+/// saturating far-future; plus absolute times that land behind `now`.
+fn gen_ops(rng: &mut Rng) -> Vec<Op> {
+    let len = 100 + rng.below(200) as usize;
+    let mut ops = Vec::with_capacity(len);
+    for i in 0..len as u64 {
+        let ev = event_for(i, rng.below(9));
+        ops.push(match rng.below(8) {
+            0 | 1 => Op::Pop,
+            2 => Op::In(0, ev),
+            3 => Op::In(rng.below(1 << 12), ev),
+            4 => Op::In(rng.below(1 << 24), ev),
+            5 => Op::In(600_000_000 + rng.below(1 << 34), ev),
+            6 => Op::At(rng.below(1 << 16), ev),
+            _ => Op::In(u64::MAX / (1 + rng.below(4)), ev),
+        });
+    }
+    ops
+}
+
+#[test]
+fn calendar_queue_matches_sorted_reference_on_random_schedules() {
+    prop::check("queue-equivalence", 128, gen_ops, |ops| {
+        let mut q = EventQueue::new();
+        let mut r = RefQueue::new();
+        for (step, op) in ops.iter().enumerate() {
+            match *op {
+                Op::In(d, ev) => {
+                    q.schedule_in(d, ev);
+                    r.schedule_in(d, ev);
+                }
+                Op::At(at, ev) => {
+                    q.schedule_at(at, ev);
+                    r.schedule_at(at, ev);
+                }
+                Op::Pop => {
+                    let got = q.pop();
+                    let want = r.pop();
+                    if got != want {
+                        return Err(format!("step {step}: pop {got:?} != {want:?}"));
+                    }
+                }
+            }
+            if q.len() != r.items.len() {
+                return Err(format!(
+                    "step {step}: len {} != {}",
+                    q.len(),
+                    r.items.len()
+                ));
+            }
+            if q.now() != r.now {
+                return Err(format!("step {step}: now {} != {}", q.now(), r.now));
+            }
+            if q.peek_time() != r.peek_time() {
+                return Err(format!(
+                    "step {step}: peek {:?} != {:?}",
+                    q.peek_time(),
+                    r.peek_time()
+                ));
+            }
+        }
+        loop {
+            let got = q.pop();
+            let want = r.pop();
+            if got != want {
+                return Err(format!("drain: pop {got:?} != {want:?}"));
+            }
+            if got.is_none() {
+                break;
+            }
+        }
+        if !q.is_empty() {
+            return Err("queue claims non-empty after full drain".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn same_timestamp_bursts_pop_fifo_under_interleaved_pops() {
+    let mut q = EventQueue::new();
+    let mut next = 0u64;
+    for i in 0..1000u64 {
+        q.schedule_at(5_000_000, Event::RequestArrival { request_id: i });
+        if i % 3 == 0 {
+            // pop while the burst is still being scheduled: strict FIFO
+            let (at, ev) = q.pop().unwrap();
+            assert_eq!(at, 5_000_000);
+            assert_eq!(ev, Event::RequestArrival { request_id: next });
+            next += 1;
+        }
+    }
+    while let Some((at, ev)) = q.pop() {
+        assert_eq!(at, 5_000_000);
+        assert_eq!(ev, Event::RequestArrival { request_id: next });
+        next += 1;
+    }
+    assert_eq!(next, 1000, "every event popped exactly once");
+}
+
+#[test]
+fn far_future_controller_ticks_survive_the_overflow_horizon() {
+    const HOUR: Nanos = 3_600_000_000_000;
+    let mut q = EventQueue::new();
+    // Hourly ticks land far beyond the ~537 ms calendar ring.
+    for k in 1..=5u64 {
+        q.schedule_at(k * HOUR, Event::ControllerTick);
+    }
+    // Near-term chatter interleaved after them.
+    for i in 0..100u64 {
+        q.schedule_in(i * 1_000, Event::Wake { instance: 0 });
+    }
+    let mut times = vec![];
+    while let Some((at, _)) = q.pop() {
+        times.push(at);
+    }
+    assert_eq!(times.len(), 105);
+    assert!(times.windows(2).all(|w| w[0] <= w[1]), "pops out of order");
+    assert_eq!(*times.last().unwrap(), 5 * HOUR);
+}
+
+// ---- part 2: report byte-identity -----------------------------------------
+
+fn small(mut cfg: SimConfig, perf: PerfBackend) -> SimConfig {
+    cfg.workload.num_requests = 12;
+    cfg.workload.lengths = LengthDist::short();
+    cfg.perf = perf;
+    cfg
+}
+
+fn report_string(cfg: SimConfig) -> String {
+    let (report, _) = run_config(cfg).unwrap();
+    report.to_json().to_string()
+}
+
+/// A synthetic profiled trace (every `OpKind`, 1.7x roofline) so the trace
+/// backend runs hermetically: dense presets price via exact trace
+/// interpolation, MoE presets via its calibrated-analytical extension.
+fn synthetic_trace() -> std::path::PathBuf {
+    let model = ModelSpec::tiny_dense();
+    let hw = HardwareSpec::preset("rtx3090").unwrap();
+    let roof = Roofline::new(hw.clone(), model.clone());
+    let mut db = TraceDb::new(&hw.name, &model.name);
+    for &kind in OpKind::all() {
+        if kind.is_decode_grid() {
+            for b in [1u64, 2, 4, 8] {
+                for c in [64u64, 256, 1024] {
+                    let inv = OpInvocation::decode(b, c);
+                    let ns = (roof.raw_latency(inv) * 1.7 * 1e9).round() as u64;
+                    db.add_batch_ctx(kind, b, c, ns.max(1));
+                }
+            }
+        } else {
+            for t in [4u64, 16, 64, 256] {
+                let inv = if kind == OpKind::AttnPrefill {
+                    OpInvocation::prefill(t)
+                } else {
+                    OpInvocation::tokens(kind, t)
+                };
+                let ns = (roof.raw_latency(inv) * 1.7 * 1e9).round() as u64;
+                db.add_tokens(kind, t, ns.max(1));
+            }
+        }
+    }
+    let path = std::env::temp_dir().join("llmss_queue_equiv_trace.json");
+    db.save(&path).unwrap();
+    path
+}
+
+#[test]
+fn reports_byte_identical_across_presets_and_backends() {
+    let trace = synthetic_trace();
+    let backends = [
+        PerfBackend::Analytical,
+        PerfBackend::Trace {
+            path: trace.to_string_lossy().into_owned(),
+        },
+    ];
+    for &name in presets::serving_preset_names() {
+        for backend in &backends {
+            let cfg = small(
+                presets::by_name(name, "tiny-dense", "tiny-moe", "rtx3090").unwrap(),
+                backend.clone(),
+            );
+            let a = report_string(cfg.clone());
+            let b = report_string(cfg);
+            assert_eq!(a, b, "preset '{name}' x {backend:?}: report bytes drifted");
+        }
+    }
+    let _ = std::fs::remove_file(&trace);
+}
+
+#[test]
+fn sweep_reports_byte_identical_at_1_and_8_workers() {
+    let mut spec = SweepSpec {
+        num_requests: 12,
+        quick: true,
+        seed: 0x6EED,
+        ..SweepSpec::default()
+    };
+    spec.axes.presets = presets::serving_preset_names()
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let cfgs = spec.expand().unwrap();
+    assert_eq!(
+        cfgs.len(),
+        presets::serving_preset_names().len(),
+        "one grid point per serving preset"
+    );
+
+    let reference: Vec<(String, String)> = cfgs
+        .iter()
+        .map(|cfg| {
+            let (report, _) = run_config(cfg.clone()).unwrap();
+            (cfg.name.clone(), report.to_json().to_string())
+        })
+        .collect();
+    for threads in [1, 8] {
+        let swept: Vec<(String, String)> = run_sweep(&cfgs, threads)
+            .unwrap()
+            .points
+            .into_iter()
+            .map(|p| (p.name, p.report.to_json().to_string()))
+            .collect();
+        assert_eq!(swept, reference, "sweep diverged at {threads} workers");
+    }
+}
