@@ -12,11 +12,10 @@
 //!
 //! Run: `cargo run --release --example custom_policy`
 
-use std::collections::HashMap;
 
 use llmservingsim::config::presets;
 use llmservingsim::coordinator::Simulation;
-use llmservingsim::instance::SeqState;
+use llmservingsim::instance::SeqMap;
 use llmservingsim::policy::{self, CacheLeaf, EvictionPolicy, SchedulePolicy};
 use llmservingsim::router::{
     InstanceView, RoundRobin, RoutePolicy, SessionAffinity,
@@ -60,7 +59,7 @@ impl SchedulePolicy for OldestFirst {
     fn name(&self) -> &str {
         "oldest-first"
     }
-    fn order(&mut self, wait: &mut [u64], seqs: &HashMap<u64, SeqState>, _now: Nanos) {
+    fn order(&mut self, wait: &mut [u64], seqs: &SeqMap, _now: Nanos) {
         wait.sort_by_key(|id| {
             let s = &seqs[id];
             (s.enqueued_at, s.req.id)

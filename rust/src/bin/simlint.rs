@@ -1,0 +1,201 @@
+//! simlint CLI — gate the tree on the determinism & invariant rules.
+//!
+//! Usage:
+//!
+//! ```text
+//! simlint --check <path>... [--baseline <file>] [--report <file>]
+//! simlint --check <path>... --update-baseline [--baseline <file>]
+//! ```
+//!
+//! * `--check <path>` — one or more files or directories to scan (`.rs`
+//!   files, recursively). CI runs `--check rust/src` from the repo root.
+//! * `--baseline <file>` — grandfather file; defaults to `simlint.allow`
+//!   next to the first checked root (`rust/simlint.allow` for
+//!   `--check rust/src`). A missing baseline is treated as empty.
+//! * `--report <file>` — write the full findings report (including
+//!   baselined findings, marked as such) to a file for CI artifacts.
+//! * `--update-baseline` — rewrite the baseline from the current findings
+//!   and exit 0. The serializer is canonical (sorted, deduplicated), so
+//!   running it twice is byte-identical.
+//!
+//! Exit codes: **0** clean (or baseline updated), **1** unbaselined
+//! findings, **2** usage or I/O error.
+
+use llmservingsim::lint::baseline::{format_baseline, Baseline};
+use llmservingsim::lint::{scan_source, scan_tree, Finding};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+struct Args {
+    roots: Vec<PathBuf>,
+    baseline: Option<PathBuf>,
+    report: Option<PathBuf>,
+    update_baseline: bool,
+}
+
+fn parse_args(argv: &[String]) -> Result<Args, String> {
+    let mut args = Args {
+        roots: Vec::new(),
+        baseline: None,
+        report: None,
+        update_baseline: false,
+    };
+    let mut i = 0usize;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--check" => {} // mode marker; the paths that follow are roots
+            "--update-baseline" => args.update_baseline = true,
+            "--baseline" => {
+                i += 1;
+                let v = argv.get(i).ok_or("--baseline needs a path")?;
+                args.baseline = Some(PathBuf::from(v));
+            }
+            "--report" => {
+                i += 1;
+                let v = argv.get(i).ok_or("--report needs a path")?;
+                args.report = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => return Err("help".to_string()),
+            flag if flag.starts_with('-') => {
+                return Err(format!("unknown flag `{flag}`"));
+            }
+            path => args.roots.push(PathBuf::from(path)),
+        }
+        i += 1;
+    }
+    if args.roots.is_empty() {
+        return Err("no paths given — try `simlint --check rust/src`".to_string());
+    }
+    Ok(args)
+}
+
+fn default_baseline(roots: &[PathBuf]) -> PathBuf {
+    roots[0]
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .join("simlint.allow")
+}
+
+fn scan_roots(roots: &[PathBuf]) -> std::io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for root in roots {
+        if root.is_dir() {
+            findings.extend(scan_tree(root)?);
+        } else {
+            let source = std::fs::read_to_string(root)?;
+            let rel = root.to_string_lossy().replace('\\', "/");
+            findings.extend(scan_source(&rel, &source));
+        }
+    }
+    Ok(findings)
+}
+
+fn render_report(fresh: &[Finding], baselined: &[Finding], files_note: &str) -> String {
+    let mut out = String::new();
+    out.push_str("simlint findings report\n");
+    out.push_str("=======================\n");
+    out.push_str(files_note);
+    out.push('\n');
+    for f in fresh {
+        out.push_str(&f.render());
+        out.push('\n');
+    }
+    for f in baselined {
+        out.push_str("[baselined] ");
+        out.push_str(&f.render());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "\n{} finding(s), {} baselined, {} gating\n",
+        fresh.len() + baselined.len(),
+        baselined.len(),
+        fresh.len()
+    ));
+    out
+}
+
+fn run(argv: &[String]) -> Result<ExitCode, String> {
+    let args = match parse_args(argv) {
+        Ok(a) => a,
+        Err(e) if e == "help" => {
+            println!(
+                "simlint --check <path>... [--baseline <file>] [--report <file>] [--update-baseline]"
+            );
+            return Ok(ExitCode::SUCCESS);
+        }
+        Err(e) => return Err(e),
+    };
+
+    let findings = scan_roots(&args.roots).map_err(|e| format!("scan failed: {e}"))?;
+
+    let baseline_path = args
+        .baseline
+        .clone()
+        .unwrap_or_else(|| default_baseline(&args.roots));
+
+    if args.update_baseline {
+        let text = format_baseline(&findings);
+        std::fs::write(&baseline_path, &text)
+            .map_err(|e| format!("cannot write {}: {e}", baseline_path.display()))?;
+        println!(
+            "simlint: wrote {} entr{} to {}",
+            findings.len(),
+            if findings.len() == 1 { "y" } else { "ies" },
+            baseline_path.display()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => Baseline::parse(&text),
+        Err(_) => Baseline::default(),
+    };
+
+    let (baselined, fresh): (Vec<Finding>, Vec<Finding>) =
+        findings.into_iter().partition(|f| baseline.contains(f));
+
+    let files_note = format!(
+        "roots: {} | baseline: {} ({} entr{})\n",
+        args.roots
+            .iter()
+            .map(|p| p.display().to_string())
+            .collect::<Vec<_>>()
+            .join(", "),
+        baseline_path.display(),
+        baseline.len(),
+        if baseline.len() == 1 { "y" } else { "ies" },
+    );
+    let report = render_report(&fresh, &baselined, &files_note);
+    if let Some(path) = &args.report {
+        std::fs::write(path, &report)
+            .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+    }
+
+    if fresh.is_empty() {
+        println!(
+            "simlint: clean ({} baselined finding(s) suppressed)",
+            baselined.len()
+        );
+        Ok(ExitCode::SUCCESS)
+    } else {
+        for f in &fresh {
+            eprintln!("{}", f.render());
+        }
+        eprintln!(
+            "simlint: {} gating finding(s) — fix, justify inline, or --update-baseline",
+            fresh.len()
+        );
+        Ok(ExitCode::FAILURE)
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("simlint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -529,6 +529,7 @@ impl Simulation {
     fn complete_step(&mut self, i: usize, now: Nanos) {
         let (_, mut out) = self.pending[i]
             .take()
+            // simlint: allow(S01) — complete_step only fires for instances with a pending outcome
             .expect("step completion without outcome");
         self.busy[i] = false;
         self.metrics.on_busy(i, out.duration);
@@ -634,6 +635,7 @@ impl Simulation {
                 let req = self
                     .next_arrival
                     .take()
+                    // simlint: allow(S01) — prime_next_arrival stages exactly one request per arrival event
                     .expect("arrival event without a pulled request");
                 debug_assert_eq!(req.id, request_id);
                 self.metrics.on_arrival(&req, now);
@@ -660,6 +662,7 @@ impl Simulation {
                 let (req, dst) = self
                     .kv_in_flight
                     .remove(&request_id)
+                    // simlint: allow(S01) — every KvTransferDone was scheduled with a kv_in_flight entry
                     .expect("unknown KV transfer");
                 debug_assert_eq!(dst, dst_instance);
                 if self.instances[dst].lifecycle().is_active() {
@@ -1186,6 +1189,7 @@ impl SimDriver<'_> {
             if next > t {
                 break;
             }
+            // simlint: allow(S01) — peek_time returned Some, so the queue is non-empty
             let (now, event) = self.sim.queue.pop().expect("peeked event vanished");
             self.sim.handle_event(now, event);
             n += 1;
@@ -1527,7 +1531,7 @@ mod tests {
             fn order(
                 &mut self,
                 wait: &mut [u64],
-                _seqs: &std::collections::HashMap<u64, crate::instance::SeqState>,
+                _seqs: &crate::instance::SeqMap,
                 _now: Nanos,
             ) {
                 wait.sort_by_key(|id| std::cmp::Reverse(*id));

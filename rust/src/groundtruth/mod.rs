@@ -80,6 +80,8 @@ impl ExecPerfModel {
             .model(model)
             .ok_or_else(|| anyhow::anyhow!("model '{model}' not in manifest"))?;
         let mut runtime = Runtime::cpu(artifacts_root)?;
+        // simlint: allow(D02) — wall-clock timing of the real PJRT execution being
+        // profiled; never feeds simulated time
         let t0 = std::time::Instant::now();
         let mut overhead = vec![u64::MAX; OpKind::all().len()];
         for art in &mm.ops {

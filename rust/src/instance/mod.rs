@@ -13,7 +13,6 @@
 
 pub mod scheduler;
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::cluster::Lifecycle;
@@ -25,7 +24,13 @@ use crate::network::{Fabric, Topology};
 use crate::perf::{analytical::Roofline, HardwareSpec, PerfModel};
 use crate::policy::SchedulePolicy;
 use crate::sim::Nanos;
+use crate::util::fxhash::FxHashMap;
 use crate::workload::Request;
+
+/// The per-instance sequence table, keyed by request id. Deterministic Fx
+/// hashing (no per-process entropy); every consumer that *enumerates* it
+/// must still impose an explicit order — simlint rule D04 polices that.
+pub type SeqMap = FxHashMap<u64, SeqState>;
 
 /// Sequence lifecycle phase.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -125,7 +130,7 @@ pub struct ServingInstance {
     sched: Box<dyn SchedulePolicy>,
     wait: Vec<u64>,
     running: Vec<u64>,
-    seqs: HashMap<u64, SeqState>,
+    seqs: SeqMap,
     /// Fleet-lifecycle state (DESIGN.md §9); `Active` unless a cluster
     /// controller says otherwise. Only the coordinator mutates this.
     lifecycle: Lifecycle,
@@ -251,7 +256,7 @@ impl ServingInstance {
             sched,
             wait: vec![],
             running: vec![],
-            seqs: HashMap::new(),
+            seqs: SeqMap::default(),
             lifecycle: Lifecycle::Active,
             steps: 0,
             preemptions: 0,
@@ -297,6 +302,7 @@ impl ServingInstance {
             .map(|id| {
                 self.seqs
                     .remove(id)
+                    // simlint: allow(S01) — wait ids are inserted into seqs on enqueue; absence is table corruption
                     .expect("waiting seq missing from table")
                     .req
             })
@@ -309,10 +315,12 @@ impl ServingInstance {
     /// recompute-style (generated tokens fold into the prompt), exactly
     /// like a preemption.
     pub fn evacuate(&mut self) -> Vec<Request> {
+        // simlint: allow(D04) — ids are collected then sort_unstable'd before any use
         let mut ids: Vec<u64> = self.seqs.keys().copied().collect();
         ids.sort_unstable();
         let mut out = Vec::with_capacity(ids.len());
         for id in ids {
+            // simlint: allow(S01) — id came from this table's own key set two lines up
             let mut s = self.seqs.remove(&id).expect("seq vanished");
             self.blocks.free_seq(id);
             if let Phase::Decode { generated } = s.phase {
@@ -491,6 +499,7 @@ impl ServingInstance {
             };
             let done_after = (after.max(cached)).min(total);
             if done_after < total {
+                // simlint: allow(S01) — id is in running, and running ids always have a seqs entry
                 self.seqs.get_mut(&id).unwrap().phase =
                     Phase::Prefill { done: done_after };
                 continue;
@@ -504,6 +513,7 @@ impl ServingInstance {
                     out.emitted.push(id);
                     self.running.retain(|&x| x != id);
                     self.blocks.free_seq(id);
+                    // simlint: allow(S01) — id is in running, and running ids always have a seqs entry
                     let st = self.seqs.remove(&id).expect("prefill seq vanished");
                     if has_cache {
                         out.prefill_done.push(st.req.clone());
@@ -516,6 +526,7 @@ impl ServingInstance {
                     });
                 }
                 _ => {
+                    // simlint: allow(S01) — id is in running, and running ids always have a seqs entry
                     let s = self.seqs.get_mut(&id).unwrap();
                     if has_cache {
                         out.prefill_done.push(s.req.clone());
@@ -532,6 +543,7 @@ impl ServingInstance {
             }
         }
         for &(id, _) in &decode {
+            // simlint: allow(S01) — id is in the decode partition built from seqs this step
             let s = self.seqs.get_mut(&id).unwrap();
             if let Phase::Decode { generated } = s.phase {
                 let g = generated + 1;
@@ -613,6 +625,7 @@ impl ServingInstance {
         }
         for id in self.wait.drain(..admitted) {
             // Prefix-cache lookup at admission (prefill seqs only).
+            // simlint: allow(S01) — id was drained from wait, and wait ids always have a seqs entry
             let s = self.seqs.get_mut(&id).unwrap();
             if matches!(s.phase, Phase::Prefill { done: 0 }) && s.preemptions == 0 {
                 if let Some(c) = cache.as_deref_mut() {
@@ -632,6 +645,7 @@ impl ServingInstance {
             let total = self.seqs[&id].ctx_tokens().max(self.seqs[&id].req.prompt_tokens) + 1;
             self.blocks
                 .allocate_seq(id, total, &[])
+                // simlint: allow(S01) — admit() pre-checked can_allocate for this sequence
                 .expect("admission checked can_allocate");
             self.running.push(id);
         }
@@ -642,6 +656,7 @@ impl ServingInstance {
     fn preempt(&mut self, id: u64, _now: Nanos) {
         self.blocks.free_seq(id);
         self.running.retain(|&x| x != id);
+        // simlint: allow(S01) — preempt is only called with a resident running id
         let s = self.seqs.get_mut(&id).unwrap();
         if let Phase::Decode { generated } = s.phase {
             s.req.prompt_tokens += generated;
@@ -739,6 +754,7 @@ impl ServingInstance {
                 let outcome = self
                     .expert_router
                     .as_mut()
+                    // simlint: allow(S01) — is_moe guarantees expert_router was constructed
                     .unwrap()
                     .route(l, t_total);
                 let skew = outcome.skew();

@@ -10,12 +10,10 @@
 //! implement the trait in their own file and register via
 //! [`crate::policy::register_sched_policy`] — no edits here required.
 
-use std::collections::HashMap;
-
 use crate::policy::SchedulePolicy;
 use crate::sim::Nanos;
 
-use super::{Phase, SeqState};
+use super::{Phase, SeqMap, SeqState};
 
 /// First-come-first-served admission (vLLM default).
 #[derive(Debug, Default)]
@@ -25,7 +23,7 @@ impl SchedulePolicy for Fcfs {
     fn name(&self) -> &str {
         "fcfs"
     }
-    fn order(&mut self, wait: &mut [u64], seqs: &HashMap<u64, SeqState>, _now: Nanos) {
+    fn order(&mut self, wait: &mut [u64], seqs: &SeqMap, _now: Nanos) {
         wait.sort_by_key(|id| {
             let s = &seqs[id];
             (priority_class(s), s.enqueued_at, s.req.id)
@@ -41,7 +39,7 @@ impl SchedulePolicy for Sjf {
     fn name(&self) -> &str {
         "sjf"
     }
-    fn order(&mut self, wait: &mut [u64], seqs: &HashMap<u64, SeqState>, _now: Nanos) {
+    fn order(&mut self, wait: &mut [u64], seqs: &SeqMap, _now: Nanos) {
         wait.sort_by_key(|id| {
             let s = &seqs[id];
             (priority_class(s), s.req.prompt_tokens, s.req.id)
@@ -59,12 +57,13 @@ impl SchedulePolicy for Priority {
     fn name(&self) -> &str {
         "priority"
     }
-    fn order(&mut self, wait: &mut [u64], seqs: &HashMap<u64, SeqState>, now: Nanos) {
+    fn order(&mut self, wait: &mut [u64], seqs: &SeqMap, now: Nanos) {
         wait.sort_by(|a, b| {
             let ra = rank(&seqs[a], now);
             let rb = rank(&seqs[b], now);
             (priority_class(&seqs[a]), ra, seqs[a].req.id)
                 .partial_cmp(&(priority_class(&seqs[b]), rb, seqs[b].req.id))
+                // simlint: allow(S01) — rank() is a ratio of finite non-negative values, never NaN
                 .unwrap()
         });
     }
@@ -82,7 +81,7 @@ impl SchedulePolicy for SloDeadline {
     fn name(&self) -> &str {
         "slo"
     }
-    fn order(&mut self, wait: &mut [u64], seqs: &HashMap<u64, SeqState>, _now: Nanos) {
+    fn order(&mut self, wait: &mut [u64], seqs: &SeqMap, _now: Nanos) {
         wait.sort_by_key(|id| {
             let s = &seqs[id];
             (priority_class(s), deadline(s), s.req.id)
@@ -149,8 +148,8 @@ mod tests {
 
     #[test]
     fn fcfs_orders_by_arrival() {
-        let seqs: HashMap<u64, SeqState> =
-            [seq(0, 10, 300), seq(1, 10, 100), seq(2, 10, 200)].into();
+        let seqs: SeqMap =
+            [seq(0, 10, 300), seq(1, 10, 100), seq(2, 10, 200)].into_iter().collect();
         let mut wait = vec![0, 1, 2];
         Fcfs.order(&mut wait, &seqs, 1000);
         assert_eq!(wait, vec![1, 2, 0]);
@@ -158,8 +157,8 @@ mod tests {
 
     #[test]
     fn sjf_orders_by_prompt() {
-        let seqs: HashMap<u64, SeqState> =
-            [seq(0, 300, 0), seq(1, 50, 0), seq(2, 100, 0)].into();
+        let seqs: SeqMap =
+            [seq(0, 300, 0), seq(1, 50, 0), seq(2, 100, 0)].into_iter().collect();
         let mut wait = vec![0, 1, 2];
         Sjf.order(&mut wait, &seqs, 0);
         assert_eq!(wait, vec![1, 2, 0]);
@@ -167,7 +166,7 @@ mod tests {
 
     #[test]
     fn preempted_always_first() {
-        let mut m: HashMap<u64, SeqState> = [seq(0, 10, 0), seq(1, 999, 500)].into();
+        let mut m: SeqMap = [seq(0, 10, 0), seq(1, 999, 500)].into_iter().collect();
         m.get_mut(&1).unwrap().preemptions = 1;
         let mut wait = vec![0, 1];
         for mut p in builtin_policies() {
@@ -179,8 +178,8 @@ mod tests {
     #[test]
     fn priority_ages_long_waiters() {
         // long prompt waiting a long time beats short prompt that just came
-        let seqs: HashMap<u64, SeqState> =
-            [seq(0, 512, 0), seq(1, 64, 999_000_000)].into();
+        let seqs: SeqMap =
+            [seq(0, 512, 0), seq(1, 64, 999_000_000)].into_iter().collect();
         let mut wait = vec![0, 1];
         Priority.order(&mut wait, &seqs, 1_000_000_000);
         assert_eq!(wait[0], 0, "aged long prompt should rank first");
@@ -191,7 +190,7 @@ mod tests {
         use crate::workload::SloClass;
         // batch arrived first, interactive second: EDF still runs the
         // interactive request first (tighter TTFT target).
-        let mut m: HashMap<u64, SeqState> = [seq(0, 10, 0), seq(1, 10, 1000)].into();
+        let mut m: SeqMap = [seq(0, 10, 0), seq(1, 10, 1000)].into_iter().collect();
         m.get_mut(&0).unwrap().req.slo_class = SloClass::Batch;
         let mut wait = vec![0, 1];
         SloDeadline.order(&mut wait, &m, 2000);
@@ -200,7 +199,7 @@ mod tests {
         // but a batch request whose deadline comes due beats a much newer
         // interactive request (no starvation).
         let late = SloClass::Batch.ttft_target_ns() + 1000;
-        let mut m: HashMap<u64, SeqState> = [seq(0, 10, 0), seq(1, 10, late)].into();
+        let mut m: SeqMap = [seq(0, 10, 0), seq(1, 10, late)].into_iter().collect();
         m.get_mut(&0).unwrap().req.slo_class = SloClass::Batch;
         let mut wait = vec![1, 0];
         SloDeadline.order(&mut wait, &m, late);
@@ -209,7 +208,7 @@ mod tests {
 
     #[test]
     fn deterministic_tiebreak() {
-        let seqs: HashMap<u64, SeqState> = [seq(3, 10, 0), seq(1, 10, 0), seq(2, 10, 0)].into();
+        let seqs: SeqMap = [seq(3, 10, 0), seq(1, 10, 0), seq(2, 10, 0)].into_iter().collect();
         let mut wait = vec![3, 1, 2];
         Fcfs.order(&mut wait, &seqs, 0);
         assert_eq!(wait, vec![1, 2, 3]);

@@ -49,6 +49,15 @@
 //! and SLO classes that flow through scheduling into per-class/per-tenant
 //! SLO-attainment and goodput reporting. Million-request scenarios run in
 //! memory bounded by in-flight state.
+//!
+//! The crate polices its own determinism contract: the [`lint`] module (and
+//! the `simlint` binary built from it) statically checks the core modules
+//! for entropy leaks — SipHash maps, ambient clocks, unseeded RNGs,
+//! hash-order enumeration in reports — and for unjustified panics. CI runs
+//! it on every push; see DESIGN.md §11.
+
+#![forbid(unsafe_code)]
+#![deny(unused_must_use)]
 
 pub mod cli;
 pub mod cluster;
@@ -56,6 +65,7 @@ pub mod config;
 pub mod coordinator;
 pub mod groundtruth;
 pub mod instance;
+pub mod lint;
 pub mod memory;
 pub mod metrics;
 pub mod moe;

@@ -1,0 +1,169 @@
+//! Baseline (grandfather) file support.
+//!
+//! A baseline entry suppresses one finding without touching the source. The
+//! format is deliberately line-diff-friendly and content-addressed:
+//!
+//! ```text
+//! RULE<TAB>path<TAB>trimmed source line
+//! ```
+//!
+//! Keying on the *trimmed line content* rather than the line number means
+//! unrelated edits above a grandfathered finding do not invalidate the
+//! baseline, while any edit to the offending line itself (including fixing
+//! it) does — stale entries are then just dead lines that the next
+//! `--update-baseline` drops.
+//!
+//! `#`-prefixed lines and blank lines are comments. Entries are kept
+//! sorted, and [`format_baseline`] is the single serializer, so
+//! `--update-baseline` round-trips byte-identically.
+
+use super::Finding;
+use std::collections::BTreeSet;
+
+/// One suppression key: `(rule, path, trimmed line)`.
+type Entry = (String, String, String);
+
+/// Parsed baseline: a set of suppression keys.
+#[derive(Debug, Default, Clone)]
+pub struct Baseline {
+    entries: BTreeSet<Entry>,
+}
+
+impl Baseline {
+    /// Parse baseline text. Malformed lines (fewer than three tab-separated
+    /// fields) are ignored rather than fatal: a corrupt entry merely fails
+    /// to suppress, which is the safe direction.
+    pub fn parse(text: &str) -> Baseline {
+        let mut entries = BTreeSet::new();
+        for raw in text.lines() {
+            let line = raw.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(3, '\t');
+            if let (Some(rule), Some(path), Some(text)) =
+                (parts.next(), parts.next(), parts.next())
+            {
+                entries.insert((rule.to_string(), path.to_string(), text.to_string()));
+            }
+        }
+        Baseline { entries }
+    }
+
+    pub fn contains(&self, f: &Finding) -> bool {
+        // Allocation-free probe would need Borrow on the tuple; a lint pass
+        // over a few hundred files does not care.
+        self.entries.contains(&(
+            f.rule.as_str().to_string(),
+            f.path.clone(),
+            f.line_text.clone(),
+        ))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize this baseline back to text — byte-identical with the
+    /// output of [`format_baseline`] for the same entry set.
+    pub fn render(&self) -> String {
+        render_entries(self.entries.iter())
+    }
+}
+
+const HEADER: &str = "\
+# simlint baseline — grandfathered findings, one per line:
+#   RULE<TAB>path<TAB>trimmed source line
+# Entries suppress exactly one finding each; fixing the offending line
+# orphans its entry. Regenerate with:
+#   cargo run --manifest-path rust/Cargo.toml --bin simlint -- --check rust/src --update-baseline
+";
+
+fn render_entries<'a, I: Iterator<Item = &'a Entry>>(entries: I) -> String {
+    let mut out = String::from(HEADER);
+    for (rule, path, text) in entries {
+        out.push_str(rule);
+        out.push('\t');
+        out.push_str(path);
+        out.push('\t');
+        out.push_str(text);
+        out.push('\n');
+    }
+    out
+}
+
+/// Serialize a finding list as a fresh baseline (sorted, deduplicated).
+pub fn format_baseline(findings: &[Finding]) -> String {
+    let entries: BTreeSet<Entry> = findings
+        .iter()
+        .map(|f| {
+            (
+                f.rule.as_str().to_string(),
+                f.path.clone(),
+                f.line_text.clone(),
+            )
+        })
+        .collect();
+    render_entries(entries.iter())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::RuleId;
+
+    fn finding(rule: RuleId, path: &str, text: &str) -> Finding {
+        Finding {
+            rule,
+            path: path.to_string(),
+            line: 1,
+            col: 1,
+            message: String::new(),
+            line_text: text.to_string(),
+        }
+    }
+
+    #[test]
+    fn round_trip_is_byte_identical() {
+        let fs = vec![
+            finding(RuleId::S01, "rust/src/sim/mod.rs", "x.unwrap();"),
+            finding(RuleId::D01, "rust/src/router/mod.rs", "use std::collections::HashMap;"),
+        ];
+        let once = format_baseline(&fs);
+        let twice = Baseline::parse(&once).render();
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let b = Baseline::parse("# header\n\nD01\tp.rs\tuse foo;\n");
+        assert_eq!(b.len(), 1);
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    fn contains_matches_on_content_not_line_number() {
+        let b = Baseline::parse("S01\ta/b.rs\tx.unwrap();\n");
+        let mut f = finding(RuleId::S01, "a/b.rs", "x.unwrap();");
+        f.line = 999;
+        assert!(b.contains(&f));
+        let g = finding(RuleId::S01, "a/b.rs", "y.unwrap();");
+        assert!(!b.contains(&g));
+    }
+
+    #[test]
+    fn malformed_entries_do_not_suppress() {
+        let b = Baseline::parse("S01 a/b.rs x.unwrap();\n");
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn empty_baseline_renders_header_only() {
+        let b = Baseline::default();
+        assert_eq!(b.render(), super::HEADER);
+    }
+}

@@ -1,0 +1,297 @@
+//! simlint — the in-repo determinism & invariant static-analysis pass.
+//!
+//! The simulator's headline guarantee is byte-identical output for a given
+//! seed at any worker count. That contract is easy to break silently: one
+//! `HashMap` iteration feeding a report, one `Instant::now` leaking into
+//! simulated time, and outputs differ across runs while every test still
+//! passes. simlint polices those hazards *statically*, in CI, with zero
+//! external dependencies — the scanner and rules live in this crate (no
+//! `syn`, no registry crates) so the lint gates the tree even in offline
+//! environments.
+//!
+//! Rule set (see [`rules`] for the rationale of each):
+//!
+//! | ID  | Scope        | Hazard                                           |
+//! |-----|--------------|--------------------------------------------------|
+//! | D01 | core modules | std `HashMap`/`HashSet` (SipHash, random key)    |
+//! | D02 | everywhere¹  | `Instant::now` / `SystemTime` ambient clocks     |
+//! | D03 | everywhere²  | entropy-seeded randomness                        |
+//! | D04 | core modules | iteration over hash-based containers             |
+//! | S01 | core modules | `unwrap`/`expect`/`panic!` without justification |
+//!
+//! ¹ except `util/bench.rs`, `util/logging.rs`, `benches/`.
+//! ² except `util/rng.rs`, the sanctioned seeded-RNG home.
+//!
+//! Suppression is two-tier:
+//!
+//! * **Inline**: `// simlint: allow(S01) — <reason>` on the offending line
+//!   or in the comment block directly above it. The reason is mandatory —
+//!   a directive without one does not suppress. This is the preferred tier:
+//!   the justification lives next to the code it justifies.
+//! * **Baseline**: `rust/simlint.allow` grandfathers pre-existing findings
+//!   (see [`baseline`]). Regenerated with `simlint --update-baseline`. The
+//!   tree currently carries an **empty** baseline: every core-module
+//!   finding has been fixed or inline-justified.
+
+pub mod baseline;
+pub mod rules;
+pub mod scanner;
+
+use std::path::Path;
+
+/// Machine-readable rule identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RuleId {
+    D01,
+    D02,
+    D03,
+    D04,
+    S01,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 5] = [
+        RuleId::D01,
+        RuleId::D02,
+        RuleId::D03,
+        RuleId::D04,
+        RuleId::S01,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RuleId::D01 => "D01",
+            RuleId::D02 => "D02",
+            RuleId::D03 => "D03",
+            RuleId::D04 => "D04",
+            RuleId::S01 => "S01",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuleId> {
+        match s.trim() {
+            "D01" => Some(RuleId::D01),
+            "D02" => Some(RuleId::D02),
+            "D03" => Some(RuleId::D03),
+            "D04" => Some(RuleId::D04),
+            "S01" => Some(RuleId::S01),
+            _ => None,
+        }
+    }
+
+    /// One-line fix hint, shown with every finding.
+    pub fn fix_hint(self) -> &'static str {
+        match self {
+            RuleId::D01 => {
+                "use util::fxhash::FxHashMap/FxHashSet, or BTreeMap/BTreeSet for ordered data"
+            }
+            RuleId::D02 => {
+                "take time from the event queue; wall-clock only in util/bench.rs, util/logging.rs, benches/"
+            }
+            RuleId::D03 => "use util::rng::Rng::new(seed) — every random stream is seeded",
+            RuleId::D04 => {
+                "collect keys and sort before enumerating, or collect into a BTreeMap"
+            }
+            RuleId::S01 => {
+                "handle the error, or add `// simlint: allow(S01) — <invariant>` stating why it cannot fire"
+            }
+        }
+    }
+}
+
+/// One lint finding, with everything needed to render, baseline, or gate.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: RuleId,
+    /// Path as scanned (root prefix included), `/`-separated.
+    pub path: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// 1-based character column.
+    pub col: u32,
+    pub message: String,
+    /// Trimmed content of the offending line — the baseline key.
+    pub line_text: String,
+}
+
+impl Finding {
+    /// Render as `RULE path:line:col message` plus a fix-hint line.
+    pub fn render(&self) -> String {
+        format!(
+            "{} {}:{}:{} {}\n    = {}\n    help: {}",
+            self.rule.as_str(),
+            self.path,
+            self.line,
+            self.col,
+            self.message,
+            self.line_text,
+            self.rule.fix_hint()
+        )
+    }
+}
+
+/// A parsed `simlint: allow(…)` directive from one comment line.
+#[derive(Debug)]
+struct AllowDirective {
+    rules: Vec<RuleId>,
+    /// A directive must carry a justification to suppress anything.
+    has_reason: bool,
+}
+
+/// Parse a line-comment text (the part after `//`) as an allow directive.
+/// Returns `None` for comments that are not directives *and* for malformed
+/// directives (unknown rule id, missing parentheses) — malformed directives
+/// must not suppress.
+fn parse_allow(comment: &str) -> Option<AllowDirective> {
+    let t = comment.trim_start();
+    let rest = t.strip_prefix("simlint:")?.trim_start();
+    let rest = rest.strip_prefix("allow")?.trim_start();
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let mut rules = Vec::new();
+    for part in rest[..close].split(',') {
+        rules.push(RuleId::parse(part)?);
+    }
+    if rules.is_empty() {
+        return None;
+    }
+    // Reason: whatever follows the `)`, minus connective punctuation
+    // (em/en dashes, hyphens, colons). Require a little substance.
+    let after: String = rest[close + 1..]
+        .chars()
+        .filter(|c| !matches!(c, '—' | '–' | '-' | ':' | ' ' | '\t'))
+        .collect();
+    Some(AllowDirective {
+        rules,
+        has_reason: after.chars().count() >= 3,
+    })
+}
+
+/// Is the finding at `line` covered by an inline allow directive — on the
+/// line itself, or in the contiguous pure-comment block directly above it?
+fn allowed(scan: &scanner::ScanResult, rule: RuleId, line: u32) -> bool {
+    let covers = |l: u32| {
+        scan.line_comments
+            .iter()
+            .filter(|(cl, _)| *cl == l)
+            .filter_map(|(_, text)| parse_allow(text))
+            .any(|d| d.has_reason && d.rules.contains(&rule))
+    };
+    if covers(line) {
+        return true;
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 && scan.pure_comment_lines.contains(&l) {
+        if covers(l) {
+            return true;
+        }
+        l -= 1;
+    }
+    false
+}
+
+/// Scan one file's source, returning findings **after** inline-allow
+/// filtering (the baseline is applied by the caller, typically the CLI).
+/// `path` is used both for rule scoping (core module? exempt file?) and as
+/// the `Finding::path`; tests pass virtual paths like `coordinator/mod.rs`.
+pub fn scan_source(path: &str, source: &str) -> Vec<Finding> {
+    let scan = scanner::scan(source);
+    rules::check(path, &scan)
+        .into_iter()
+        .filter(|f| !allowed(&scan, f.rule, f.line))
+        .collect()
+}
+
+/// Recursively scan every `.rs` file under `root`. Files are visited in
+/// sorted path order so output (and baselines) are deterministic. Paths in
+/// findings are `root`-prefixed and `/`-separated.
+pub fn scan_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let source = std::fs::read_to_string(&path)?;
+        let rel = path.to_string_lossy().replace('\\', "/");
+        findings.extend(scan_source(&rel, &source));
+    }
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_allow_accepts_well_formed() {
+        let d = parse_allow(" simlint: allow(S01) — registry lock poisoned").unwrap();
+        assert_eq!(d.rules, vec![RuleId::S01]);
+        assert!(d.has_reason);
+        let d = parse_allow(" simlint: allow(D01, D04) — pre-sorted before use").unwrap();
+        assert_eq!(d.rules, vec![RuleId::D01, RuleId::D04]);
+    }
+
+    #[test]
+    fn parse_allow_rejects_malformed() {
+        assert!(parse_allow(" simlint: allow(S99) — bogus rule").is_none());
+        assert!(parse_allow(" simlint: allow S01 — no parens").is_none());
+        assert!(parse_allow(" just a comment mentioning simlint").is_none());
+        // Well-formed but reasonless: parses, but must not suppress.
+        let d = parse_allow(" simlint: allow(S01)").unwrap();
+        assert!(!d.has_reason);
+        let d = parse_allow(" simlint: allow(S01) — ").unwrap();
+        assert!(!d.has_reason);
+    }
+
+    #[test]
+    fn allow_on_same_line_suppresses() {
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // simlint: allow(S01) — caller checked is_some\n}\n";
+        assert!(scan_source("sim/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_in_comment_block_above_suppresses() {
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    // simlint: allow(S01) — caller checked is_some, and the check is\n    // load-bearing for admission control\n    x.unwrap()\n}\n";
+        assert!(scan_source("sim/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn reasonless_allow_does_not_suppress() {
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    // simlint: allow(S01)\n    x.unwrap()\n}\n";
+        let fs = scan_source("sim/mod.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, RuleId::S01);
+    }
+
+    #[test]
+    fn wrong_rule_allow_does_not_suppress() {
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    // simlint: allow(D01) — wrong rule entirely\n    x.unwrap()\n}\n";
+        assert_eq!(scan_source("sim/mod.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn findings_carry_span_and_hint() {
+        let src = "use std::collections::HashMap;\n";
+        let fs = scan_source("router/mod.rs", src);
+        assert_eq!(fs.len(), 1);
+        let f = &fs[0];
+        assert_eq!(f.rule, RuleId::D01);
+        assert_eq!(f.line, 1);
+        assert_eq!(f.col, 23);
+        assert_eq!(f.line_text, "use std::collections::HashMap;");
+        assert!(f.render().contains("help: "));
+    }
+}

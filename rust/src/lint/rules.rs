@@ -1,0 +1,425 @@
+//! The simlint rule set.
+//!
+//! Every rule polices one way entropy or an unjustified abort can leak into
+//! the simulator's byte-determinism contract:
+//!
+//! * **D01** — `std::collections::HashMap`/`HashSet` in a core simulation
+//!   module. SipHash draws a per-process random key, so map behaviour (bucket
+//!   order, resize timing) differs run to run. Core code must use
+//!   `util::fxhash::{FxHashMap, FxHashSet}` or a `BTreeMap`/`BTreeSet`.
+//! * **D02** — ambient clocks (`Instant::now`, `SystemTime`) outside the
+//!   sanctioned wall-clock sites (`util/bench.rs`, `util/logging.rs`,
+//!   `benches/`). Simulated time comes from the event queue, never the host.
+//! * **D03** — entropy-seeded randomness anywhere outside `util/rng.rs`
+//!   (`thread_rng`, `OsRng`, `from_entropy`, `RandomState`, …). The
+//!   sanctioned path is `util::rng::Rng::new(seed)` with an explicit seed.
+//! * **D04** — iteration over a hash-based map/set in a core module. Even
+//!   with a fixed hasher, iteration order is an implementation detail, not a
+//!   contract; enumeration that can reach a report or JSON must be sorted
+//!   (or carry an `allow` explaining why order cannot escape).
+//! * **S01** — `unwrap()`/`expect()`/`panic!`-family in core library code
+//!   without an inline justification naming the invariant that makes the
+//!   abort unreachable (or correct).
+//!
+//! Rules match the token stream from [`super::scanner`], so multi-line
+//! method chains and string/comment contents are handled exactly.
+
+use super::scanner::{ScanResult, Token, TokenKind};
+use super::{Finding, RuleId};
+use std::collections::BTreeSet;
+
+/// Module prefixes (under `src/`) that form the deterministic simulation
+/// core. D01/D04/S01 apply only here; D02/D03 apply everywhere.
+pub const CORE_MODULES: &[&str] = &[
+    "cluster",
+    "coordinator",
+    "instance",
+    "memory",
+    "metrics",
+    "perf",
+    "policy",
+    "router",
+    "sim",
+    "sweep",
+    "workload",
+];
+
+/// Files allowed to touch the host wall clock.
+const D02_EXEMPT: &[&str] = &["util/bench.rs", "util/logging.rs"];
+
+/// Identifiers whose mere appearance means entropy-seeded randomness.
+const D03_IDENTS: &[&str] = &[
+    "thread_rng",
+    "ThreadRng",
+    "OsRng",
+    "StdRng",
+    "SmallRng",
+    "from_entropy",
+    "RandomState",
+    "DefaultHasher",
+    "getrandom",
+];
+
+/// Hash-backed container type names for the D04 symbol table. `SeqMap` is a
+/// crate-level alias for `FxHashMap<u64, SeqState>`; a single-file scanner
+/// cannot resolve cross-file aliases, so it is listed explicitly.
+const HASH_TYPES: &[&str] = &["FxHashMap", "FxHashSet", "HashMap", "HashSet", "SeqMap"];
+
+/// Methods that enumerate a map in hash order.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+];
+
+/// Path of the file relative to the crate's `src/` directory: everything
+/// after the last `src` component, or the path unchanged when there is none
+/// (fixtures pass virtual paths like `coordinator/mod.rs` directly).
+pub fn module_rel(path: &str) -> &str {
+    let norm = path;
+    let mut rel = norm;
+    let mut rest = norm;
+    while let Some(pos) = rest.find("src/") {
+        let abs = norm.len() - rest.len() + pos;
+        let at_boundary = abs == 0 || norm.as_bytes()[abs - 1] == b'/';
+        if at_boundary {
+            rel = &norm[abs + 4..];
+        }
+        rest = &rest[pos + 4..];
+    }
+    rel
+}
+
+fn first_segment(rel: &str) -> &str {
+    rel.split('/').next().unwrap_or(rel)
+}
+
+/// Is this file part of the deterministic simulation core?
+pub fn is_core(path: &str) -> bool {
+    CORE_MODULES.contains(&first_segment(module_rel(path)))
+}
+
+fn d02_exempt(path: &str) -> bool {
+    let rel = module_rel(path);
+    D02_EXEMPT.contains(&rel) || path.split('/').any(|seg| seg == "benches")
+}
+
+fn d03_exempt(path: &str) -> bool {
+    module_rel(path) == "util/rng.rs"
+}
+
+/// Run every rule over one scanned file. Returned findings are raw — the
+/// caller applies `// simlint: allow(…)` directives and the baseline.
+pub fn check(path: &str, scan: &ScanResult) -> Vec<Finding> {
+    let toks: Vec<&Token> = scan.tokens.iter().filter(|t| !t.in_test).collect();
+    let mut findings = Vec::new();
+
+    let core = is_core(path);
+    if core {
+        check_d01(path, scan, &toks, &mut findings);
+        check_d04(path, scan, &toks, &mut findings);
+        check_s01(path, scan, &toks, &mut findings);
+    }
+    if !d02_exempt(path) {
+        check_d02(path, scan, &toks, &mut findings);
+    }
+    if !d03_exempt(path) {
+        check_d03(path, scan, &toks, &mut findings);
+    }
+
+    findings.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    findings
+}
+
+fn push(
+    findings: &mut Vec<Finding>,
+    rule: RuleId,
+    path: &str,
+    scan: &ScanResult,
+    tok: &Token,
+    message: String,
+) {
+    findings.push(Finding {
+        rule,
+        path: path.to_string(),
+        line: tok.line,
+        col: tok.col,
+        message,
+        line_text: scan.line_text(tok.line).to_string(),
+    });
+}
+
+fn check_d01(path: &str, scan: &ScanResult, toks: &[&Token], findings: &mut Vec<Finding>) {
+    for t in toks {
+        if t.kind == TokenKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            push(
+                findings,
+                RuleId::D01,
+                path,
+                scan,
+                t,
+                format!(
+                    "std {} uses SipHash with a per-process random key",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+fn check_d02(path: &str, scan: &ScanResult, toks: &[&Token], findings: &mut Vec<Finding>) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = toks[i];
+        if t.is_ident("SystemTime") {
+            push(
+                findings,
+                RuleId::D02,
+                path,
+                scan,
+                t,
+                "SystemTime reads the host wall clock".to_string(),
+            );
+        } else if t.is_ident("Instant")
+            && i + 2 < toks.len()
+            && toks[i + 1].is_punct(':')
+            && toks[i + 2].is_punct(':')
+            && toks.get(i + 3).is_some_and(|n| n.is_ident("now"))
+        {
+            push(
+                findings,
+                RuleId::D02,
+                path,
+                scan,
+                t,
+                "Instant::now reads the host monotonic clock".to_string(),
+            );
+            i += 4;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+fn check_d03(path: &str, scan: &ScanResult, toks: &[&Token], findings: &mut Vec<Finding>) {
+    for t in toks {
+        if t.kind == TokenKind::Ident && D03_IDENTS.contains(&t.text.as_str()) {
+            push(
+                findings,
+                RuleId::D03,
+                path,
+                scan,
+                t,
+                format!("`{}` draws entropy outside util::rng", t.text),
+            );
+        }
+    }
+}
+
+/// Build the set of identifiers in this file known to name hash-backed
+/// containers: `name: [&][Mutex<]FxHashMap<…>` declarations (struct fields,
+/// fn params, typed lets) and `name = FxHashMap::default()` bindings.
+fn hash_symbols(toks: &[&Token]) -> BTreeSet<String> {
+    let mut syms = BTreeSet::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        // Pattern: Ident ':' <short type chain containing a hash type>.
+        if toks[i].kind == TokenKind::Ident
+            && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+            && !toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+        {
+            let name = &toks[i].text;
+            let mut j = i + 2;
+            let limit = (i + 14).min(toks.len());
+            while j < limit {
+                let t = toks[j];
+                let delim = t.is_punct(',')
+                    || t.is_punct(';')
+                    || t.is_punct(')')
+                    || t.is_punct('{')
+                    || t.is_punct('=');
+                if delim {
+                    break;
+                }
+                if t.kind == TokenKind::Ident && HASH_TYPES.contains(&t.text.as_str()) {
+                    syms.insert(name.clone());
+                    break;
+                }
+                j += 1;
+            }
+        }
+        // Pattern: `let [mut] name = <hash type>::default()` (and similar
+        // short constructor chains).
+        if toks[i].is_ident("let") {
+            let mut j = i + 1;
+            if toks.get(j).is_some_and(|t| t.is_ident("mut")) {
+                j += 1;
+            }
+            if toks.get(j).is_some_and(|t| t.kind == TokenKind::Ident)
+                && toks.get(j + 1).is_some_and(|t| t.is_punct('='))
+            {
+                let name = &toks[j].text;
+                let limit = (j + 8).min(toks.len());
+                let mut k = j + 2;
+                while k < limit {
+                    let t = toks[k];
+                    if t.is_punct('(') || t.is_punct(';') {
+                        break;
+                    }
+                    if t.kind == TokenKind::Ident && HASH_TYPES.contains(&t.text.as_str()) {
+                        syms.insert(name.clone());
+                        break;
+                    }
+                    k += 1;
+                }
+            }
+        }
+        i += 1;
+    }
+    syms
+}
+
+fn check_d04(path: &str, scan: &ScanResult, toks: &[&Token], findings: &mut Vec<Finding>) {
+    let syms = hash_symbols(toks);
+    if syms.is_empty() {
+        return;
+    }
+    let mut i = 0usize;
+    while i < toks.len() {
+        // `name.iter()` / `self.name.iter()` — flag at the method token.
+        if toks[i].is_punct('.')
+            && toks
+                .get(i + 1)
+                .is_some_and(|t| t.kind == TokenKind::Ident && ITER_METHODS.contains(&t.text.as_str()))
+            && toks.get(i + 2).is_some_and(|t| t.is_punct('('))
+            && i >= 1
+            && toks[i - 1].kind == TokenKind::Ident
+            && syms.contains(&toks[i - 1].text)
+        {
+            let method = toks[i + 1];
+            push(
+                findings,
+                RuleId::D04,
+                path,
+                scan,
+                method,
+                format!(
+                    "`{}.{}()` enumerates a hash-based container in hash order",
+                    toks[i - 1].text, method.text
+                ),
+            );
+            i += 3;
+            continue;
+        }
+        // `for x in &name {` / `for x in &mut self.name {`.
+        if toks[i].is_ident("in") {
+            let mut j = i + 1;
+            if toks.get(j).is_some_and(|t| t.is_punct('&')) {
+                j += 1;
+            }
+            if toks.get(j).is_some_and(|t| t.is_ident("mut")) {
+                j += 1;
+            }
+            if toks.get(j).is_some_and(|t| t.is_ident("self"))
+                && toks.get(j + 1).is_some_and(|t| t.is_punct('.'))
+            {
+                j += 2;
+            }
+            if toks.get(j).is_some_and(|t| t.kind == TokenKind::Ident)
+                && syms.contains(&toks[j].text)
+                && toks.get(j + 1).is_some_and(|t| t.is_punct('{'))
+            {
+                let name = toks[j];
+                push(
+                    findings,
+                    RuleId::D04,
+                    path,
+                    scan,
+                    name,
+                    format!(
+                        "`for … in &{}` enumerates a hash-based container in hash order",
+                        name.text
+                    ),
+                );
+            }
+        }
+        i += 1;
+    }
+}
+
+fn check_s01(path: &str, scan: &ScanResult, toks: &[&Token], findings: &mut Vec<Finding>) {
+    const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = toks[i];
+        // `.unwrap(` / `.expect(`
+        if t.is_punct('.')
+            && toks
+                .get(i + 1)
+                .is_some_and(|n| n.is_ident("unwrap") || n.is_ident("expect"))
+            && toks.get(i + 2).is_some_and(|n| n.is_punct('('))
+        {
+            let m = toks[i + 1];
+            push(
+                findings,
+                RuleId::S01,
+                path,
+                scan,
+                m,
+                format!("`.{}()` aborts without a stated invariant", m.text),
+            );
+            i += 3;
+            continue;
+        }
+        // `panic!(` family
+        if t.kind == TokenKind::Ident
+            && PANIC_MACROS.contains(&t.text.as_str())
+            && toks.get(i + 1).is_some_and(|n| n.is_punct('!'))
+        {
+            push(
+                findings,
+                RuleId::S01,
+                path,
+                scan,
+                t,
+                format!("`{}!` aborts without a stated invariant", t.text),
+            );
+            i += 2;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_rel_strips_through_src() {
+        assert_eq!(module_rel("rust/src/metrics/mod.rs"), "metrics/mod.rs");
+        assert_eq!(module_rel("src/util/bench.rs"), "util/bench.rs");
+        assert_eq!(module_rel("coordinator/mod.rs"), "coordinator/mod.rs");
+        assert_eq!(module_rel("a/srcx/b.rs"), "a/srcx/b.rs");
+    }
+
+    #[test]
+    fn core_classification() {
+        assert!(is_core("rust/src/coordinator/mod.rs"));
+        assert!(is_core("metrics/mod.rs"));
+        assert!(!is_core("rust/src/util/fxhash.rs"));
+        assert!(!is_core("rust/src/lint/rules.rs"));
+        assert!(!is_core("rust/src/bin/simlint.rs"));
+    }
+
+    #[test]
+    fn d02_exemptions() {
+        assert!(d02_exempt("rust/src/util/bench.rs"));
+        assert!(d02_exempt("rust/benches/perf_trajectory.rs"));
+        assert!(!d02_exempt("rust/src/sweep/mod.rs"));
+    }
+}

@@ -1,0 +1,488 @@
+//! Character-level scanner for `.rs` source.
+//!
+//! simlint deliberately does not depend on a real Rust parser (`syn` would
+//! be a registry dependency; rustc internals are unstable). Instead this
+//! module runs a small character state machine that understands just enough
+//! lexical structure to be trustworthy:
+//!
+//! * strings (plain, raw `r#"…"#`, byte, byte-raw), char literals vs
+//!   lifetimes, nested block comments — all stripped, so `"HashMap"` in a
+//!   string or comment never fires a rule;
+//! * a **whole-file token stream** with line/column positions — rules match
+//!   token patterns (e.g. `.` `unwrap` `(`), so method chains split across
+//!   lines are matched exactly like single-line calls;
+//! * line comments captured per line, so `// simlint: allow(…)` directives
+//!   can be resolved against findings;
+//! * `#[cfg(test)]` items marked so rules skip test-only code (the brace
+//!   depth of the item body is tracked on the token stream).
+
+use std::collections::BTreeSet;
+
+/// Token classes the rules care about. Anything that is not an identifier
+/// or a number comes through as a single-character punct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    Ident,
+    Num,
+    Punct,
+}
+
+/// One lexical token with its 1-based source position.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+    /// Inside a `#[cfg(test)]` item — rules skip these.
+    pub in_test: bool,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokenKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokenKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+/// Everything rules and the allow-directive resolver need about one file.
+#[derive(Debug, Default)]
+pub struct ScanResult {
+    pub tokens: Vec<Token>,
+    /// `(line, text-after-`//`)` for every line comment in the file.
+    pub line_comments: Vec<(u32, String)>,
+    /// Lines whose only non-whitespace content is a comment.
+    pub pure_comment_lines: BTreeSet<u32>,
+    /// Raw source split into lines (for baseline keys and rendering).
+    pub source_lines: Vec<String>,
+}
+
+impl ScanResult {
+    /// Trimmed text of a 1-based source line (empty if out of range).
+    pub fn line_text(&self, line: u32) -> &str {
+        self.source_lines
+            .get(line as usize - 1)
+            .map(|s| s.trim())
+            .unwrap_or("")
+    }
+}
+
+/// Scan one file into tokens + comment metadata.
+pub fn scan(source: &str) -> ScanResult {
+    let chars: Vec<char> = source.chars().collect();
+    let mut out = ScanResult {
+        source_lines: source.lines().map(str::to_string).collect(),
+        ..ScanResult::default()
+    };
+
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut col: u32 = 1;
+    // Whether the current line has any non-comment, non-whitespace content
+    // so far / any comment content — used for pure-comment-line detection.
+    let mut line_has_code = false;
+    let mut line_has_comment = false;
+
+    macro_rules! bump {
+        () => {{
+            if chars[i] == '\n' {
+                if line_has_comment && !line_has_code {
+                    out.pure_comment_lines.insert(line);
+                }
+                line += 1;
+                col = 1;
+                line_has_code = false;
+                line_has_comment = false;
+            } else {
+                col += 1;
+            }
+            i += 1;
+        }};
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+
+        // Line comment: capture the text for directive parsing.
+        if c == '/' && i + 1 < chars.len() && chars[i + 1] == '/' {
+            line_has_comment = true;
+            let start = i + 2;
+            let mut end = start;
+            while end < chars.len() && chars[end] != '\n' {
+                end += 1;
+            }
+            let text: String = chars[start..end].iter().collect();
+            out.line_comments.push((line, text));
+            while i < end {
+                bump!();
+            }
+            continue;
+        }
+
+        // Block comment, possibly nested.
+        if c == '/' && i + 1 < chars.len() && chars[i + 1] == '*' {
+            line_has_comment = true;
+            let mut depth = 1usize;
+            bump!();
+            bump!();
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && i + 1 < chars.len() && chars[i + 1] == '*' {
+                    depth += 1;
+                    bump!();
+                    bump!();
+                } else if chars[i] == '*' && i + 1 < chars.len() && chars[i + 1] == '/' {
+                    depth -= 1;
+                    bump!();
+                    bump!();
+                } else {
+                    if chars[i] != '\n' && !chars[i].is_whitespace() {
+                        line_has_comment = true;
+                    }
+                    bump!();
+                }
+            }
+            continue;
+        }
+
+        if c == '\n' || c.is_whitespace() {
+            bump!();
+            continue;
+        }
+
+        // String literal.
+        if c == '"' {
+            line_has_code = true;
+            bump!(); // opening quote
+            while i < chars.len() {
+                if chars[i] == '\\' && i + 1 < chars.len() {
+                    bump!();
+                    bump!();
+                } else if chars[i] == '"' {
+                    bump!();
+                    break;
+                } else {
+                    bump!();
+                }
+            }
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == '\'' {
+            line_has_code = true;
+            let next = chars.get(i + 1).copied();
+            let after = chars.get(i + 2).copied();
+            let is_lifetime = matches!(next, Some(n) if n.is_alphabetic() || n == '_')
+                && after != Some('\'');
+            if is_lifetime {
+                bump!(); // '
+                while i < chars.len()
+                    && (chars[i].is_alphanumeric() || chars[i] == '_')
+                {
+                    bump!();
+                }
+            } else {
+                bump!(); // opening '
+                if i < chars.len() && chars[i] == '\\' {
+                    bump!(); // backslash
+                    if i < chars.len() {
+                        let esc = chars[i];
+                        bump!(); // escape head
+                        if esc == 'x' {
+                            for _ in 0..2 {
+                                if i < chars.len() && chars[i] != '\'' {
+                                    bump!();
+                                }
+                            }
+                        } else if esc == 'u' {
+                            while i < chars.len() && chars[i] != '\'' {
+                                bump!();
+                            }
+                        }
+                    }
+                } else if i < chars.len() {
+                    bump!(); // the char itself
+                }
+                if i < chars.len() && chars[i] == '\'' {
+                    bump!(); // closing '
+                }
+            }
+            continue;
+        }
+
+        // Number (decimal, hex, float tail). Emitted so `.0` tuple access
+        // can never be mistaken for a method call.
+        if c.is_ascii_digit() {
+            line_has_code = true;
+            let (tline, tcol) = (line, col);
+            let mut text = String::new();
+            while i < chars.len()
+                && (chars[i].is_ascii_alphanumeric() || chars[i] == '_')
+            {
+                text.push(chars[i]);
+                bump!();
+            }
+            // Float fraction: digit '.' digit — but not `0.iter()`-style
+            // method calls (identifiers after the dot).
+            if i + 1 < chars.len()
+                && chars[i] == '.'
+                && chars[i + 1].is_ascii_digit()
+            {
+                text.push('.');
+                bump!();
+                while i < chars.len()
+                    && (chars[i].is_ascii_alphanumeric() || chars[i] == '_')
+                {
+                    text.push(chars[i]);
+                    bump!();
+                }
+            }
+            out.tokens.push(Token {
+                kind: TokenKind::Num,
+                text,
+                line: tline,
+                col: tcol,
+                in_test: false,
+            });
+            continue;
+        }
+
+        // Identifier / keyword — also the entry point for raw strings
+        // (`r"…"`, `r#"…"#`, `br"…"`) and byte strings (`b"…"`, `b'…'`).
+        if c.is_alphabetic() || c == '_' {
+            line_has_code = true;
+            let (tline, tcol) = (line, col);
+            let mut text = String::new();
+            while i < chars.len()
+                && (chars[i].is_alphanumeric() || chars[i] == '_')
+            {
+                text.push(chars[i]);
+                bump!();
+            }
+            let next = chars.get(i).copied();
+            let raw_prefix = matches!(text.as_str(), "r" | "br")
+                && matches!(next, Some('"') | Some('#'));
+            let byte_prefix = text == "b" && matches!(next, Some('"') | Some('\''));
+            if raw_prefix {
+                // Raw string: count hashes, then scan to `"` + same hashes.
+                let mut hashes = 0usize;
+                while i < chars.len() && chars[i] == '#' {
+                    hashes += 1;
+                    bump!();
+                }
+                if i < chars.len() && chars[i] == '"' {
+                    bump!(); // opening quote
+                    'raw: while i < chars.len() {
+                        if chars[i] == '"' {
+                            let mut seen = 0usize;
+                            let mut j = i + 1;
+                            while seen < hashes && j < chars.len() && chars[j] == '#' {
+                                seen += 1;
+                                j += 1;
+                            }
+                            if seen == hashes {
+                                while i < j {
+                                    bump!();
+                                }
+                                break 'raw;
+                            }
+                        }
+                        bump!();
+                    }
+                }
+                continue;
+            }
+            if byte_prefix {
+                // Re-dispatch: leave the quote for the string/char arms.
+                continue;
+            }
+            out.tokens.push(Token {
+                kind: TokenKind::Ident,
+                text,
+                line: tline,
+                col: tcol,
+                in_test: false,
+            });
+            continue;
+        }
+
+        // Single-character punct.
+        line_has_code = true;
+        out.tokens.push(Token {
+            kind: TokenKind::Punct,
+            text: c.to_string(),
+            line,
+            col,
+            in_test: false,
+        });
+        bump!();
+    }
+    // Final line (no trailing newline).
+    if line_has_comment && !line_has_code {
+        out.pure_comment_lines.insert(line);
+    }
+
+    mark_test_regions(&mut out.tokens);
+    out
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` item (attribute through
+/// the matching closing brace of the item body) as `in_test`.
+fn mark_test_regions(tokens: &mut [Token]) {
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if let Some(attr_end) = cfg_test_attr_end(tokens, i) {
+            // Skip any further attributes, then find the item body.
+            let mut j = attr_end + 1;
+            while j + 1 < tokens.len() && tokens[j].is_punct('#') && tokens[j + 1].is_punct('[') {
+                j = match matching_close(tokens, j + 1, '[', ']') {
+                    Some(close) => close + 1,
+                    None => tokens.len(),
+                };
+            }
+            // Scan to the first `{` (item body) or `;` (no body).
+            let mut body = None;
+            while j < tokens.len() {
+                if tokens[j].is_punct('{') {
+                    body = Some(j);
+                    break;
+                }
+                if tokens[j].is_punct(';') {
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(open) = body {
+                let close = matching_close(tokens, open, '{', '}').unwrap_or(tokens.len() - 1);
+                for t in &mut tokens[i..=close] {
+                    t.in_test = true;
+                }
+                i = close + 1;
+                continue;
+            }
+            // `#[cfg(test)] mod x;` — mark just the header.
+            for t in &mut tokens[i..j.min(tokens.len())] {
+                t.in_test = true;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+/// If tokens at `i` start a `#[cfg(… test …)]` attribute (and not a
+/// `not(test)` one), return the index of its closing `]`.
+fn cfg_test_attr_end(tokens: &[Token], i: usize) -> Option<usize> {
+    if !(tokens[i].is_punct('#')
+        && tokens.get(i + 1).is_some_and(|t| t.is_punct('['))
+        && tokens.get(i + 2).is_some_and(|t| t.is_ident("cfg")))
+    {
+        return None;
+    }
+    let close = matching_close(tokens, i + 1, '[', ']')?;
+    let body = &tokens[i + 2..close];
+    let has_test = body.iter().any(|t| t.is_ident("test"));
+    let has_not = body.iter().any(|t| t.is_ident("not"));
+    if has_test && !has_not {
+        Some(close)
+    } else {
+        None
+    }
+}
+
+/// Index of the punct closing the bracket opened at `open` (which must hold
+/// `open_c`), or `None` if unbalanced.
+fn matching_close(tokens: &[Token], open: usize, open_c: char, close_c: char) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < tokens.len() {
+        if tokens[j].is_punct(open_c) {
+            depth += 1;
+        } else if tokens[j].is_punct(close_c) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        scan(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokenKind::Ident && !t.in_test)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let src = r##"
+            // HashMap in a comment
+            /* HashMap /* nested */ still comment */
+            let s = "HashMap<String, u32>";
+            let r = r#"HashMap"#;
+            let c = 'H';
+            let lt: &'static str = "x";
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()), "{ids:?}");
+        // `'static` is consumed as a lifetime, `str` survives as an ident.
+        assert!(ids.contains(&"str".to_string()), "{ids:?}");
+    }
+
+    #[test]
+    fn method_chain_across_lines_is_one_stream() {
+        let src = "let x = map\n    .iter()\n    .count();";
+        let toks = scan(src);
+        let pat: Vec<&str> = toks.tokens.iter().map(|t| t.text.as_str()).collect();
+        let pos = pat.iter().position(|t| *t == "iter").unwrap();
+        assert!(toks.tokens[pos - 1].is_punct('.'));
+        assert_eq!(toks.tokens[pos].line, 2);
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn live2() {}";
+        let toks = scan(src);
+        let unwrap_tok = toks.tokens.iter().find(|t| t.is_ident("unwrap")).unwrap();
+        assert!(unwrap_tok.in_test);
+        let live2 = toks.tokens.iter().find(|t| t.is_ident("live2")).unwrap();
+        assert!(!live2.in_test);
+    }
+
+    #[test]
+    fn not_test_cfg_is_not_marked() {
+        let src = "#[cfg(not(test))]\nfn prod() { x.unwrap(); }";
+        let toks = scan(src);
+        let unwrap_tok = toks.tokens.iter().find(|t| t.is_ident("unwrap")).unwrap();
+        assert!(!unwrap_tok.in_test);
+    }
+
+    #[test]
+    fn pure_comment_lines_are_detected() {
+        let src = "let a = 1; // trailing\n// pure\nlet b = 2;";
+        let toks = scan(src);
+        assert!(!toks.pure_comment_lines.contains(&1));
+        assert!(toks.pure_comment_lines.contains(&2));
+        assert_eq!(toks.line_comments.len(), 2);
+    }
+
+    #[test]
+    fn char_escapes_do_not_derail() {
+        let src = r"let q = '\''; let u = '\u{1F600}'; let t = map.iter();";
+        let toks = scan(src);
+        assert!(toks.tokens.iter().any(|t| t.is_ident("iter")));
+    }
+}

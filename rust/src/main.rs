@@ -434,6 +434,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     load_hardware_flags(args)?;
     let cfg = resolve_config(args)?;
     let name = cfg.name.clone();
+    // simlint: allow(D02) — CLI UX: prints how long the simulation took on the
+    // host; never feeds simulated time
     let t0 = std::time::Instant::now();
     let (report, summary) = run_config(cfg)?;
     let wall = t0.elapsed();

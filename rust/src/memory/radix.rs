@@ -105,9 +105,11 @@ impl RadixTree {
     }
 
     fn node(&self, id: usize) -> &Node {
+        // simlint: allow(S01) — arena ids are only handed out for live nodes; a dangle is tree corruption
         self.nodes[id].as_ref().expect("dangling node id")
     }
     fn node_mut(&mut self, id: usize) -> &mut Node {
+        // simlint: allow(S01) — arena ids are only handed out for live nodes; a dangle is tree corruption
         self.nodes[id].as_mut().expect("dangling node id")
     }
 
@@ -307,6 +309,7 @@ impl RadixTree {
     /// Remove a leaf node, returning its token count. Panics on non-leaf.
     pub fn remove_leaf(&mut self, id: usize) -> u64 {
         assert!(id != ROOT, "cannot remove root");
+        // simlint: allow(S01) — arena ids are only handed out for live nodes; a dangle is tree corruption
         let node = self.nodes[id].take().expect("dangling node id");
         assert!(node.children.is_empty(), "remove_leaf on internal node");
         let parent = node.parent;

@@ -21,7 +21,9 @@
 //! samples, deterministic sampling beyond). Million-request workloads
 //! therefore run in memory bounded by in-flight requests, not by history.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
+
+use crate::util::fxhash::FxHashMap;
 
 use crate::cluster::TimelineEntry;
 use crate::sim::{nanos_to_secs, Nanos};
@@ -123,9 +125,9 @@ struct TenantAgg {
 #[derive(Debug, Default)]
 pub struct MetricsCollector {
     /// In-flight records only; folded into aggregates at finish.
-    records: HashMap<u64, RequestRecord>,
+    records: FxHashMap<u64, RequestRecord>,
     /// Per-instance busy time accumulation.
-    busy: HashMap<usize, Nanos>,
+    busy: FxHashMap<usize, Nanos>,
     arrivals: usize,
     finished: usize,
     gen_tokens: u64,
@@ -275,8 +277,10 @@ impl MetricsCollector {
     /// themselves).
     pub fn report(&self, makespan: Nanos, tenant_names: &[String]) -> Report {
         let secs = nanos_to_secs(makespan).max(1e-12);
-        let utilization: HashMap<usize, f64> = self
+        let utilization: BTreeMap<usize, f64> = self
             .busy
+            // simlint: allow(D04) — collected into a BTreeMap, so the
+            // result is sorted regardless of hash-iteration order
             .iter()
             .map(|(&i, &b)| (i, (b as f64 / makespan.max(1) as f64).min(1.0)))
             .collect();
@@ -381,7 +385,9 @@ pub struct Report {
     pub throughput_tps: f64,
     /// Output tokens per second from requests that met their SLO.
     pub goodput_tps: f64,
-    pub utilization: HashMap<usize, f64>,
+    /// Per-instance busy fraction, sorted by instance id (determinism:
+    /// enumeration order is part of the report byte contract).
+    pub utilization: BTreeMap<usize, f64>,
     /// Per-SLO-class breakdown, ordered by class.
     pub per_class: Vec<ClassReport>,
     /// Per-tenant breakdown, ordered by tenant index.
@@ -407,9 +413,6 @@ impl Report {
                 ("count", Value::int(s.count as i64)),
             ])
         };
-        let mut util: Vec<(usize, f64)> =
-            self.utilization.iter().map(|(&k, &v)| (k, v)).collect();
-        util.sort_by_key(|&(k, _)| k);
         let mut fields = vec![
             ("num_requests", Value::int(self.num_requests as i64)),
             ("num_finished", Value::int(self.num_finished as i64)),
@@ -425,8 +428,9 @@ impl Report {
             (
                 "utilization",
                 Value::arr(
-                    util.into_iter()
-                        .map(|(k, v)| {
+                    self.utilization
+                        .iter()
+                        .map(|(&k, &v)| {
                             Value::obj(vec![
                                 ("instance", Value::int(k as i64)),
                                 ("busy", Value::float(v)),

@@ -103,7 +103,8 @@ impl Calibrated {
     pub fn new(base: Roofline, factors: Vec<(OpKind, f64)>) -> Self {
         let mut table = vec![1.0; OpKind::all().len()];
         for (k, f) in factors {
-            let idx = OpKind::all().iter().position(|&x| x == k).unwrap();
+            // simlint: allow(S01) — OpKind::all() enumerates every variant by construction
+        let idx = OpKind::all().iter().position(|&x| x == k).unwrap();
             table[idx] = f.max(1e-3);
         }
         let name = format!("calibrated[{}]", base.name);
@@ -115,6 +116,7 @@ impl Calibrated {
     }
 
     pub fn factor(&self, kind: OpKind) -> f64 {
+        // simlint: allow(S01) — OpKind::all() enumerates every variant by construction
         let idx = OpKind::all().iter().position(|&x| x == kind).unwrap();
         self.factors[idx]
     }

@@ -404,6 +404,7 @@ impl HardwareRegistry {
     pub fn builtins() -> Self {
         let mut r = Self::empty();
         for name in HardwareSpec::preset_names() {
+            // simlint: allow(S01) — preset_names() and preset() cover the same fixed set
             let spec = HardwareSpec::preset(name).expect("built-in preset resolves");
             r.entries
                 .insert(spec.name.clone(), Arc::new(HardwareBundle::spec_only(spec)));
@@ -491,6 +492,7 @@ pub fn global() -> &'static RwLock<HardwareRegistry> {
 pub fn snapshot() -> HardwareRegistry {
     global()
         .read()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
         .expect("hardware registry lock poisoned")
         .clone()
 }
@@ -501,6 +503,7 @@ pub fn snapshot() -> HardwareRegistry {
 pub fn register_hardware(bundle: HardwareBundle) -> anyhow::Result<()> {
     global()
         .write()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
         .expect("hardware registry lock poisoned")
         .register(bundle)
 }
@@ -511,6 +514,7 @@ pub fn register_hardware(bundle: HardwareBundle) -> anyhow::Result<()> {
 pub fn resolve(name: &str) -> anyhow::Result<HardwareSpec> {
     global()
         .read()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
         .expect("hardware registry lock poisoned")
         .resolve(name)
 }
@@ -519,6 +523,7 @@ pub fn resolve(name: &str) -> anyhow::Result<HardwareSpec> {
 pub fn bundle_for(name: &str) -> Option<Arc<HardwareBundle>> {
     global()
         .read()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
         .expect("hardware registry lock poisoned")
         .bundle(name)
 }
@@ -527,6 +532,7 @@ pub fn bundle_for(name: &str) -> Option<Arc<HardwareBundle>> {
 pub fn registered_names() -> Vec<String> {
     global()
         .read()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
         .expect("hardware registry lock poisoned")
         .names()
 }

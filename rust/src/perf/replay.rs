@@ -10,8 +10,9 @@
 //! the original's behaviour (autoregressive decode repeats shapes heavily,
 //! prefill rarely).
 
-use std::collections::HashMap;
 use std::sync::Mutex;
+
+use crate::util::fxhash::FxHashMap;
 
 use super::PerfModel;
 use crate::model::OpInvocation;
@@ -20,7 +21,7 @@ use crate::sim::Nanos;
 /// Memoizing wrapper around a slow inner model.
 pub struct Replay<M: PerfModel> {
     inner: M,
-    cache: Mutex<HashMap<(u8, u64, u64), Nanos>>,
+    cache: Mutex<FxHashMap<(u8, u64, u64), Nanos>>,
     hits: Mutex<u64>,
     misses: Mutex<u64>,
     name: String,
@@ -31,7 +32,7 @@ impl<M: PerfModel> Replay<M> {
         let name = format!("replay[{}]", inner.name());
         Replay {
             inner,
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(FxHashMap::default()),
             hits: Mutex::new(0),
             misses: Mutex::new(0),
             name,
@@ -42,12 +43,14 @@ impl<M: PerfModel> Replay<M> {
         let kind = crate::model::OpKind::all()
             .iter()
             .position(|&k| k == inv.kind)
+            // simlint: allow(S01) — OpKind::all() enumerates every variant by construction
             .unwrap() as u8;
         (kind, inv.tokens, inv.ctx)
     }
 
     /// (cache hits, misses) so far.
     pub fn stats(&self) -> (u64, u64) {
+        // simlint: allow(S01) — a poisoned counter mutex is unrecoverable; abort loudly
         (*self.hits.lock().unwrap(), *self.misses.lock().unwrap())
     }
 }
@@ -55,12 +58,16 @@ impl<M: PerfModel> Replay<M> {
 impl<M: PerfModel> PerfModel for Replay<M> {
     fn op_latency(&self, inv: OpInvocation) -> Nanos {
         let key = Self::key(inv);
+        // simlint: allow(S01) — a poisoned memo mutex is unrecoverable; abort loudly
         if let Some(&ns) = self.cache.lock().unwrap().get(&key) {
+            // simlint: allow(S01) — a poisoned counter mutex is unrecoverable; abort loudly
             *self.hits.lock().unwrap() += 1;
             return ns;
         }
         let ns = self.inner.op_latency(inv);
+        // simlint: allow(S01) — a poisoned memo mutex is unrecoverable; abort loudly
         self.cache.lock().unwrap().insert(key, ns);
+        // simlint: allow(S01) — a poisoned counter mutex is unrecoverable; abort loudly
         *self.misses.lock().unwrap() += 1;
         ns
     }

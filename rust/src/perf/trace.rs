@@ -60,6 +60,7 @@ impl TraceDb {
                 v.push((tokens, ns));
                 v.sort();
             }
+            // simlint: allow(S01) — mixing grid shapes for one op kind is a caller bug
             _ => panic!("{kind} is a batch/ctx op"),
         }
     }
@@ -75,6 +76,7 @@ impl TraceDb {
                 v.push((batch, ctx, ns));
                 v.sort();
             }
+            // simlint: allow(S01) — mixing grid shapes for one op kind is a caller bug
             _ => panic!("{kind} is a tokens op"),
         }
     }
@@ -352,6 +354,8 @@ impl PerfModel for TraceDb {
     fn op_latency(&self, inv: OpInvocation) -> Nanos {
         match self.lookup(inv) {
             Some(ns) => ns.round() as Nanos,
+            // simlint: allow(S01) — documented contract: a trace miss is unpriceable; the
+            // message names the remediation (re-profile or calibrated model)
             None => panic!(
                 "trace[{}/{}] has no samples for op {} — re-run the profiler \
                  or use the calibrated analytical model",

@@ -60,7 +60,7 @@ pub trait SchedulePolicy: Send {
     fn order(
         &mut self,
         wait: &mut [u64],
-        seqs: &std::collections::HashMap<u64, crate::instance::SeqState>,
+        seqs: &crate::instance::SeqMap,
         now: Nanos,
     );
 }
@@ -449,7 +449,11 @@ pub fn global() -> &'static RwLock<PolicyRegistry> {
 /// `Arc`-shared). Simulations resolve against snapshots, so a concurrent
 /// registration never changes a running simulation.
 pub fn snapshot() -> PolicyRegistry {
-    global().read().expect("policy registry lock poisoned").clone()
+    global()
+        .read()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
+        .expect("policy registry lock poisoned")
+        .clone()
 }
 
 /// Register a route policy in the global registry (last wins).
@@ -459,6 +463,7 @@ pub fn register_route_policy(
 ) {
     global()
         .write()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
         .expect("policy registry lock poisoned")
         .register_route(name, factory);
 }
@@ -470,6 +475,7 @@ pub fn register_sched_policy(
 ) {
     global()
         .write()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
         .expect("policy registry lock poisoned")
         .register_sched(name, factory);
 }
@@ -481,6 +487,7 @@ pub fn register_evict_policy(
 ) {
     global()
         .write()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
         .expect("policy registry lock poisoned")
         .register_evict(name, factory);
 }
@@ -497,6 +504,7 @@ pub fn register_traffic_source(
 ) {
     global()
         .write()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
         .expect("policy registry lock poisoned")
         .register_traffic(name, factory);
 }
@@ -513,6 +521,7 @@ pub fn register_cluster_controller(
 ) {
     global()
         .write()
+        // simlint: allow(S01) — poisoned global registry is unrecoverable; abort loudly
         .expect("policy registry lock poisoned")
         .register_controller(name, factory);
 }

@@ -10,7 +10,7 @@
 //! registry's `round-robin`, `least-outstanding`, `least-kv`,
 //! `prefix-aware`, and `session-affinity` entries.
 
-use std::collections::HashMap;
+use crate::util::fxhash::FxHashMap;
 
 use crate::config::Role;
 use crate::workload::Request;
@@ -143,6 +143,7 @@ impl RoutePolicy for LeastOutstanding {
         candidates
             .iter()
             .min_by(|a, b| (a.outstanding, a.id).cmp(&(b.outstanding, b.id)))
+            // simlint: allow(S01) — trait contract: candidates is non-empty
             .unwrap()
             .id
     }
@@ -162,9 +163,11 @@ impl RoutePolicy for LeastKvLoad {
             .min_by(|a, b| {
                 a.kv_utilization
                     .partial_cmp(&b.kv_utilization)
+                    // simlint: allow(S01) — kv_utilization is a finite ratio in [0, 1], never NaN
                     .unwrap()
                     .then(a.id.cmp(&b.id))
             })
+            // simlint: allow(S01) — trait contract: candidates is non-empty
             .unwrap()
             .id
     }
@@ -187,6 +190,7 @@ impl RoutePolicy for PrefixAware {
                 .iter()
                 .filter(|v| v.prefix_match == best)
                 .min_by(|a, b| (a.outstanding, a.id).cmp(&(b.outstanding, b.id)))
+                // simlint: allow(S01) — filter keeps the argmax element, so the set is non-empty
                 .unwrap()
                 .id
         } else {
@@ -208,7 +212,7 @@ impl RoutePolicy for PrefixAware {
 /// reports never silently attribute placement to the wrong policy.
 pub struct SessionAffinity {
     inner: Box<dyn RoutePolicy>,
-    affinity: HashMap<u64, usize>,
+    affinity: FxHashMap<u64, usize>,
     name: String,
 }
 
@@ -218,7 +222,7 @@ impl SessionAffinity {
         let name = format!("session-affinity({})", inner.name());
         SessionAffinity {
             inner,
-            affinity: HashMap::new(),
+            affinity: FxHashMap::default(),
             name,
         }
     }

@@ -66,6 +66,8 @@ pub fn profile_model(
         .model(model_name)
         .ok_or_else(|| anyhow::anyhow!("model '{model_name}' not in manifest"))?;
     let mut db = TraceDb::new(&opts.hardware_tag, model_name);
+    // simlint: allow(D02) — wall-clock budget for the profiling run itself (real
+    // hardware measurement); never feeds simulated time
     let t0 = std::time::Instant::now();
 
     // Warmup pass: compile + first-execute every artifact (JIT cost must

@@ -204,6 +204,7 @@ impl EventQueue {
                 return d;
             }
         }
+        // simlint: allow(S01) — callers only probe when ring_len > 0, so a set bit exists
         unreachable!("ring_len > 0 but occupancy bitmap is empty");
     }
 

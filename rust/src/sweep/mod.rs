@@ -27,7 +27,7 @@
 //! [`SweepSpec::expand`] rejects unknown names up front with the candidate
 //! list instead of failing mid-sweep.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -224,7 +224,7 @@ impl SweepSpec {
             hw_registry.check(h)?;
         }
         let mut out: Vec<SimConfig> = vec![];
-        let mut seen: HashSet<String> = HashSet::new();
+        let mut seen: BTreeSet<String> = BTreeSet::new();
         for preset in &self.axes.presets {
             for hw in axis(&self.axes.hardware) {
                 for rate in axis(&self.axes.rates) {
@@ -385,6 +385,9 @@ pub fn run_sweep(cfgs: &[SimConfig], threads: usize) -> anyhow::Result<SweepOutc
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<anyhow::Result<SweepPoint>>>> =
         (0..cfgs.len()).map(|_| Mutex::new(None)).collect();
+    // simlint: allow(D02) — wall-clock diagnostics only: wall_ns reports sweep
+    // duration and is outside the byte-determinism contract (per-point reports
+    // never depend on it)
     let t0 = std::time::Instant::now();
 
     std::thread::scope(|scope| {
@@ -401,6 +404,7 @@ pub fn run_sweep(cfgs: &[SimConfig], threads: usize) -> anyhow::Result<SweepOutc
                     report,
                     summary,
                 });
+                // simlint: allow(S01) — a poisoned result slot is unrecoverable; abort loudly
                 *slots[i].lock().unwrap() = Some(res);
             });
         }
@@ -410,7 +414,9 @@ pub fn run_sweep(cfgs: &[SimConfig], threads: usize) -> anyhow::Result<SweepOutc
     for slot in slots {
         let filled = slot
             .into_inner()
+            // simlint: allow(S01) — a poisoned result slot is unrecoverable; abort loudly
             .expect("sweep slot mutex poisoned")
+            // simlint: allow(S01) — the cursor hands every index to exactly one worker
             .expect("sweep worker exited without filling its slot");
         points.push(filled?);
     }

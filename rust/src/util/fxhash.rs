@@ -14,7 +14,7 @@
 //! using a fixed hasher merely removes per-process entropy, it does not
 //! make iteration order part of the contract.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::hash::{BuildHasherDefault, Hasher};
 
 const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
@@ -74,6 +74,10 @@ pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
 /// `HashMap` keyed with the deterministic Fx hash. Construct with
 /// `FxHashMap::default()`.
 pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+/// `HashSet` keyed with the deterministic Fx hash. Construct with
+/// `FxHashSet::default()`.
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
 
 #[cfg(test)]
 mod tests {

@@ -300,6 +300,7 @@ impl TrafficSource for SessionSource {
             .peek()
             .is_some_and(|r| r.0.at <= self.next_start);
         let turn = if take_pending {
+            // simlint: allow(S01) — take_pending is only true when peek() returned Some
             self.pending.pop().unwrap().0
         } else {
             // Open a new session at `next_start`.

@@ -5,11 +5,10 @@
 //! `SimulationBuilder` injection, with sweep determinism preserved at 1
 //! and 8 workers.
 
-use std::collections::HashMap;
 
 use llmservingsim::config::{presets, SimConfig};
 use llmservingsim::coordinator::Simulation;
-use llmservingsim::instance::SeqState;
+use llmservingsim::instance::SeqMap;
 use llmservingsim::policy::{
     self, CacheLeaf, EvictionPolicy, SchedulePolicy,
 };
@@ -29,7 +28,7 @@ impl SchedulePolicy for LongestFirst {
     fn name(&self) -> &str {
         "longest-first"
     }
-    fn order(&mut self, wait: &mut [u64], seqs: &HashMap<u64, SeqState>, _now: Nanos) {
+    fn order(&mut self, wait: &mut [u64], seqs: &SeqMap, _now: Nanos) {
         wait.sort_by_key(|id| {
             let s = &seqs[id];
             (std::cmp::Reverse(s.req.prompt_tokens), s.req.id)

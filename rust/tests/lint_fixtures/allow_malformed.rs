@@ -1,0 +1,13 @@
+// Fixture: malformed or reasonless allow directives must NOT suppress.
+// Never compiled.
+use std::collections::HashMap; // simlint: allow(D01)
+
+pub struct Table {
+    // simlint: allow(D99) — unknown rule id
+    pub by_id: HashMap<u64, u32>,
+}
+
+pub fn pick(v: &[u32]) -> u32 {
+    // simlint: allow S01 — missing parentheses
+    *v.first().unwrap()
+}

@@ -1,0 +1,15 @@
+// Fixture: well-formed inline allows (same line, and in the comment block
+// directly above — including a wrapped two-line comment) suppress every
+// rule. Never compiled.
+use std::collections::HashMap; // simlint: allow(D01) — fixture exercising same-line suppression
+
+pub struct Table {
+    // simlint: allow(D01) — fixture exercising the comment-block-above
+    // form, with the reason wrapping onto a second line
+    pub by_id: HashMap<u64, u32>,
+}
+
+pub fn pick(v: &[u32]) -> u32 {
+    // simlint: allow(S01) — fixture invariant: callers never pass an empty slice
+    *v.first().unwrap()
+}

@@ -1,0 +1,9 @@
+// Fixture: D01 — std HashMap/HashSet in a core module. Scanned with a
+// virtual core-module path; never compiled.
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+pub struct Table {
+    pub by_id: HashMap<u64, u32>,
+    pub live: HashSet<u64>,
+}

@@ -1,0 +1,9 @@
+// Fixture: D02 — ambient clocks. Never compiled.
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> u128 {
+    let t0 = Instant::now();
+    let wall = SystemTime::now();
+    let _ = wall;
+    t0.elapsed().as_nanos()
+}

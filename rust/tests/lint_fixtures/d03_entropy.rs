@@ -1,0 +1,6 @@
+// Fixture: D03 — entropy-seeded randomness. Never compiled.
+use std::collections::hash_map::RandomState;
+
+pub fn hasher() -> RandomState {
+    RandomState::new()
+}

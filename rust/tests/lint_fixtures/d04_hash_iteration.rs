@@ -1,0 +1,25 @@
+// Fixture: D04 — iteration over a hash-based container in a core module,
+// including a method chain split across lines (the case a line-based
+// scanner provably misses). Never compiled.
+use crate::util::fxhash::FxHashMap;
+
+pub struct Metrics {
+    busy: FxHashMap<usize, u64>,
+}
+
+impl Metrics {
+    pub fn report(&self) -> Vec<(usize, u64)> {
+        self.busy
+            .iter()
+            .map(|(&k, &v)| (k, v))
+            .collect()
+    }
+
+    pub fn total(&self) -> u64 {
+        let mut sum = 0;
+        for (_, v) in &self.busy {
+            sum += v;
+        }
+        sum
+    }
+}

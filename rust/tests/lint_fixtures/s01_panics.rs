@@ -1,0 +1,12 @@
+// Fixture: S01 — unjustified aborts in core library code. Never compiled.
+pub fn pick(v: &[u32]) -> u32 {
+    let first = v.first().unwrap();
+    let envd: u32 = std::env::var("N").expect("N must be set").parse().unwrap();
+    if *first > envd {
+        panic!("out of range");
+    }
+    match *first {
+        0 => unreachable!(),
+        n => n,
+    }
+}

@@ -1,0 +1,21 @@
+// Fixture: everything inside a `#[cfg(test)]` item is exempt from the
+// rules; code after the test module is not. Never compiled.
+pub fn live(x: Option<u32>) -> u32 {
+    x.unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn scratch() {
+        let mut m: HashMap<u32, u32> = HashMap::new();
+        m.insert(1, 2);
+        assert_eq!(m.get(&1).copied().unwrap(), 2);
+    }
+}
+
+pub fn also_live(x: Option<u32>) -> u32 {
+    x.unwrap()
+}

@@ -1,0 +1,164 @@
+//! simlint self-tests + the tree gate.
+//!
+//! Two layers:
+//! * **Fixture tests** — every rule is demonstrated to fire on a fixture
+//!   under `tests/lint_fixtures/` (scanned with virtual in-core paths; the
+//!   fixtures are never compiled), and every suppression path (inline
+//!   allow, malformed allow, `#[cfg(test)]` region, non-core exemption,
+//!   baseline) is demonstrated to behave.
+//! * **The gate** — `src/` must produce zero findings beyond the committed
+//!   `simlint.allow` baseline. This runs under plain `cargo test`, so the
+//!   tier-1 suite itself enforces the determinism rules.
+
+use llmservingsim::lint::baseline::{format_baseline, Baseline};
+use llmservingsim::lint::{scan_source, scan_tree, RuleId};
+use std::path::Path;
+
+const D01_SRC: &str = include_str!("lint_fixtures/d01_std_hash.rs");
+const D02_SRC: &str = include_str!("lint_fixtures/d02_wall_clock.rs");
+const D03_SRC: &str = include_str!("lint_fixtures/d03_entropy.rs");
+const D04_SRC: &str = include_str!("lint_fixtures/d04_hash_iteration.rs");
+const S01_SRC: &str = include_str!("lint_fixtures/s01_panics.rs");
+const ALLOW_OK_SRC: &str = include_str!("lint_fixtures/allow_suppresses.rs");
+const ALLOW_BAD_SRC: &str = include_str!("lint_fixtures/allow_malformed.rs");
+const TEST_REGION_SRC: &str = include_str!("lint_fixtures/test_region.rs");
+
+/// Virtual path that makes every core-scoped rule applicable.
+const CORE: &str = "coordinator/mod.rs";
+
+fn rules_fired(path: &str, src: &str) -> Vec<RuleId> {
+    scan_source(path, src).iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn d01_fires_on_std_hash_in_core() {
+    let fired = rules_fired(CORE, D01_SRC);
+    assert_eq!(fired.len(), 4, "{fired:?}"); // 2 use lines + 2 field types
+    assert!(fired.iter().all(|r| *r == RuleId::D01));
+}
+
+#[test]
+fn d01_is_scoped_to_core_modules() {
+    assert!(rules_fired("util/helpers.rs", D01_SRC).is_empty());
+    assert!(rules_fired("lint/rules.rs", D01_SRC).is_empty());
+}
+
+#[test]
+fn d02_fires_on_ambient_clocks() {
+    let fired = rules_fired(CORE, D02_SRC);
+    // SystemTime in the use, Instant::now(), SystemTime::now().
+    assert_eq!(fired, vec![RuleId::D02, RuleId::D02, RuleId::D02]);
+    // D02 applies outside core modules too…
+    assert_eq!(rules_fired("util/json.rs", D02_SRC).len(), 3);
+    // …but not in the sanctioned wall-clock homes.
+    assert!(rules_fired("util/bench.rs", D02_SRC).is_empty());
+    assert!(rules_fired("util/logging.rs", D02_SRC).is_empty());
+    assert!(rules_fired("benches/perf_trajectory.rs", D02_SRC).is_empty());
+}
+
+#[test]
+fn d03_fires_on_entropy_sources() {
+    let fired = rules_fired(CORE, D03_SRC);
+    assert_eq!(fired.len(), 3, "{fired:?}");
+    assert!(fired.iter().all(|r| *r == RuleId::D03));
+    // util/rng.rs is the sanctioned seeded-RNG home.
+    assert!(rules_fired("util/rng.rs", D03_SRC).is_empty());
+}
+
+#[test]
+fn d04_fires_on_hash_iteration_including_multiline_chains() {
+    let findings = scan_source("metrics/mod.rs", D04_SRC);
+    assert_eq!(findings.len(), 2, "{findings:?}");
+    // The `.iter()` sits on its own line inside a split method chain — a
+    // line-based scanner cannot see `busy` and `iter` together.
+    assert!(findings.iter().any(|f| f.line_text == ".iter()"));
+    // The `for … in &self.busy` loop is the second form.
+    assert!(findings
+        .iter()
+        .any(|f| f.line_text.starts_with("for (_, v)")));
+}
+
+#[test]
+fn s01_fires_on_unjustified_aborts() {
+    let fired = rules_fired(CORE, S01_SRC);
+    // unwrap ×2, expect, panic!, unreachable!
+    assert_eq!(fired.len(), 5, "{fired:?}");
+    assert!(fired.iter().all(|r| *r == RuleId::S01));
+    // S01 is a core-library rule; the same source is clean elsewhere.
+    assert!(rules_fired("cli/mod.rs", S01_SRC).is_empty());
+}
+
+#[test]
+fn well_formed_allows_suppress() {
+    assert!(rules_fired(CORE, ALLOW_OK_SRC).is_empty());
+}
+
+#[test]
+fn malformed_allows_do_not_suppress() {
+    let fired = rules_fired(CORE, ALLOW_BAD_SRC);
+    // Reasonless allow(D01), unknown-rule allow(D99), paren-less allow.
+    assert_eq!(fired, vec![RuleId::D01, RuleId::D01, RuleId::S01]);
+}
+
+#[test]
+fn cfg_test_regions_are_exempt_and_bounded() {
+    let findings = scan_source(CORE, TEST_REGION_SRC);
+    // The HashMap + unwrap inside `#[cfg(test)] mod tests` are skipped;
+    // the unwrap *after* the module still fires.
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RuleId::S01);
+    assert!(findings[0].line_text.contains("x.unwrap()"));
+}
+
+#[test]
+fn baseline_suppresses_exactly_its_entries() {
+    let findings = scan_source(CORE, D01_SRC);
+    let baseline = Baseline::parse(&format_baseline(&findings));
+    assert!(findings.iter().all(|f| baseline.contains(f)));
+    // A finding from another file is not covered.
+    let other = scan_source(CORE, S01_SRC);
+    assert!(other.iter().all(|f| !baseline.contains(f)));
+}
+
+#[test]
+fn update_baseline_round_trips_byte_identically() {
+    let findings = scan_source(CORE, D01_SRC);
+    let once = format_baseline(&findings);
+    let twice = Baseline::parse(&once).render();
+    assert_eq!(once, twice);
+    // And an empty finding set renders the committed header-only form.
+    let empty = format_baseline(&[]);
+    assert_eq!(Baseline::parse(&empty).render(), empty);
+}
+
+#[test]
+fn committed_baseline_is_canonical() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("simlint.allow");
+    let text = std::fs::read_to_string(&path).expect("committed simlint.allow must exist");
+    assert_eq!(
+        Baseline::parse(&text).render(),
+        text,
+        "simlint.allow is not in canonical --update-baseline form"
+    );
+}
+
+/// The gate: the library source tree is clean modulo the committed
+/// baseline. Runs under plain `cargo test`, so tier-1 enforces the rules.
+#[test]
+fn src_tree_is_clean_modulo_baseline() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = scan_tree(&manifest.join("src")).expect("scanning src/ must succeed");
+    let baseline_text =
+        std::fs::read_to_string(manifest.join("simlint.allow")).unwrap_or_default();
+    let baseline = Baseline::parse(&baseline_text);
+    let fresh: Vec<String> = findings
+        .iter()
+        .filter(|f| !baseline.contains(f))
+        .map(|f| f.render())
+        .collect();
+    assert!(
+        fresh.is_empty(),
+        "unbaselined simlint findings in src/:\n{}",
+        fresh.join("\n")
+    );
+}
