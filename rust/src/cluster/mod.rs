@@ -19,16 +19,18 @@
 //! | `static`          | no ticks, no actions — byte-identical to the pre-driver run loop |
 //! | `queue-threshold` | autoscaler: scale up when the average wait queue per live instance exceeds a threshold, drain back down when it falls below another |
 //! | `failure-replay`  | scripted fault injection from `cluster.failures` (fail at an exact time, optionally recover later) |
+//! | `chaos`           | seeded random fault injection from `cluster.chaos`: instance crashes, correlated zone outages (optionally partitioning the zone off the fabric), stragglers, link degradation — each with a lognormal MTTR recovery |
 //!
 //! Determinism contract: controllers see only the [`ClusterView`] and the
 //! tick time, ticks land on a fixed grid in *simulated* time, and actions
 //! are applied in returned order — so a controlled simulation is exactly as
 //! reproducible as a static one, at any sweep worker count.
 
-use crate::config::{ClusterConfig, Role};
+use crate::config::{ChaosConfig, ClusterConfig, Role};
 use crate::memory::CacheStats;
 use crate::sim::{Nanos, MILLI};
 use crate::util::json::Value;
+use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
 // Lifecycle
@@ -87,7 +89,12 @@ pub struct InstanceSnapshot {
     pub name: String,
     pub hardware: String,
     pub role: Role,
+    /// Failure domain (rack/zone) label; chaos faults correlate within it.
+    pub zone: String,
     pub lifecycle: Lifecycle,
+    /// Step-latency multiplier currently applied (1.0 = healthy,
+    /// > 1.0 = straggling under [`ClusterAction::SetPerfScale`]).
+    pub perf_scale: f64,
     /// Requests waiting for admission.
     pub waiting: usize,
     /// Sequences in the running batch.
@@ -147,6 +154,17 @@ impl ClusterView {
             .map(|i| i.waiting)
             .sum()
     }
+
+    /// Instance ids in `zone`, ascending (stopped instances included — a
+    /// domain outage hits whatever is racked there, and recovery needs the
+    /// full member list).
+    pub fn zone_members(&self, zone: &str) -> Vec<usize> {
+        self.instances
+            .iter()
+            .filter(|i| i.zone == zone)
+            .map(|i| i.id)
+            .collect()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -182,6 +200,25 @@ pub enum ClusterAction {
     Recover { instance: usize },
     /// Retune an instance's continuous-batching sequence cap.
     SetBatchCap { instance: usize, max_seqs: usize },
+    /// Correlated failure domain outage: every instance whose
+    /// [`zone`](InstanceSnapshot::zone) matches fails at absolute time
+    /// `at` (same mechanics as [`Fail`](ClusterAction::Fail), per member).
+    FailDomain { zone: String, at: Nanos },
+    /// Scale the inter-instance fabric bandwidth on every link touching
+    /// `instance` (absolute multiplier; `1.0` restores the link).
+    DegradeLink { instance: usize, scale: f64 },
+    /// Cut every inter-instance fabric link touching instances in `zone`:
+    /// cross-zone KV handoffs re-route or park until the fabric heals.
+    /// Instances keep serving what they already hold.
+    PartitionDomain { zone: String },
+    /// Heal the inter-instance fabric completely: all degraded links back
+    /// to full bandwidth, all partitions removed, routes byte-identical to
+    /// the pristine topology.
+    RestoreFabric,
+    /// Straggler injection: multiply `instance`'s step latencies by
+    /// `scale` (>= 1; `1.0` restores full speed). Applied where step
+    /// durations are priced, so schedulers/routers see the slowdown.
+    SetPerfScale { instance: usize, scale: f64 },
 }
 
 impl ClusterAction {
@@ -194,6 +231,11 @@ impl ClusterAction {
             ClusterAction::Fail { .. } => "fail",
             ClusterAction::Recover { .. } => "recover",
             ClusterAction::SetBatchCap { .. } => "set-batch-cap",
+            ClusterAction::FailDomain { .. } => "fail-domain",
+            ClusterAction::DegradeLink { .. } => "degrade-link",
+            ClusterAction::PartitionDomain { .. } => "partition",
+            ClusterAction::RestoreFabric => "restore-fabric",
+            ClusterAction::SetPerfScale { .. } => "perf-scale",
         }
     }
 }
@@ -341,15 +383,22 @@ impl ClusterController for QueueThreshold {
         if self.ticks_since_action <= Self::COOLDOWN_TICKS {
             return vec![];
         }
-        let live = view.live();
+        // One capacity measure for every gate: live() = Active + Starting.
+        // The scale-down branch previously compared active() against the
+        // floor while the scale-up branch used live(); with the warming
+        // guard below the two agree (no Starting instances => live ==
+        // active), but mixing measures invited exactly the
+        // drain-during-warmup bug the guard exists to prevent — pinned by
+        // `queue_threshold_floor_survives_warmup`.
+        let capacity = view.live();
         let waiting = view.total_waiting();
-        let avg = waiting as f64 / live.max(1) as f64;
+        let avg = waiting as f64 / capacity.max(1) as f64;
         let starting = view
             .instances
             .iter()
             .any(|i| matches!(i.lifecycle, Lifecycle::Starting { .. }));
 
-        if avg > self.scale_up_queue && live < self.max_instances {
+        if avg > self.scale_up_queue && capacity < self.max_instances {
             self.ticks_since_action = 0;
             return vec![ClusterAction::ScaleUp {
                 hardware: None,
@@ -358,8 +407,7 @@ impl ClusterController for QueueThreshold {
         }
         // Never drain while capacity is still warming up — the queue dip
         // may just be the burst ending before the new instance arrived.
-        if avg < self.scale_down_queue && !starting && view.active() > self.min_instances
-        {
+        if avg < self.scale_down_queue && !starting && capacity > self.min_instances {
             // Highest-id active *Unified* instance: scaled-up instances
             // leave first, the original fleet last (deterministic
             // tie-break by id). Prefill/Decode instances are never
@@ -455,6 +503,189 @@ impl ClusterController for FailureReplay {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Built-in: chaos (seeded fault injection)
+// ---------------------------------------------------------------------------
+
+/// Seeded random fault injection driven by a [`ChaosConfig`] profile.
+///
+/// Incidents arrive as a Poisson process (`fault_rate` per simulated
+/// second). Each incident picks a uniformly random `Active` victim and
+/// manifests — by independent profile-weighted draws — as one of:
+///
+/// 1. a **correlated zone outage** ([`ClusterAction::FailDomain`] on the
+///    victim's zone, optionally also [`ClusterAction::PartitionDomain`]
+///    cutting the zone off the inter-instance fabric),
+/// 2. a **straggler** ([`ClusterAction::SetPerfScale`] with the profile's
+///    multiplier),
+/// 3. a **link degradation** ([`ClusterAction::DegradeLink`] on the
+///    victim's fabric links), or
+/// 4. a plain **instance crash** ([`ClusterAction::Fail`]).
+///
+/// Every incident schedules its own recovery after a lognormal MTTR
+/// (crashes/outages recover via [`ClusterAction::Recover`], stragglers and
+/// degraded links via a scale-1.0 counter-action, partitions via
+/// [`ClusterAction::RestoreFabric`] — which heals the *whole* fabric, so
+/// overlapping link incidents are healed along with it). Crash and outage
+/// times are nanosecond-exact (carried in the action's `at`); stragglers,
+/// degradations, and recoveries are tick-quantized like every other
+/// controller decision.
+///
+/// Determinism: all randomness flows through one [`Rng`] seeded from
+/// `cluster.chaos.seed`, incidents are drawn in tick order, and victims
+/// come from the id-ordered [`ClusterView`] — so a profile replays
+/// byte-identically at any sweep worker count. An inert profile
+/// (`fault_rate == 0`) schedules no ticks at all and is byte-identical to
+/// no controller.
+#[derive(Debug)]
+pub struct ChaosController {
+    cfg: ChaosConfig,
+    rng: Rng,
+    /// Absolute time of the next fault incident; `Nanos::MAX` once the
+    /// horizon has passed (or the profile is inert).
+    next_fault_at: Nanos,
+    /// Scheduled recovery actions `(due, action)`, emitted on the first
+    /// tick at or after `due`, in insertion order.
+    pending: Vec<(Nanos, ClusterAction)>,
+}
+
+impl ChaosController {
+    pub fn from_config(cfg: &ClusterConfig) -> ChaosController {
+        let chaos = cfg.chaos.clone();
+        let mut rng = Rng::new(chaos.seed);
+        let next_fault_at = if chaos.enabled() {
+            (rng.exp(chaos.fault_rate) * 1e9).round() as Nanos
+        } else {
+            Nanos::MAX
+        };
+        ChaosController {
+            cfg: chaos,
+            rng,
+            next_fault_at,
+            pending: vec![],
+        }
+    }
+
+    /// Lognormal MTTR draw in nanoseconds (median `mttr_ms`, >= 1 ms).
+    fn draw_mttr(&mut self) -> Nanos {
+        let median_ns = self.cfg.mttr_ms as f64 * MILLI as f64;
+        let ns = self.rng.lognormal(median_ns.ln(), self.cfg.mttr_sigma);
+        (ns.max(MILLI as f64)).round() as Nanos
+    }
+
+    /// Advance the incident clock, honoring the injection horizon.
+    fn advance(&mut self) {
+        let step = (self.rng.exp(self.cfg.fault_rate) * 1e9).round() as Nanos;
+        self.next_fault_at = self.next_fault_at.saturating_add(step.max(1));
+        let horizon = self.cfg.horizon_ms * MILLI;
+        if self.cfg.horizon_ms > 0 && self.next_fault_at > horizon {
+            self.next_fault_at = Nanos::MAX;
+        }
+    }
+
+    /// Manifest one incident at exact time `at`, appending the immediate
+    /// actions and scheduling recoveries.
+    fn inject(&mut self, at: Nanos, view: &ClusterView, out: &mut Vec<ClusterAction>) {
+        let victims: Vec<(usize, String)> = view
+            .instances
+            .iter()
+            .filter(|i| i.lifecycle.is_active())
+            .map(|i| (i.id, i.zone.clone()))
+            .collect();
+        if victims.is_empty() {
+            // Nothing to break; the incident clock already advanced.
+            return;
+        }
+        let (victim, zone) =
+            victims[self.rng.below(victims.len() as u64) as usize].clone();
+        let mttr = self.draw_mttr();
+        let recover_at = at.saturating_add(mttr);
+        if self.rng.chance(self.cfg.domain_correlation) {
+            out.push(ClusterAction::FailDomain {
+                zone: zone.clone(),
+                at,
+            });
+            if self.rng.chance(self.cfg.partition_prob) {
+                out.push(ClusterAction::PartitionDomain { zone: zone.clone() });
+                self.pending.push((recover_at, ClusterAction::RestoreFabric));
+            }
+            for member in view.zone_members(&zone) {
+                self.pending
+                    .push((recover_at, ClusterAction::Recover { instance: member }));
+            }
+        } else if self.rng.chance(self.cfg.straggler_prob) {
+            out.push(ClusterAction::SetPerfScale {
+                instance: victim,
+                scale: self.cfg.straggler_scale,
+            });
+            self.pending.push((
+                recover_at,
+                ClusterAction::SetPerfScale {
+                    instance: victim,
+                    scale: 1.0,
+                },
+            ));
+        } else if self.rng.chance(self.cfg.link_degrade_prob) {
+            out.push(ClusterAction::DegradeLink {
+                instance: victim,
+                scale: self.cfg.link_scale,
+            });
+            self.pending.push((
+                recover_at,
+                ClusterAction::DegradeLink {
+                    instance: victim,
+                    scale: 1.0,
+                },
+            ));
+        } else {
+            out.push(ClusterAction::Fail {
+                instance: victim,
+                at,
+            });
+            self.pending
+                .push((recover_at, ClusterAction::Recover { instance: victim }));
+        }
+    }
+}
+
+impl ClusterController for ChaosController {
+    fn name(&self) -> &str {
+        "chaos"
+    }
+
+    /// An inert profile schedules no ticks: the event stream — and the
+    /// report — stays byte-identical to a run without any controller.
+    fn wants_ticks(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    fn on_tick(&mut self, now: Nanos, view: &ClusterView) -> Vec<ClusterAction> {
+        let mut actions = vec![];
+        // Due recoveries first (insertion order = schedule order).
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].0 <= now {
+                actions.push(self.pending.remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        // Then every incident whose arrival time has come.
+        while self.next_fault_at <= now {
+            let at = self.next_fault_at;
+            self.advance();
+            self.inject(at, view, &mut actions);
+        }
+        actions
+    }
+
+    /// Pending recoveries keep the tick train alive; future *incidents* do
+    /// not — chaos only injects while the simulation is naturally live.
+    fn has_pending(&self, _now: Nanos) -> bool {
+        !self.pending.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -466,7 +697,9 @@ mod tests {
             name: format!("inst{id}"),
             hardware: "rtx3090".into(),
             role: Role::Unified,
+            zone: "default".into(),
             lifecycle,
+            perf_scale: 1.0,
             waiting,
             running: 0,
             busy: false,
@@ -622,6 +855,180 @@ mod tests {
         assert!(c.on_tick(30 * MILLI, &v).is_empty());
     }
 
+    /// Regression (ISSUE 8): the drain gate compared `active()` against the
+    /// floor while the scale-up gate used `live()`. The gates now share one
+    /// capacity measure, and this test pins the floor across every warmup
+    /// shape — it fails if the measures are re-split or the warming guard
+    /// is dropped (either of which lets the fleet drain serving capacity
+    /// while the floor is only satisfied by `Starting` instances).
+    #[test]
+    fn queue_threshold_floor_survives_warmup() {
+        let cfg = ClusterConfig {
+            min_instances: 2,
+            ..Default::default()
+        };
+        let mut c = QueueThreshold::from_config(&cfg);
+        // Floor met only with warming capacity: 1 Active + 1 Starting.
+        let warming = view(vec![
+            snap(0, Lifecycle::Active, 0),
+            snap(1, Lifecycle::Starting { until: 99 }, 0),
+        ]);
+        for t in 0..5 {
+            assert!(
+                c.on_tick(t, &warming).is_empty(),
+                "tick {t}: drained while the floor depended on Starting capacity"
+            );
+        }
+        // Excess capacity, but one instance still warming: hold.
+        let excess_warming = view(vec![
+            snap(0, Lifecycle::Active, 0),
+            snap(1, Lifecycle::Active, 0),
+            snap(2, Lifecycle::Starting { until: 99 }, 0),
+        ]);
+        for t in 5..10 {
+            assert!(
+                c.on_tick(t, &excess_warming).is_empty(),
+                "tick {t}: drained during warmup"
+            );
+        }
+        // Warmup done and capacity above the floor: now it drains.
+        let excess = view(vec![
+            snap(0, Lifecycle::Active, 0),
+            snap(1, Lifecycle::Active, 0),
+            snap(2, Lifecycle::Active, 0),
+        ]);
+        assert_eq!(
+            c.on_tick(10, &excess),
+            vec![ClusterAction::ScaleDown { instance: 2 }]
+        );
+    }
+
+    fn chaos_cluster_cfg(profile: &str, seed: u64) -> ClusterConfig {
+        let mut chaos = crate::config::ChaosConfig::profile(profile).unwrap();
+        chaos.seed = seed;
+        ClusterConfig {
+            controller: "chaos".into(),
+            chaos,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn chaos_inert_profile_schedules_nothing() {
+        let cfg = chaos_cluster_cfg("none", 7);
+        let mut c = ChaosController::from_config(&cfg);
+        assert_eq!(c.name(), "chaos");
+        assert!(!c.wants_ticks(), "inert profile must not want ticks");
+        assert!(!c.has_pending(0));
+        let v = view(vec![snap(0, Lifecycle::Active, 5)]);
+        assert!(c.on_tick(u64::MAX / 2, &v).is_empty());
+    }
+
+    #[test]
+    fn chaos_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let cfg = chaos_cluster_cfg("heavy", seed);
+            let mut c = ChaosController::from_config(&cfg);
+            let v = view(
+                (0..4)
+                    .map(|i| {
+                        let mut s = snap(i, Lifecycle::Active, 3);
+                        s.zone = ["zone-a", "zone-b"][i % 2].to_string();
+                        s
+                    })
+                    .collect(),
+            );
+            let mut log = vec![];
+            for tick in 0..2000u64 {
+                for a in c.on_tick(tick * 10 * MILLI, &v) {
+                    log.push(format!("{tick}:{}:{a:?}", a.kind()));
+                }
+            }
+            log
+        };
+        let a = run(42);
+        assert_eq!(a, run(42), "same seed must replay identically");
+        assert!(!a.is_empty(), "heavy profile over 20s injected nothing");
+        assert_ne!(a, run(43), "different seed should diverge");
+        // incidents break things and recoveries heal them: over 20s at 2
+        // faults/s both sides of the cycle must appear in the log
+        let fails = a
+            .iter()
+            .filter(|l| l.contains(":fail:") || l.contains(":fail-domain:"))
+            .count();
+        let recovers = a.iter().filter(|l| l.contains(":recover:")).count();
+        assert!(recovers > 0 && fails > 0, "log: {} entries", a.len());
+    }
+
+    #[test]
+    fn chaos_domain_outage_hits_every_zone_member_and_recovers() {
+        // domain_correlation = 1 and partition_prob = 1 ("partition"
+        // profile): every incident fails the victim's entire zone,
+        // partitions it, and later recovers every member + the fabric.
+        // A 5 s horizon bounds injection so the late drain tick below only
+        // emits recoveries.
+        let mut cfg = chaos_cluster_cfg("partition", 1);
+        cfg.chaos.horizon_ms = 5_000;
+        let mut c = ChaosController::from_config(&cfg);
+        let v = view(
+            (0..4)
+                .map(|i| {
+                    let mut s = snap(i, Lifecycle::Active, 0);
+                    s.zone = if i < 2 { "za".into() } else { "zb".into() };
+                    s
+                })
+                .collect(),
+        );
+        // one tick past the horizon: all incidents of the run arrive here
+        let actions = c.on_tick(10_000 * MILLI, &v);
+        let zone = actions
+            .iter()
+            .find_map(|a| match a {
+                ClusterAction::FailDomain { zone, .. } => Some(zone.clone()),
+                _ => None,
+            })
+            .expect("no FailDomain from a domain_correlation=1 profile in 5s");
+        assert!(
+            actions
+                .iter()
+                .any(|a| matches!(a, ClusterAction::PartitionDomain { zone: z } if *z == zone)),
+            "partition_prob=1 must partition the failed zone"
+        );
+        // recoveries pending for every member of the zone + the fabric
+        assert!(c.has_pending(0));
+        let later = c.on_tick(u64::MAX / 2, &v);
+        let recovered: std::collections::BTreeSet<usize> = later
+            .iter()
+            .filter_map(|a| match a {
+                ClusterAction::Recover { instance } => Some(*instance),
+                _ => None,
+            })
+            .collect();
+        for member in v.zone_members(&zone) {
+            assert!(recovered.contains(&member), "member {member} never recovered");
+        }
+        assert!(
+            later.iter().any(|a| matches!(a, ClusterAction::RestoreFabric)),
+            "partition must heal via RestoreFabric"
+        );
+        assert!(!c.has_pending(u64::MAX / 2), "recoveries must drain");
+    }
+
+    #[test]
+    fn zone_members_ascending_and_zone_scoped() {
+        let mut a = snap(0, Lifecycle::Active, 0);
+        a.zone = "za".into();
+        let mut b = snap(1, Lifecycle::Stopped, 0);
+        b.zone = "zb".into();
+        let mut c = snap(2, Lifecycle::Active, 0);
+        c.zone = "za".into();
+        let v = view(vec![a, b, c]);
+        assert_eq!(v.zone_members("za"), vec![0, 2]);
+        // stopped members are still part of their domain
+        assert_eq!(v.zone_members("zb"), vec![1]);
+        assert!(v.zone_members("zz").is_empty());
+    }
+
     #[test]
     fn lifecycle_predicates() {
         assert!(Lifecycle::Active.is_active());
@@ -695,6 +1102,35 @@ mod tests {
             }
             .kind(),
             "set-batch-cap"
+        );
+        assert_eq!(
+            ClusterAction::FailDomain {
+                zone: "za".into(),
+                at: 0
+            }
+            .kind(),
+            "fail-domain"
+        );
+        assert_eq!(
+            ClusterAction::DegradeLink {
+                instance: 0,
+                scale: 0.5
+            }
+            .kind(),
+            "degrade-link"
+        );
+        assert_eq!(
+            ClusterAction::PartitionDomain { zone: "za".into() }.kind(),
+            "partition"
+        );
+        assert_eq!(ClusterAction::RestoreFabric.kind(), "restore-fabric");
+        assert_eq!(
+            ClusterAction::SetPerfScale {
+                instance: 0,
+                scale: 2.0
+            }
+            .kind(),
+            "perf-scale"
         );
     }
 }

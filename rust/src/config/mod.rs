@@ -226,6 +226,191 @@ pub struct FailureSpec {
     pub recover_ms: Option<u64>,
 }
 
+/// Seeded fault-injection profile for the `chaos` cluster controller.
+///
+/// A profile is a distribution over fault *incidents*: plain instance
+/// crashes, correlated zone outages (optionally with a fabric partition),
+/// stragglers (slow-but-alive instances), and link degradations. All
+/// randomness flows through [`crate::util::rng`] seeded from `seed`, so a
+/// profile replays byte-identically. The default profile is **inert**
+/// (`fault_rate == 0`) and a chaos controller running it is byte-identical
+/// to no controller at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// Mean fault incidents per simulated second (Poisson process).
+    /// `0.0` disables injection entirely.
+    pub fault_rate: f64,
+    /// Probability an incident takes out the victim's whole zone
+    /// (correlated failure domain) instead of one instance.
+    pub domain_correlation: f64,
+    /// Probability a zone outage also partitions the zone off the
+    /// inter-instance fabric (in-flight handoffs must re-route or park).
+    pub partition_prob: f64,
+    /// Probability an incident manifests as a straggler (perf multiplier)
+    /// instead of a crash.
+    pub straggler_prob: f64,
+    /// Step-latency multiplier applied to straggler victims (>= 1).
+    pub straggler_scale: f64,
+    /// Probability an incident manifests as fabric-link degradation on the
+    /// victim instance's links.
+    pub link_degrade_prob: f64,
+    /// Bandwidth multiplier for degraded links, in (0, 1].
+    pub link_scale: f64,
+    /// Median time-to-recovery, milliseconds (lognormal).
+    pub mttr_ms: u64,
+    /// Lognormal sigma of the recovery time.
+    pub mttr_sigma: f64,
+    /// Injection horizon, ms of simulated time (`0` = whole run).
+    pub horizon_ms: u64,
+    /// Chaos RNG seed (independent of the workload seed).
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            fault_rate: 0.0,
+            domain_correlation: 0.25,
+            partition_prob: 0.0,
+            straggler_prob: 0.2,
+            straggler_scale: 2.5,
+            link_degrade_prob: 0.2,
+            link_scale: 0.25,
+            mttr_ms: 400,
+            mttr_sigma: 0.25,
+            horizon_ms: 0,
+            seed: 0xC4A05,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Whether this profile injects anything at all.
+    pub fn enabled(&self) -> bool {
+        self.fault_rate > 0.0
+    }
+
+    /// Built-in named profiles for the CLI/sweep `--chaos` axis.
+    pub fn profile_names() -> &'static [&'static str] {
+        &["none", "light", "heavy", "partition"]
+    }
+
+    /// Resolve a named profile; errors list the candidates.
+    pub fn profile(name: &str) -> anyhow::Result<ChaosConfig> {
+        let base = ChaosConfig::default();
+        Ok(match name {
+            "none" => base,
+            "light" => ChaosConfig {
+                fault_rate: 0.5,
+                domain_correlation: 0.1,
+                partition_prob: 0.0,
+                straggler_prob: 0.3,
+                mttr_ms: 300,
+                ..base
+            },
+            "heavy" => ChaosConfig {
+                fault_rate: 2.0,
+                domain_correlation: 0.4,
+                partition_prob: 0.2,
+                straggler_prob: 0.25,
+                link_degrade_prob: 0.25,
+                mttr_ms: 500,
+                mttr_sigma: 0.5,
+                ..base
+            },
+            "partition" => ChaosConfig {
+                fault_rate: 1.0,
+                domain_correlation: 1.0,
+                partition_prob: 1.0,
+                straggler_prob: 0.0,
+                link_degrade_prob: 0.0,
+                ..base
+            },
+            _ => anyhow::bail!(
+                "unknown chaos profile '{name}' (candidates: {})",
+                Self::profile_names().join(", ")
+            ),
+        })
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (field, v) in [
+            ("fault_rate", self.fault_rate),
+            ("domain_correlation", self.domain_correlation),
+            ("partition_prob", self.partition_prob),
+            ("straggler_prob", self.straggler_prob),
+            ("link_degrade_prob", self.link_degrade_prob),
+        ] {
+            if !(v >= 0.0) || !v.is_finite() {
+                anyhow::bail!("cluster.chaos.{field} must be finite and >= 0");
+            }
+        }
+        for (field, v) in [
+            ("domain_correlation", self.domain_correlation),
+            ("partition_prob", self.partition_prob),
+            ("straggler_prob", self.straggler_prob),
+            ("link_degrade_prob", self.link_degrade_prob),
+        ] {
+            if v > 1.0 {
+                anyhow::bail!("cluster.chaos.{field} must be <= 1");
+            }
+        }
+        if self.enabled() && self.mttr_ms == 0 {
+            anyhow::bail!("cluster.chaos.mttr_ms must be > 0 when faults are on");
+        }
+        if self.straggler_scale < 1.0 {
+            anyhow::bail!("cluster.chaos.straggler_scale must be >= 1");
+        }
+        if !(self.link_scale > 0.0 && self.link_scale <= 1.0) {
+            anyhow::bail!("cluster.chaos.link_scale must be in (0, 1]");
+        }
+        if !(self.mttr_sigma >= 0.0) || !self.mttr_sigma.is_finite() {
+            anyhow::bail!("cluster.chaos.mttr_sigma must be finite and >= 0");
+        }
+        Ok(())
+    }
+}
+
+/// Admission control on the coordinator's arrival path: a token-bucket
+/// rate limit plus a queue-depth circuit breaker. Rejected requests are a
+/// terminal outcome recorded in the report (never silently dropped), so
+/// `rejected + finished + in-flight == arrivals` always holds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    /// Sustained admission rate, requests/second (token-bucket refill).
+    pub rate: f64,
+    /// Bucket capacity: how many requests a burst can admit at once.
+    pub burst: f64,
+    /// Circuit breaker: trip when total fleet wait-queue depth exceeds
+    /// this (`0` disables the breaker).
+    pub breaker_queue: usize,
+    /// Breaker cooldown: reject everything for this long after tripping.
+    pub breaker_cooldown_ms: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            rate: 100.0,
+            burst: 20.0,
+            breaker_queue: 0,
+            breaker_cooldown_ms: 500,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !(self.rate > 0.0) || !self.rate.is_finite() {
+            anyhow::bail!("cluster.admission.rate must be finite and > 0");
+        }
+        if !(self.burst >= 1.0) || !self.burst.is_finite() {
+            anyhow::bail!("cluster.admission.burst must be finite and >= 1");
+        }
+        Ok(())
+    }
+}
+
 /// Cluster-dynamics settings: which
 /// [`ClusterController`](crate::cluster::ClusterController) runs, its
 /// tick cadence, fleet bounds, and controller-specific parameters.
@@ -237,7 +422,7 @@ pub struct FailureSpec {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
     /// Controller *name* (built-ins: `static`, `queue-threshold`,
-    /// `failure-replay`).
+    /// `failure-replay`, `chaos`).
     pub controller: String,
     /// Controller tick period, milliseconds of simulated time.
     pub tick_ms: u64,
@@ -254,6 +439,10 @@ pub struct ClusterConfig {
     pub scale_down_queue: f64,
     /// `failure-replay`: the fault script.
     pub failures: Vec<FailureSpec>,
+    /// `chaos`: the fault-injection profile (inert by default).
+    pub chaos: ChaosConfig,
+    /// Admission control on arrivals (`None` = admit everything).
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -267,6 +456,8 @@ impl Default for ClusterConfig {
             scale_up_queue: 8.0,
             scale_down_queue: 1.0,
             failures: vec![],
+            chaos: ChaosConfig::default(),
+            admission: None,
         }
     }
 }
@@ -294,6 +485,10 @@ impl ClusterConfig {
                 self.scale_up_queue,
                 self.scale_down_queue
             );
+        }
+        self.chaos.validate()?;
+        if let Some(a) = &self.admission {
+            a.validate()?;
         }
         Ok(())
     }
@@ -352,6 +547,10 @@ pub struct InstanceConfig {
     /// Expert parallel degree (MoE only; 1 = experts replicated).
     pub ep: usize,
     pub role: Role,
+    /// Failure domain (rack/zone) label for correlated chaos faults.
+    /// Instances sharing a zone fail together under
+    /// [`ClusterAction::FailDomain`](crate::cluster::ClusterAction).
+    pub zone: String,
     pub topology: TopoKind,
     /// Device-memory capacity override, bytes.
     pub mem_capacity: Option<u64>,
@@ -389,6 +588,7 @@ impl InstanceConfig {
             pp: 1,
             ep: 1,
             role: Role::Unified,
+            zone: "default".to_string(),
             topology: TopoKind::FullyConnected,
             mem_capacity: None,
             mem_bw: None,
@@ -622,6 +822,9 @@ impl SimConfig {
                         },
                     ),
                 ];
+                if i.zone != "default" {
+                    fields.push(("zone", Value::str(i.zone.clone())));
+                }
                 if let Some(c) = i.mem_capacity {
                     fields.push(("mem_capacity", Value::int(c as i64)));
                 }
@@ -663,49 +866,93 @@ impl SimConfig {
             ),
             (
                 "cluster",
-                Value::obj(vec![
-                    ("controller", Value::str(self.cluster.controller.clone())),
-                    ("tick_ms", Value::int(self.cluster.tick_ms as i64)),
-                    ("warmup_ms", Value::int(self.cluster.warmup_ms as i64)),
-                    (
-                        "min_instances",
-                        Value::int(self.cluster.min_instances as i64),
-                    ),
-                    (
-                        "max_instances",
-                        Value::int(self.cluster.max_instances as i64),
-                    ),
-                    (
-                        "scale_up_queue",
-                        Value::float(self.cluster.scale_up_queue),
-                    ),
-                    (
-                        "scale_down_queue",
-                        Value::float(self.cluster.scale_down_queue),
-                    ),
-                    (
-                        "failures",
-                        Value::arr(
-                            self.cluster
-                                .failures
-                                .iter()
-                                .map(|f| {
-                                    let mut fields = vec![
-                                        ("instance", Value::int(f.instance as i64)),
-                                        ("at_ms", Value::int(f.at_ms as i64)),
-                                    ];
-                                    if let Some(r) = f.recover_ms {
-                                        fields.push((
-                                            "recover_ms",
-                                            Value::int(r as i64),
-                                        ));
-                                    }
-                                    Value::obj(fields)
-                                })
-                                .collect(),
+                {
+                    let mut fields = vec![
+                        ("controller", Value::str(self.cluster.controller.clone())),
+                        ("tick_ms", Value::int(self.cluster.tick_ms as i64)),
+                        ("warmup_ms", Value::int(self.cluster.warmup_ms as i64)),
+                        (
+                            "min_instances",
+                            Value::int(self.cluster.min_instances as i64),
                         ),
-                    ),
-                ]),
+                        (
+                            "max_instances",
+                            Value::int(self.cluster.max_instances as i64),
+                        ),
+                        (
+                            "scale_up_queue",
+                            Value::float(self.cluster.scale_up_queue),
+                        ),
+                        (
+                            "scale_down_queue",
+                            Value::float(self.cluster.scale_down_queue),
+                        ),
+                        (
+                            "failures",
+                            Value::arr(
+                                self.cluster
+                                    .failures
+                                    .iter()
+                                    .map(|f| {
+                                        let mut fields = vec![
+                                            ("instance", Value::int(f.instance as i64)),
+                                            ("at_ms", Value::int(f.at_ms as i64)),
+                                        ];
+                                        if let Some(r) = f.recover_ms {
+                                            fields.push((
+                                                "recover_ms",
+                                                Value::int(r as i64),
+                                            ));
+                                        }
+                                        Value::obj(fields)
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ];
+                    // Chaos/admission keys appear only when configured, so
+                    // pre-chaos configs round-trip byte-identically.
+                    let ch = &self.cluster.chaos;
+                    if *ch != ChaosConfig::default() {
+                        fields.push((
+                            "chaos",
+                            Value::obj(vec![
+                                ("fault_rate", Value::float(ch.fault_rate)),
+                                (
+                                    "domain_correlation",
+                                    Value::float(ch.domain_correlation),
+                                ),
+                                ("partition_prob", Value::float(ch.partition_prob)),
+                                ("straggler_prob", Value::float(ch.straggler_prob)),
+                                ("straggler_scale", Value::float(ch.straggler_scale)),
+                                (
+                                    "link_degrade_prob",
+                                    Value::float(ch.link_degrade_prob),
+                                ),
+                                ("link_scale", Value::float(ch.link_scale)),
+                                ("mttr_ms", Value::int(ch.mttr_ms as i64)),
+                                ("mttr_sigma", Value::float(ch.mttr_sigma)),
+                                ("horizon_ms", Value::int(ch.horizon_ms as i64)),
+                                ("seed", Value::int(ch.seed as i64)),
+                            ]),
+                        ));
+                    }
+                    if let Some(a) = &self.cluster.admission {
+                        fields.push((
+                            "admission",
+                            Value::obj(vec![
+                                ("rate", Value::float(a.rate)),
+                                ("burst", Value::float(a.burst)),
+                                ("breaker_queue", Value::int(a.breaker_queue as i64)),
+                                (
+                                    "breaker_cooldown_ms",
+                                    Value::int(a.breaker_cooldown_ms as i64),
+                                ),
+                            ]),
+                        ));
+                    }
+                    Value::obj(fields)
+                },
             ),
             (
                 "perf",
@@ -859,6 +1106,59 @@ impl SimConfig {
                     recover_ms: fv.get("recover_ms").as_u64(),
                 });
             }
+            let ch = c.get("chaos");
+            if !ch.is_null() {
+                if let Some(x) = ch.get("fault_rate").as_f64() {
+                    cluster.chaos.fault_rate = x;
+                }
+                if let Some(x) = ch.get("domain_correlation").as_f64() {
+                    cluster.chaos.domain_correlation = x;
+                }
+                if let Some(x) = ch.get("partition_prob").as_f64() {
+                    cluster.chaos.partition_prob = x;
+                }
+                if let Some(x) = ch.get("straggler_prob").as_f64() {
+                    cluster.chaos.straggler_prob = x;
+                }
+                if let Some(x) = ch.get("straggler_scale").as_f64() {
+                    cluster.chaos.straggler_scale = x;
+                }
+                if let Some(x) = ch.get("link_degrade_prob").as_f64() {
+                    cluster.chaos.link_degrade_prob = x;
+                }
+                if let Some(x) = ch.get("link_scale").as_f64() {
+                    cluster.chaos.link_scale = x;
+                }
+                if let Some(x) = ch.get("mttr_ms").as_u64() {
+                    cluster.chaos.mttr_ms = x;
+                }
+                if let Some(x) = ch.get("mttr_sigma").as_f64() {
+                    cluster.chaos.mttr_sigma = x;
+                }
+                if let Some(x) = ch.get("horizon_ms").as_u64() {
+                    cluster.chaos.horizon_ms = x;
+                }
+                if let Some(x) = ch.get("seed").as_u64() {
+                    cluster.chaos.seed = x;
+                }
+            }
+            let ad = c.get("admission");
+            if !ad.is_null() {
+                let mut a = AdmissionConfig::default();
+                if let Some(x) = ad.get("rate").as_f64() {
+                    a.rate = x;
+                }
+                if let Some(x) = ad.get("burst").as_f64() {
+                    a.burst = x;
+                }
+                if let Some(x) = ad.get("breaker_queue").as_u64() {
+                    a.breaker_queue = x as usize;
+                }
+                if let Some(x) = ad.get("breaker_cooldown_ms").as_u64() {
+                    a.breaker_cooldown_ms = x;
+                }
+                cluster.admission = Some(a);
+            }
         }
 
         let w = v.get("workload");
@@ -940,6 +1240,9 @@ impl SimConfig {
             }
             if let Some(s) = iv.get("role").as_str() {
                 inst.role = s.parse::<Role>()?;
+            }
+            if let Some(s) = iv.get("zone").as_str() {
+                inst.zone = s.to_string();
             }
             if let Some(s) = iv.get("sched").as_str() {
                 inst.sched = s.to_string();
@@ -1357,6 +1660,80 @@ mod tests {
         let back = SimConfig::from_json(&v).unwrap();
         assert_eq!(back.cluster, ClusterConfig::default());
         assert_eq!(back.cluster.controller, "static");
+    }
+
+    #[test]
+    fn chaos_admission_and_zone_roundtrip() {
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.controller = "chaos".to_string();
+        cfg.cluster.chaos = ChaosConfig::profile("heavy").unwrap();
+        cfg.cluster.chaos.seed = 99;
+        cfg.cluster.admission = Some(AdmissionConfig {
+            rate: 50.0,
+            burst: 8.0,
+            breaker_queue: 64,
+            breaker_cooldown_ms: 250,
+        });
+        cfg.instances[0].zone = "rack-a".to_string();
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+
+        // keys are omitted when unconfigured — pre-chaos configs (and
+        // byte-compat consumers) see an unchanged cluster block
+        let cfg = presets::single_dense("tiny-dense", "rtx3090");
+        let s = cfg.to_json().to_string();
+        assert!(!s.contains("\"chaos\""), "{s}");
+        assert!(!s.contains("\"admission\""), "{s}");
+        assert!(!s.contains("\"zone\""), "{s}");
+        let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.cluster.chaos, ChaosConfig::default());
+        assert_eq!(back.cluster.admission, None);
+        assert_eq!(back.instances[0].zone, "default");
+    }
+
+    #[test]
+    fn chaos_profiles_resolve_and_unknown_errors_with_candidates() {
+        for name in ChaosConfig::profile_names() {
+            let p = ChaosConfig::profile(name).unwrap();
+            p.validate().unwrap();
+            assert_eq!(p.enabled(), *name != "none", "profile {name}");
+        }
+        let e = ChaosConfig::profile("mayhem").unwrap_err().to_string();
+        assert!(e.contains("mayhem") && e.contains("light"), "{e}");
+    }
+
+    #[test]
+    fn degenerate_chaos_and_admission_rejected() {
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.chaos.fault_rate = 1.0;
+        cfg.cluster.chaos.mttr_ms = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.chaos.domain_correlation = 1.5;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.chaos.straggler_scale = 0.5;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.chaos.link_scale = 0.0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.admission = Some(AdmissionConfig {
+            rate: 0.0,
+            ..AdmissionConfig::default()
+        });
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = presets::single_dense("tiny-dense", "rtx3090");
+        cfg.cluster.admission = Some(AdmissionConfig {
+            burst: 0.5,
+            ..AdmissionConfig::default()
+        });
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

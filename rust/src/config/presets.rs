@@ -149,6 +149,40 @@ pub fn autoscale_bursty() -> SimConfig {
     cfg
 }
 
+/// The chaos-soak scenario used by `tests/integration_chaos.rs`,
+/// `examples/chaos.rs`, and the README resilience walkthrough: the
+/// multi-tenant bursty workload over three unified instances spread across
+/// two zones, soaked under the `heavy` chaos profile — correlated zone
+/// outages, fabric partitions, stragglers, and link degradations — for the
+/// first five simulated seconds. Everything is seeded, so the full fault
+/// timeline replays byte-identically.
+pub fn chaos_soak() -> SimConfig {
+    let mut cfg =
+        multi_tenant_bursty(multi_dense("tiny-dense", "rtx3090"), 2, 60.0);
+    cfg.name = "chaos-soak".to_string();
+    cfg.instances
+        .push(InstanceConfig::basic("inst2", "tiny-dense", "rtx3090"));
+    for i in &mut cfg.instances {
+        i.sched = "slo".to_string();
+    }
+    // Two failure domains: a zone outage takes out capacity but never the
+    // whole fleet, so the run always finishes.
+    cfg.instances[0].zone = "zone-a".to_string();
+    cfg.instances[1].zone = "zone-a".to_string();
+    cfg.instances[2].zone = "zone-b".to_string();
+    cfg.workload.num_requests = 150;
+    cfg.workload.lengths = crate::workload::LengthDist::short();
+    cfg.cluster.controller = "chaos".to_string();
+    cfg.cluster.tick_ms = 20;
+    cfg.cluster.warmup_ms = 50;
+    cfg.cluster.chaos = super::ChaosConfig {
+        horizon_ms: 5_000,
+        ..super::ChaosConfig::profile("heavy")
+            .expect("heavy is a built-in chaos profile")
+    };
+    cfg
+}
+
 /// Resolve a Table II serving-config name (`S(D)`, `M(M)`, `PD(D)+PC`, ...)
 /// into a full [`SimConfig`], substituting the dense/MoE model and hardware
 /// presets. Shared by the CLI (`simulate`) and the sweep engine's preset
@@ -272,6 +306,19 @@ mod tests {
         assert_eq!(cfg.workload.tenants.len(), 3);
         assert!(cfg.instances.iter().all(|i| i.sched == "slo"));
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn chaos_soak_preset_validates_with_two_zones() {
+        let cfg = chaos_soak();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.cluster.controller, "chaos");
+        assert!(cfg.cluster.chaos.enabled());
+        assert_eq!(cfg.cluster.chaos.horizon_ms, 5_000);
+        let zones: std::collections::BTreeSet<&str> =
+            cfg.instances.iter().map(|i| i.zone.as_str()).collect();
+        assert_eq!(zones.len(), 2, "soak needs two failure domains");
+        assert!(cfg.instances.iter().all(|i| i.sched == "slo"));
     }
 
     #[test]

@@ -23,9 +23,10 @@ use crate::cluster::{
     TimelineEntry,
 };
 use crate::config::{
-    CacheScope, InstanceConfig, KvTransferPolicy, PerfBackend, Role, SimConfig,
+    AdmissionConfig, CacheScope, InstanceConfig, KvTransferPolicy, PerfBackend,
+    Role, SimConfig,
 };
-use crate::instance::{ServingInstance, StepOutcome};
+use crate::instance::{KvHandoff, ServingInstance, StepOutcome};
 use crate::memory::PrefixCache;
 use crate::metrics::{MetricsCollector, Report};
 use crate::model::ModelSpec;
@@ -131,6 +132,10 @@ pub struct Simulation {
     /// Requests displaced by a drain/failure with no dispatchable target
     /// yet; retried (in id order) whenever an instance turns `Active`.
     parked: Vec<Request>,
+    /// P/D hand-offs whose every decode target is partitioned away
+    /// (`src`, hand-off); retried when the fabric heals or an instance
+    /// turns `Active`, in blocked order.
+    blocked_handoffs: Vec<(usize, KvHandoff)>,
     /// Reused buffer for router-visible instance views (refilled by
     /// `fill_views` on every dispatch instead of allocating a `Vec`).
     views_scratch: Vec<InstanceView>,
@@ -156,7 +161,38 @@ pub struct Simulation {
     peak_active: usize,
     /// Count of instances added by `ScaleUp` (for deterministic naming).
     scaled: usize,
+    /// Token-bucket + circuit-breaker arrival admission (`None` = admit
+    /// everything, today's behavior).
+    admission: Option<AdmissionState>,
+    /// Replay log of chaos fabric mutations, reapplied when `scale_up`
+    /// rebuilds the inter-instance fabric — a mid-incident scale-up must
+    /// not silently heal degradations or partitions.
+    fabric_mods: Vec<FabricMod>,
+    /// Per-instance open fault window start (`None` = healthy). Opened by
+    /// `fail_instance`, closed when the recovered instance turns `Active`.
+    down_since: Vec<Option<Nanos>>,
+    /// Per-instance accumulated downtime from closed fault windows.
+    downtime: Vec<Nanos>,
     started: bool,
+}
+
+/// Runtime token-bucket + circuit-breaker state for arrival admission
+/// (`cluster.admission` — DESIGN.md §12). The bucket refills lazily at
+/// arrival time; the breaker opens on fleet-wide queue depth and stays
+/// open for a cooldown.
+struct AdmissionState {
+    cfg: AdmissionConfig,
+    tokens: f64,
+    last_refill: Nanos,
+    /// Breaker-open horizon; arrivals before this instant are rejected.
+    open_until: Nanos,
+}
+
+/// One chaos fabric mutation, replayed onto fabrics rebuilt by `scale_up`.
+#[derive(Debug, Clone)]
+enum FabricMod {
+    Degrade { device: usize, scale: f64 },
+    Isolate { device: usize },
 }
 
 /// Cap on `"sample"` timeline entries so hour-long simulations cannot grow
@@ -354,6 +390,7 @@ impl SimulationBuilder {
             pending: (0..n).map(|_| None).collect(),
             kv_in_flight: FxHashMap::default(),
             parked: vec![],
+            blocked_handoffs: vec![],
             views_scratch: vec![],
             tok_scratch: vec![],
             steps_total: 0,
@@ -368,6 +405,15 @@ impl SimulationBuilder {
             samples: 0,
             peak_active: n,
             scaled: 0,
+            admission: cfg.cluster.admission.clone().map(|a| AdmissionState {
+                tokens: a.burst,
+                last_refill: 0,
+                open_until: 0,
+                cfg: a,
+            }),
+            fabric_mods: vec![],
+            down_since: vec![None; n],
+            downtime: vec![0; n],
             started: false,
             cfg,
             instances,
@@ -554,29 +600,7 @@ impl Simulation {
         // the in-flight map — the prefill instance already dropped it, so
         // no clone is needed anywhere on this path.
         for h in out.handoff.drain(..) {
-            self.fill_views(None);
-            let Some(dst) = self.router.pick_decode(&self.views_scratch) else {
-                log::warn!("no decode instance for request {}", h.req.id);
-                continue;
-            };
-            let bytes = match self.instances[i].cfg.kv_transfer {
-                KvTransferPolicy::Blocking => h.kv_bytes,
-                // layered transfer overlapped with prefill; only the last
-                // layer's slice is exposed at completion
-                KvTransferPolicy::Layered => {
-                    h.kv_bytes / self.instances[i].model.layers.max(1)
-                }
-            };
-            let done = self.inter_fabric.transfer(i, dst, bytes, now);
-            let request_id = h.req.id;
-            self.kv_in_flight.insert(request_id, (h.req, dst));
-            self.queue.schedule_at(
-                done,
-                Event::KvTransferDone {
-                    request_id,
-                    dst_instance: dst,
-                },
-            );
+            self.route_handoff(i, h, now);
         }
         // Hand the spent outcome back so the next step reuses its buffers.
         self.instances[i].recycle_outcome(out);
@@ -639,7 +663,11 @@ impl Simulation {
                     .expect("arrival event without a pulled request");
                 debug_assert_eq!(req.id, request_id);
                 self.metrics.on_arrival(&req, now);
-                self.dispatch_request(req, now);
+                if self.admits(now) {
+                    self.dispatch_request(req, now);
+                } else {
+                    self.metrics.on_rejected(req.id);
+                }
                 self.prime_next_arrival();
             }
             Event::StepComplete { instance } => {
@@ -724,6 +752,95 @@ impl Simulation {
         }
     }
 
+    /// Token-bucket + circuit-breaker admission check for one arrival
+    /// (`true` = admit). No admission config admits everything. The bucket
+    /// refills lazily from the elapsed time since the last arrival; the
+    /// breaker trips when fleet-wide waiting depth exceeds the threshold
+    /// and rejects every arrival until its cooldown expires.
+    fn admits(&mut self, now: Nanos) -> bool {
+        let waiting: usize = self.instances.iter().map(|x| x.waiting()).sum();
+        let Some(adm) = self.admission.as_mut() else {
+            return true;
+        };
+        let dt = now.saturating_sub(adm.last_refill);
+        adm.last_refill = now;
+        adm.tokens =
+            (adm.tokens + dt as f64 * adm.cfg.rate / 1e9).min(adm.cfg.burst);
+        if adm.cfg.breaker_queue > 0
+            && now >= adm.open_until
+            && waiting > adm.cfg.breaker_queue
+        {
+            adm.open_until =
+                now.saturating_add(adm.cfg.breaker_cooldown_ms * MILLI);
+        }
+        if now < adm.open_until || adm.tokens < 1.0 {
+            return false;
+        }
+        adm.tokens -= 1.0;
+        true
+    }
+
+    /// Price and launch one P/D KV hand-off from `src`. When the router's
+    /// pick is partitioned away, falls back to the first reachable `Active`
+    /// decode instance in id order (deterministic); when *no* decode target
+    /// is reachable, the hand-off parks until the fabric heals or an
+    /// instance turns `Active`.
+    fn route_handoff(&mut self, src: usize, h: KvHandoff, now: Nanos) {
+        self.fill_views(None);
+        let Some(picked) = self.router.pick_decode(&self.views_scratch) else {
+            log::warn!("no decode instance for request {}", h.req.id);
+            return;
+        };
+        let dst = if self.inter_fabric.reachable(src, picked) {
+            Some(picked)
+        } else {
+            self.views_scratch
+                .iter()
+                .filter(|v| {
+                    v.compatible
+                        && v.role == Role::Decode
+                        && self.inter_fabric.reachable(src, v.id)
+                })
+                .map(|v| v.id)
+                .next()
+        };
+        let Some(dst) = dst else {
+            self.blocked_handoffs.push((src, h));
+            return;
+        };
+        let bytes = match self.instances[src].cfg.kv_transfer {
+            KvTransferPolicy::Blocking => h.kv_bytes,
+            // layered transfer overlapped with prefill; only the last
+            // layer's slice is exposed at completion
+            KvTransferPolicy::Layered => {
+                h.kv_bytes / self.instances[src].model.layers.max(1)
+            }
+        };
+        let done = self.inter_fabric.transfer(src, dst, bytes, now);
+        debug_assert_ne!(done, crate::network::UNREACHABLE);
+        let request_id = h.req.id;
+        self.kv_in_flight.insert(request_id, (h.req, dst));
+        self.queue.schedule_at(
+            done,
+            Event::KvTransferDone {
+                request_id,
+                dst_instance: dst,
+            },
+        );
+    }
+
+    /// Retry parked P/D hand-offs after the fabric healed or capacity
+    /// returned, in blocked order (may re-park).
+    fn retry_blocked_handoffs(&mut self, now: Nanos) {
+        if self.blocked_handoffs.is_empty() {
+            return;
+        }
+        let blocked = std::mem::take(&mut self.blocked_handoffs);
+        for (src, h) in blocked {
+            self.route_handoff(src, h, now);
+        }
+    }
+
     // ---- cluster-controller machinery (DESIGN.md §9) ---------------------
 
     /// Build the read-only snapshot controllers (and driver callers) see.
@@ -739,7 +856,9 @@ impl Simulation {
                     name: inst.cfg.name.clone(),
                     hardware: inst.cfg.hardware.clone(),
                     role: inst.cfg.role,
+                    zone: inst.cfg.zone.clone(),
                     lifecycle: inst.lifecycle(),
+                    perf_scale: inst.perf_scale(),
                     waiting: inst.waiting(),
                     running: inst.running_count(),
                     busy: self.busy[i],
@@ -837,7 +956,106 @@ impl Simulation {
                 );
                 self.kick(instance, now);
             }
+            ClusterAction::FailDomain { zone, at } => {
+                let members = self.zone_members(&zone);
+                if members.is_empty() {
+                    log::warn!("fail-domain ignored: no instances in zone '{zone}'");
+                    return;
+                }
+                self.note_timeline(
+                    now,
+                    "fail-domain",
+                    None,
+                    format!("zone={zone} members={}", members.len()),
+                );
+                for i in members {
+                    if at <= now {
+                        self.fail_instance(i, now);
+                    } else {
+                        self.queue
+                            .schedule_at(at, Event::InstanceFail { instance: i });
+                    }
+                }
+            }
+            ClusterAction::DegradeLink { instance, scale } => {
+                if instance >= self.instances.len() {
+                    log::warn!("degrade-link ignored: no instance {instance}");
+                    return;
+                }
+                let scale = if scale.is_finite() {
+                    scale.clamp(1e-6, 1.0)
+                } else {
+                    1.0
+                };
+                let touched = self.inter_fabric.degrade_device(instance, scale);
+                // Absolute, not compounding: one mod per device in the log.
+                self.fabric_mods.retain(|m| {
+                    !matches!(m, FabricMod::Degrade { device, .. }
+                        if *device == instance)
+                });
+                if scale < 1.0 {
+                    self.fabric_mods.push(FabricMod::Degrade {
+                        device: instance,
+                        scale,
+                    });
+                }
+                self.note_timeline(
+                    now,
+                    "degrade-link",
+                    Some(instance),
+                    format!("scale={scale} links={touched}"),
+                );
+            }
+            ClusterAction::PartitionDomain { zone } => {
+                let members = self.zone_members(&zone);
+                if members.is_empty() {
+                    log::warn!("partition ignored: no instances in zone '{zone}'");
+                    return;
+                }
+                let mut cut = 0;
+                for &i in &members {
+                    cut += self.inter_fabric.isolate_device(i);
+                    self.fabric_mods.push(FabricMod::Isolate { device: i });
+                }
+                self.note_timeline(
+                    now,
+                    "partition",
+                    None,
+                    format!("zone={zone} members={} links_cut={cut}", members.len()),
+                );
+            }
+            ClusterAction::RestoreFabric => {
+                self.inter_fabric.restore_all();
+                self.fabric_mods.clear();
+                self.note_timeline(now, "restore-fabric", None, String::new());
+                self.retry_blocked_handoffs(now);
+            }
+            ClusterAction::SetPerfScale { instance, scale } => {
+                if instance >= self.instances.len() {
+                    log::warn!("perf-scale ignored: no instance {instance}");
+                    return;
+                }
+                self.instances[instance].set_perf_scale(scale);
+                let applied = self.instances[instance].perf_scale();
+                self.note_timeline(
+                    now,
+                    "perf-scale",
+                    Some(instance),
+                    format!("scale={applied}"),
+                );
+            }
         }
+    }
+
+    /// Ids of every instance (any lifecycle state) labelled with `zone`,
+    /// ascending.
+    fn zone_members(&self, zone: &str) -> Vec<usize> {
+        self.instances
+            .iter()
+            .enumerate()
+            .filter(|(_, x)| x.cfg.zone == zone)
+            .map(|(i, _)| i)
+            .collect()
     }
 
     /// Add an instance cloned from the first existing instance with the
@@ -907,6 +1125,8 @@ impl Simulation {
         self.cache_of.push(slot);
         self.busy.push(false);
         self.pending.push(None);
+        self.down_since.push(None);
+        self.downtime.push(0);
         // The inter-instance fabric is sized to the fleet; regrow it,
         // carrying the byte counter over (per-link congestion state resets
         // — scale-ups are rare, seconds-apart events).
@@ -917,6 +1137,18 @@ impl Simulation {
             self.cfg.inter_instance_latency_ns,
         ));
         self.inter_fabric.bytes_moved = bytes;
+        // Chaos fabric state survives the rebuild: replay the mutation log
+        // so a mid-incident scale-up doesn't silently heal the fabric.
+        for m in &self.fabric_mods {
+            match *m {
+                FabricMod::Degrade { device, scale } => {
+                    self.inter_fabric.degrade_device(device, scale);
+                }
+                FabricMod::Isolate { device } => {
+                    self.inter_fabric.isolate_device(device);
+                }
+            }
+        }
         self.queue
             .schedule_at(until, Event::InstanceReady { instance: idx });
         self.note_timeline(now, "scale-up", Some(idx), detail);
@@ -963,6 +1195,10 @@ impl Simulation {
         if self.instances[i].lifecycle().is_stopped() {
             return; // double fail / fail after drain completed
         }
+        if self.down_since[i].is_none() {
+            self.down_since[i] = Some(now);
+            self.metrics.on_fault_begin(now);
+        }
         self.busy[i] = false;
         self.pending[i] = None; // any queued StepComplete is now stale
         let displaced = self.instances[i].evacuate();
@@ -1003,9 +1239,15 @@ impl Simulation {
                 return;
             }
             self.instances[i].set_lifecycle(Lifecycle::Active);
+            if let Some(start) = self.down_since[i].take() {
+                self.downtime[i] =
+                    self.downtime[i].saturating_add(now.saturating_sub(start));
+                self.metrics.on_fault_end(now);
+            }
             self.note_timeline(now, "ready", Some(i), String::new());
             self.peak_active = self.peak_active.max(self.num_active_instances());
             self.unpark(now);
+            self.retry_blocked_handoffs(now);
             self.kick(i, now);
         }
     }
@@ -1043,12 +1285,56 @@ impl Simulation {
                 self.parked.len()
             );
         }
+        if !self.blocked_handoffs.is_empty() {
+            log::error!(
+                "{} KV hand-offs stayed blocked behind a partition",
+                self.blocked_handoffs.len()
+            );
+        }
         let mut report = self
             .metrics
             .report(makespan, &self.cfg.workload.tenant_names());
-        report.controller = self.controller.name().to_string();
-        report.timeline = self.timeline.clone();
+        if let Some(res) = report.resilience.as_mut() {
+            res.domains = self.domain_reports(makespan);
+        }
+        // Inert controllers (static, or a zero-fault chaos profile that
+        // never scheduled a tick) leave no trace: the report stays
+        // byte-identical to a run without any controller.
+        if self.controller.wants_ticks() || !self.timeline.is_empty() {
+            report.controller = self.controller.name().to_string();
+            report.timeline = self.timeline.clone();
+        }
         report
+    }
+
+    /// Per-zone availability over the run: 1 minus the fraction of
+    /// instance-time the zone's members spent inside a fault window
+    /// (fail → re-`Active`). Open windows are closed at `makespan`.
+    /// Zones in deterministic name order.
+    fn domain_reports(&self, makespan: Nanos) -> Vec<crate::metrics::DomainReport> {
+        let mut zones: std::collections::BTreeMap<&str, (usize, Nanos)> =
+            std::collections::BTreeMap::new();
+        for (i, inst) in self.instances.iter().enumerate() {
+            let mut down = self.downtime[i];
+            if let Some(start) = self.down_since[i] {
+                down = down.saturating_add(makespan.saturating_sub(start));
+            }
+            let e = zones.entry(inst.cfg.zone.as_str()).or_insert((0, 0));
+            e.0 += 1;
+            e.1 = e.1.saturating_add(down);
+        }
+        zones
+            .into_iter()
+            .map(|(zone, (instances, downtime_ns))| {
+                let span = (instances as u64).saturating_mul(makespan.max(1));
+                crate::metrics::DomainReport {
+                    zone: zone.to_string(),
+                    instances,
+                    downtime_ns,
+                    availability: 1.0 - downtime_ns as f64 / span as f64,
+                }
+            })
+            .collect()
     }
 
     // ---- introspection ---------------------------------------------------
@@ -1085,6 +1371,17 @@ impl Simulation {
     /// Name of the resolved cluster controller.
     pub fn controller_name(&self) -> &str {
         self.controller.name()
+    }
+
+    /// Controller name as reports attribute it: a controller that never
+    /// ticked and left no timeline is indistinguishable from `static`,
+    /// and is reported as such (the zero-fault chaos byte-compat rule).
+    pub fn reported_controller(&self) -> &str {
+        if self.controller.wants_ticks() || !self.timeline.is_empty() {
+            self.controller.name()
+        } else {
+            "static"
+        }
     }
 
     /// Controller actions, lifecycle transitions, and fleet samples so far.
@@ -1231,7 +1528,7 @@ pub fn run_config(cfg: SimConfig) -> anyhow::Result<(Report, SimSummary)> {
         cache_stats: sim.cache_stats(),
         inter_instance_bytes: sim.inter_instance_bytes(),
         peak_instances: sim.peak_instances(),
-        controller: sim.controller_name().to_string(),
+        controller: sim.reported_controller().to_string(),
     };
     Ok((report, summary))
 }
@@ -1734,6 +2031,204 @@ mod tests {
             "quiet phases must drain the extra capacity: {kinds:?}"
         );
         assert!(kinds.contains(&"sample"), "fleet-size samples recorded");
+    }
+
+    #[test]
+    fn admission_overload_rejects_and_conserves_requests() {
+        use crate::config::AdmissionConfig;
+        let mut cfg = small(presets::single_dense("tiny-dense", "rtx3090"));
+        cfg.workload.num_requests = 40;
+        cfg.workload.traffic = crate::workload::Traffic::burst();
+        // A tiny bucket against a burst: most arrivals must bounce.
+        cfg.cluster.admission = Some(AdmissionConfig {
+            rate: 10.0,
+            burst: 3.0,
+            breaker_queue: 0,
+            breaker_cooldown_ms: 500,
+        });
+        let mut sim = Simulation::new(cfg).unwrap();
+        let report = sim.run();
+        assert!(report.rejected > 0, "burst must overflow the token bucket");
+        assert!(report.num_finished > 0, "admitted requests still finish");
+        let in_flight = sim.cluster_view(0).in_flight;
+        assert_eq!(
+            report.rejected + report.num_finished + in_flight,
+            report.num_requests,
+            "rejected + finished + in-flight must equal arrivals"
+        );
+        assert_eq!(
+            report.to_json().get("rejected").as_i64(),
+            Some(report.rejected as i64)
+        );
+        // determinism: same config, same rejections
+        let mut cfg2 = small(presets::single_dense("tiny-dense", "rtx3090"));
+        cfg2.workload.num_requests = 40;
+        cfg2.workload.traffic = crate::workload::Traffic::burst();
+        cfg2.cluster.admission = sim.cfg.cluster.admission.clone();
+        let (b, _) = run_config(cfg2).unwrap();
+        assert_eq!(report.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn zone_outage_opens_fault_windows_and_reports_domains() {
+        use crate::cluster::{ClusterAction, ClusterController, ClusterView};
+
+        /// Kills zone "a" once work is in flight; recovers it two ticks
+        /// later; also marks instance 1 a straggler.
+        struct ZoneOutage {
+            failed_at_tick: Option<u32>,
+            ticks: u32,
+            recovered: bool,
+        }
+        impl ClusterController for ZoneOutage {
+            fn name(&self) -> &str {
+                "zone-outage"
+            }
+            fn on_tick(&mut self, now: Nanos, view: &ClusterView) -> Vec<ClusterAction> {
+                self.ticks += 1;
+                match self.failed_at_tick {
+                    None if view.in_flight > 0 => {
+                        self.failed_at_tick = Some(self.ticks);
+                        vec![
+                            ClusterAction::SetPerfScale {
+                                instance: 1,
+                                scale: 2.0,
+                            },
+                            ClusterAction::FailDomain {
+                                zone: "a".to_string(),
+                                at: now,
+                            },
+                        ]
+                    }
+                    Some(t) if !self.recovered && self.ticks >= t + 2 => {
+                        self.recovered = true;
+                        vec![ClusterAction::Recover { instance: 0 }]
+                    }
+                    _ => vec![],
+                }
+            }
+            fn has_pending(&self, _now: Nanos) -> bool {
+                self.failed_at_tick.is_some() && !self.recovered
+            }
+        }
+
+        let mut cfg = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        cfg.workload.num_requests = 30;
+        cfg.cluster.tick_ms = 5;
+        cfg.cluster.warmup_ms = 20;
+        cfg.instances[0].zone = "a".to_string();
+        let mut sim = Simulation::builder(cfg)
+            .with_controller(Box::new(ZoneOutage {
+                failed_at_tick: None,
+                ticks: 0,
+                recovered: false,
+            }))
+            .build()
+            .unwrap();
+        let report = sim.run();
+        assert_eq!(report.num_finished, 30, "outage must not lose requests");
+        let kinds: Vec<&str> =
+            report.timeline.iter().map(|e| e.kind.as_str()).collect();
+        assert!(kinds.contains(&"fail-domain"), "{kinds:?}");
+        assert!(kinds.contains(&"fail"));
+        assert!(kinds.contains(&"perf-scale"));
+        assert!(kinds.contains(&"recover"));
+        assert!(kinds.contains(&"ready"));
+        let res = report.resilience.expect("fault windows must be reported");
+        assert_eq!(res.faults, 1);
+        assert!(res.fault_ns > 0);
+        // zone "a" saw downtime; the default zone stayed clean
+        assert_eq!(res.domains.len(), 2);
+        assert_eq!(res.domains[0].zone, "a");
+        assert_eq!(res.domains[0].instances, 1);
+        assert!(res.domains[0].downtime_ns > 0);
+        assert!(res.domains[0].availability < 1.0);
+        assert_eq!(res.domains[1].zone, "default");
+        assert_eq!(res.domains[1].downtime_ns, 0);
+        assert_eq!(res.domains[1].availability, 1.0);
+        assert!((sim.instance(1).perf_scale() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_parks_pd_handoffs_until_fabric_heals() {
+        use crate::cluster::{ClusterAction, ClusterController, ClusterView};
+
+        /// Partitions the decode zone once work is in flight, heals the
+        /// fabric three ticks later.
+        struct PartitionPulse {
+            cut_at_tick: Option<u32>,
+            ticks: u32,
+            healed: bool,
+        }
+        impl ClusterController for PartitionPulse {
+            fn name(&self) -> &str {
+                "partition-pulse"
+            }
+            fn on_tick(
+                &mut self,
+                _now: Nanos,
+                view: &ClusterView,
+            ) -> Vec<ClusterAction> {
+                self.ticks += 1;
+                match self.cut_at_tick {
+                    None if view.in_flight > 0 => {
+                        self.cut_at_tick = Some(self.ticks);
+                        vec![ClusterAction::PartitionDomain {
+                            zone: "d".to_string(),
+                        }]
+                    }
+                    Some(t) if !self.healed && self.ticks >= t + 3 => {
+                        self.healed = true;
+                        vec![ClusterAction::RestoreFabric]
+                    }
+                    _ => vec![],
+                }
+            }
+            fn has_pending(&self, _now: Nanos) -> bool {
+                self.cut_at_tick.is_some() && !self.healed
+            }
+        }
+
+        let mut cfg = small(presets::pd_dense("tiny-dense", "rtx3090"));
+        cfg.cluster.tick_ms = 2;
+        for i in &mut cfg.instances {
+            if i.role == Role::Decode {
+                i.zone = "d".to_string();
+            }
+        }
+        let mut sim = Simulation::builder(cfg)
+            .with_controller(Box::new(PartitionPulse {
+                cut_at_tick: None,
+                ticks: 0,
+                healed: false,
+            }))
+            .build()
+            .unwrap();
+        let report = sim.run();
+        assert_eq!(
+            report.num_finished, 20,
+            "parked hand-offs must resume after the fabric heals"
+        );
+        let kinds: Vec<&str> =
+            report.timeline.iter().map(|e| e.kind.as_str()).collect();
+        assert!(kinds.contains(&"partition"), "{kinds:?}");
+        assert!(kinds.contains(&"restore-fabric"));
+    }
+
+    #[test]
+    fn inert_chaos_profile_is_byte_identical_to_no_controller() {
+        let base = small(presets::multi_dense("tiny-dense", "rtx3090"));
+        let (plain, plain_sum) = run_config(base.clone()).unwrap();
+        let mut chaotic = base;
+        chaotic.cluster.controller = "chaos".to_string(); // inert default profile
+        let (under_chaos, chaos_sum) = run_config(chaotic).unwrap();
+        assert_eq!(
+            plain.to_json().to_string(),
+            under_chaos.to_json().to_string(),
+            "zero-fault chaos must leave no trace in the report"
+        );
+        assert_eq!(plain_sum.controller, "static");
+        assert_eq!(chaos_sum.controller, "static");
     }
 
     #[test]

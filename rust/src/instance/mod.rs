@@ -134,6 +134,9 @@ pub struct ServingInstance {
     /// Fleet-lifecycle state (DESIGN.md §9); `Active` unless a cluster
     /// controller says otherwise. Only the coordinator mutates this.
     lifecycle: Lifecycle,
+    /// Straggler multiplier on step durations (chaos `SetPerfScale` —
+    /// DESIGN.md §12). 1.0 = healthy; >1.0 slows every step.
+    perf_scale: f64,
     /// Monotone counter for deterministic admission order.
     pub steps: u64,
     pub preemptions: u64,
@@ -258,6 +261,7 @@ impl ServingInstance {
             running: vec![],
             seqs: SeqMap::default(),
             lifecycle: Lifecycle::Active,
+            perf_scale: 1.0,
             steps: 0,
             preemptions: 0,
             tok_scratch: vec![],
@@ -290,6 +294,22 @@ impl ServingInstance {
     /// on recovery); the instance just records it.
     pub fn set_lifecycle(&mut self, l: Lifecycle) {
         self.lifecycle = l;
+    }
+
+    /// Straggler multiplier currently applied to step durations.
+    pub fn perf_scale(&self) -> f64 {
+        self.perf_scale
+    }
+
+    /// Set the straggler multiplier (absolute, not compounding); 1.0
+    /// restores nominal speed. Non-finite or non-positive inputs reset to
+    /// healthy rather than corrupting every future step duration.
+    pub fn set_perf_scale(&mut self, scale: f64) {
+        self.perf_scale = if scale.is_finite() && scale > 0.0 {
+            scale
+        } else {
+            1.0
+        };
     }
 
     /// Pull every waiting (not yet admitted) request off this instance for
@@ -490,6 +510,10 @@ impl ServingInstance {
             .map(|(id, _, _)| self.seqs[id].host_cached_tokens)
             .sum();
         out.duration = self.price_iteration(&prefill, &decode, host_load_tokens, now);
+        if self.perf_scale != 1.0 {
+            out.duration =
+                ((out.duration as f64 * self.perf_scale).round() as Nanos).max(1);
+        }
 
         // Advance state.
         for &(id, _chunk, after) in &prefill {
@@ -941,6 +965,28 @@ mod tests {
         assert_eq!(out.emitted.len(), 4, "all prefills complete in one batch");
         let out2 = inst.begin_step(out.duration, None);
         assert_eq!(out2.emitted.len(), 4, "batched decode emits 4 tokens");
+    }
+
+    #[test]
+    fn perf_scale_stretches_step_durations() {
+        let mut healthy = dense_instance();
+        let mut slow = dense_instance();
+        slow.set_perf_scale(2.5);
+        healthy.enqueue(req(0, 0, 128, 4), 0);
+        slow.enqueue(req(0, 0, 128, 4), 0);
+        let a = healthy.begin_step(0, None).duration;
+        let b = slow.begin_step(0, None).duration;
+        assert_eq!(b, ((a as f64 * 2.5).round() as Nanos).max(1));
+        // absolute, not compounding; 1.0 restores nominal speed
+        slow.set_perf_scale(1.0);
+        let c = slow.begin_step(b, None).duration;
+        let d = healthy.begin_step(a, None).duration;
+        assert_eq!(c, d, "scale reset must restore nominal pricing");
+        // degenerate inputs reset to healthy instead of poisoning steps
+        slow.set_perf_scale(f64::NAN);
+        assert_eq!(slow.perf_scale(), 1.0);
+        slow.set_perf_scale(-3.0);
+        assert_eq!(slow.perf_scale(), 1.0);
     }
 
     #[test]

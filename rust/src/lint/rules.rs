@@ -36,6 +36,7 @@ pub const CORE_MODULES: &[&str] = &[
     "instance",
     "memory",
     "metrics",
+    "network",
     "perf",
     "policy",
     "router",
@@ -411,6 +412,7 @@ mod tests {
     fn core_classification() {
         assert!(is_core("rust/src/coordinator/mod.rs"));
         assert!(is_core("metrics/mod.rs"));
+        assert!(is_core("rust/src/network/topology.rs"));
         assert!(!is_core("rust/src/util/fxhash.rs"));
         assert!(!is_core("rust/src/lint/rules.rs"));
         assert!(!is_core("rust/src/bin/simlint.rs"));

@@ -22,7 +22,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use llmservingsim::cli::Args;
-use llmservingsim::config::{presets, PerfBackend, SimConfig};
+use llmservingsim::config::{presets, ChaosConfig, PerfBackend, SimConfig};
 use llmservingsim::coordinator::{run_config, Simulation};
 use llmservingsim::groundtruth::ExecPerfModel;
 use llmservingsim::model::ModelSpec;
@@ -59,7 +59,8 @@ COMMANDS:
              [--hardware H] [--hardware-dir DIR]
              [--perf analytical|cycle|cycle-replay|trace:PATH]
              [--requests N] [--rate R] [--workload W] [--tenants N]
-             [--controller C] [--tick-ms N] [--seed S] [--out FILE]
+             [--controller C] [--chaos PROFILE] [--tick-ms N] [--seed S]
+             [--out FILE]
              (--workload takes a registered traffic source: poisson,
               uniform, burst, mmpp, diurnal, sessions, or a custom name;
               --tenants N splits traffic over N weighted tenants with
@@ -67,18 +68,22 @@ COMMANDS:
               loads every bundle in DIR so profiled devices resolve by
               name in --hardware and config files; --controller runs a
               registered cluster controller — static, queue-threshold,
-              failure-replay — on a --tick-ms cadence)
+              failure-replay, chaos — on a --tick-ms cadence; --chaos
+              runs the seeded fault injector with a named profile —
+              none, light, heavy, partition)
   sweep      [--presets A,B,..] [--hardware H1,H2,..|all]
              [--hardware-dir DIR] [--rates R1,R2,..]
              [--workloads W1,W2,..|all] [--routers P1,P2,..|all]
              [--scheds S1,S2,..|all] [--evict E1,E2,..|all]
-             [--controllers C1,C2,..|all] [--perf B1,B2,..]
-             [--model M] [--moe-model M] [--requests N]
+             [--controllers C1,C2,..|all] [--chaos P1,P2,..|all]
+             [--perf B1,B2,..] [--model M] [--moe-model M] [--requests N]
              [--seed S] [--threads T] [--baseline NAME] [--out FILE]
              [--quick]
              (policy/workload/hardware/controller axes take registry
               names; `all` sweeps every registered entry, including
-              imported bundles)
+              imported bundles; --chaos sweeps named fault-injection
+              profiles under the chaos controller — byte-identical at
+              any --threads value)
   validate   --model <preset> [--artifacts DIR] [--trace FILE]
              [--requests N] [--rate R]
   gen-trace  [--requests N] [--rate R] [--workload W] [--tenants N]
@@ -292,6 +297,18 @@ fn resolve_config(args: &Args) -> anyhow::Result<SimConfig> {
         policy::snapshot().check_controller(c)?;
         cfg.cluster.controller = c.to_string();
     }
+    if let Some(p) = args.str_flag("chaos") {
+        if let Some(c) = args.str_flag("controller") {
+            if c != "chaos" {
+                anyhow::bail!(
+                    "--chaos runs the 'chaos' controller; it cannot be \
+                     combined with --controller {c}"
+                );
+            }
+        }
+        cfg.cluster.chaos = ChaosConfig::profile(p)?;
+        cfg.cluster.controller = "chaos".to_string();
+    }
     cfg.cluster.tick_ms = args.u64_or("tick-ms", cfg.cluster.tick_ms)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.validate()?;
@@ -377,6 +394,14 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     spec.axes.evictions = policy_axis(args, "evict", registry.evict_names());
     spec.axes.controllers =
         policy_axis(args, "controllers", registry.controller_names());
+    spec.axes.chaos = policy_axis(
+        args,
+        "chaos",
+        ChaosConfig::profile_names()
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    );
     spec.axes.backends = csv_parse::<PerfBackend>(args, "perf")?;
 
     let cfgs = spec.expand()?;

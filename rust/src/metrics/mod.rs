@@ -130,6 +130,8 @@ pub struct MetricsCollector {
     busy: FxHashMap<usize, Nanos>,
     arrivals: usize,
     finished: usize,
+    /// Requests refused by admission control (terminal: never dispatched).
+    rejected: usize,
     gen_tokens: u64,
     cached_tokens: u64,
     good_tokens: u64,
@@ -139,6 +141,20 @@ pub struct MetricsCollector {
     e2e: SampleSet,
     classes: BTreeMap<SloClass, ClassAgg>,
     tenants: BTreeMap<u32, TenantAgg>,
+    // ---- fault-window accounting (chaos — DESIGN.md §12) ----
+    /// Concurrently-open fault windows (instances failed, not yet
+    /// re-`Active`). The union of depth>0 time is `fault_ns`.
+    fault_depth: u32,
+    /// Start of the current depth>0 window (meaningful when depth > 0).
+    fault_started: Nanos,
+    /// Fault windows opened (one per instance failure).
+    faults: u64,
+    /// Closed depth>0 time so far (open window added at report time).
+    fault_ns: Nanos,
+    /// Finishes that landed while at least one fault window was open.
+    fin_in_fault: u64,
+    /// SLO-met finishes among `fin_in_fault`.
+    slo_ok_in_fault: u64,
 }
 
 impl MetricsCollector {
@@ -217,6 +233,10 @@ impl MetricsCollector {
         if slo_ok {
             self.good_tokens += tokens;
         }
+        if self.fault_depth > 0 {
+            self.fin_in_fault += 1;
+            self.slo_ok_in_fault += slo_ok as u64;
+        }
 
         let c = self.classes.entry(r.slo_class).or_default();
         c.finished += 1;
@@ -240,6 +260,48 @@ impl MetricsCollector {
 
     pub fn on_busy(&mut self, instance: usize, dur: Nanos) {
         *self.busy.entry(instance).or_insert(0) += dur;
+    }
+
+    /// Admission control refused this arrival: the request is terminal.
+    /// Its record (created by [`on_arrival`](Self::on_arrival)) is dropped
+    /// so it never counts as in-flight; conservation becomes
+    /// `arrivals == finished + in_flight + rejected`.
+    pub fn on_rejected(&mut self, id: u64) {
+        if self.records.remove(&id).is_some() {
+            self.rejected += 1;
+        }
+    }
+
+    pub fn num_rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// An instance failed: open one fault window. Windows may overlap
+    /// (correlated domain outages); `fault_ns` tracks the *union*.
+    pub fn on_fault_begin(&mut self, now: Nanos) {
+        self.faults += 1;
+        if self.fault_depth == 0 {
+            self.fault_started = now;
+        }
+        self.fault_depth += 1;
+    }
+
+    /// A failed instance returned to `Active`: close its fault window.
+    pub fn on_fault_end(&mut self, now: Nanos) {
+        if self.fault_depth == 0 {
+            return; // unbalanced end: ignore rather than corrupt the union
+        }
+        self.fault_depth -= 1;
+        if self.fault_depth == 0 {
+            self.fault_ns = self
+                .fault_ns
+                .saturating_add(now.saturating_sub(self.fault_started));
+        }
+    }
+
+    /// Whether at least one fault window is currently open.
+    pub fn in_fault(&self) -> bool {
+        self.fault_depth > 0
     }
 
     /// In-flight record lookup (finished records are folded and dropped).
@@ -320,9 +382,41 @@ impl MetricsCollector {
                 },
             })
             .collect();
+        // Fault-window rollup: close the open window at makespan; split
+        // SLO attainment into fault-time vs clear-time finishes (both
+        // vacuously 1.0 when the respective bucket is empty).
+        let mut fault_ns = self.fault_ns;
+        if self.fault_depth > 0 {
+            fault_ns =
+                fault_ns.saturating_add(makespan.saturating_sub(self.fault_started));
+        }
+        let slo_ok_total: u64 = self.classes.values().map(|c| c.slo_ok).sum();
+        let resilience = (self.faults > 0).then(|| {
+            let fin_clear = (self.finished as u64).saturating_sub(self.fin_in_fault);
+            let slo_ok_clear = slo_ok_total.saturating_sub(self.slo_ok_in_fault);
+            ResilienceReport {
+                faults: self.faults,
+                fault_ns,
+                finished_in_fault: self.fin_in_fault as usize,
+                slo_in_fault: if self.fin_in_fault == 0 {
+                    1.0
+                } else {
+                    self.slo_ok_in_fault as f64 / self.fin_in_fault as f64
+                },
+                slo_clear: if fin_clear == 0 {
+                    1.0
+                } else {
+                    slo_ok_clear as f64 / fin_clear as f64
+                },
+                // Filled by the coordinator, which owns zone labels.
+                domains: vec![],
+            }
+        });
         Report {
             num_requests: self.arrivals,
             num_finished: self.finished,
+            rejected: self.rejected,
+            resilience,
             makespan,
             ttft_ns: self.ttft.summary(),
             tpot_ns: self.tpot.summary(),
@@ -369,11 +463,47 @@ pub struct TenantReport {
     pub ttft_ns_mean: f64,
 }
 
+/// Resilience rollup for runs that saw instance faults (chaos scenarios —
+/// DESIGN.md §12). Omitted from the JSON when no fault window ever opened,
+/// keeping fault-free reports byte-identical to pre-chaos output.
+#[derive(Debug, Clone)]
+pub struct ResilienceReport {
+    /// Fault windows opened (one per instance failure).
+    pub faults: u64,
+    /// Union of time at least one fault window was open (ns).
+    pub fault_ns: Nanos,
+    /// Requests that finished while a fault window was open.
+    pub finished_in_fault: usize,
+    /// SLO attainment over fault-window finishes (1.0 when none).
+    pub slo_in_fault: f64,
+    /// SLO attainment over clear-time finishes (1.0 when none).
+    pub slo_clear: f64,
+    /// Per-failure-domain availability, in zone-name order.
+    pub domains: Vec<DomainReport>,
+}
+
+/// Availability of one failure domain (zone) over the run.
+#[derive(Debug, Clone)]
+pub struct DomainReport {
+    pub zone: String,
+    /// Instances labelled with this zone.
+    pub instances: usize,
+    /// Summed per-instance fault time (fail → re-`Active`), ns.
+    pub downtime_ns: Nanos,
+    /// `1 - downtime / (instances * makespan)`.
+    pub availability: f64,
+}
+
 /// Final simulation report (one Fig. 2 data point).
 #[derive(Debug, Clone)]
 pub struct Report {
     pub num_requests: usize,
     pub num_finished: usize,
+    /// Requests refused by admission control (0 when admission is off —
+    /// the key is then omitted from the JSON).
+    pub rejected: usize,
+    /// Fault-window rollup; `None` when the run saw no instance faults.
+    pub resilience: Option<ResilienceReport>,
     pub makespan: Nanos,
     pub ttft_ns: Summary,
     pub tpot_ns: Summary,
@@ -484,6 +614,51 @@ impl Report {
                 ),
             ),
         ];
+        // Chaos/admission keys only when those subsystems actually acted:
+        // fault-free, admission-free runs stay byte-identical.
+        if self.rejected > 0 {
+            fields.push(("rejected", Value::int(self.rejected as i64)));
+        }
+        if let Some(res) = &self.resilience {
+            fields.push((
+                "resilience",
+                Value::obj(vec![
+                    ("faults", Value::int(res.faults as i64)),
+                    ("fault_ns", Value::int(res.fault_ns as i64)),
+                    (
+                        "finished_in_fault",
+                        Value::int(res.finished_in_fault as i64),
+                    ),
+                    ("slo_in_fault", Value::float(res.slo_in_fault)),
+                    ("slo_clear", Value::float(res.slo_clear)),
+                    (
+                        "domains",
+                        Value::arr(
+                            res.domains
+                                .iter()
+                                .map(|d| {
+                                    Value::obj(vec![
+                                        ("zone", Value::str(d.zone.clone())),
+                                        (
+                                            "instances",
+                                            Value::int(d.instances as i64),
+                                        ),
+                                        (
+                                            "downtime_ns",
+                                            Value::int(d.downtime_ns as i64),
+                                        ),
+                                        (
+                                            "availability",
+                                            Value::float(d.availability),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ));
+        }
         // Cluster-dynamics keys only when a controller actually ran:
         // static reports stay byte-identical to pre-driver output.
         if self.controller != "static" || !self.timeline.is_empty() {
@@ -750,6 +925,87 @@ mod tests {
         let tl = v.get("timeline").as_arr().unwrap();
         assert_eq!(tl.len(), 1);
         assert_eq!(tl[0].get("kind").as_str(), Some("scale-up"));
+    }
+
+    #[test]
+    fn rejected_requests_leave_flight_and_gate_json() {
+        let mut m = MetricsCollector::new();
+        arrive(&mut m, 0, 0, 8, 1);
+        arrive(&mut m, 1, 10, 8, 1);
+        m.on_rejected(1);
+        m.on_token(0, 100);
+        m.on_finish(0, 100);
+        assert_eq!(m.num_arrivals(), 2);
+        assert_eq!(m.num_rejected(), 1);
+        assert_eq!(m.num_in_flight(), 0, "rejection is terminal");
+        let rep = m.report(1_000, &[]);
+        assert_eq!(rep.rejected, 1);
+        assert_eq!(rep.num_finished + rep.rejected, rep.num_requests);
+        assert_eq!(rep.to_json().get("rejected").as_i64(), Some(1));
+        // no-rejection reports omit the key (byte-compat)
+        let rep = collect_one().report(10_000, &[]);
+        assert_eq!(rep.rejected, 0);
+        assert!(rep.to_json().get("rejected").is_null());
+    }
+
+    #[test]
+    fn fault_windows_union_and_slo_split() {
+        let mut m = MetricsCollector::new();
+        // clear-time hit
+        arrive(&mut m, 0, 0, 8, 1);
+        m.on_token(0, 100);
+        m.on_finish(0, 100);
+        // two overlapping faults: union is [1000, 3000)
+        m.on_fault_begin(1_000);
+        m.on_fault_begin(1_500);
+        m.on_fault_end(2_000);
+        assert!(m.in_fault());
+        // a finish landing inside the window, missing its TTFT target
+        arrive(&mut m, 1, 1_000, 8, 1);
+        let late = SloClass::Interactive.ttft_target_ns() * 2;
+        m.on_token(1, 1_000 + late);
+        m.on_finish(1, 1_000 + late);
+        m.on_fault_end(3_000);
+        assert!(!m.in_fault());
+        let rep = m.report(10_000, &[]);
+        let res = rep.resilience.expect("faults must produce a rollup");
+        assert_eq!(res.faults, 2);
+        assert_eq!(res.fault_ns, 2_000, "overlap counts once (union)");
+        assert_eq!(res.finished_in_fault, 1);
+        assert_eq!(res.slo_in_fault, 0.0);
+        assert_eq!(res.slo_clear, 1.0);
+        // an open window is closed at makespan
+        let mut m2 = MetricsCollector::new();
+        m2.on_fault_begin(4_000);
+        assert_eq!(m2.report(10_000, &[]).resilience.unwrap().fault_ns, 6_000);
+        // fault-free reports omit the resilience key (byte-compat)
+        let rep = collect_one().report(10_000, &[]);
+        assert!(rep.resilience.is_none());
+        assert!(rep.to_json().get("resilience").is_null());
+    }
+
+    #[test]
+    fn resilience_json_shape_includes_domains() {
+        let mut m = MetricsCollector::new();
+        m.on_fault_begin(100);
+        m.on_fault_end(200);
+        let mut rep = m.report(1_000, &[]);
+        rep.resilience.as_mut().unwrap().domains.push(DomainReport {
+            zone: "rack0".into(),
+            instances: 2,
+            downtime_ns: 100,
+            availability: 0.95,
+        });
+        let v = rep.to_json();
+        let res = v.get("resilience");
+        assert_eq!(res.get("faults").as_i64(), Some(1));
+        assert_eq!(res.get("fault_ns").as_i64(), Some(100));
+        assert!(res.get("slo_in_fault").as_f64().is_some());
+        let doms = res.get("domains").as_arr().unwrap();
+        assert_eq!(doms.len(), 1);
+        assert_eq!(doms[0].get("zone").as_str(), Some("rack0"));
+        assert_eq!(doms[0].get("instances").as_i64(), Some(2));
+        assert_eq!(doms[0].get("downtime_ns").as_i64(), Some(100));
     }
 
     #[test]

@@ -13,6 +13,12 @@ pub use topology::{LinkId, Topology};
 
 use crate::sim::Nanos;
 
+/// Sentinel completion time for transfers across a partitioned fabric:
+/// "never". Callers should check [`Fabric::reachable`] before committing a
+/// transfer; the sentinel guarantees an unreachable pair is never silently
+/// priced as free.
+pub const UNREACHABLE: Nanos = Nanos::MAX;
+
 /// A device-to-device fabric for one instance (TP/EP group) or the
 /// cross-instance interconnect (P/D transfers, router-to-instance).
 #[derive(Debug, Clone)]
@@ -38,21 +44,55 @@ impl Fabric {
         &self.topo
     }
 
+    /// Whether `src` can currently reach `dst` (partitions respected).
+    pub fn reachable(&self, src: usize, dst: usize) -> bool {
+        self.topo.reachable(src, dst)
+    }
+
+    /// Scale the effective bandwidth of every link touching `dev`
+    /// (chaos: fabric degradation). Absolute, not compounding.
+    pub fn degrade_device(&mut self, dev: usize, scale: f64) -> usize {
+        self.topo.scale_device(dev, scale)
+    }
+
+    /// Remove every link touching `dev` (chaos: partition). Routes are
+    /// recomputed deterministically.
+    pub fn isolate_device(&mut self, dev: usize) -> usize {
+        self.topo.isolate_device(dev)
+    }
+
+    /// Re-add previously removed links touching `dev`.
+    pub fn restore_device(&mut self, dev: usize) -> usize {
+        self.topo.restore_device(dev)
+    }
+
+    /// Clear all degradation and partitions; routes return to pristine.
+    /// Link serialization queues are history, not health — they persist.
+    pub fn restore_all(&mut self) {
+        self.topo.restore_all();
+    }
+
     /// Serialization-aware point-to-point transfer: returns completion time
     /// for `bytes` sent from `src` to `dst` starting at `now`. The transfer
     /// occupies every link on the route back-to-back (store-and-forward at
     /// message granularity — adequate at the 10s-of-MB KV-transfer scale).
+    /// Returns [`UNREACHABLE`] (and moves nothing) if the pair is
+    /// partitioned.
     pub fn transfer(&mut self, src: usize, dst: usize, bytes: u64, now: Nanos) -> Nanos {
         if src == dst || bytes == 0 {
             return now;
         }
         let route = self.topo.route(src, dst);
+        if route.is_empty() {
+            return UNREACHABLE;
+        }
         let mut t = now;
         for link in route {
-            let l = &self.topo.links()[link];
+            let bw = self.topo.link_bandwidth(link);
+            let lat = self.topo.links()[link].latency;
             let start = t.max(self.link_free_at[link]);
-            let ser = (bytes as f64 / l.bandwidth * 1e9).round() as Nanos;
-            let done = start + l.latency + ser;
+            let ser = (bytes as f64 / bw * 1e9).round() as Nanos;
+            let done = start + lat + ser;
             self.link_free_at[link] = done;
             t = done;
         }
@@ -60,17 +100,22 @@ impl Fabric {
         t
     }
 
-    /// Non-mutating estimate of a p2p transfer (no queue update).
+    /// Non-mutating estimate of a p2p transfer (no queue update). Returns
+    /// [`UNREACHABLE`] if the pair is partitioned.
     pub fn estimate(&self, src: usize, dst: usize, bytes: u64) -> Nanos {
         if src == dst || bytes == 0 {
             return 0;
         }
-        self.topo
-            .route(src, dst)
+        let route = self.topo.route(src, dst);
+        if route.is_empty() {
+            return UNREACHABLE;
+        }
+        route
             .iter()
             .map(|&link| {
-                let l = &self.topo.links()[link];
-                l.latency + (bytes as f64 / l.bandwidth * 1e9).round() as Nanos
+                let bw = self.topo.link_bandwidth(link);
+                self.topo.links()[link].latency
+                    + (bytes as f64 / bw * 1e9).round() as Nanos
             })
             .sum()
     }
@@ -84,7 +129,9 @@ impl Fabric {
         }
         let chunk = bytes / n as u64;
         let steps = 2 * (n - 1) as u64;
-        let (bw, lat) = self.bottleneck();
+        let Some((bw, lat)) = self.bottleneck() else {
+            return UNREACHABLE;
+        };
         let per_step = lat + (chunk as f64 / bw * 1e9).round() as Nanos;
         self.bytes_moved += chunk * steps;
         now + per_step * steps
@@ -97,7 +144,9 @@ impl Fabric {
         }
         let chunk = bytes / n as u64;
         let steps = (n - 1) as u64;
-        let (bw, lat) = self.bottleneck();
+        let Some((bw, lat)) = self.bottleneck() else {
+            return UNREACHABLE;
+        };
         let per_step = lat + (chunk as f64 / bw * 1e9).round() as Nanos;
         self.bytes_moved += chunk * steps;
         now + per_step * steps
@@ -118,7 +167,9 @@ impl Fabric {
         if n <= 1 || bytes_per_pair == 0 {
             return now;
         }
-        let (bw, lat) = self.bottleneck();
+        let Some((bw, lat)) = self.bottleneck() else {
+            return UNREACHABLE;
+        };
         let steps = (n - 1) as u64;
         // Each step, the bottleneck device moves the heaviest pair's bytes.
         let heavy = (bytes_per_pair as f64 * skew.max(1.0)).round() as u64;
@@ -127,15 +178,21 @@ impl Fabric {
         now + per_step * steps
     }
 
-    /// (bandwidth, latency) of the slowest link in the fabric.
-    fn bottleneck(&self) -> (f64, Nanos) {
-        self.topo
-            .links()
-            .iter()
-            .map(|l| (l.bandwidth, l.latency))
-            .fold((f64::INFINITY, 0), |(bw, lat), (b, l)| {
-                (bw.min(b), lat.max(l))
-            })
+    /// (effective bandwidth, latency) of the slowest live link in the
+    /// fabric; `None` when every link is removed (fully partitioned).
+    fn bottleneck(&self) -> Option<(f64, Nanos)> {
+        let mut found = false;
+        let mut bw = f64::INFINITY;
+        let mut lat = 0;
+        for (id, l) in self.topo.links().iter().enumerate() {
+            if self.topo.link_removed(id) {
+                continue;
+            }
+            found = true;
+            bw = bw.min(self.topo.link_bandwidth(id));
+            lat = lat.max(l.latency);
+        }
+        found.then_some((bw, lat))
     }
 }
 
@@ -215,5 +272,46 @@ mod tests {
         let est = f.estimate(0, 3, 5_000_000);
         let act = f.transfer(0, 3, 5_000_000, 0);
         assert_eq!(est, act);
+    }
+
+    #[test]
+    fn degraded_link_slows_transfers_and_restore_heals() {
+        let mut f = fc4();
+        let healthy = f.estimate(0, 1, 100_000_000);
+        f.degrade_device(0, 0.5);
+        let degraded = f.estimate(0, 1, 100_000_000);
+        assert!(
+            degraded > healthy,
+            "degraded={degraded} healthy={healthy}"
+        );
+        f.restore_all();
+        assert_eq!(f.estimate(0, 1, 100_000_000), healthy);
+    }
+
+    #[test]
+    fn partition_makes_transfers_unreachable_not_free() {
+        let mut f = fc4();
+        f.isolate_device(2);
+        assert!(!f.reachable(0, 2));
+        assert_eq!(f.estimate(0, 2, 1 << 20), UNREACHABLE);
+        let before = f.bytes_moved;
+        assert_eq!(f.transfer(0, 2, 1 << 20, 0), UNREACHABLE);
+        assert_eq!(f.bytes_moved, before, "partitioned transfer moved bytes");
+        // other pairs unaffected; healing restores service
+        assert!(f.reachable(0, 1));
+        f.restore_device(2);
+        assert!(f.reachable(0, 2));
+        assert!(f.transfer(0, 2, 1 << 20, 0) < UNREACHABLE);
+    }
+
+    #[test]
+    fn fully_partitioned_collectives_return_sentinel() {
+        let mut f = Fabric::new(Topology::ring(4, 100e9, 1_000));
+        for d in 0..4 {
+            f.isolate_device(d);
+        }
+        assert_eq!(f.all_reduce(4, 1 << 20, 0), UNREACHABLE);
+        assert_eq!(f.all_gather(4, 1 << 20, 0), UNREACHABLE);
+        assert_eq!(f.all_to_all(4, 1 << 20, 1.0, 0), UNREACHABLE);
     }
 }

@@ -1,6 +1,15 @@
 //! Link-graph topologies: fully-connected, ring, star (switch), and
 //! hierarchical (intra-node fast + inter-node slow), with precomputed
 //! shortest routes.
+//!
+//! Topologies are mutable under the chaos subsystem (DESIGN.md §12):
+//! links can be **degraded** ([`Topology::set_link_scale`] — a bandwidth
+//! multiplier that leaves routing untouched) or **removed/restored**
+//! ([`Topology::remove_link`] / [`Topology::restore_link`] /
+//! [`Topology::isolate_device`] / [`Topology::restore_all`]), with routes
+//! recomputed deterministically after every connectivity change. The base
+//! link list is never mutated, so a full restore reproduces the original
+//! routes byte-identically.
 
 use crate::sim::Nanos;
 
@@ -22,7 +31,14 @@ pub struct Link {
 #[derive(Debug, Clone)]
 pub struct Topology {
     num_devices: usize,
+    /// Base (pristine) links. Never mutated — degradation and partition
+    /// state live in `scale` / `removed`, so `restore_all` is exact.
     links: Vec<Link>,
+    /// Per-link bandwidth multiplier (1.0 = healthy).
+    scale: Vec<f64>,
+    /// Per-link partition flag; removed links drop out of routing and
+    /// collective pricing but keep their [`LinkId`] stable.
+    removed: Vec<bool>,
     /// `routes[src][dst]` = link ids along the path.
     routes: Vec<Vec<Vec<LinkId>>>,
     pub name: String,
@@ -31,13 +47,18 @@ pub struct Topology {
 impl Topology {
     /// Build from an explicit link list.
     pub fn new(name: &str, num_devices: usize, links: Vec<Link>) -> Self {
-        let routes = Self::compute_routes(num_devices, &links);
-        Topology {
+        let scale = vec![1.0; links.len()];
+        let removed = vec![false; links.len()];
+        let mut t = Topology {
             num_devices,
             links,
-            routes,
+            scale,
+            removed,
+            routes: vec![],
             name: name.to_string(),
-        }
+        };
+        t.recompute_routes();
+        t
     }
 
     /// Every device pair directly connected (NVLink-style).
@@ -59,10 +80,19 @@ impl Topology {
     }
 
     /// Bidirectional ring (TPU-pod-slice-style).
+    ///
+    /// Each undirected ring edge contributes exactly one link per
+    /// direction: `n == 1` has no edges (a self-loop carries no traffic)
+    /// and `n == 2` has a single `0 <-> 1` pair — wrapping around the
+    /// two-node ring would emit the same directed links twice, presenting
+    /// double-counted parallel paths to collective pricing.
     pub fn ring(n: usize, bandwidth: f64, latency: Nanos) -> Topology {
         let mut links = vec![];
         for i in 0..n {
             let next = (i + 1) % n;
+            if next == i || (n == 2 && i == 1) {
+                continue;
+            }
             links.push(Link {
                 src: i,
                 dst: next,
@@ -160,10 +190,28 @@ impl Topology {
         &self.links
     }
 
+    /// Effective bandwidth of link `id` with any degradation applied.
+    pub fn link_bandwidth(&self, id: LinkId) -> f64 {
+        self.links[id].bandwidth * self.scale[id]
+    }
+
+    /// Whether link `id` is currently partitioned away.
+    pub fn link_removed(&self, id: LinkId) -> bool {
+        self.removed[id]
+    }
+
     /// Link ids along the (precomputed BFS-shortest) route src -> dst.
-    /// Panics if unreachable — topologies are validated at construction.
+    /// Empty for `src == dst` — and for pairs made unreachable by a
+    /// partition ([`Self::reachable`] disambiguates; transfer pricing must
+    /// treat unreachable pairs as blocked, not free).
     pub fn route(&self, src: usize, dst: usize) -> Vec<LinkId> {
         self.routes[src][dst].clone()
+    }
+
+    /// Whether `dst` is currently reachable from `src` (trivially true for
+    /// `src == dst`).
+    pub fn reachable(&self, src: usize, dst: usize) -> bool {
+        src == dst || !self.routes[src][dst].is_empty()
     }
 
     pub fn is_connected(&self) -> bool {
@@ -172,11 +220,120 @@ impl Topology {
         })
     }
 
-    fn compute_routes(n: usize, links: &[Link]) -> Vec<Vec<Vec<LinkId>>> {
-        // adjacency: node -> (neighbor, link id)
+    // ---- fault injection (DESIGN.md §12) -------------------------------
+
+    /// Degrade (or restore, with `scale = 1.0`) the directed link
+    /// `src -> dst` to `scale` x its base bandwidth. The scale is
+    /// **absolute**, not compounding, so repeated degradations are
+    /// idempotent and `1.0` is always a full repair. Returns the number of
+    /// links matched (0 when no such link exists). Routes are hop-count
+    /// shortest paths, so scaling never re-routes.
+    pub fn set_link_scale(&mut self, src: usize, dst: usize, scale: f64) -> usize {
+        let scale = scale.max(1e-12);
+        let mut n = 0;
+        for (id, l) in self.links.iter().enumerate() {
+            if l.src == src && l.dst == dst {
+                self.scale[id] = scale;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Degrade every link incident to `dev` (its NIC slows down). Returns
+    /// the number of links touched.
+    pub fn scale_device(&mut self, dev: usize, scale: f64) -> usize {
+        let scale = scale.max(1e-12);
+        let mut n = 0;
+        for (id, l) in self.links.iter().enumerate() {
+            if l.src == dev || l.dst == dev {
+                self.scale[id] = scale;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Remove the directed link `src -> dst` from routing (partition).
+    /// Link ids stay stable; routes are recomputed deterministically.
+    pub fn remove_link(&mut self, src: usize, dst: usize) -> usize {
+        let n = self.mark_links(src, dst, true);
+        if n > 0 {
+            self.recompute_routes();
+        }
+        n
+    }
+
+    /// Restore a previously removed directed link and recompute routes.
+    pub fn restore_link(&mut self, src: usize, dst: usize) -> usize {
+        let n = self.mark_links(src, dst, false);
+        if n > 0 {
+            self.recompute_routes();
+        }
+        n
+    }
+
+    /// Partition `dev` off the fabric: remove every incident link.
+    /// Returns the number of links removed.
+    pub fn isolate_device(&mut self, dev: usize) -> usize {
+        let mut n = 0;
+        for (id, l) in self.links.iter().enumerate() {
+            if (l.src == dev || l.dst == dev) && !self.removed[id] {
+                self.removed[id] = true;
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.recompute_routes();
+        }
+        n
+    }
+
+    /// Undo [`Self::isolate_device`] for `dev`.
+    pub fn restore_device(&mut self, dev: usize) -> usize {
+        let mut n = 0;
+        for (id, l) in self.links.iter().enumerate() {
+            if (l.src == dev || l.dst == dev) && self.removed[id] {
+                self.removed[id] = false;
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.recompute_routes();
+        }
+        n
+    }
+
+    /// Clear every degradation and partition. Because the base link list
+    /// is never mutated and route computation is deterministic, the
+    /// restored routes are byte-identical to the original ones.
+    pub fn restore_all(&mut self) {
+        self.scale.iter_mut().for_each(|s| *s = 1.0);
+        self.removed.iter_mut().for_each(|r| *r = false);
+        self.recompute_routes();
+    }
+
+    fn mark_links(&mut self, src: usize, dst: usize, removed: bool) -> usize {
+        let mut n = 0;
+        for (id, l) in self.links.iter().enumerate() {
+            if l.src == src && l.dst == dst && self.removed[id] != removed {
+                self.removed[id] = removed;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Deterministic per-source BFS over the live (non-removed) links.
+    /// Adjacency is built in link-id order and the queue is FIFO, so equal
+    /// inputs always produce identical routes.
+    fn recompute_routes(&mut self) {
+        let n = self.num_devices;
         let mut adj: Vec<Vec<(usize, LinkId)>> = vec![vec![]; n];
-        for (id, l) in links.iter().enumerate() {
-            adj[l.src].push((l.dst, id));
+        for (id, l) in self.links.iter().enumerate() {
+            if !self.removed[id] {
+                adj[l.src].push((l.dst, id));
+            }
         }
         let mut routes = vec![vec![vec![]; n]; n];
         for src in 0..n {
@@ -209,7 +366,7 @@ impl Topology {
                 routes[src][dst] = path;
             }
         }
-        routes
+        self.routes = routes;
     }
 }
 
@@ -262,5 +419,120 @@ mod tests {
         let t = Topology::fully_connected(1, 1e9, 100);
         assert!(t.is_connected());
         assert_eq!(t.num_links(), 0);
+    }
+
+    /// Regression (ISSUE 8): the ring builder used to emit both directions
+    /// for every `i`, so `n == 2` produced duplicate `0->1`/`1->0` links
+    /// (double-counted parallel paths) and `n == 1` two self-loops.
+    #[test]
+    fn ring_small_n_has_no_duplicate_or_self_loop_links() {
+        // n = 1: no links at all — a self-loop carries no traffic.
+        let t = Topology::ring(1, 1e9, 100);
+        assert_eq!(t.num_links(), 0, "n=1 ring must not emit self-loops");
+        assert!(t.is_connected());
+        assert!(t.route(0, 0).is_empty());
+
+        // n = 2: exactly one link per direction, and they route directly.
+        let t = Topology::ring(2, 1e9, 100);
+        assert_eq!(t.num_links(), 2, "n=2 ring must not duplicate its edge");
+        let pairs: std::collections::BTreeSet<(usize, usize)> =
+            t.links().iter().map(|l| (l.src, l.dst)).collect();
+        assert_eq!(pairs.len(), 2, "duplicate directed links: {:?}", t.links());
+        assert!(pairs.contains(&(0, 1)) && pairs.contains(&(1, 0)));
+        assert!(t.is_connected());
+        assert_eq!(t.route(0, 1).len(), 1);
+        assert_eq!(t.route(1, 0).len(), 1);
+
+        // n = 3: one link per direction per edge — 6 distinct links.
+        let t = Topology::ring(3, 1e9, 100);
+        assert_eq!(t.num_links(), 6);
+        let pairs: std::collections::BTreeSet<(usize, usize)> =
+            t.links().iter().map(|l| (l.src, l.dst)).collect();
+        assert_eq!(pairs.len(), 6, "duplicate directed links: {:?}", t.links());
+        assert!(t.is_connected());
+        for (i, j) in [(0, 1), (1, 2), (2, 0)] {
+            assert_eq!(t.route(i, j).len(), 1);
+            assert_eq!(t.route(j, i).len(), 1);
+        }
+    }
+
+    /// Full route matrix, for byte-exact route comparisons.
+    fn route_matrix(t: &Topology) -> Vec<Vec<Vec<usize>>> {
+        (0..t.num_devices())
+            .map(|s| (0..t.num_devices()).map(|d| t.route(s, d)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn degrade_scales_bandwidth_without_rerouting() {
+        let mut t = Topology::switched(4, 1e9, 100);
+        let before = route_matrix(&t);
+        assert_eq!(t.set_link_scale(0, 4, 0.25), 1, "0 -> switch exists");
+        assert!((t.link_bandwidth(0) - 0.25e9).abs() < 1.0);
+        // absolute, not compounding
+        assert_eq!(t.set_link_scale(0, 4, 0.25), 1);
+        assert!((t.link_bandwidth(0) - 0.25e9).abs() < 1.0);
+        // base list untouched; routes untouched
+        assert!((t.links()[0].bandwidth - 1e9).abs() < 1.0);
+        assert_eq!(route_matrix(&t), before);
+        // repair
+        assert_eq!(t.set_link_scale(0, 4, 1.0), 1);
+        assert!((t.link_bandwidth(0) - 1e9).abs() < 1.0);
+        // unknown links match nothing
+        assert_eq!(t.set_link_scale(2, 3, 0.5), 0, "no direct 2->3 link");
+    }
+
+    #[test]
+    fn remove_restore_roundtrips_routes_byte_identically() {
+        // Property over every built-in shape: degrade + partition + full
+        // restore reproduces the original route matrix exactly, and
+        // recomputation is deterministic (same mutation -> same routes).
+        let shapes: Vec<Topology> = vec![
+            Topology::fully_connected(4, 1e9, 100),
+            Topology::ring(5, 1e9, 100),
+            Topology::switched(4, 1e9, 100),
+            Topology::hierarchical(2, 2, 100e9, 100, 10e9, 1000),
+        ];
+        for original in shapes {
+            let pristine = route_matrix(&original);
+            let mut a = original.clone();
+            let mut b = original.clone();
+            for t in [&mut a, &mut b] {
+                t.set_link_scale(0, 1, 0.5);
+                t.isolate_device(1);
+                t.restore_device(1);
+                t.remove_link(0, 1);
+            }
+            // determinism: identical mutations yield identical routes
+            assert_eq!(route_matrix(&a), route_matrix(&b), "{}", original.name);
+            a.restore_all();
+            assert_eq!(
+                route_matrix(&a),
+                pristine,
+                "restore_all must reproduce the original routes for {}",
+                original.name
+            );
+            assert!((a.link_bandwidth(0) - original.link_bandwidth(0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn full_partition_yields_unreachable_not_panic() {
+        let mut t = Topology::switched(3, 1e9, 100);
+        assert!(t.reachable(0, 2));
+        let cut = t.isolate_device(0);
+        assert_eq!(cut, 2, "0<->switch both directions");
+        // Unreachable pairs report empty routes and reachable() = false —
+        // no panics anywhere.
+        assert!(!t.reachable(0, 2));
+        assert!(!t.reachable(2, 0));
+        assert!(t.route(0, 2).is_empty());
+        assert!(t.route(2, 0).is_empty());
+        assert!(t.reachable(0, 0), "self is always reachable");
+        assert!(t.reachable(1, 2), "unrelated pairs keep their routes");
+        assert!(!t.is_connected());
+        // heal
+        assert_eq!(t.restore_device(0), 2);
+        assert!(t.reachable(0, 2) && t.is_connected());
     }
 }

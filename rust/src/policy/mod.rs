@@ -9,7 +9,7 @@
 //! | wait-queue ordering   | [`SchedulePolicy`] | `fcfs`, `sjf`, `priority`, `slo` |
 //! | prefix-cache eviction | [`EvictionPolicy`] | `lru`, `lfu`, `largest` |
 //! | traffic generation    | [`TrafficSource`]  | `burst`, `diurnal`, `mmpp`, `poisson`, `sessions`, `uniform` |
-//! | cluster dynamics      | [`ClusterController`] | `static`, `queue-threshold`, `failure-replay` |
+//! | cluster dynamics      | [`ClusterController`] | `static`, `queue-threshold`, `failure-replay`, `chaos` |
 //!
 //! [`SimConfig`](crate::config::SimConfig) stores policy *names* (plain
 //! strings, so JSON round-trip and presets keep working); a
@@ -208,6 +208,10 @@ impl PolicyRegistry {
         });
         r.register_controller("failure-replay", |cfg: &ClusterConfig| {
             Ok(Box::new(crate::cluster::FailureReplay::from_config(cfg))
+                as Box<dyn ClusterController>)
+        });
+        r.register_controller("chaos", |cfg: &ClusterConfig| {
+            Ok(Box::new(crate::cluster::ChaosController::from_config(cfg))
                 as Box<dyn ClusterController>)
         });
         r
@@ -573,7 +577,7 @@ mod tests {
         assert_eq!(reg.evict_names(), vec!["largest", "lfu", "lru"]);
         assert_eq!(
             reg.controller_names(),
-            vec!["failure-replay", "queue-threshold", "static"]
+            vec!["chaos", "failure-replay", "queue-threshold", "static"]
         );
         assert_eq!(
             reg.traffic_names(),

@@ -31,7 +31,7 @@ use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::config::{presets, PerfBackend, SimConfig};
+use crate::config::{presets, ChaosConfig, PerfBackend, SimConfig};
 use crate::coordinator::{run_config, SimSummary};
 use crate::metrics::Report;
 use crate::policy::PolicyRegistry;
@@ -78,6 +78,12 @@ pub struct SweepAxes {
     /// registrations. Each grid point runs with that controller on the
     /// preset's `cluster` settings.
     pub controllers: Vec<String>,
+    /// Chaos profile names ([`ChaosConfig::profile`]): each grid point
+    /// runs under the `chaos` controller with that fault-injection
+    /// profile. `"none"` is the inert profile — its report is
+    /// byte-identical to the same point without the axis, making it the
+    /// natural in-grid baseline for resilience comparisons.
+    pub chaos: Vec<String>,
 }
 
 impl SweepAxes {
@@ -185,6 +191,7 @@ impl SweepSpec {
             * f(self.axes.evictions.len())
             * f(self.axes.backends.len())
             * f(self.axes.controllers.len())
+            * f(self.axes.chaos.len())
     }
 
     /// Expand the cartesian product into named, validated [`SimConfig`]s.
@@ -217,6 +224,10 @@ impl SweepSpec {
         for c in &self.axes.controllers {
             registry.check_controller(c)?;
         }
+        for p in &self.axes.chaos {
+            // rejects unknown profiles with the candidate list
+            ChaosConfig::profile(p)?;
+        }
         // Hardware names resolve through their own registry (built-ins +
         // imported bundles); same up-front rejection with candidates.
         let hw_registry = crate::perf::hardware::snapshot();
@@ -234,19 +245,23 @@ impl SweepSpec {
                                 for evict in axis(&self.axes.evictions) {
                                     for backend in axis(&self.axes.backends) {
                                         for ctrl in axis(&self.axes.controllers) {
-                                            let cfg = self.point(
-                                                preset, hw, rate, workload,
-                                                router, sched, evict, backend,
-                                                ctrl,
-                                            )?;
-                                            if !seen.insert(cfg.name.clone()) {
-                                                anyhow::bail!(
-                                                    "duplicate sweep point '{}' \
-                                                     (repeated axis value?)",
-                                                    cfg.name
-                                                );
+                                            for chaos in axis(&self.axes.chaos) {
+                                                let cfg = self.point(
+                                                    preset, hw, rate, workload,
+                                                    router, sched, evict,
+                                                    backend, ctrl, chaos,
+                                                )?;
+                                                if !seen.insert(cfg.name.clone())
+                                                {
+                                                    anyhow::bail!(
+                                                        "duplicate sweep point \
+                                                         '{}' (repeated axis \
+                                                         value?)",
+                                                        cfg.name
+                                                    );
+                                                }
+                                                out.push(cfg);
                                             }
-                                            out.push(cfg);
                                         }
                                     }
                                 }
@@ -271,6 +286,7 @@ impl SweepSpec {
         evict: Option<&String>,
         backend: Option<&PerfBackend>,
         controller: Option<&String>,
+        chaos: Option<&String>,
     ) -> anyhow::Result<SimConfig> {
         let hw_name = hw.map(String::as_str).unwrap_or(DEFAULT_HARDWARE);
         let mut cfg = presets::by_name(
@@ -339,6 +355,20 @@ impl SweepSpec {
         if let Some(c) = controller {
             cfg.cluster.controller = c.clone();
             name.push_str(&format!("|ctrl={c}"));
+        }
+        if let Some(p) = chaos {
+            // The chaos axis owns the controller slot for its points; a
+            // combined controllers x chaos grid would make non-chaos
+            // controllers silently run without their profile applied.
+            if controller.is_some() {
+                anyhow::bail!(
+                    "the chaos axis sets the cluster controller to 'chaos'; \
+                     drop the controller axis or the chaos axis"
+                );
+            }
+            cfg.cluster.controller = "chaos".to_string();
+            cfg.cluster.chaos = ChaosConfig::profile(p)?;
+            name.push_str(&format!("|chaos={p}"));
         }
 
         cfg.name = name;
@@ -908,6 +938,70 @@ mod tests {
         }
         let cfgs = spec.expand().unwrap();
         assert_eq!(cfgs.len(), spec.axes.controllers.len());
+    }
+
+    #[test]
+    fn chaos_axis_expands_validates_and_excludes_controller_axis() {
+        let mut spec = quick_spec();
+        spec.axes.chaos = vec!["none".into(), "light".into()];
+        assert_eq!(spec.grid_size(), 2);
+        let cfgs = spec.expand().unwrap();
+        assert_eq!(cfgs.len(), 2);
+        assert_eq!(cfgs[0].name, "S(D)|chaos=none");
+        assert_eq!(cfgs[0].cluster.controller, "chaos");
+        assert!(!cfgs[0].cluster.chaos.enabled());
+        assert_eq!(cfgs[1].name, "S(D)|chaos=light");
+        assert!(cfgs[1].cluster.chaos.enabled());
+        // unknown profile names rejected up front with candidates
+        let mut spec = quick_spec();
+        spec.axes.chaos = vec!["mayhem".into()];
+        let e = spec.expand().unwrap_err().to_string();
+        assert!(e.contains("mayhem") && e.contains("light"), "{e}");
+        // combining with the controller axis is refused, not silently wrong
+        let mut spec = quick_spec();
+        spec.axes.chaos = vec!["light".into()];
+        spec.axes.controllers = vec!["queue-threshold".into()];
+        let e = spec.expand().unwrap_err().to_string();
+        assert!(e.contains("chaos axis"), "{e}");
+    }
+
+    #[test]
+    fn chaos_sweep_is_identical_across_worker_counts() {
+        let mut spec = quick_spec();
+        spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+        spec.axes.chaos = vec!["none".into(), "light".into(), "heavy".into()];
+        let cfgs = spec.expand().unwrap();
+        assert_eq!(cfgs.len(), 6);
+        let solo = run_sweep(&cfgs, 1).unwrap();
+        let pool = run_sweep(&cfgs, 8).unwrap();
+        for (a, b) in solo.points.iter().zip(&pool.points) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(
+                a.report.to_json().to_string(),
+                b.report.to_json().to_string(),
+                "chaos point '{}' diverged across worker counts",
+                a.name
+            );
+        }
+        // the inert profile reproduces the profile-free point byte-for-byte
+        let mut plain = quick_spec();
+        plain.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+        let plain_cfgs = plain.expand().unwrap();
+        let plain_run = run_sweep(&plain_cfgs, 1).unwrap();
+        for plain_pt in &plain_run.points {
+            let inert_name = format!("{}|chaos=none", plain_pt.name);
+            let chaos_pt = solo
+                .points
+                .iter()
+                .find(|p| p.name == inert_name)
+                .unwrap_or_else(|| panic!("missing grid point '{inert_name}'"));
+            assert_eq!(
+                chaos_pt.report.to_json().to_string(),
+                plain_pt.report.to_json().to_string(),
+                "inert chaos must not perturb '{}'",
+                plain_pt.name
+            );
+        }
     }
 
     #[test]

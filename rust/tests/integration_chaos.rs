@@ -1,0 +1,287 @@
+//! Chaos & resilience acceptance contract (ISSUE 8):
+//!
+//! * seeded chaos over the multi-tenant bursty scenario is byte-identical
+//!   across repeated runs and across 1 vs 8 sweep workers;
+//! * a zero-fault chaos profile reproduces the no-controller report
+//!   byte-for-byte (keys included);
+//! * a correlated zone outage visibly degrades service during the fault
+//!   window — per-zone availability drops, SLO attainment inside the
+//!   window never beats attainment outside it, mean TTFT worsens vs the
+//!   fault-free run — and the fleet recovers after the scripted MTTR;
+//! * under admission-controlled overload every arrival is accounted for:
+//!   rejected + finished + in-flight == arrivals.
+//!
+//! The soak test also writes the fault timeline to
+//! `target/chaos_timeline.json` so CI can upload it as an artifact when
+//! something fails.
+
+use std::path::PathBuf;
+
+use llmservingsim::cluster::{ClusterAction, ClusterController, ClusterView};
+use llmservingsim::config::{presets, AdmissionConfig, ChaosConfig, SimConfig};
+use llmservingsim::coordinator::{run_config, Simulation};
+use llmservingsim::sim::{Nanos, MILLI};
+use llmservingsim::sweep::{run_sweep, SweepSpec};
+use llmservingsim::util::json::Value;
+
+fn timeline_json(report: &llmservingsim::metrics::Report) -> Value {
+    Value::arr(report.timeline.iter().map(|e| e.to_json()).collect())
+}
+
+#[test]
+fn chaos_soak_is_byte_identical_across_runs_and_worker_counts() {
+    let cfg = presets::chaos_soak();
+    let (report, summary) = run_config(cfg.clone()).unwrap();
+
+    // Leave the fault timeline on disk for CI to upload on failure.
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target/chaos_timeline.json");
+    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    std::fs::write(&out, timeline_json(&report).to_string()).unwrap();
+
+    assert_eq!(
+        report.num_finished, report.num_requests,
+        "chaos must not lose requests"
+    );
+    assert_eq!(summary.controller, "chaos");
+    assert!(
+        report.timeline.iter().any(|e| e.kind != "sample"),
+        "the heavy profile must inject at least one fault"
+    );
+    // Injection respects the horizon. Only kinds that are never reused for
+    // recovery qualify: perf-scale/degrade-link recoveries (scale back to
+    // 1.0) legitimately land after it. Incidents drawn just inside the
+    // horizon are applied on the following controller tick, hence the one-
+    // tick grace.
+    let horizon = (cfg.cluster.chaos.horizon_ms + cfg.cluster.tick_ms) * MILLI;
+    for e in report.timeline.iter().filter(|e| {
+        matches!(e.kind.as_str(), "fail" | "fail-domain" | "partition")
+    }) {
+        assert!(
+            e.at <= horizon,
+            "fault '{}' injected at {} ns, past the {} ns horizon",
+            e.kind,
+            e.at,
+            horizon
+        );
+    }
+
+    // Repeated standalone run: byte-identical.
+    let (again, _) = run_config(cfg.clone()).unwrap();
+    assert_eq!(report.to_json().to_string(), again.to_json().to_string());
+
+    // A 4-point grid (distinct seeds) through the sweep engine at 1 and 8
+    // workers: every point byte-identical to its standalone reference.
+    let grid: Vec<SimConfig> = (0..4)
+        .map(|i| {
+            let mut c = cfg.clone();
+            c.name = format!("chaos-soak-{i}");
+            c.seed += i;
+            c.workload.seed += i;
+            c.cluster.chaos.seed += i;
+            c
+        })
+        .collect();
+    let reference: Vec<String> = grid
+        .iter()
+        .map(|c| run_config(c.clone()).unwrap().0.to_json().to_string())
+        .collect();
+    for threads in [1, 8] {
+        let swept: Vec<String> = run_sweep(&grid, threads)
+            .unwrap()
+            .points
+            .into_iter()
+            .map(|p| p.report.to_json().to_string())
+            .collect();
+        assert_eq!(
+            swept, reference,
+            "chaos soak diverged at {threads} sweep workers"
+        );
+    }
+}
+
+#[test]
+fn zero_fault_chaos_reproduces_the_no_controller_report() {
+    let mut base = presets::multi_tenant_bursty(
+        presets::multi_dense("tiny-dense", "rtx3090"),
+        2,
+        40.0,
+    );
+    base.workload.num_requests = 60;
+    base.workload.lengths = llmservingsim::workload::LengthDist::short();
+    let (plain, plain_sum) = run_config(base.clone()).unwrap();
+
+    let mut inert = base;
+    inert.cluster.controller = "chaos".to_string();
+    inert.cluster.chaos = ChaosConfig::profile("none").unwrap();
+    let (chaotic, chaos_sum) = run_config(inert).unwrap();
+
+    assert_eq!(
+        plain.to_json().to_string(),
+        chaotic.to_json().to_string(),
+        "an inert chaos profile must leave no trace in the report"
+    );
+    assert_eq!(plain_sum.controller, "static");
+    assert_eq!(
+        chaos_sum.controller, "static",
+        "a controller that never acts reports as static"
+    );
+    assert!(plain.resilience.is_none());
+    assert!(plain.to_json().get("resilience").is_null());
+    assert!(plain.to_json().get("rejected").is_null());
+}
+
+/// Scripted (non-random) incident for the recovery test: fail zone
+/// `zone-a` at a fixed simulated time, bring its members back a fixed MTTR
+/// later. Fixed timestamps keep the test independent of the chaos RNG.
+struct ScriptedOutage {
+    fail_at: Nanos,
+    recover_at: Nanos,
+    members: Vec<usize>,
+    failed: bool,
+    recovered: bool,
+}
+
+impl ClusterController for ScriptedOutage {
+    fn name(&self) -> &str {
+        "scripted-outage"
+    }
+    fn on_tick(&mut self, now: Nanos, _view: &ClusterView) -> Vec<ClusterAction> {
+        if !self.failed && now >= self.fail_at {
+            self.failed = true;
+            return vec![ClusterAction::FailDomain {
+                zone: "zone-a".to_string(),
+                at: now,
+            }];
+        }
+        if self.failed && !self.recovered && now >= self.recover_at {
+            self.recovered = true;
+            return self
+                .members
+                .iter()
+                .map(|&instance| ClusterAction::Recover { instance })
+                .collect();
+        }
+        vec![]
+    }
+    // Keep the tick train alive until the recovery has been issued even if
+    // the event queue drains mid-outage.
+    fn has_pending(&self, _now: Nanos) -> bool {
+        !self.recovered
+    }
+}
+
+#[test]
+fn zone_outage_degrades_slo_in_window_and_recovers_after_mttr() {
+    let mut cfg = presets::chaos_soak();
+    // Replace the random injector with the scripted outage: zone-a (two of
+    // three instances) down from 150 ms to 450 ms.
+    cfg.cluster.controller = "static".to_string();
+    cfg.cluster.chaos = ChaosConfig::default();
+    let members: Vec<usize> = cfg
+        .instances
+        .iter()
+        .enumerate()
+        .filter(|(_, i)| i.zone == "zone-a")
+        .map(|(idx, _)| idx)
+        .collect();
+    assert_eq!(members, vec![0, 1], "chaos_soak racks inst0/inst1 in zone-a");
+
+    let (clear, _) = run_config(cfg.clone()).unwrap();
+    assert!(clear.resilience.is_none(), "fault-free run has no windows");
+
+    let mut sim = Simulation::builder(cfg.clone())
+        .with_controller(Box::new(ScriptedOutage {
+            fail_at: 150 * MILLI,
+            recover_at: 450 * MILLI,
+            members,
+            failed: false,
+            recovered: false,
+        }))
+        .build()
+        .unwrap();
+    let report = sim.run();
+
+    assert_eq!(
+        report.num_finished, report.num_requests,
+        "the outage must not lose requests"
+    );
+    let kinds: Vec<&str> = report.timeline.iter().map(|e| e.kind.as_str()).collect();
+    assert!(kinds.contains(&"fail-domain"), "{kinds:?}");
+    assert!(kinds.contains(&"recover"));
+    assert!(
+        kinds.contains(&"ready"),
+        "failed instances must rejoin after the MTTR: {kinds:?}"
+    );
+
+    let res = report.resilience.as_ref().expect("outage opens fault windows");
+    assert_eq!(res.faults, 2, "both zone-a members fail");
+    assert!(res.fault_ns >= 300 * MILLI, "window spans the scripted MTTR");
+    assert!(
+        res.fault_ns < report.makespan,
+        "the fleet recovers — the window must close before the run ends"
+    );
+    assert!(
+        res.finished_in_fault > 0,
+        "the bursty workload keeps finishing work inside the window"
+    );
+    assert!(
+        res.slo_in_fault <= res.slo_clear,
+        "attainment inside the window ({}) cannot beat attainment outside it ({})",
+        res.slo_in_fault,
+        res.slo_clear
+    );
+    // Per-zone availability: zone-a ate all the downtime.
+    assert_eq!(res.domains.len(), 2);
+    let za = res.domains.iter().find(|d| d.zone == "zone-a").unwrap();
+    let zb = res.domains.iter().find(|d| d.zone == "zone-b").unwrap();
+    assert_eq!(za.instances, 2);
+    assert!(za.downtime_ns >= 2 * 300 * MILLI, "{}", za.downtime_ns);
+    assert!(za.availability < 1.0);
+    assert_eq!(zb.downtime_ns, 0);
+    assert_eq!(zb.availability, 1.0);
+
+    // Losing two thirds of the fleet for 300 ms must show up end to end.
+    assert!(
+        report.ttft_ns.mean > clear.ttft_ns.mean,
+        "outage TTFT {} must exceed fault-free TTFT {}",
+        report.ttft_ns.mean,
+        clear.ttft_ns.mean
+    );
+}
+
+#[test]
+fn admission_control_accounts_for_every_arrival_under_overload() {
+    let mut cfg = presets::multi_tenant_bursty(
+        presets::single_dense("tiny-dense", "rtx3090"),
+        2,
+        200.0,
+    );
+    cfg.workload.num_requests = 120;
+    cfg.workload.lengths = llmservingsim::workload::LengthDist::short();
+    cfg.cluster.admission = Some(AdmissionConfig {
+        rate: 20.0,
+        burst: 5.0,
+        breaker_queue: 8,
+        breaker_cooldown_ms: 200,
+    });
+    let mut sim = Simulation::new(cfg.clone()).unwrap();
+    let report = sim.run();
+
+    assert!(report.rejected > 0, "a 10x overload must trip admission");
+    assert!(report.num_finished > 0, "admitted work still completes");
+    let in_flight = sim.cluster_view(report.makespan).in_flight;
+    assert_eq!(
+        report.rejected + report.num_finished + in_flight,
+        report.num_requests,
+        "conservation: rejected + finished + in-flight == arrivals"
+    );
+    assert_eq!(
+        report.to_json().get("rejected").as_i64(),
+        Some(report.rejected as i64)
+    );
+
+    // Deterministic: the same overload rejects the same requests.
+    let (again, _) = run_config(cfg).unwrap();
+    assert_eq!(report.to_json().to_string(), again.to_json().to_string());
+}
