@@ -1,0 +1,94 @@
+//! Distributed, resumable sweep (DESIGN.md §13): capture a sweep grid +
+//! seed-replication axis as an `experiment-manifest-v1` file, run its
+//! shards as if they were separate machines, interrupt half-way, resume,
+//! and merge — proving the merged aggregate is byte-identical to a
+//! single-process run of the same manifest.
+//!
+//! Run: `cargo run --release --example distributed_sweep`
+
+use std::path::PathBuf;
+
+use llmservingsim::sweep::{
+    merge_files, render_aggregate_table, run_all_shards, run_manifest,
+    run_shard_to_file, ExperimentManifest, ShardOutcome, SweepSpec,
+};
+
+fn main() -> anyhow::Result<()> {
+    // 1. An experiment manifest: the sweep axes, the base seed, R
+    //    replicates per grid point, and the intended shard count. The
+    //    file is the entire experiment definition — every worker runs
+    //    from the same bytes, and its hash ties shard results to it.
+    let mut spec = SweepSpec {
+        num_requests: 30,
+        quick: true,
+        seed: 0x5EED,
+        ..SweepSpec::default()
+    };
+    spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+    spec.axes.rates = vec![10.0, 40.0];
+    spec.axes.routers = vec!["round-robin".into(), "least-outstanding".into()];
+    let mut manifest = ExperimentManifest::new(spec);
+    manifest.replication = 2; // run every grid point twice, derived seeds
+    manifest.shards = 3; // 8 points over 3 shards: slices of 3/3/2
+
+    let dir = PathBuf::from("target/example-distributed-sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+    let manifest_path = dir.join("experiment.json");
+    manifest.save(&manifest_path)?;
+    println!(
+        "manifest: {} grid points x {} replicate(s), {} shards, hash {}\n",
+        manifest.spec.grid_size(),
+        manifest.replication,
+        manifest.shards,
+        manifest.hash()
+    );
+
+    // 2. Single-process reference: the bytes every distributed run of
+    //    this manifest must reproduce.
+    let reference = run_manifest(&manifest, 4)?;
+
+    // 3. "Machine A" runs shard 1/3, "machine B" runs shard 2/3 — then
+    //    the experiment is interrupted before shard 3/3 runs.
+    let shard_dir = dir.join("shards");
+    for shard in 0..2 {
+        let out = run_shard_to_file(&manifest, shard, 3, 2, &shard_dir, false)?;
+        println!("ran shard {}/3 -> {}", shard + 1, out.path().display());
+    }
+
+    // 4. Resume: the driver proves the existing shard files belong to
+    //    this exact manifest + partition (content hashes, slice names)
+    //    and skips them; only the missing shard actually runs.
+    let outcomes = run_all_shards(&manifest, 3, 2, &shard_dir, false)?;
+    let skipped = outcomes
+        .iter()
+        .filter(|o| matches!(o, ShardOutcome::Skipped(_)))
+        .count();
+    println!(
+        "\nresume: {} shard(s) skipped (already complete), {} run",
+        skipped,
+        outcomes.len() - skipped
+    );
+    assert_eq!(skipped, 2, "the interrupted shards must be reused");
+
+    // 5. Merge the shard result files into the aggregate and check the
+    //    distributed-determinism contract.
+    let files: Vec<PathBuf> =
+        outcomes.iter().map(|o| o.path().to_path_buf()).collect();
+    let merged = merge_files(&manifest, &files)?;
+    assert_eq!(
+        merged.to_string(),
+        reference.to_string(),
+        "merge of 3 shards must be byte-identical to the single-process run"
+    );
+    println!(
+        "merge check passed: 3-shard aggregate is byte-identical to the \
+         single-process run\n"
+    );
+
+    // 6. The aggregate table: with replication > 1 each row carries the
+    //    95% CI half-width on its mean throughput over the replicates.
+    render_aggregate_table(&merged).print();
+    let summary = merged.get("summary");
+    println!("baseline: {}", summary.get("baseline").as_str().unwrap_or("?"));
+    Ok(())
+}

@@ -729,6 +729,14 @@ impl PerfBackend {
     }
 }
 
+/// Displays as the CLI spelling, so `format!` sites and the manifest
+/// codec round-trip through `FromStr` without a helper call.
+impl std::fmt::Display for PerfBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.cli_str())
+    }
+}
+
 /// Top-level simulation configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {

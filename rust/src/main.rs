@@ -33,7 +33,9 @@ use llmservingsim::runtime::profiler::{
     emit_bundle, profile_to_file, ProfileOptions,
 };
 use llmservingsim::sweep::{
-    render_table, run_sweep, summarize, sweep_json, SweepSpec,
+    find_shard_files, merge_files, render_aggregate_table, render_table,
+    run_all_shards, run_manifest, run_shard_to_file, run_sweep, summarize,
+    sweep_json, ExperimentManifest, ShardOutcome, SweepSpec,
 };
 use llmservingsim::util::bench::Table;
 use llmservingsim::util::{json, logging};
@@ -84,6 +86,24 @@ COMMANDS:
               imported bundles; --chaos sweeps named fault-injection
               profiles under the chaos controller — byte-identical at
               any --threads value)
+             Distributed/replicated sweeps (DESIGN.md §13):
+             [--replicates R] [--emit-manifest FILE]
+             [--manifest FILE] [--shard I/N] [--shards N]
+             [--out-dir DIR] [--force]
+             (--emit-manifest captures the axis flags + --replicates as
+              an experiment-manifest-v1 file; --manifest replaces the
+              axis flags with that file; --shard I/N runs one 1-based
+              shard of an N-way partition into --out-dir; --out-dir
+              without --shard runs/resumes every shard there and merges
+              — completed shard files are skipped unless --force;
+              --replicates R runs each grid point R times with derived
+              seeds and reports mean/std/95% CI per metric)
+  sweep-merge --manifest FILE (--dir DIR | --inputs A,B,..) [--out FILE]
+             [--hardware-dir DIR]
+             (fold shard result files into the aggregate report — byte-
+              identical to the single-process run of the same manifest;
+              shards from a different manifest or partition, and corrupt
+              or tampered files, are rejected by content hash)
   validate   --model <preset> [--artifacts DIR] [--trace FILE]
              [--requests N] [--rate R]
   gen-trace  [--requests N] [--rate R] [--workload W] [--tenants N]
@@ -95,7 +115,7 @@ COMMANDS:
 fn main() {
     logging::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let parsed = match Args::parse(args, &["quick"]) {
+    let parsed = match Args::parse(args, &["quick", "force"]) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("error: {e}\n{HELP}");
@@ -118,6 +138,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         "import-hardware" => cmd_import_hardware(args),
         "simulate" => cmd_simulate(args),
         "sweep" => cmd_sweep(args),
+        "sweep-merge" => cmd_sweep_merge(args),
         "validate" => cmd_validate(args),
         "gen-trace" => cmd_gen_trace(args),
         "presets" => cmd_presets(),
@@ -365,8 +386,9 @@ fn policy_axis(args: &Args, flag: &str, all_names: Vec<String>) -> Vec<String> {
     }
 }
 
-fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
-    load_hardware_flags(args)?;
+/// Build a [`SweepSpec`] from the classic axis flags (shared by the
+/// in-process sweep, `--emit-manifest`, and ad-hoc `--replicates` runs).
+fn sweep_spec_from_flags(args: &Args) -> anyhow::Result<SweepSpec> {
     let mut spec = SweepSpec {
         dense_model: args.str_or("model", "tiny-dense").to_string(),
         moe_model: args.str_or("moe-model", "tiny-moe").to_string(),
@@ -403,7 +425,213 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             .collect(),
     );
     spec.axes.backends = csv_parse::<PerfBackend>(args, "perf")?;
+    Ok(spec)
+}
 
+/// Flags that a manifest already fixes; combining them with `--manifest`
+/// would silently lose to the file, so it is an explicit error instead.
+const MANIFEST_CONFLICT_FLAGS: &[&str] = &[
+    "presets",
+    "hardware",
+    "rates",
+    "workloads",
+    "routers",
+    "scheds",
+    "evict",
+    "controllers",
+    "chaos",
+    "perf",
+    "model",
+    "moe-model",
+    "requests",
+    "seed",
+    "baseline",
+    "replicates",
+];
+
+fn ensure_no_axis_flags(args: &Args) -> anyhow::Result<()> {
+    for f in MANIFEST_CONFLICT_FLAGS {
+        if args.str_flag(f).is_some() {
+            anyhow::bail!(
+                "--manifest fully specifies the sweep; drop --{f} and edit \
+                 the manifest file instead"
+            );
+        }
+    }
+    if args.switch("quick") {
+        anyhow::bail!(
+            "--manifest fully specifies the sweep; drop --quick and set \
+             \"quick\": true in the manifest instead"
+        );
+    }
+    Ok(())
+}
+
+/// Parse `--shard I/N` (1-based index) into 0-based `(shard, shards)`.
+fn parse_shard_spec(s: &str) -> anyhow::Result<(usize, usize)> {
+    let bad = || {
+        anyhow::anyhow!(
+            "--shard expects I/N with 1 <= I <= N (e.g. --shard 2/7), got '{s}'"
+        )
+    };
+    let (i, n) = s.split_once('/').ok_or_else(bad)?;
+    let i: usize = i.trim().parse().map_err(|_| bad())?;
+    let n: usize = n.trim().parse().map_err(|_| bad())?;
+    if n < 1 || i < 1 || i > n {
+        return Err(bad());
+    }
+    Ok((i - 1, n))
+}
+
+/// Print a merged aggregate: per-point table plus the extremes summary.
+fn print_aggregate(aggregate: &json::Value) {
+    render_aggregate_table(aggregate).print();
+    let summary = aggregate.get("summary");
+    println!(
+        "baseline: {}",
+        summary.get("baseline").as_str().unwrap_or("?")
+    );
+    let mut t = Table::new(&["metric", "best (config)", "worst (config)"]);
+    for e in summary.get("extremes").as_arr().unwrap_or(&[]) {
+        t.row(&[
+            e.get("metric").as_str().unwrap_or("?").to_string(),
+            format!(
+                "{:.3} ({})",
+                e.get("best").as_f64().unwrap_or(0.0),
+                e.get("best_config").as_str().unwrap_or("?")
+            ),
+            format!(
+                "{:.3} ({})",
+                e.get("worst").as_f64().unwrap_or(0.0),
+                e.get("worst_config").as_str().unwrap_or("?")
+            ),
+        ]);
+    }
+    t.print();
+}
+
+fn default_threads(args: &Args) -> anyhow::Result<usize> {
+    let available = std::thread::available_parallelism()
+        .map(|n| n.get() as u64)
+        .unwrap_or(1);
+    Ok(args.u64_or("threads", available)?.max(1) as usize)
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    load_hardware_flags(args)?;
+    let from_manifest = args.str_flag("manifest");
+    let manifest = if let Some(path) = from_manifest {
+        ensure_no_axis_flags(args)?;
+        ExperimentManifest::load(Path::new(path))?
+    } else {
+        let mut m = ExperimentManifest::new(sweep_spec_from_flags(args)?);
+        m.replication = args.u64_or("replicates", 1)?.max(1) as usize;
+        m.shards = args.u64_or("shards", 1)?.max(1) as usize;
+        m
+    };
+
+    if let Some(out) = args.str_flag("emit-manifest") {
+        manifest.spec.expand()?; // reject invalid axes before writing
+        manifest.save(Path::new(out))?;
+        println!(
+            "manifest ({} grid points x {} replicate(s), {} shard(s), \
+             hash {}) written to {out}",
+            manifest.spec.grid_size(),
+            manifest.replication,
+            manifest.shards,
+            manifest.hash()
+        );
+        return Ok(());
+    }
+
+    let threads = default_threads(args)?;
+    let force = args.switch("force");
+
+    // One shard of an N-way partition: the distributed worker's entry
+    // point. Emits (or reuses) the shard result file and stops.
+    if let Some(spec_str) = args.str_flag("shard") {
+        let (shard, shards) = parse_shard_spec(spec_str)?;
+        let dir = PathBuf::from(args.str_or("out-dir", "sweep-shards"));
+        let outcome =
+            run_shard_to_file(&manifest, shard, shards, threads, &dir, force)?;
+        match &outcome {
+            ShardOutcome::Completed(p) => println!(
+                "shard {}/{shards} completed -> {}",
+                shard + 1,
+                p.display()
+            ),
+            ShardOutcome::Skipped(p) => println!(
+                "shard {}/{shards} already complete, skipped ({})",
+                shard + 1,
+                p.display()
+            ),
+        }
+        println!(
+            "merge when all shards are done: sweep-merge --manifest <M> \
+             --dir {}",
+            dir.display()
+        );
+        return Ok(());
+    }
+
+    // Resumable local driver: run (or skip) every shard into --out-dir,
+    // then merge the result files into the aggregate.
+    if let Some(dir) = args.str_flag("out-dir") {
+        let shards = match args.str_flag("shards") {
+            Some(_) => args.u64_or("shards", 1)?.max(1) as usize,
+            None => manifest.shards,
+        };
+        let dir = PathBuf::from(dir);
+        println!(
+            "running {} shard(s) of {} grid points x {} replicate(s) on \
+             {} threads ...",
+            shards,
+            manifest.spec.grid_size(),
+            manifest.replication,
+            threads
+        );
+        let outcomes = run_all_shards(&manifest, shards, threads, &dir, force)?;
+        let skipped = outcomes
+            .iter()
+            .filter(|o| matches!(o, ShardOutcome::Skipped(_)))
+            .count();
+        println!(
+            "shards: {} run, {} skipped (already complete)",
+            outcomes.len() - skipped,
+            skipped
+        );
+        let files: Vec<PathBuf> =
+            outcomes.iter().map(|o| o.path().to_path_buf()).collect();
+        let aggregate = merge_files(&manifest, &files)?;
+        print_aggregate(&aggregate);
+        if let Some(out) = args.str_flag("out") {
+            json::save_file(Path::new(out), &aggregate)?;
+            println!("merged aggregate written to {out}");
+        }
+        return Ok(());
+    }
+
+    // Manifest or replicated runs go through the single-process manifest
+    // path so their output is the same aggregate format shards merge to.
+    if from_manifest.is_some() || manifest.replication > 1 {
+        println!(
+            "running manifest: {} grid points x {} replicate(s) on {} \
+             threads ...",
+            manifest.spec.grid_size(),
+            manifest.replication,
+            threads
+        );
+        let aggregate = run_manifest(&manifest, threads)?;
+        print_aggregate(&aggregate);
+        if let Some(out) = args.str_flag("out") {
+            json::save_file(Path::new(out), &aggregate)?;
+            println!("sweep aggregate written to {out}");
+        }
+        return Ok(());
+    }
+
+    // Classic in-memory sweep: byte-stable legacy path.
+    let spec = manifest.spec;
     let cfgs = spec.expand()?;
     // Catch a bad baseline before the (potentially long) sweep runs, not
     // after all the work has been done.
@@ -418,10 +646,6 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
-    let default_threads = std::thread::available_parallelism()
-        .map(|n| n.get() as u64)
-        .unwrap_or(1);
-    let threads = args.u64_or("threads", default_threads)?.max(1) as usize;
     println!(
         "sweeping {} configs on {} worker threads ...",
         cfgs.len(),
@@ -451,6 +675,49 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     if let Some(out) = args.str_flag("out") {
         json::save_file(Path::new(out), &sweep_json(&outcome, &summary))?;
         println!("sweep report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep_merge(args: &Args) -> anyhow::Result<()> {
+    load_hardware_flags(args)?;
+    let manifest_path = args.str_flag("manifest").ok_or_else(|| {
+        anyhow::anyhow!(
+            "sweep-merge requires --manifest FILE (the manifest the shards \
+             were produced from)"
+        )
+    })?;
+    let manifest = ExperimentManifest::load(Path::new(manifest_path))?;
+
+    let files: Vec<PathBuf> = if let Some(dir) = args.str_flag("dir") {
+        let dir = PathBuf::from(dir);
+        let found = find_shard_files(&dir)?;
+        if found.is_empty() {
+            anyhow::bail!(
+                "no shard result files (shard-*.json) found in {}",
+                dir.display()
+            );
+        }
+        found
+    } else if let Some(list) = args.str_flag("inputs") {
+        csv(list).into_iter().map(PathBuf::from).collect()
+    } else {
+        anyhow::bail!(
+            "sweep-merge needs shard result files: pass --dir DIR or \
+             --inputs a.json,b.json,..."
+        );
+    };
+
+    println!(
+        "merging {} shard result file(s) against manifest hash {} ...",
+        files.len(),
+        manifest.hash()
+    );
+    let aggregate = merge_files(&manifest, &files)?;
+    print_aggregate(&aggregate);
+    if let Some(out) = args.str_flag("out") {
+        json::save_file(Path::new(out), &aggregate)?;
+        println!("merged aggregate written to {out}");
     }
     Ok(())
 }

@@ -683,6 +683,26 @@ impl Report {
     }
 }
 
+/// Extract a headline sweep metric from a report's **JSON** form, using
+/// the same definitions as the struct extractors in
+/// [`crate::sweep::METRICS`]. This is the one place the JSON shape of a
+/// report is interpreted numerically: the shard-merge path recomputes
+/// sweep summaries from round-tripped report files, and because finite
+/// floats serialize via shortest round-trip repr, the value recovered
+/// here is bit-equal to the one the in-memory extractor saw.
+///
+/// Returns `None` for an unknown key or a report missing the field.
+pub fn headline_from_json(report: &Value, key: &str) -> Option<f64> {
+    match key {
+        "ttft_mean_ms" => report.get("ttft_ns").get("mean").as_f64().map(|v| v / 1e6),
+        "tpot_mean_ms" => report.get("tpot_ns").get("mean").as_f64().map(|v| v / 1e6),
+        "itl_mean_ms" => report.get("itl_ns").get("mean").as_f64().map(|v| v / 1e6),
+        "throughput_tps" => report.get("throughput_tps").as_f64(),
+        "makespan_s" => report.get("makespan_ns").as_i64().map(|v| v as f64 / 1e9),
+        _ => None,
+    }
+}
+
 /// Percentage errors of a simulated report against a reference run.
 #[derive(Debug, Clone, Copy)]
 pub struct ValidationError {
@@ -1048,5 +1068,35 @@ mod tests {
         assert_eq!(classes[0].get("class").as_str(), Some("interactive"));
         let tenants = v.get("tenants").as_arr().unwrap();
         assert_eq!(tenants[0].get("name").as_str(), Some("default"));
+    }
+
+    #[test]
+    fn headline_from_json_matches_struct_extraction() {
+        let rep = collect_one().report(10_000, &[]);
+        let v = rep.to_json();
+        // bit-equality, not approximate: the merge path's byte-identity
+        // contract rides on the JSON round trip being lossless
+        assert_eq!(
+            headline_from_json(&v, "ttft_mean_ms"),
+            Some(rep.ttft_ns.mean / 1e6)
+        );
+        assert_eq!(
+            headline_from_json(&v, "tpot_mean_ms"),
+            Some(rep.tpot_ns.mean / 1e6)
+        );
+        assert_eq!(
+            headline_from_json(&v, "itl_mean_ms"),
+            Some(rep.itl_ns.mean / 1e6)
+        );
+        assert_eq!(
+            headline_from_json(&v, "throughput_tps"),
+            Some(rep.throughput_tps)
+        );
+        assert_eq!(
+            headline_from_json(&v, "makespan_s"),
+            Some(rep.makespan as f64 / 1e9)
+        );
+        assert_eq!(headline_from_json(&v, "warp_factor"), None);
+        assert_eq!(headline_from_json(&Value::Null, "ttft_mean_ms"), None);
     }
 }

@@ -1,0 +1,565 @@
+//! Experiment manifests: the on-disk `experiment-manifest-v1` sweep
+//! declaration (DESIGN.md §13).
+//!
+//! A manifest is a serializable [`SweepSpec`] plus two distribution knobs:
+//! a **seed-replication** count (`replication`: run every grid point R
+//! times with derived seeds and report mean/stddev/CI per metric) and a
+//! default **shard** count (`shards`: partition the expanded grid into
+//! independently runnable chunks). The same manifest file drives the
+//! single-process run, every shard of a distributed run, and the merge
+//! step — so equality of the manifest **content hash** is the guard that
+//! shard results being folded together actually came from the same
+//! experiment.
+//!
+//! Hashing is formatting-independent: the hash covers the *canonical*
+//! compact serialization of the parsed manifest
+//! ([`ExperimentManifest::to_json`] orders keys via the codec's BTreeMap
+//! and always emits defaults), not the raw file bytes, so re-indenting a
+//! manifest does not orphan its shard results.
+
+use std::path::Path;
+
+use crate::config::PerfBackend;
+use crate::util::json::{self, Value};
+
+use super::{SweepAxes, SweepSpec};
+
+/// Format tag required in the manifest's `"format"` key.
+pub const MANIFEST_FORMAT: &str = "experiment-manifest-v1";
+
+/// Top-level manifest keys (sorted). Anything else is rejected so typos
+/// (`"replicas"`, `"shard"`) fail loudly instead of silently defaulting.
+const MANIFEST_KEYS: &[&str] = &[
+    "axes",
+    "baseline",
+    "dense_model",
+    "format",
+    "moe_model",
+    "num_requests",
+    "quick",
+    "replication",
+    "seed",
+    "shards",
+];
+
+/// Axis keys accepted under `"axes"` (sorted), mirroring [`SweepAxes`].
+const AXIS_KEYS: &[&str] = &[
+    "backends",
+    "chaos",
+    "controllers",
+    "evictions",
+    "hardware",
+    "presets",
+    "rates",
+    "routers",
+    "scheds",
+    "workloads",
+];
+
+/// A parsed experiment manifest: the sweep declaration plus the
+/// replication and default-shard-count knobs.
+#[derive(Debug, Clone)]
+pub struct ExperimentManifest {
+    pub spec: SweepSpec,
+    /// Seed replicates per grid point (>= 1). 1 means "exactly today's
+    /// single-run sweep" — byte-identical output, no replication keys.
+    pub replication: usize,
+    /// Default shard count for distributed runs (>= 1). `--shard i/N`
+    /// overrides N at run time without changing the manifest hash's
+    /// meaning: the hash covers the declaration, the slice hash covers
+    /// the partition actually used.
+    pub shards: usize,
+}
+
+impl ExperimentManifest {
+    /// Wrap a spec with the no-replication, single-shard defaults.
+    pub fn new(spec: SweepSpec) -> ExperimentManifest {
+        ExperimentManifest {
+            spec,
+            replication: 1,
+            shards: 1,
+        }
+    }
+
+    /// Canonical serialization. Every field is emitted (except the
+    /// optional baseline), so two manifests with equal parsed content
+    /// always serialize — and therefore hash — identically.
+    pub fn to_json(&self) -> Value {
+        let strs =
+            |v: &[String]| Value::arr(v.iter().map(Value::str).collect());
+        let a = &self.spec.axes;
+        let axes = Value::obj(vec![
+            (
+                "backends",
+                Value::arr(
+                    a.backends.iter().map(|b| Value::str(b.cli_str())).collect(),
+                ),
+            ),
+            ("chaos", strs(&a.chaos)),
+            ("controllers", strs(&a.controllers)),
+            ("evictions", strs(&a.evictions)),
+            ("hardware", strs(&a.hardware)),
+            ("presets", strs(&a.presets)),
+            (
+                "rates",
+                Value::arr(a.rates.iter().map(|r| Value::float(*r)).collect()),
+            ),
+            ("routers", strs(&a.routers)),
+            ("scheds", strs(&a.scheds)),
+            ("workloads", strs(&a.workloads)),
+        ]);
+        let mut fields = vec![
+            ("axes", axes),
+            ("dense_model", Value::str(self.spec.dense_model.clone())),
+            ("format", Value::str(MANIFEST_FORMAT)),
+            ("moe_model", Value::str(self.spec.moe_model.clone())),
+            ("num_requests", Value::int(self.spec.num_requests as i64)),
+            ("quick", Value::Bool(self.spec.quick)),
+            ("replication", Value::int(self.replication as i64)),
+            // Bit-lossless: u64 seeds round-trip through i64 (and JSON's
+            // exact-int path) via the `as` casts on both sides.
+            ("seed", Value::int(self.spec.seed as i64)),
+            ("shards", Value::int(self.shards as i64)),
+        ];
+        if let Some(b) = &self.spec.baseline {
+            fields.push(("baseline", Value::str(b.clone())));
+        }
+        Value::obj(fields)
+    }
+
+    /// Strict parse: unknown keys and wrong types are candidate-style
+    /// errors, missing optional keys fall back to [`SweepSpec::default`]
+    /// scalars (axes default to *empty*, i.e. "inherit preset default" —
+    /// the manifest must name at least one preset to expand).
+    pub fn from_json(v: &Value) -> anyhow::Result<ExperimentManifest> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest must be a JSON object"))?;
+        for k in obj.keys() {
+            if !MANIFEST_KEYS.contains(&k.as_str()) {
+                anyhow::bail!(
+                    "unknown manifest key '{k}' (expected one of {MANIFEST_KEYS:?})"
+                );
+            }
+        }
+        let format = v.get("format").as_str().ok_or_else(|| {
+            anyhow::anyhow!(
+                "manifest is missing the required \"format\" key \
+                 (expected \"{MANIFEST_FORMAT}\")"
+            )
+        })?;
+        if format != MANIFEST_FORMAT {
+            anyhow::bail!(
+                "unsupported manifest format '{format}' \
+                 (this build reads '{MANIFEST_FORMAT}')"
+            );
+        }
+        let axes = parse_axes(v.get("axes"))?;
+        let d = SweepSpec::default();
+        let spec = SweepSpec {
+            axes,
+            dense_model: opt_str(v, "dense_model")?.unwrap_or(d.dense_model),
+            moe_model: opt_str(v, "moe_model")?.unwrap_or(d.moe_model),
+            num_requests: opt_count(v, "num_requests")?
+                .unwrap_or(d.num_requests),
+            seed: match v.get("seed") {
+                Value::Null => d.seed,
+                s => s.as_i64().map(|i| i as u64).ok_or_else(|| {
+                    anyhow::anyhow!("manifest \"seed\" must be an integer")
+                })?,
+            },
+            quick: opt_bool(v, "quick")?.unwrap_or(false),
+            baseline: opt_str(v, "baseline")?,
+        };
+        let replication = opt_count(v, "replication")?.unwrap_or(1);
+        let shards = opt_count(v, "shards")?.unwrap_or(1);
+        if replication == 0 {
+            anyhow::bail!("manifest \"replication\" must be >= 1");
+        }
+        if shards == 0 {
+            anyhow::bail!("manifest \"shards\" must be >= 1");
+        }
+        Ok(ExperimentManifest {
+            spec,
+            replication,
+            shards,
+        })
+    }
+
+    /// Load + strictly parse a manifest file.
+    pub fn load(path: &Path) -> anyhow::Result<ExperimentManifest> {
+        let v = json::load_file(path)?;
+        ExperimentManifest::from_json(&v)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Pretty-write the canonical form (creates parent dirs).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        json::save_file(path, &self.to_json())
+    }
+
+    /// Content hash of the canonical serialization — the identity that
+    /// shard results must match to be mergeable.
+    pub fn hash(&self) -> String {
+        content_hash(&self.to_json().to_string())
+    }
+}
+
+fn opt_str(v: &Value, key: &str) -> anyhow::Result<Option<String>> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        Value::Str(s) => Ok(Some(s.clone())),
+        _ => anyhow::bail!("manifest \"{key}\" must be a string"),
+    }
+}
+
+fn opt_bool(v: &Value, key: &str) -> anyhow::Result<Option<bool>> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        Value::Bool(b) => Ok(Some(*b)),
+        _ => anyhow::bail!("manifest \"{key}\" must be true or false"),
+    }
+}
+
+fn opt_count(v: &Value, key: &str) -> anyhow::Result<Option<usize>> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        n => n
+            .as_u64()
+            .map(|u| Some(u as usize))
+            .ok_or_else(|| {
+                anyhow::anyhow!("manifest \"{key}\" must be a non-negative integer")
+            }),
+    }
+}
+
+fn parse_axes(v: &Value) -> anyhow::Result<SweepAxes> {
+    let obj = match v {
+        Value::Null => return Ok(SweepAxes::default()),
+        Value::Obj(o) => o,
+        _ => anyhow::bail!("manifest \"axes\" must be a JSON object"),
+    };
+    for k in obj.keys() {
+        if !AXIS_KEYS.contains(&k.as_str()) {
+            anyhow::bail!(
+                "unknown manifest axis '{k}' (expected one of {AXIS_KEYS:?})"
+            );
+        }
+    }
+    let rates = match v.get("rates") {
+        Value::Null => vec![],
+        Value::Arr(items) => items
+            .iter()
+            .map(|it| {
+                it.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("manifest axis 'rates' must hold numbers")
+                })
+            })
+            .collect::<anyhow::Result<_>>()?,
+        _ => anyhow::bail!("manifest axis 'rates' must be an array of numbers"),
+    };
+    let backends = match v.get("backends") {
+        Value::Null => vec![],
+        Value::Arr(items) => items
+            .iter()
+            .map(|it| {
+                it.as_str()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "manifest axis 'backends' must hold strings \
+                             (analytical|cycle|cycle-replay|trace:PATH)"
+                        )
+                    })
+                    .and_then(|s| s.parse::<PerfBackend>())
+            })
+            .collect::<anyhow::Result<_>>()?,
+        _ => {
+            anyhow::bail!("manifest axis 'backends' must be an array of strings")
+        }
+    };
+    Ok(SweepAxes {
+        presets: str_axis(v, "presets")?,
+        hardware: str_axis(v, "hardware")?,
+        rates,
+        routers: str_axis(v, "routers")?,
+        scheds: str_axis(v, "scheds")?,
+        evictions: str_axis(v, "evictions")?,
+        backends,
+        workloads: str_axis(v, "workloads")?,
+        controllers: str_axis(v, "controllers")?,
+        chaos: str_axis(v, "chaos")?,
+    })
+}
+
+fn str_axis(v: &Value, key: &str) -> anyhow::Result<Vec<String>> {
+    match v.get(key) {
+        Value::Null => Ok(vec![]),
+        Value::Arr(items) => items
+            .iter()
+            .map(|it| {
+                it.as_str().map(str::to_string).ok_or_else(|| {
+                    anyhow::anyhow!("manifest axis '{key}' must hold strings")
+                })
+            })
+            .collect(),
+        _ => anyhow::bail!("manifest axis '{key}' must be an array of strings"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hashing, replication seeds, and the shard partition
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit over the text, rendered as 16 lowercase hex digits.
+/// Dependency-free and stable across platforms/releases — the whole
+/// shard-identity scheme rides on this staying fixed.
+pub fn content_hash(text: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// Derive the seed for replicate `rep` of a grid point.
+///
+/// Replicate 0 **is** the manifest seed — that identity is what makes an
+/// R=1 manifest run byte-for-byte equal to the plain sweep. Later
+/// replicates go through a SplitMix64 finalizer (same constants as
+/// [`crate::util::rng`]'s seeding) so nearby replicate indices land on
+/// statistically unrelated streams.
+pub fn replicate_seed(base: u64, rep: usize) -> u64 {
+    if rep == 0 {
+        return base;
+    }
+    let mut z = base ^ (rep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Global grid indices owned by `shard` (0-based) of `shards`:
+/// round-robin `shard, shard+shards, shard+2*shards, ...`. Deterministic,
+/// covers every index exactly once across shards, balanced to within one
+/// point even when `shards` does not divide the grid.
+pub fn shard_point_indices(grid: usize, shard: usize, shards: usize) -> Vec<usize> {
+    if shards == 0 || shard >= shards {
+        return vec![];
+    }
+    (shard..grid).step_by(shards).collect()
+}
+
+/// Hash of one shard's slice of the expanded grid: manifest identity,
+/// partition coordinates, and the owned point names in order. A shard
+/// result carries this so the merge can prove the slice it is folding is
+/// exactly the slice this partition assigns.
+pub fn slice_hash(
+    manifest_hash: &str,
+    shard: usize,
+    shards: usize,
+    point_names: &[String],
+) -> String {
+    let mut text = format!("{manifest_hash}|{shard}/{shards}");
+    for name in point_names {
+        text.push('\n');
+        text.push_str(name);
+    }
+    content_hash(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample() -> ExperimentManifest {
+        let mut spec = SweepSpec {
+            num_requests: 12,
+            quick: true,
+            ..SweepSpec::default()
+        };
+        spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+        spec.axes.rates = vec![5.0, 20.0];
+        spec.axes.routers = vec!["round-robin".into()];
+        ExperimentManifest {
+            spec,
+            replication: 3,
+            shards: 2,
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let m = sample();
+        let v = m.to_json();
+        let back = ExperimentManifest::from_json(&v).unwrap();
+        assert_eq!(back.to_json().to_string(), v.to_string());
+        assert_eq!(back.replication, 3);
+        assert_eq!(back.shards, 2);
+        assert_eq!(back.spec.axes.presets, m.spec.axes.presets);
+        assert_eq!(back.spec.axes.rates, m.spec.axes.rates);
+        assert_eq!(back.spec.num_requests, 12);
+        assert!(back.spec.quick);
+        assert_eq!(back.spec.seed, m.spec.seed);
+    }
+
+    #[test]
+    fn hash_is_formatting_independent() {
+        let m = sample();
+        // pretty vs compact on-disk forms parse to the same hash
+        let pretty = ExperimentManifest::from_json(
+            &json::parse(&m.to_json().to_pretty()).unwrap(),
+        )
+        .unwrap();
+        let compact = ExperimentManifest::from_json(
+            &json::parse(&m.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(m.hash(), pretty.hash());
+        assert_eq!(m.hash(), compact.hash());
+        // but any content change moves it
+        let mut other = sample();
+        other.spec.seed ^= 1;
+        assert_ne!(m.hash(), other.hash());
+        let mut other = sample();
+        other.replication = 4;
+        assert_ne!(m.hash(), other.hash());
+    }
+
+    #[test]
+    fn defaults_fill_missing_scalars() {
+        let v = json::parse(
+            r#"{"format":"experiment-manifest-v1","axes":{"presets":["S(D)"]}}"#,
+        )
+        .unwrap();
+        let m = ExperimentManifest::from_json(&v).unwrap();
+        let d = SweepSpec::default();
+        assert_eq!(m.spec.num_requests, d.num_requests);
+        assert_eq!(m.spec.seed, d.seed);
+        assert_eq!(m.spec.dense_model, d.dense_model);
+        assert!(!m.spec.quick);
+        assert_eq!(m.replication, 1);
+        assert_eq!(m.shards, 1);
+        assert!(m.spec.baseline.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifests_with_candidates() {
+        let cases = [
+            (r#"{"axes":{}}"#, "format"),
+            (r#"{"format":"experiment-manifest-v2"}"#, "experiment-manifest-v1"),
+            (
+                r#"{"format":"experiment-manifest-v1","replicas":3}"#,
+                "replication",
+            ),
+            (
+                r#"{"format":"experiment-manifest-v1","axes":{"routes":[]}}"#,
+                "routers",
+            ),
+            (
+                r#"{"format":"experiment-manifest-v1","replication":0}"#,
+                ">= 1",
+            ),
+            (
+                r#"{"format":"experiment-manifest-v1","shards":0}"#,
+                ">= 1",
+            ),
+            (
+                r#"{"format":"experiment-manifest-v1","axes":{"rates":["x"]}}"#,
+                "numbers",
+            ),
+            (
+                r#"{"format":"experiment-manifest-v1","axes":{"backends":["warp"]}}"#,
+                "analytical",
+            ),
+            (r#"[1,2]"#, "object"),
+        ];
+        for (src, needle) in cases {
+            let v = json::parse(src).unwrap();
+            let e = ExperimentManifest::from_json(&v).unwrap_err().to_string();
+            assert!(e.contains(needle), "{src}: {e}");
+        }
+    }
+
+    #[test]
+    fn replicate_seed_zero_is_identity_and_reps_diverge() {
+        for base in [0u64, 1, 0xC0FFEE, u64::MAX] {
+            assert_eq!(replicate_seed(base, 0), base);
+            let mut seen = std::collections::BTreeSet::new();
+            for rep in 0..64 {
+                assert!(
+                    seen.insert(replicate_seed(base, rep)),
+                    "replicate seeds collided (base={base}, rep={rep})"
+                );
+            }
+        }
+        // deterministic across calls
+        assert_eq!(replicate_seed(42, 7), replicate_seed(42, 7));
+    }
+
+    #[test]
+    fn shard_partition_is_disjoint_covering_and_balanced() {
+        for grid in [1usize, 2, 7, 12, 13] {
+            for shards in [1usize, 2, 3, 7, 20] {
+                let mut all = vec![];
+                let mut sizes = vec![];
+                for s in 0..shards {
+                    let idx = shard_point_indices(grid, s, shards);
+                    assert!(idx.windows(2).all(|w| w[0] < w[1]), "ordered");
+                    sizes.push(idx.len());
+                    all.extend(idx);
+                }
+                all.sort_unstable();
+                assert_eq!(all, (0..grid).collect::<Vec<_>>(),
+                    "grid={grid} shards={shards} must cover exactly once");
+                let (lo, hi) = (
+                    *sizes.iter().min().unwrap(),
+                    *sizes.iter().max().unwrap(),
+                );
+                assert!(hi - lo <= 1, "balanced to within one point");
+            }
+        }
+        // 12 points over 7 shards: the uneven case the suite exercises
+        let sizes: Vec<usize> = (0..7)
+            .map(|s| shard_point_indices(12, s, 7).len())
+            .collect();
+        assert_eq!(sizes, vec![2, 2, 2, 2, 2, 1, 1]);
+        assert!(shard_point_indices(5, 9, 7).is_empty());
+        assert!(shard_point_indices(5, 0, 0).is_empty());
+    }
+
+    #[test]
+    fn content_and_slice_hashes_are_stable() {
+        // pinned values: these are part of the shard-file contract
+        assert_eq!(content_hash(""), "cbf29ce484222325");
+        assert_eq!(content_hash("a"), "af63dc4c8601ec8c");
+        let names = vec!["S(D)".to_string(), "M(D)".to_string()];
+        let h1 = slice_hash("abc", 0, 2, &names);
+        let h2 = slice_hash("abc", 0, 2, &names);
+        assert_eq!(h1, h2);
+        assert_ne!(h1, slice_hash("abd", 0, 2, &names));
+        assert_ne!(h1, slice_hash("abc", 1, 2, &names));
+        let fewer = vec!["S(D)".to_string()];
+        assert_ne!(h1, slice_hash("abc", 0, 2, &fewer));
+    }
+
+    #[test]
+    fn save_and_load_roundtrip() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("target/test-manifest-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.json");
+        let m = sample();
+        m.save(&path).unwrap();
+        let back = ExperimentManifest::load(&path).unwrap();
+        assert_eq!(back.hash(), m.hash());
+        // load errors carry the path
+        std::fs::write(dir.join("bad.json"), "{\"format\":").unwrap();
+        let e = ExperimentManifest::load(&dir.join("bad.json"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("bad.json"), "{e}");
+    }
+}

@@ -1,0 +1,403 @@
+//! Shard-result merging (DESIGN.md §13): fold the result files of a
+//! partitioned sweep back into one aggregate report.
+//!
+//! The determinism argument is compositional:
+//!
+//! 1. Per-point records are byte-identical at any worker count
+//!    ([`run_sweep`](super::run_sweep)'s contract) and are serialized by the shared
+//!    [`point_json`](super::point_json) in both the single-process path
+//!    and every shard file.
+//! 2. The partition is a deterministic function of the manifest
+//!    ([`shard_point_indices`](super::shard_point_indices)), so
+//!    reassembling shards in grid order reproduces the single-process
+//!    point array element-for-element.
+//! 3. The comparative summary is recomputed from those records through
+//!    the same [`summarize_values`] core both paths share, and finite
+//!    floats survive the JSON file round trip bit-exactly (shortest
+//!    round-trip serialization), so the summary is byte-identical too.
+//!
+//! Therefore `merge(shards of any partition) == run_manifest(...)`,
+//! byte for byte — which the integration suite asserts for N ∈ {1,2,7}.
+//!
+//! Every fold is guarded: shards must carry this manifest's content
+//! hash, agree on the partition, cover every shard index exactly once,
+//! and pass per-slice validation (names, order, slice hash) before any
+//! aggregate is produced.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use crate::metrics::headline_from_json;
+use crate::util::bench::Table;
+use crate::util::json::Value;
+
+use super::shard::{run_shard, ShardResult};
+use super::{summarize_values, summary_json, ExperimentManifest, METRICS};
+
+/// Format tag stamped on merged aggregates.
+pub const AGGREGATE_FORMAT: &str = "sweep-aggregate-v1";
+
+/// Fold shard results into the aggregate report.
+///
+/// `results` must hold exactly one result for every shard of one
+/// partition of `m` — any gap, duplicate, foreign manifest, or tampered
+/// slice is a hard error naming the offending shard.
+pub fn merge(
+    m: &ExperimentManifest,
+    results: &[ShardResult],
+) -> anyhow::Result<Value> {
+    anyhow::ensure!(!results.is_empty(), "no shard results to merge");
+    let shards = results[0].shards;
+    for r in results {
+        if r.shards != shards {
+            anyhow::bail!(
+                "cannot merge shard results from different partitions \
+                 (found both /{shards} and /{} result files)",
+                r.shards
+            );
+        }
+    }
+    let mut by_shard: Vec<Option<&ShardResult>> = vec![None; shards];
+    for r in results {
+        if r.shard >= shards {
+            anyhow::bail!(
+                "shard result has index {} but the partition is {shards}-way",
+                r.shard
+            );
+        }
+        if by_shard[r.shard].is_some() {
+            anyhow::bail!(
+                "two shard results claim shard {}/{shards}",
+                r.shard + 1
+            );
+        }
+        by_shard[r.shard] = Some(r);
+    }
+    let missing: Vec<String> = by_shard
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.is_none())
+        .map(|(i, _)| format!("{}/{shards}", i + 1))
+        .collect();
+    if !missing.is_empty() {
+        anyhow::bail!(
+            "incomplete partition: missing shard result(s) {} — run the \
+             missing shard(s) or resume with --out-dir",
+            missing.join(", ")
+        );
+    }
+
+    let grid = m.spec.expand()?;
+    let grid_names: Vec<String> = grid.iter().map(|c| c.name.clone()).collect();
+    let manifest_hash = m.hash();
+    let replication = m.replication.max(1);
+    let mut points: Vec<Option<&Value>> = vec![None; grid.len()];
+    for r in by_shard.iter().flatten() {
+        r.validate_against(&manifest_hash, replication, &grid_names)?;
+        for (i, p) in &r.points {
+            points[*i] = Some(p);
+        }
+    }
+    // Validation guarantees coverage (each shard holds exactly its slice,
+    // slices partition the grid); this is the belt-and-braces recheck.
+    let holes: Vec<usize> = points
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.is_none())
+        .map(|(i, _)| i)
+        .collect();
+    if !holes.is_empty() {
+        anyhow::bail!("merged shards left grid indices {holes:?} uncovered");
+    }
+    let points: Vec<Value> =
+        points.into_iter().flatten().cloned().collect();
+
+    let values: Vec<(String, Vec<f64>)> = points
+        .iter()
+        .map(|p| Ok((point_name(p).to_string(), point_metric_values(p, replication)?)))
+        .collect::<anyhow::Result<_>>()?;
+    let summary = summarize_values(&values, m.spec.baseline.as_deref())?;
+
+    let mut fields = vec![
+        ("format", Value::str(AGGREGATE_FORMAT)),
+        ("manifest_hash", Value::str(manifest_hash)),
+        ("points", Value::arr(points)),
+        ("summary", summary_json(&summary)),
+    ];
+    if replication > 1 {
+        fields.push(("replication", Value::int(replication as i64)));
+    }
+    Ok(Value::obj(fields))
+}
+
+fn point_name(p: &Value) -> &str {
+    p.get("name").as_str().unwrap_or("?")
+}
+
+/// METRICS-ordered headline values for one merged point record. Under
+/// replication the summary ranks the per-point replicate **means**;
+/// without it, the representative report's headline metrics directly
+/// (bit-equal to what the in-process extractors produced).
+fn point_metric_values(p: &Value, replication: usize) -> anyhow::Result<Vec<f64>> {
+    METRICS
+        .iter()
+        .map(|m| {
+            let v = if replication > 1 {
+                p.get("replication")
+                    .get("metrics")
+                    .get(m.key)
+                    .get("mean")
+                    .as_f64()
+            } else {
+                headline_from_json(p.get("report"), m.key)
+            };
+            v.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "merged point '{}' is missing metric '{}'",
+                    point_name(p),
+                    m.key
+                )
+            })
+        })
+        .collect()
+}
+
+/// Load shard result files and merge them.
+pub fn merge_files(
+    m: &ExperimentManifest,
+    paths: &[PathBuf],
+) -> anyhow::Result<Value> {
+    let results = paths
+        .iter()
+        .map(|p| ShardResult::load(p))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    merge(m, &results)
+}
+
+/// Shard result files (`shard-*.json`) under `dir`, in deterministic
+/// (name-sorted) order.
+pub fn find_shard_files(dir: &Path) -> anyhow::Result<Vec<PathBuf>> {
+    let mut names = BTreeSet::new();
+    let entries = std::fs::read_dir(dir).map_err(|e| {
+        anyhow::anyhow!("reading shard directory {}: {e}", dir.display())
+    })?;
+    for entry in entries {
+        let entry = entry.map_err(|e| {
+            anyhow::anyhow!("reading shard directory {}: {e}", dir.display())
+        })?;
+        if let Some(name) = entry.file_name().to_str() {
+            if name.starts_with("shard-") && name.ends_with(".json") {
+                names.insert(name.to_string());
+            }
+        }
+    }
+    Ok(names.into_iter().map(|n| dir.join(n)).collect())
+}
+
+/// The single-process reference run: execute the whole manifest as one
+/// shard of a 1-way partition and merge it. Every distributed run of the
+/// same manifest must reproduce this output byte-for-byte.
+pub fn run_manifest(
+    m: &ExperimentManifest,
+    threads: usize,
+) -> anyhow::Result<Value> {
+    let result = run_shard(m, 0, 1, threads)?;
+    merge(m, &[result])
+}
+
+/// Render a merged aggregate as the sweep's per-point table. Under
+/// replication a `±95%` column (half-width of the CI on mean tok/s over
+/// the replicates) is added.
+pub fn render_aggregate_table(aggregate: &Value) -> Table {
+    let replicated = aggregate.get("replication").as_i64().unwrap_or(1) > 1;
+    let mut headers = vec![
+        "config", "finished", "TTFT ms", "TPOT ms", "ITL ms", "tok/s",
+    ];
+    if replicated {
+        headers.push("±95% tok/s");
+    }
+    headers.push("Δ tok/s %");
+    let mut t = Table::new(&headers);
+    let baseline = aggregate.get("summary").get("baseline").as_str().unwrap_or("");
+    let deltas = aggregate.get("summary").get("deltas");
+    let empty: Vec<Value> = vec![];
+    for p in aggregate.get("points").as_arr().unwrap_or(&empty) {
+        let name = point_name(p).to_string();
+        let report = p.get("report");
+        let ms = |key: &str| {
+            report
+                .get(key)
+                .get("mean")
+                .as_f64()
+                .map(|v| format!("{:.3}", v / 1e6))
+                .unwrap_or_default()
+        };
+        let tps = if replicated {
+            p.get("replication")
+                .get("metrics")
+                .get("throughput_tps")
+                .get("mean")
+                .as_f64()
+        } else {
+            report.get("throughput_tps").as_f64()
+        };
+        let delta = if name == baseline {
+            "base".to_string()
+        } else {
+            deltas
+                .as_arr()
+                .and_then(|ds| {
+                    ds.iter().find(|d| d.get("config").as_str() == Some(&name))
+                })
+                .and_then(|d| {
+                    d.get("pct_vs_baseline").get("throughput_tps").as_f64()
+                })
+                .map(|v| format!("{v:+.1}"))
+                .unwrap_or_default()
+        };
+        let mut row = vec![
+            name,
+            report
+                .get("num_finished")
+                .as_i64()
+                .map(|v| v.to_string())
+                .unwrap_or_default(),
+            ms("ttft_ns"),
+            ms("tpot_ns"),
+            ms("itl_ns"),
+            tps.map(|v| format!("{v:.1}")).unwrap_or_default(),
+        ];
+        if replicated {
+            row.push(
+                p.get("replication")
+                    .get("metrics")
+                    .get("throughput_tps")
+                    .get("ci95")
+                    .as_f64()
+                    .map(|v| format!("{v:.2}"))
+                    .unwrap_or_default(),
+            );
+        }
+        row.push(delta);
+        t.row(&row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::{
+        run_sweep, summarize, sweep_json, shard::run_all_shards, SweepSpec,
+    };
+
+    fn tiny_manifest() -> ExperimentManifest {
+        let mut spec = SweepSpec {
+            num_requests: 8,
+            quick: true,
+            ..SweepSpec::default()
+        };
+        spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+        spec.axes.rates = vec![6.0];
+        ExperimentManifest::new(spec)
+    }
+
+    #[test]
+    fn two_shard_merge_matches_single_process() {
+        let m = tiny_manifest();
+        let single = run_manifest(&m, 2).unwrap();
+        let a = run_shard(&m, 0, 2, 1).unwrap();
+        let b = run_shard(&m, 1, 2, 1).unwrap();
+        // shard order handed to merge must not matter
+        let merged = merge(&m, &[b, a]).unwrap();
+        assert_eq!(merged.to_string(), single.to_string());
+        assert_eq!(merged.get("format").as_str(), Some(AGGREGATE_FORMAT));
+        assert_eq!(
+            merged.get("manifest_hash").as_str(),
+            Some(m.hash().as_str())
+        );
+    }
+
+    #[test]
+    fn aggregate_sections_match_plain_sweep_json_at_r1() {
+        let m = tiny_manifest();
+        let aggregate = run_manifest(&m, 2).unwrap();
+        let cfgs = m.spec.expand().unwrap();
+        let outcome = run_sweep(&cfgs, 2).unwrap();
+        let summary = summarize(&outcome, None).unwrap();
+        let plain = sweep_json(&outcome, &summary);
+        assert_eq!(
+            aggregate.get("points").to_string(),
+            plain.get("points").to_string(),
+            "R=1 aggregate points must be byte-identical to sweep_json"
+        );
+        assert_eq!(
+            aggregate.get("summary").to_string(),
+            plain.get("summary").to_string(),
+            "R=1 aggregate summary must be byte-identical to sweep_json"
+        );
+        assert!(aggregate.get("replication").is_null(), "no R key at R=1");
+    }
+
+    #[test]
+    fn merge_rejects_foreign_partial_and_duplicate_shards() {
+        let m = tiny_manifest();
+        let a = run_shard(&m, 0, 2, 1).unwrap();
+        let b = run_shard(&m, 1, 2, 1).unwrap();
+        // foreign manifest
+        let mut other = tiny_manifest();
+        other.spec.seed ^= 1;
+        let e = merge(&other, &[a.clone(), b.clone()])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("different manifest"), "{e}");
+        // missing shard
+        let e = merge(&m, &[a.clone()]).unwrap_err().to_string();
+        assert!(e.contains("missing shard") && e.contains("2/2"), "{e}");
+        // duplicate shard
+        let e = merge(&m, &[a.clone(), a.clone()]).unwrap_err().to_string();
+        assert!(e.contains("claim shard"), "{e}");
+        // mixed partitions
+        let whole = run_shard(&m, 0, 1, 1).unwrap();
+        let e = merge(&m, &[a, whole]).unwrap_err().to_string();
+        assert!(e.contains("different partitions"), "{e}");
+        assert!(merge(&m, &[]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_dir_discovery_preserve_bytes() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("target/test-sweep-shards/unit-merge");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = tiny_manifest();
+        let single = run_manifest(&m, 2).unwrap();
+        run_all_shards(&m, 2, 1, &dir, false).unwrap();
+        let files = find_shard_files(&dir).unwrap();
+        assert_eq!(files.len(), 2);
+        let merged = merge_files(&m, &files).unwrap();
+        assert_eq!(
+            merged.to_string(),
+            single.to_string(),
+            "file round trip must not perturb a single byte"
+        );
+        // a truncated file is a load error carrying the path
+        std::fs::write(&files[0], "{\"format\":\"shard-result-v1\",").unwrap();
+        let e = merge_files(&m, &files).unwrap_err().to_string();
+        assert!(e.contains("shard-0001"), "{e}");
+    }
+
+    #[test]
+    fn table_renders_with_and_without_replication() {
+        let m = tiny_manifest();
+        let aggregate = run_manifest(&m, 2).unwrap();
+        let plain = render_aggregate_table(&aggregate).render();
+        assert!(plain.contains("S(D)|rate=6") && !plain.contains("±95%"));
+        let mut rm = tiny_manifest();
+        rm.replication = 2;
+        let replicated = run_manifest(&rm, 4).unwrap();
+        assert_eq!(replicated.get("replication").as_i64(), Some(2));
+        let table = render_aggregate_table(&replicated).render();
+        assert!(table.contains("±95%"), "{table}");
+    }
+}

@@ -27,6 +27,23 @@
 //! [`SweepSpec::expand`] rejects unknown names up front with the candidate
 //! list instead of failing mid-sweep.
 
+pub mod manifest;
+pub mod merge;
+pub mod shard;
+
+pub use manifest::{
+    content_hash, replicate_seed, shard_point_indices, slice_hash,
+    ExperimentManifest, MANIFEST_FORMAT,
+};
+pub use merge::{
+    find_shard_files, merge, merge_files, render_aggregate_table, run_manifest,
+    AGGREGATE_FORMAT,
+};
+pub use shard::{
+    run_all_shards, run_shard, run_shard_to_file, shard_file_name, ShardOutcome,
+    ShardResult, SHARD_FORMAT,
+};
+
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -545,33 +562,57 @@ pub fn summarize(
     outcome: &SweepOutcome,
     baseline: Option<&str>,
 ) -> anyhow::Result<SweepSummary> {
-    let points = &outcome.points;
+    let values: Vec<(String, Vec<f64>)> = outcome
+        .points
+        .iter()
+        .map(|p| {
+            (
+                p.name.clone(),
+                METRICS.iter().map(|m| (m.extract)(&p.report)).collect(),
+            )
+        })
+        .collect();
+    summarize_values(&values, baseline)
+}
+
+/// The ranking core behind [`summarize`], over pre-extracted metric
+/// values (`points[i].1[j]` is `METRICS[j]` for point `i`).
+///
+/// The shard-merge path ([`merge`]) summarizes from round-tripped report
+/// *files* rather than live [`Report`]s; both paths funnel through this
+/// one function — same strict comparisons, same first-wins tie-break,
+/// same delta arithmetic — so a merged aggregate ranks byte-identically
+/// to the in-process sweep it reassembles.
+pub fn summarize_values(
+    points: &[(String, Vec<f64>)],
+    baseline: Option<&str>,
+) -> anyhow::Result<SweepSummary> {
     if points.is_empty() {
         anyhow::bail!("cannot summarize an empty sweep");
     }
-    let base_name = baseline.unwrap_or(&points[0].name);
+    let base_name = baseline.unwrap_or(&points[0].0);
     let base = points
         .iter()
-        .find(|p| p.name == base_name)
+        .find(|(name, _)| name == base_name)
         .ok_or_else(|| {
             anyhow::anyhow!("baseline '{base_name}' is not a sweep point")
         })?;
 
     let mut extremes = vec![];
-    for m in METRICS {
+    for (mi, m) in METRICS.iter().enumerate() {
         let mut best = &points[0];
         let mut worst = &points[0];
         for p in &points[1..] {
-            let v = (m.extract)(&p.report);
+            let v = p.1[mi];
             let better = if m.higher_is_better {
-                v > (m.extract)(&best.report)
+                v > best.1[mi]
             } else {
-                v < (m.extract)(&best.report)
+                v < best.1[mi]
             };
             let worse = if m.higher_is_better {
-                v < (m.extract)(&worst.report)
+                v < worst.1[mi]
             } else {
-                v > (m.extract)(&worst.report)
+                v > worst.1[mi]
             };
             if better {
                 best = p;
@@ -582,23 +623,24 @@ pub fn summarize(
         }
         extremes.push(Extreme {
             metric: m.key,
-            best_config: best.name.clone(),
-            best: (m.extract)(&best.report),
-            worst_config: worst.name.clone(),
-            worst: (m.extract)(&worst.report),
+            best_config: best.0.clone(),
+            best: best.1[mi],
+            worst_config: worst.0.clone(),
+            worst: worst.1[mi],
         });
     }
 
     let deltas = points
         .iter()
-        .filter(|p| p.name != base.name)
-        .map(|p| Delta {
-            config: p.name.clone(),
+        .filter(|(name, _)| name != &base.0)
+        .map(|(name, vals)| Delta {
+            config: name.clone(),
             pct: METRICS
                 .iter()
-                .map(|m| {
-                    let b = (m.extract)(&base.report);
-                    let v = (m.extract)(&p.report);
+                .enumerate()
+                .map(|(mi, m)| {
+                    let b = base.1[mi];
+                    let v = vals[mi];
                     let pct = if b.abs() > 1e-12 {
                         (v - b) / b * 100.0
                     } else {
@@ -611,7 +653,7 @@ pub fn summarize(
         .collect();
 
     Ok(SweepSummary {
-        baseline: base.name.clone(),
+        baseline: base.0.clone(),
         extremes,
         deltas,
     })
@@ -621,34 +663,36 @@ pub fn summarize(
 // Emission: JSON + terminal table
 // ---------------------------------------------------------------------------
 
-/// Serialize the full sweep (per-point reports + comparative summary).
-pub fn sweep_json(outcome: &SweepOutcome, summary: &SweepSummary) -> Value {
-    let points = outcome
-        .points
-        .iter()
-        .map(|p| {
-            let mut fields = vec![
-                ("name", Value::str(p.name.clone())),
-                ("steps", Value::int(p.summary.steps as i64)),
-                ("events", Value::int(p.summary.events as i64)),
-                (
-                    "inter_instance_bytes",
-                    Value::int(p.summary.inter_instance_bytes as i64),
-                ),
-            ];
-            // Cluster-dynamics keys only when a controller ran, so static
-            // sweep output stays byte-identical to pre-driver reports.
-            if p.summary.controller != "static" {
-                fields.push(("controller", Value::str(p.summary.controller.clone())));
-                fields.push((
-                    "peak_instances",
-                    Value::int(p.summary.peak_instances as i64),
-                ));
-            }
-            fields.push(("report", p.report.to_json()));
-            Value::obj(fields)
-        })
-        .collect();
+/// Serialize one completed grid point — the per-point record embedded in
+/// both [`sweep_json`] and shard result files (identical bytes in each,
+/// which is what lets a merged aggregate reproduce the single-process
+/// output).
+pub fn point_json(p: &SweepPoint) -> Value {
+    let mut fields = vec![
+        ("name", Value::str(p.name.clone())),
+        ("steps", Value::int(p.summary.steps as i64)),
+        ("events", Value::int(p.summary.events as i64)),
+        (
+            "inter_instance_bytes",
+            Value::int(p.summary.inter_instance_bytes as i64),
+        ),
+    ];
+    // Cluster-dynamics keys only when a controller ran, so static
+    // sweep output stays byte-identical to pre-driver reports.
+    if p.summary.controller != "static" {
+        fields.push(("controller", Value::str(p.summary.controller.clone())));
+        fields.push((
+            "peak_instances",
+            Value::int(p.summary.peak_instances as i64),
+        ));
+    }
+    fields.push(("report", p.report.to_json()));
+    Value::obj(fields)
+}
+
+/// Serialize a comparative summary — shared verbatim by [`sweep_json`]
+/// and the shard-merge aggregate.
+pub fn summary_json(summary: &SweepSummary) -> Value {
     let extremes = summary
         .extremes
         .iter()
@@ -681,17 +725,22 @@ pub fn sweep_json(outcome: &SweepOutcome, summary: &SweepSummary) -> Value {
         })
         .collect();
     Value::obj(vec![
+        ("baseline", Value::str(summary.baseline.clone())),
+        ("extremes", Value::Arr(extremes)),
+        ("deltas", Value::Arr(deltas)),
+    ])
+}
+
+/// Serialize the full sweep (per-point reports + comparative summary).
+pub fn sweep_json(outcome: &SweepOutcome, summary: &SweepSummary) -> Value {
+    Value::obj(vec![
         ("threads", Value::int(outcome.threads as i64)),
         ("wall_ns", Value::int(outcome.wall_ns as i64)),
-        ("points", Value::Arr(points)),
         (
-            "summary",
-            Value::obj(vec![
-                ("baseline", Value::str(summary.baseline.clone())),
-                ("extremes", Value::Arr(extremes)),
-                ("deltas", Value::Arr(deltas)),
-            ]),
+            "points",
+            Value::arr(outcome.points.iter().map(point_json).collect()),
         ),
+        ("summary", summary_json(summary)),
     ])
 }
 
@@ -738,6 +787,7 @@ pub fn render_table(outcome: &SweepOutcome, summary: &SweepSummary) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
 
     fn quick_spec() -> SweepSpec {
         SweepSpec {

@@ -1,0 +1,608 @@
+//! Shard execution for distributed sweeps (DESIGN.md §13).
+//!
+//! A shard is one independently runnable slice of a manifest's expanded
+//! grid: shard `i` of `N` owns the round-robin indices
+//! [`shard_point_indices`] assigns it. [`run_shard`] expands the grid,
+//! runs the owned points (each replicated `R` times with
+//! [`replicate_seed`]-derived seeds), and produces a [`ShardResult`]
+//! whose `shard-result-v1` file embeds:
+//!
+//! * the **manifest hash** — proves which experiment produced it, and
+//! * the **slice hash** — proves the file holds exactly the points this
+//!   partition assigns, in order, untampered.
+//!
+//! Per-point records are serialized with the same [`point_json`] the
+//! single-process sweep uses, so the merge step can reassemble the
+//! single-process aggregate byte-for-byte. Replicate 0 of a point *is*
+//! the representative record (its seed is the manifest seed), which is
+//! what keeps `replication = 1` output byte-identical to a plain sweep.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value};
+use crate::util::stats::SampleSet;
+
+use super::manifest::{
+    replicate_seed, shard_point_indices, slice_hash, ExperimentManifest,
+};
+use super::{point_json, run_sweep, SweepPoint, METRICS};
+
+/// Format tag required in a shard result's `"format"` key.
+pub const SHARD_FORMAT: &str = "shard-result-v1";
+
+/// Reservoir capacity for per-metric replication statistics. Replicate
+/// counts are tiny today, but Monte Carlo manifests may push R into the
+/// millions — percentile memory stays bounded here while mean/std/CI
+/// remain exact (Welford).
+const REPLICATION_RESERVOIR_CAP: usize = 4096;
+
+/// One shard's completed slice of a manifest grid.
+#[derive(Debug, Clone)]
+pub struct ShardResult {
+    /// [`ExperimentManifest::hash`] of the producing manifest.
+    pub manifest_hash: String,
+    /// 0-based shard index.
+    pub shard: usize,
+    /// Total shards in the partition this result was produced under.
+    pub shards: usize,
+    /// Replicates per grid point the producer ran.
+    pub replication: usize,
+    /// [`slice_hash`] over the owned point names.
+    pub slice_hash: String,
+    /// `(global grid index, per-point record)` in ascending index order.
+    /// The record is exactly [`point_json`] output, plus a `replication`
+    /// statistics key when `replication > 1`.
+    pub points: Vec<(usize, Value)>,
+}
+
+/// Run one shard of the manifest on `threads` workers.
+///
+/// All `R` replicates of a grid point run inside the shard that owns the
+/// point (replicates are never split across shards), so replication
+/// statistics are computed exactly once, by one producer, from exact
+/// Welford accumulators — nothing approximate needs merging later.
+pub fn run_shard(
+    m: &ExperimentManifest,
+    shard: usize,
+    shards: usize,
+    threads: usize,
+) -> anyhow::Result<ShardResult> {
+    anyhow::ensure!(shards >= 1, "shard count must be >= 1");
+    anyhow::ensure!(
+        shard < shards,
+        "shard index {shard} out of range for {shards} shards (0-based)"
+    );
+    let grid = m.spec.expand()?;
+    let indices = shard_point_indices(grid.len(), shard, shards);
+    let replication = m.replication.max(1);
+    let manifest_hash = m.hash();
+    let names: Vec<String> =
+        indices.iter().map(|&i| grid[i].name.clone()).collect();
+    let slice = slice_hash(&manifest_hash, shard, shards, &names);
+
+    // More shards than grid points: the surplus shards legitimately own
+    // nothing and emit an empty (but still hash-verified) result.
+    if indices.is_empty() {
+        return Ok(ShardResult {
+            manifest_hash,
+            shard,
+            shards,
+            replication,
+            slice_hash: slice,
+            points: vec![],
+        });
+    }
+
+    let mut cfgs = Vec::with_capacity(indices.len() * replication);
+    for &i in &indices {
+        for rep in 0..replication {
+            let mut cfg = grid[i].clone();
+            let seed = replicate_seed(m.spec.seed, rep);
+            cfg.seed = seed;
+            cfg.workload.seed = seed;
+            cfgs.push(cfg);
+        }
+    }
+    let outcome = run_sweep(&cfgs, threads)?;
+
+    let mut points = Vec::with_capacity(indices.len());
+    for (k, &gi) in indices.iter().enumerate() {
+        let group = &outcome.points[k * replication..(k + 1) * replication];
+        // Replicate 0 ran on the manifest seed, so its record is the
+        // same bytes a replication-free sweep would emit for this point.
+        let mut point = point_json(&group[0]);
+        if replication > 1 {
+            if let Value::Obj(map) = &mut point {
+                map.insert("replication".to_string(), replication_json(group));
+            }
+        }
+        points.push((gi, point));
+    }
+    Ok(ShardResult {
+        manifest_hash,
+        shard,
+        shards,
+        replication,
+        slice_hash: slice,
+        points,
+    })
+}
+
+/// Per-metric statistics over one point's replicates: exact mean/std/CI
+/// from the Welford accumulator, min/max/median through the bounded
+/// reservoir. `std` is the Bessel-corrected sample deviation; `ci95` is
+/// the normal-approximation half-width on the mean.
+fn replication_json(group: &[SweepPoint]) -> Value {
+    let mut metrics = Vec::with_capacity(METRICS.len());
+    for m in METRICS {
+        let mut set = SampleSet::new(REPLICATION_RESERVOIR_CAP);
+        for p in group {
+            set.push((m.extract)(&p.report));
+        }
+        let s = set.summary();
+        let o = set.online();
+        metrics.push((
+            m.key,
+            Value::obj(vec![
+                ("ci95", Value::float(o.ci95_half_width())),
+                ("max", Value::float(s.max)),
+                ("mean", Value::float(o.mean())),
+                ("min", Value::float(s.min)),
+                ("p50", Value::float(s.p50)),
+                ("std", Value::float(o.std_sample())),
+            ]),
+        ));
+    }
+    Value::obj(vec![
+        ("metrics", Value::obj(metrics)),
+        ("r", Value::int(group.len() as i64)),
+    ])
+}
+
+impl ShardResult {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("format", Value::str(SHARD_FORMAT)),
+            ("manifest_hash", Value::str(self.manifest_hash.clone())),
+            (
+                "points",
+                Value::arr(
+                    self.points
+                        .iter()
+                        .map(|(i, p)| {
+                            Value::obj(vec![
+                                ("index", Value::int(*i as i64)),
+                                ("point", p.clone()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("replication", Value::int(self.replication as i64)),
+            ("shard", Value::int(self.shard as i64)),
+            ("shards", Value::int(self.shards as i64)),
+            ("slice_hash", Value::str(self.slice_hash.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<ShardResult> {
+        let format = v.get("format").as_str().ok_or_else(|| {
+            anyhow::anyhow!(
+                "shard result is missing the required \"format\" key \
+                 (expected \"{SHARD_FORMAT}\")"
+            )
+        })?;
+        if format != SHARD_FORMAT {
+            anyhow::bail!(
+                "unsupported shard-result format '{format}' \
+                 (this build reads '{SHARD_FORMAT}')"
+            );
+        }
+        let points_v = v.get("points").as_arr().ok_or_else(|| {
+            anyhow::anyhow!("shard result \"points\" must be an array")
+        })?;
+        let mut points = Vec::with_capacity(points_v.len());
+        for item in points_v {
+            let idx = item.get("index").as_u64().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "shard result point entries need an integer \"index\""
+                )
+            })? as usize;
+            let point = item.get("point");
+            if point.get("name").as_str().is_none() {
+                anyhow::bail!(
+                    "shard result point at grid index {idx} has no \"name\""
+                );
+            }
+            points.push((idx, point.clone()));
+        }
+        Ok(ShardResult {
+            manifest_hash: req_str(v, "manifest_hash")?,
+            shard: req_count(v, "shard")?,
+            shards: req_count(v, "shards")?,
+            replication: req_count(v, "replication")?,
+            slice_hash: req_str(v, "slice_hash")?,
+            points,
+        })
+    }
+
+    /// Load a shard result file; parse and shape errors carry the path.
+    pub fn load(path: &Path) -> anyhow::Result<ShardResult> {
+        let v = json::load_file(path)?;
+        ShardResult::from_json(&v)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Pretty-write (creates parent dirs).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        json::save_file(path, &self.to_json())
+    }
+
+    /// Prove this result belongs to the manifest hashing to
+    /// `manifest_hash`, was run at the expected replication, and holds
+    /// exactly the slice its partition coordinates assign — names, order,
+    /// and slice hash all rechecked.
+    pub fn validate_against(
+        &self,
+        manifest_hash: &str,
+        replication: usize,
+        grid_names: &[String],
+    ) -> anyhow::Result<()> {
+        let id = format!("shard {}/{}", self.shard + 1, self.shards);
+        if self.manifest_hash != manifest_hash {
+            anyhow::bail!(
+                "{id} was produced by a different manifest (result has \
+                 manifest hash {}, this manifest hashes to {manifest_hash}); \
+                 re-run the shard from this manifest, or merge with the \
+                 manifest that produced it",
+                self.manifest_hash
+            );
+        }
+        if self.replication != replication {
+            anyhow::bail!(
+                "{id} ran {} replicate(s) per point but the manifest asks \
+                 for {replication}",
+                self.replication
+            );
+        }
+        if self.shard >= self.shards {
+            anyhow::bail!(
+                "{id} has an out-of-range shard index (expected 0..{})",
+                self.shards
+            );
+        }
+        let expected =
+            shard_point_indices(grid_names.len(), self.shard, self.shards);
+        let got: Vec<usize> = self.points.iter().map(|(i, _)| *i).collect();
+        if got != expected {
+            anyhow::bail!(
+                "{id} covers grid indices {got:?} but this partition \
+                 assigns {expected:?}"
+            );
+        }
+        for (i, p) in &self.points {
+            let name = p.get("name").as_str().unwrap_or("");
+            if name != grid_names[*i] {
+                anyhow::bail!(
+                    "{id}: point at grid index {i} is '{name}' but the \
+                     manifest grid expands to '{}' there",
+                    grid_names[*i]
+                );
+            }
+        }
+        let names: Vec<String> =
+            expected.iter().map(|&i| grid_names[i].clone()).collect();
+        let want = slice_hash(manifest_hash, self.shard, self.shards, &names);
+        if self.slice_hash != want {
+            anyhow::bail!(
+                "{id} slice hash mismatch (file records {}, recomputed \
+                 {want}): the result file is corrupt or was edited",
+                self.slice_hash
+            );
+        }
+        Ok(())
+    }
+}
+
+fn req_str(v: &Value, key: &str) -> anyhow::Result<String> {
+    v.get(key).as_str().map(str::to_string).ok_or_else(|| {
+        anyhow::anyhow!("shard result is missing the string key \"{key}\"")
+    })
+}
+
+fn req_count(v: &Value, key: &str) -> anyhow::Result<usize> {
+    v.get(key).as_u64().map(|u| u as usize).ok_or_else(|| {
+        anyhow::anyhow!(
+            "shard result is missing the non-negative integer key \"{key}\""
+        )
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Resumable file driver
+// ---------------------------------------------------------------------------
+
+/// Canonical file name for shard `shard` (0-based) of `shards` inside an
+/// output directory.
+pub fn shard_file_name(shard: usize, shards: usize) -> String {
+    format!("shard-{:04}-of-{:04}.json", shard + 1, shards)
+}
+
+/// What the resumable driver did for one shard.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardOutcome {
+    /// Ran the shard and wrote its result file.
+    Completed(PathBuf),
+    /// A valid result for this exact manifest + partition already existed
+    /// — skipped without running anything (the resume path).
+    Skipped(PathBuf),
+}
+
+impl ShardOutcome {
+    pub fn path(&self) -> &Path {
+        match self {
+            ShardOutcome::Completed(p) | ShardOutcome::Skipped(p) => p,
+        }
+    }
+}
+
+/// Run shard `shard`/`shards` and write its result under `dir`, unless a
+/// reusable result file is already there.
+///
+/// "Reusable" is proven, not assumed: the existing file must parse, carry
+/// this manifest's hash and these partition coordinates, and pass the
+/// full slice validation. Anything else — corrupt JSON, a different
+/// manifest, a different shard count — is reported on stderr and the
+/// shard is re-run, overwriting the stale file. `force` re-runs
+/// unconditionally.
+pub fn run_shard_to_file(
+    m: &ExperimentManifest,
+    shard: usize,
+    shards: usize,
+    threads: usize,
+    dir: &Path,
+    force: bool,
+) -> anyhow::Result<ShardOutcome> {
+    let path = dir.join(shard_file_name(shard, shards));
+    if !force && path.exists() {
+        match reusable(m, shard, shards, &path) {
+            Ok(()) => return Ok(ShardOutcome::Skipped(path)),
+            Err(e) => eprintln!(
+                "warning: re-running shard {}/{shards}: existing {} is not \
+                 reusable: {e}",
+                shard + 1,
+                path.display()
+            ),
+        }
+    }
+    let result = run_shard(m, shard, shards, threads)?;
+    result.save(&path)?;
+    Ok(ShardOutcome::Completed(path))
+}
+
+fn reusable(
+    m: &ExperimentManifest,
+    shard: usize,
+    shards: usize,
+    path: &Path,
+) -> anyhow::Result<()> {
+    let existing = ShardResult::load(path)?;
+    if existing.shard != shard || existing.shards != shards {
+        anyhow::bail!(
+            "file is shard {}/{} but this run needs shard {}/{shards}",
+            existing.shard + 1,
+            existing.shards,
+            shard + 1
+        );
+    }
+    let grid = m.spec.expand()?;
+    let names: Vec<String> = grid.iter().map(|c| c.name.clone()).collect();
+    existing.validate_against(&m.hash(), m.replication.max(1), &names)
+}
+
+/// Run (or resume) every shard of an `shards`-way partition into `dir`,
+/// in index order. Returns one outcome per shard; count the
+/// [`ShardOutcome::Skipped`] entries to see how much a resume saved.
+pub fn run_all_shards(
+    m: &ExperimentManifest,
+    shards: usize,
+    threads: usize,
+    dir: &Path,
+    force: bool,
+) -> anyhow::Result<Vec<ShardOutcome>> {
+    anyhow::ensure!(shards >= 1, "shard count must be >= 1");
+    let mut outcomes = Vec::with_capacity(shards);
+    for shard in 0..shards {
+        outcomes.push(run_shard_to_file(m, shard, shards, threads, dir, force)?);
+    }
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::SweepSpec;
+
+    fn tiny_manifest() -> ExperimentManifest {
+        let mut spec = SweepSpec {
+            num_requests: 8,
+            quick: true,
+            ..SweepSpec::default()
+        };
+        spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+        ExperimentManifest::new(spec)
+    }
+
+    fn synthetic_result() -> ShardResult {
+        let point = |name: &str| {
+            Value::obj(vec![
+                ("name", Value::str(name)),
+                ("steps", Value::int(3)),
+            ])
+        };
+        let names = vec!["S(D)".to_string()];
+        ShardResult {
+            manifest_hash: "aa".repeat(8),
+            shard: 0,
+            shards: 2,
+            replication: 1,
+            slice_hash: slice_hash(&"aa".repeat(8), 0, 2, &names),
+            points: vec![(0, point("S(D)"))],
+        }
+    }
+
+    #[test]
+    fn shard_result_roundtrips_through_json() {
+        let r = synthetic_result();
+        let back = ShardResult::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.to_json().to_string(), r.to_json().to_string());
+        assert_eq!(back.shard, 0);
+        assert_eq!(back.shards, 2);
+        assert_eq!(back.points.len(), 1);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_results() {
+        let cases = [
+            (r#"{"shard":0}"#, "format"),
+            (r#"{"format":"shard-result-v9"}"#, "shard-result-v1"),
+            (
+                r#"{"format":"shard-result-v1","points":3}"#,
+                "array",
+            ),
+            (
+                r#"{"format":"shard-result-v1","points":[{"index":0,"point":{}}]}"#,
+                "name",
+            ),
+            (
+                r#"{"format":"shard-result-v1","points":[]}"#,
+                "manifest_hash",
+            ),
+        ];
+        for (src, needle) in cases {
+            let v = json::parse(src).unwrap();
+            let e = ShardResult::from_json(&v).unwrap_err().to_string();
+            assert!(e.contains(needle), "{src}: {e}");
+        }
+    }
+
+    #[test]
+    fn validation_catches_foreign_and_tampered_results() {
+        let names = vec!["S(D)".to_string(), "M(D)".to_string()];
+        let hash = "aa".repeat(8);
+        let mut r = synthetic_result();
+        r.slice_hash = slice_hash(&hash, 0, 2, &["S(D)".to_string()]);
+        r.validate_against(&hash, 1, &names).unwrap();
+        // wrong manifest
+        let e = r.validate_against("bb", 1, &names).unwrap_err().to_string();
+        assert!(e.contains("different manifest"), "{e}");
+        // wrong replication
+        let e = r.validate_against(&hash, 3, &names).unwrap_err().to_string();
+        assert!(e.contains("replicate"), "{e}");
+        // tampered point name
+        let mut bad = r.clone();
+        bad.points[0].1 = Value::obj(vec![("name", Value::str("M(D)"))]);
+        let e = bad
+            .validate_against(&hash, 1, &names)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("expands to"), "{e}");
+        // tampered slice hash
+        let mut bad = r.clone();
+        bad.slice_hash = "0".repeat(16);
+        let e = bad
+            .validate_against(&hash, 1, &names)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("slice hash"), "{e}");
+        // wrong index set
+        let mut bad = r.clone();
+        bad.points[0].0 = 1;
+        let e = bad
+            .validate_against(&hash, 1, &names)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("assigns"), "{e}");
+    }
+
+    #[test]
+    fn run_shard_single_partition_matches_plain_sweep() {
+        let m = tiny_manifest();
+        let r = run_shard(&m, 0, 1, 2).unwrap();
+        assert_eq!(r.points.len(), 2);
+        let cfgs = m.spec.expand().unwrap();
+        let plain = run_sweep(&cfgs, 1).unwrap();
+        for ((gi, point), p) in r.points.iter().zip(&plain.points) {
+            assert_eq!(
+                point.to_string(),
+                point_json(p).to_string(),
+                "R=1 shard point {gi} must byte-match the plain sweep"
+            );
+        }
+        // empty slice: more shards than points
+        let empty = run_shard(&m, 2, 3, 1).unwrap();
+        assert!(empty.points.is_empty());
+        assert!(run_shard(&m, 3, 3, 1).is_err(), "index out of range");
+    }
+
+    #[test]
+    fn replication_attaches_stats_and_keeps_representative() {
+        let mut m = tiny_manifest();
+        m.replication = 3;
+        let r = run_shard(&m, 0, 1, 4).unwrap();
+        let single = {
+            let mut one = tiny_manifest();
+            one.replication = 1;
+            run_shard(&one, 0, 1, 1).unwrap()
+        };
+        for ((_, rep_pt), (_, single_pt)) in r.points.iter().zip(&single.points)
+        {
+            let stats = rep_pt.get("replication");
+            assert_eq!(stats.get("r").as_i64(), Some(3));
+            let tps = stats.get("metrics").get("throughput_tps");
+            assert!(tps.get("mean").as_f64().is_some());
+            assert!(tps.get("std").as_f64().unwrap() >= 0.0);
+            assert!(tps.get("ci95").as_f64().unwrap() >= 0.0);
+            assert!(
+                tps.get("min").as_f64().unwrap()
+                    <= tps.get("max").as_f64().unwrap()
+            );
+            // stripping the replication key leaves the R=1 bytes
+            let mut stripped = rep_pt.clone();
+            if let Value::Obj(map) = &mut stripped {
+                map.remove("replication");
+            }
+            assert_eq!(
+                stripped.to_string(),
+                single_pt.to_string(),
+                "replicate 0 must be the R=1 representative"
+            );
+        }
+    }
+
+    #[test]
+    fn file_driver_resumes_and_rejects_stale_files() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("target/test-sweep-shards/unit-driver");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = tiny_manifest();
+        let first = run_shard_to_file(&m, 0, 2, 1, &dir, false).unwrap();
+        assert!(matches!(first, ShardOutcome::Completed(_)));
+        let second = run_shard_to_file(&m, 0, 2, 1, &dir, false).unwrap();
+        assert!(matches!(second, ShardOutcome::Skipped(_)), "{second:?}");
+        // --force re-runs
+        let forced = run_shard_to_file(&m, 0, 2, 1, &dir, true).unwrap();
+        assert!(matches!(forced, ShardOutcome::Completed(_)));
+        // a different manifest refuses to reuse the file and re-runs
+        let mut other = tiny_manifest();
+        other.spec.seed ^= 7;
+        let rerun = run_shard_to_file(&other, 0, 2, 1, &dir, false).unwrap();
+        assert!(matches!(rerun, ShardOutcome::Completed(_)));
+        // corrupt file: warn + re-run rather than trust it
+        std::fs::write(dir.join(shard_file_name(0, 2)), "{oops").unwrap();
+        let healed = run_shard_to_file(&other, 0, 2, 1, &dir, false).unwrap();
+        assert!(matches!(healed, ShardOutcome::Completed(_)));
+        ShardResult::load(&dir.join(shard_file_name(0, 2))).unwrap();
+    }
+}

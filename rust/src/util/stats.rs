@@ -121,6 +121,34 @@ impl Online {
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
+    /// Unbiased (Bessel-corrected) sample variance, `m2 / (n - 1)`.
+    /// Clamped at zero: catastrophic cancellation can leave `m2` a hair
+    /// negative for near-constant samples, and a NaN std would poison
+    /// every downstream aggregate.
+    pub fn var_sample(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).max(0.0)
+        }
+    }
+    pub fn std_sample(&self) -> f64 {
+        self.var_sample().sqrt()
+    }
+    /// Standard error of the mean, `s / sqrt(n)`.
+    pub fn std_err(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std_sample() / (self.n as f64).sqrt()
+        }
+    }
+    /// Half-width of the normal-approximation 95% confidence interval on
+    /// the mean (`1.96 * std_err`). Zero for n < 2 — with one replicate
+    /// there is no spread estimate, not an infinitely tight one.
+    pub fn ci95_half_width(&self) -> f64 {
+        1.96 * self.std_err()
+    }
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -210,6 +238,12 @@ impl SampleSet {
 
     pub fn count(&self) -> u64 {
         self.online.count()
+    }
+
+    /// The exact Welford accumulator behind this set (mean/std/stderr are
+    /// always exact regardless of reservoir drops).
+    pub fn online(&self) -> &Online {
+        &self.online
     }
 
     /// True iff percentiles are exact (no sample has been dropped).
@@ -409,6 +443,39 @@ mod tests {
         assert_eq!(s.min, 0.0);
         assert_eq!(s.max, 999.0);
         assert!((s.p50 - 500.0).abs() < 150.0, "p50={}", s.p50);
+    }
+
+    #[test]
+    fn sample_statistics_and_ci() {
+        let mut o = Online::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            o.push(x);
+        }
+        // population var = 4, sample var = 32/7
+        assert!((o.var() - 4.0).abs() < 1e-12);
+        assert!((o.var_sample() - 32.0 / 7.0).abs() < 1e-12);
+        assert!((o.std_err() - (32.0 / 7.0f64).sqrt() / 8.0f64.sqrt()).abs() < 1e-12);
+        assert!((o.ci95_half_width() - 1.96 * o.std_err()).abs() < 1e-15);
+        // degenerate cases: no spread estimate, not NaN
+        let mut one = Online::new();
+        one.push(3.0);
+        assert_eq!(one.var_sample(), 0.0);
+        assert_eq!(one.ci95_half_width(), 0.0);
+        assert_eq!(Online::new().std_err(), 0.0);
+        // constant samples never go negative-variance
+        let mut c = Online::new();
+        for _ in 0..1000 {
+            c.push(0.1 + 0.2); // classic fp non-exact value
+        }
+        assert!(c.var_sample() >= 0.0);
+        assert!(!c.std_sample().is_nan());
+        // the SampleSet exposes its exact accumulator
+        let mut s = SampleSet::new(4);
+        for x in [1.0, 2.0, 3.0] {
+            s.push(x);
+        }
+        assert_eq!(s.online().count(), 3);
+        assert!((s.online().mean() - 2.0).abs() < 1e-12);
     }
 
     #[test]

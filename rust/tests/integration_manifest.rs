@@ -1,0 +1,299 @@
+//! Distributed-sweep acceptance (ISSUE 9): merging the shard results of
+//! ANY partition of a manifest reproduces the single-process aggregate
+//! byte-for-byte; resumes skip completed shard files; foreign, corrupt,
+//! or tampered shard files are rejected with named errors; and seed
+//! replication is deterministic, with R=1 byte-compatible with the
+//! replication-free path.
+
+use std::path::PathBuf;
+
+use llmservingsim::sweep::{
+    merge, merge_files, run_all_shards, run_manifest, run_shard,
+    run_shard_to_file, shard_file_name, ExperimentManifest, ShardOutcome,
+    SweepSpec,
+};
+use llmservingsim::util::json::Value;
+
+/// The 2 presets x 2 rates x 2 routers CI grid (8 points) from
+/// `integration_sweep.rs`, wrapped in a manifest. 7 shards deliberately
+/// do not divide 8 points.
+fn grid_manifest() -> ExperimentManifest {
+    let mut spec = SweepSpec {
+        num_requests: 12,
+        quick: true,
+        seed: 0xDE75,
+        baseline: Some("S(D)|rate=10|router=round-robin".into()),
+        ..SweepSpec::default()
+    };
+    spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+    spec.axes.rates = vec![10.0, 40.0];
+    spec.axes.routers = vec!["round-robin".into(), "least-outstanding".into()];
+    ExperimentManifest::new(spec)
+}
+
+/// A 2-point manifest for the replication tests (each point runs R times).
+fn small_manifest(replication: usize) -> ExperimentManifest {
+    let mut spec = SweepSpec {
+        num_requests: 10,
+        quick: true,
+        seed: 0xC0FE,
+        ..SweepSpec::default()
+    };
+    spec.axes.presets = vec!["S(D)".into(), "M(D)".into()];
+    let mut m = ExperimentManifest::new(spec);
+    m.replication = replication;
+    m
+}
+
+/// Fresh per-test scratch directory under target/.
+fn test_dir(sub: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target/test-sweep-shards/integration")
+        .join(sub);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn merge_of_any_partition_is_byte_identical_to_single_process() {
+    let m = grid_manifest();
+    assert_eq!(m.spec.grid_size(), 8, "the CI grid is 2x2x2");
+    let reference = run_manifest(&m, 4).unwrap().to_string();
+
+    // N = 1 (trivial), 2 (even), 7 (does not divide 8 — sizes [2,1,..,1]).
+    for shards in [1usize, 2, 7] {
+        for threads in [1usize, 8] {
+            let mut results: Vec<_> = (0..shards)
+                .map(|s| run_shard(&m, s, shards, threads).unwrap())
+                .collect();
+            // Merge must not care about arrival order of the results.
+            results.reverse();
+            let merged = merge(&m, &results).unwrap().to_string();
+            assert_eq!(
+                merged, reference,
+                "merge of {shards} shard(s) at {threads} worker(s) \
+                 diverged from the single-process aggregate"
+            );
+        }
+    }
+}
+
+#[test]
+fn resume_skips_completed_shards_and_reproduces_the_aggregate() {
+    let m = grid_manifest();
+    let dir = test_dir("resume");
+    let shards = 3;
+    let reference = run_manifest(&m, 4).unwrap().to_string();
+
+    // "Interrupt" after 2 of 3 shards: only their result files exist.
+    for s in 0..2 {
+        let out = run_shard_to_file(&m, s, shards, 2, &dir, false).unwrap();
+        assert!(matches!(out, ShardOutcome::Completed(_)));
+    }
+    assert!(!dir.join(shard_file_name(2, shards)).exists());
+
+    // Resume: the completed shards are skipped, the missing one runs.
+    let outcomes = run_all_shards(&m, shards, 2, &dir, false).unwrap();
+    let skipped = outcomes
+        .iter()
+        .filter(|o| matches!(o, ShardOutcome::Skipped(_)))
+        .count();
+    assert_eq!(skipped, 2, "resume must reuse the completed shard files");
+    assert!(matches!(outcomes[2], ShardOutcome::Completed(_)));
+
+    let files: Vec<PathBuf> =
+        outcomes.iter().map(|o| o.path().to_path_buf()).collect();
+    let merged = merge_files(&m, &files).unwrap().to_string();
+    assert_eq!(
+        merged, reference,
+        "resumed run diverged from the uninterrupted aggregate"
+    );
+
+    // A second resume finds everything complete and runs nothing.
+    let again = run_all_shards(&m, shards, 2, &dir, false).unwrap();
+    assert!(
+        again.iter().all(|o| matches!(o, ShardOutcome::Skipped(_))),
+        "a fully completed directory must be a pure skip"
+    );
+
+    // --force re-runs despite valid files, and still reproduces the bytes.
+    let forced = run_all_shards(&m, shards, 2, &dir, true).unwrap();
+    assert!(forced.iter().all(|o| matches!(o, ShardOutcome::Completed(_))));
+    let files: Vec<PathBuf> =
+        forced.iter().map(|o| o.path().to_path_buf()).collect();
+    assert_eq!(merge_files(&m, &files).unwrap().to_string(), reference);
+}
+
+#[test]
+fn merge_rejects_foreign_missing_duplicate_and_mixed_partitions() {
+    let m = grid_manifest();
+    let s0 = run_shard(&m, 0, 2, 2).unwrap();
+    let s1 = run_shard(&m, 1, 2, 2).unwrap();
+
+    // Foreign manifest: same axes, different seed → different hash.
+    let mut foreign = grid_manifest();
+    foreign.spec.seed += 1;
+    let f0 = run_shard(&foreign, 0, 2, 2).unwrap();
+    let err = merge(&m, &[f0, s1.clone()]).unwrap_err().to_string();
+    assert!(
+        err.contains("different manifest"),
+        "foreign-manifest error should name the cause, got: {err}"
+    );
+
+    // Missing shard 2/2.
+    let err = merge(&m, &[s0.clone()]).unwrap_err().to_string();
+    assert!(
+        err.contains("missing shard result(s) 2/2"),
+        "missing-shard error should name the gap, got: {err}"
+    );
+
+    // Duplicate shard 1/2.
+    let err = merge(&m, &[s0.clone(), s0.clone()]).unwrap_err().to_string();
+    assert!(
+        err.contains("claim shard 1/2"),
+        "duplicate-shard error should name the shard, got: {err}"
+    );
+
+    // Results from two different partitions (…/2 and …/3).
+    let t0 = run_shard(&m, 0, 3, 2).unwrap();
+    let err = merge(&m, &[t0, s1.clone()]).unwrap_err().to_string();
+    assert!(
+        err.contains("different partitions"),
+        "mixed-partition error should name the cause, got: {err}"
+    );
+
+    // Tampered slice hash on an otherwise valid result.
+    let mut bad = s0;
+    bad.slice_hash = "0".repeat(16);
+    let err = merge(&m, &[bad, s1]).unwrap_err().to_string();
+    assert!(
+        err.contains("slice hash mismatch"),
+        "tampered result should fail the slice-hash recheck, got: {err}"
+    );
+
+    // Nothing at all.
+    let err = merge(&m, &[]).unwrap_err().to_string();
+    assert!(err.contains("no shard results"), "got: {err}");
+}
+
+#[test]
+fn merge_files_rejects_truncated_and_edited_shard_files() {
+    let m = grid_manifest();
+    let dir = test_dir("corrupt");
+    let outcomes = run_all_shards(&m, 2, 2, &dir, false).unwrap();
+    let files: Vec<PathBuf> =
+        outcomes.iter().map(|o| o.path().to_path_buf()).collect();
+
+    // Truncate the first file mid-JSON: the error must carry the path.
+    let bytes = std::fs::read(&files[0]).unwrap();
+    std::fs::write(&files[0], &bytes[..bytes.len() / 2]).unwrap();
+    let err = merge_files(&m, &files).unwrap_err().to_string();
+    assert!(
+        err.contains(files[0].file_name().unwrap().to_str().unwrap()),
+        "truncated-file error should carry the path, got: {err}"
+    );
+
+    // An edited-but-parseable file fails the slice hash, not the parser;
+    // swap one hex digit of the recorded slice hash.
+    let text = String::from_utf8(bytes).unwrap();
+    let edited = if text.contains("\"slice_hash\": \"a") {
+        text.replace("\"slice_hash\": \"a", "\"slice_hash\": \"b")
+    } else {
+        text.replace("\"slice_hash\": \"", "\"slice_hash\": \"a")
+    };
+    std::fs::write(&files[0], edited).unwrap();
+    let err = merge_files(&m, &files).unwrap_err().to_string();
+    assert!(
+        err.contains("slice hash mismatch") || err.contains("corrupt"),
+        "edited file should fail the slice-hash recheck, got: {err}"
+    );
+
+    // The resumable driver refuses to trust the bad file: it re-runs the
+    // shard (with a warning) instead of skipping.
+    let out = run_shard_to_file(&m, 0, 2, 2, &dir, false).unwrap();
+    assert!(
+        matches!(out, ShardOutcome::Completed(_)),
+        "a corrupt file must be re-run, not reused"
+    );
+    assert_eq!(
+        merge_files(&m, &files).unwrap().to_string(),
+        run_manifest(&m, 4).unwrap().to_string(),
+        "after the repair re-run the aggregate must match single-process"
+    );
+}
+
+#[test]
+fn replication_is_deterministic_and_reports_spread_statistics() {
+    let m3 = small_manifest(3);
+
+    // Property: same manifest + seed ⇒ byte-identical aggregate, at any
+    // worker count (replicates are scheduled like grid points).
+    let a = run_manifest(&m3, 2).unwrap().to_string();
+    let b = run_manifest(&m3, 8).unwrap().to_string();
+    assert_eq!(a, b, "replicated aggregate must not depend on threads");
+
+    let agg = run_manifest(&m3, 2).unwrap();
+    assert_eq!(agg.to_string(), a, "replicated aggregate must be stable");
+    assert_eq!(agg.get("replication").as_i64(), Some(3));
+
+    let points = agg.get("points").as_arr().unwrap();
+    assert_eq!(points.len(), 2);
+    for p in points {
+        let rep = p.get("replication");
+        assert_eq!(rep.get("r").as_i64(), Some(3));
+        for key in ["ttft_mean_ms", "tpot_mean_ms", "itl_mean_ms", "throughput_tps", "makespan_s"] {
+            let s = rep.get("metrics").get(key);
+            let mean = s.get("mean").as_f64().unwrap();
+            let std = s.get("std").as_f64().unwrap();
+            let ci = s.get("ci95").as_f64().unwrap();
+            let (min, max) = (
+                s.get("min").as_f64().unwrap(),
+                s.get("max").as_f64().unwrap(),
+            );
+            assert!(mean.is_finite() && std >= 0.0 && ci >= 0.0);
+            assert!(min <= mean + 1e-9 && mean <= max + 1e-9);
+            // ci95 = 1.96 * std / sqrt(r)
+            let want = 1.96 * std / (3f64).sqrt();
+            assert!((ci - want).abs() <= 1e-9 * want.max(1.0));
+            assert!(
+                s.get("p50").as_f64().unwrap().is_finite(),
+                "median must come from the reservoir"
+            );
+        }
+    }
+}
+
+#[test]
+fn r1_point_records_are_byte_identical_to_replicated_representatives() {
+    // Replicate 0 runs on the manifest seed, so stripping the
+    // `replication` key from an R=3 point must reproduce the R=1 point
+    // bytes exactly.
+    let m1 = small_manifest(1);
+    let m3 = small_manifest(3);
+    let agg1 = run_manifest(&m1, 2).unwrap();
+    let agg3 = run_manifest(&m3, 2).unwrap();
+
+    assert!(
+        agg1.get("replication").is_null(),
+        "R=1 aggregates must not carry a replication key"
+    );
+    let p1 = agg1.get("points").as_arr().unwrap();
+    let p3 = agg3.get("points").as_arr().unwrap();
+    assert_eq!(p1.len(), p3.len());
+    for (one, three) in p1.iter().zip(p3) {
+        assert!(one.get("replication").is_null());
+        let mut stripped = three.clone();
+        if let Value::Obj(map) = &mut stripped {
+            assert!(
+                map.remove("replication").is_some(),
+                "R=3 points must carry replication statistics"
+            );
+        }
+        assert_eq!(
+            stripped.to_string(),
+            one.to_string(),
+            "replicate 0 must reproduce the replication-free point bytes"
+        );
+    }
+}

@@ -5,7 +5,10 @@
 
 use llmservingsim::config::{PerfBackend, SimConfig};
 use llmservingsim::coordinator::run_config;
-use llmservingsim::sweep::{run_sweep, summarize, sweep_json, SweepSpec};
+use llmservingsim::sweep::{
+    run_manifest, run_sweep, summarize, sweep_json, ExperimentManifest,
+    SweepSpec,
+};
 
 /// A 2 presets x 2 rates x 2 routers grid (8 points), small enough for CI.
 fn grid_spec() -> SweepSpec {
@@ -107,6 +110,36 @@ fn sweep_summary_and_json_cover_the_grid() {
         v.get("summary").get("baseline").as_str(),
         Some(baseline),
         "summary JSON must carry the baseline"
+    );
+}
+
+#[test]
+fn manifest_r1_reproduces_the_plain_sweep_bytes() {
+    // No-regression gate for the manifest path (ISSUE 9): with R=1 the
+    // aggregate's `points` and `summary` sections must be byte-identical
+    // to what the pre-manifest sweep pipeline emits for the same spec.
+    let mut spec = grid_spec();
+    spec.baseline = Some("S(D)|rate=10|router=round-robin".into());
+
+    let cfgs = spec.expand().unwrap();
+    let outcome = run_sweep(&cfgs, 4).unwrap();
+    let summary = summarize(&outcome, spec.baseline.as_deref()).unwrap();
+    let plain = sweep_json(&outcome, &summary);
+
+    let aggregate = run_manifest(&ExperimentManifest::new(spec), 4).unwrap();
+    assert_eq!(
+        aggregate.get("points").to_string(),
+        plain.get("points").to_string(),
+        "R=1 manifest points diverged from the classic sweep"
+    );
+    assert_eq!(
+        aggregate.get("summary").to_string(),
+        plain.get("summary").to_string(),
+        "R=1 manifest summary diverged from the classic sweep"
+    );
+    assert!(
+        aggregate.get("replication").is_null(),
+        "R=1 aggregates must not carry a replication key"
     );
 }
 
