@@ -3,17 +3,24 @@
 //! Usage:
 //!
 //! ```text
-//! simlint --check <path>... [--baseline <file>] [--report <file>]
+//! simlint --check <path>... [--baseline <file>] [--report <file>] [--format text|json]
 //! simlint --check <path>... --update-baseline [--baseline <file>]
 //! ```
 //!
 //! * `--check <path>` — one or more files or directories to scan (`.rs`
 //!   files, recursively). CI runs `--check rust/src` from the repo root.
+//!   All paths are analyzed as **one** set: the flow-aware rules (H01/H02
+//!   call-graph reachability, P01 registry/doc consistency) see every file
+//!   together, with README.md/DESIGN.md discovered by walking up from the
+//!   first root.
 //! * `--baseline <file>` — grandfather file; defaults to `simlint.allow`
 //!   next to the first checked root (`rust/simlint.allow` for
 //!   `--check rust/src`). A missing baseline is treated as empty.
 //! * `--report <file>` — write the full findings report (including
 //!   baselined findings, marked as such) to a file for CI artifacts.
+//! * `--format text|json` — report format (default `text`). `json` emits a
+//!   sorted-key `simlint/v2` document with a stable `id` per finding
+//!   (FNV-1a over rule/path/line-text), for machine consumption.
 //! * `--update-baseline` — rewrite the baseline from the current findings
 //!   and exit 0. The serializer is canonical (sorted, deduplicated), so
 //!   running it twice is byte-identical.
@@ -22,14 +29,21 @@
 //! findings, **2** usage or I/O error.
 
 use llmservingsim::lint::baseline::{format_baseline, Baseline};
-use llmservingsim::lint::{scan_source, scan_tree, Finding};
+use llmservingsim::lint::{analyze_paths, report_json, Finding};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+
+#[derive(PartialEq)]
+enum Format {
+    Text,
+    Json,
+}
 
 struct Args {
     roots: Vec<PathBuf>,
     baseline: Option<PathBuf>,
     report: Option<PathBuf>,
+    format: Format,
     update_baseline: bool,
 }
 
@@ -38,6 +52,7 @@ fn parse_args(argv: &[String]) -> Result<Args, String> {
         roots: Vec::new(),
         baseline: None,
         report: None,
+        format: Format::Text,
         update_baseline: false,
     };
     let mut i = 0usize;
@@ -54,6 +69,14 @@ fn parse_args(argv: &[String]) -> Result<Args, String> {
                 i += 1;
                 let v = argv.get(i).ok_or("--report needs a path")?;
                 args.report = Some(PathBuf::from(v));
+            }
+            "--format" => {
+                i += 1;
+                match argv.get(i).map(String::as_str) {
+                    Some("text") => args.format = Format::Text,
+                    Some("json") => args.format = Format::Json,
+                    _ => return Err("--format needs `text` or `json`".to_string()),
+                }
             }
             "--help" | "-h" => return Err("help".to_string()),
             flag if flag.starts_with('-') => {
@@ -77,17 +100,9 @@ fn default_baseline(roots: &[PathBuf]) -> PathBuf {
 }
 
 fn scan_roots(roots: &[PathBuf]) -> std::io::Result<Vec<Finding>> {
-    let mut findings = Vec::new();
-    for root in roots {
-        if root.is_dir() {
-            findings.extend(scan_tree(root)?);
-        } else {
-            let source = std::fs::read_to_string(root)?;
-            let rel = root.to_string_lossy().replace('\\', "/");
-            findings.extend(scan_source(&rel, &source));
-        }
-    }
-    Ok(findings)
+    // One analysis over the union: the flow-aware rules need the cross-file
+    // call graph, so roots are not scanned independently.
+    analyze_paths(roots)
 }
 
 fn render_report(fresh: &[Finding], baselined: &[Finding], files_note: &str) -> String {
@@ -119,7 +134,7 @@ fn run(argv: &[String]) -> Result<ExitCode, String> {
         Ok(a) => a,
         Err(e) if e == "help" => {
             println!(
-                "simlint --check <path>... [--baseline <file>] [--report <file>] [--update-baseline]"
+                "simlint --check <path>... [--baseline <file>] [--report <file>] [--format text|json] [--update-baseline]"
             );
             return Ok(ExitCode::SUCCESS);
         }
@@ -165,10 +180,26 @@ fn run(argv: &[String]) -> Result<ExitCode, String> {
         baseline.len(),
         if baseline.len() == 1 { "y" } else { "ies" },
     );
-    let report = render_report(&fresh, &baselined, &files_note);
+    let report = match args.format {
+        Format::Text => render_report(&fresh, &baselined, &files_note),
+        Format::Json => {
+            // The JSON report carries every finding; baselined ones are
+            // still distinguishable by re-checking against the baseline.
+            let mut all: Vec<Finding> = Vec::with_capacity(fresh.len() + baselined.len());
+            all.extend(fresh.iter().cloned());
+            all.extend(baselined.iter().cloned());
+            all.sort_by(|a, b| {
+                (a.path.as_str(), a.line, a.col, a.rule)
+                    .cmp(&(b.path.as_str(), b.line, b.col, b.rule))
+            });
+            report_json(&all)
+        }
+    };
     if let Some(path) = &args.report {
         std::fs::write(path, &report)
             .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+    } else if args.format == Format::Json {
+        println!("{report}");
     }
 
     if fresh.is_empty() {

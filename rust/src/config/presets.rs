@@ -113,6 +113,8 @@ pub fn with_prefix_cache(mut cfg: SimConfig, scope: CacheScope) -> SimConfig {
 pub fn multi_tenant_bursty(mut cfg: SimConfig, tenants: usize, rate: f64) -> SimConfig {
     cfg.name = format!("{}+MT", cfg.name);
     cfg.workload.traffic = Traffic::for_name("mmpp", rate)
+        // simlint: allow(S01) — literal name of a built-in source; P01 keeps
+        // the builtin_names list and this call surface in sync
         .expect("mmpp is a built-in traffic source");
     cfg.workload.tenants = TenantSpec::mix(tenants.max(1));
     for i in &mut cfg.instances {
@@ -178,6 +180,8 @@ pub fn chaos_soak() -> SimConfig {
     cfg.cluster.chaos = super::ChaosConfig {
         horizon_ms: 5_000,
         ..super::ChaosConfig::profile("heavy")
+            // simlint: allow(S01) — literal name of a built-in profile; P01
+            // keeps the profile_names list and this call surface in sync
             .expect("heavy is a built-in chaos profile")
     };
     cfg

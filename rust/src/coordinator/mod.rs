@@ -874,6 +874,10 @@ impl Simulation {
         }
     }
 
+    // simlint: cold — control-plane path: runs once per controller tick
+    // (milliseconds apart), not per event, and allocates by design (cluster
+    // snapshots, instance construction on scale-up). The H01 allocation-free
+    // contract covers the per-event/per-step data plane only.
     fn on_controller_tick(&mut self, now: Nanos) {
         let view = self.cluster_view(now);
         let waiting = view.total_waiting();
@@ -1203,6 +1207,8 @@ impl Simulation {
         self.pending[i] = None; // any queued StepComplete is now stale
         let displaced = self.instances[i].evacuate();
         self.instances[i].set_lifecycle(Lifecycle::Stopped);
+        // simlint: allow(H01) — failure path: runs once per injected fault,
+        // not per event, and the timeline note needs an owned string
         self.note_timeline(now, "fail", Some(i), format!("rerouted={}", displaced.len()));
         for req in displaced {
             self.dispatch_request(req, now);

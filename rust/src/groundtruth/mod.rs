@@ -137,6 +137,9 @@ impl ExecPerfModel {
 }
 
 impl PerfModel for ExecPerfModel {
+    // simlint: cold — ground-truth mode executes real kernels through PJRT
+    // (milliseconds per op); allocation on this path is irrelevant next to
+    // the execution itself, and the events/sec contract never applies to it.
     fn op_latency(&self, inv: OpInvocation) -> Nanos {
         let art = self
             .nearest(inv)

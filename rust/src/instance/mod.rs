@@ -336,6 +336,8 @@ impl ServingInstance {
     /// like a preemption.
     pub fn evacuate(&mut self) -> Vec<Request> {
         // simlint: allow(D04) — ids are collected then sort_unstable'd before any use
+        // simlint: allow(H01) — evacuation runs once per instance failure or
+        // drain, not per step; the id snapshot decouples iteration from removal
         let mut ids: Vec<u64> = self.seqs.keys().copied().collect();
         ids.sort_unstable();
         let mut out = Vec::with_capacity(ids.len());
@@ -540,6 +542,9 @@ impl ServingInstance {
                     // simlint: allow(S01) — id is in running, and running ids always have a seqs entry
                     let st = self.seqs.remove(&id).expect("prefill seq vanished");
                     if has_cache {
+                        // simlint: allow(H02) — the prefix cache needs its own
+                        // copy (the original moves into the KV handoff below);
+                        // taken only at prefill completion with a cache attached
                         out.prefill_done.push(st.req.clone());
                     }
                     let kv_bytes =
@@ -553,6 +558,9 @@ impl ServingInstance {
                     // simlint: allow(S01) — id is in running, and running ids always have a seqs entry
                     let s = self.seqs.get_mut(&id).unwrap();
                     if has_cache {
+                        // simlint: allow(H02) — prefix-cache insertion copy,
+                        // taken once per request at prefill completion and only
+                        // with a cache attached; the sequence itself keeps `req`
                         out.prefill_done.push(s.req.clone());
                     }
                     s.phase = Phase::Decode { generated: 1 };
@@ -607,6 +615,9 @@ impl ServingInstance {
                 self.blocks.blocks_for(need) > total
             })
             .copied()
+            // simlint: allow(H01) — rejection list: empty in any sane config
+            // (an empty collect never allocates); only requests too large for
+            // the whole pool ever populate it
             .collect();
         for id in impossible {
             log::error!(
@@ -784,6 +795,9 @@ impl ServingInstance {
                 let skew = outcome.skew();
                 // Experts partitioned round-robin over EP groups; the layer
                 // waits for the slowest group.
+                // simlint: allow(H01) — `ep`-sized (a handful of groups), MoE
+                // pricing only; hoisting would need interior mutability on a
+                // `&self` pricing path, which costs more than the allocation
                 let mut group_cost = vec![0u64; ep as usize];
                 for (e, &tok) in outcome.tokens_per_expert.iter().enumerate() {
                     if tok == 0 {

@@ -1,0 +1,1161 @@
+//! Flow-aware analysis: item-level parse, call graph, and the H/E/P rules.
+//!
+//! The per-line rules in [`super::rules`] see single findings; this module
+//! sees *structure*. It builds, from the same token stream the scanner
+//! already produces:
+//!
+//! * an **item-level parse** — `impl`/`trait` blocks (with their self-type)
+//!   and `fn` definitions with body token ranges;
+//! * a **cross-file symbol table** — every function keyed by bare name and
+//!   by `Type::name`;
+//! * a **call graph** — call sites extracted from each body (`foo(…)`,
+//!   `.foo(…)`, `Type::foo(…)`), resolved conservatively by name: a call
+//!   may reach *every* same-named function in the scanned set, so
+//!   reachability over-approximates (flags more, never less);
+//! * a **hot set** — functions reachable from the hot roots in
+//!   [`HOT_ROOTS`] (`Simulation::handle_event`, `SimDriver::step`,
+//!   `ServingInstance::begin_step`, the `EventQueue` push/pop surface).
+//!
+//! On top of that sit three rule families:
+//!
+//! * **H01** — allocation constructors (`Vec::new`, `vec!`, `to_vec`,
+//!   `collect`, `format!`, `String::from`, `Box::new`) in any function
+//!   reachable from a hot root. PR 6 made the event core allocation-free;
+//!   H01 statically keeps it that way. Known-amortized scratch-buffer
+//!   sites carry `// simlint: allow(H01) — <reason>`; whole cold-by-design
+//!   functions (diagnostics, teardown) can opt out of the hot set with
+//!   `// simlint: cold — <reason>` directly above the `fn`.
+//! * **H02** — `.clone()` on `Request`/batch-state values ([`H02_TYPES`])
+//!   in a hot function. The serving loop moves requests; clones are the
+//!   bug class PR 6 eliminated.
+//! * **E01** — a wildcard `_ =>` arm in a `match` whose patterns mention a
+//!   core enum ([`CORE_ENUMS`]), inside a core module. Adding an `Event`
+//!   or `ClusterAction` variant must fail the lint, not fall through
+//!   silently. (A match consisting *only* of `_ =>` carries no enum path
+//!   in its patterns and is invisible to this rule — acceptable, since
+//!   such a match cannot silently lose a new variant it never named.)
+//! * **P01** — registry/doc consistency: every built-in name in a
+//!   [`FAMILIES`] definition site (a `register_*("name", …)` call or the
+//!   family's canonical `*_names()` literal list) must appear in that
+//!   family's companion functions (the match arms behind `from_str`,
+//!   `for_name`, `preset`, `profile`, `by_name`, …) and in README.md /
+//!   DESIGN.md. The candidate-list errors and the `presets` listing
+//!   enumerate the live registry at runtime, so they cannot drift — the
+//!   statically checkable surfaces are exactly the companion-function
+//!   arms and the docs.
+
+use super::rules::typed_symbols;
+use super::scanner::{ScanResult, Token, TokenKind};
+use super::{Finding, RuleId};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Reachability roots: the event-core entry points. `(impl type, fn name)`.
+pub const HOT_ROOTS: &[(&str, &str)] = &[
+    ("Simulation", "handle_event"),
+    ("SimDriver", "step"),
+    ("ServingInstance", "begin_step"),
+    ("EventQueue", "schedule_at"),
+    ("EventQueue", "schedule_in"),
+    ("EventQueue", "pop"),
+];
+
+/// Enums whose matches must stay wildcard-free in core modules (E01):
+/// the event vocabulary, controller actions, the operator vocabulary,
+/// and the terminal request/instance lifecycle states.
+pub const CORE_ENUMS: &[&str] = &[
+    "Event",
+    "ClusterAction",
+    "OpKind",
+    "Phase",
+    "Lifecycle",
+];
+
+/// Request/batch-state types whose `.clone()` is banned on hot paths (H02).
+pub const H02_TYPES: &[&str] = &["Request", "SeqState", "StepOutcome", "KvHandoff"];
+
+// ---------------------------------------------------------------------------
+// Item-level parse
+// ---------------------------------------------------------------------------
+
+/// One parsed function definition.
+#[derive(Debug, Clone)]
+pub struct FnDef {
+    /// Index into the scanned file list.
+    pub file: usize,
+    /// Enclosing `impl`/`trait` self-type, if any.
+    pub qual: Option<String>,
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Token indices of the body braces `[open, close]`, if the fn has one.
+    pub body: Option<(usize, usize)>,
+    /// Marked `// simlint: cold — <reason>`: excluded from the hot set and
+    /// from propagation through it.
+    pub is_cold: bool,
+    pub in_test: bool,
+}
+
+impl FnDef {
+    /// `Type::name` or bare `name`, for messages.
+    pub fn display(&self) -> String {
+        match &self.qual {
+            Some(q) => format!("{q}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// Index of the punct closing the bracket opened at `open`.
+fn matching_close(toks: &[Token], open: usize, open_c: char, close_c: char) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < toks.len() {
+        if toks[j].is_punct(open_c) {
+            depth += 1;
+        } else if toks[j].is_punct(close_c) {
+            depth = depth.checked_sub(1)?;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Skip a balanced `<…>` generics group starting at `*i` (if present).
+/// A `>` directly preceded by `-` is an arrow, not a closer.
+fn skip_generics(toks: &[Token], i: &mut usize) {
+    if !toks.get(*i).is_some_and(|t| t.is_punct('<')) {
+        return;
+    }
+    let mut depth = 0i32;
+    while *i < toks.len() {
+        let t = &toks[*i];
+        if t.is_punct('<') {
+            depth += 1;
+        } else if t.is_punct('>') && !(*i > 0 && toks[*i - 1].is_punct('-')) {
+            depth -= 1;
+            if depth == 0 {
+                *i += 1;
+                return;
+            }
+        }
+        *i += 1;
+    }
+}
+
+/// Read a type path at `*i` (skipping leading `&`/`mut`/`dyn`), returning
+/// the final path segment; trailing generic args are skipped.
+fn read_path_last(toks: &[Token], i: &mut usize) -> Option<String> {
+    while toks
+        .get(*i)
+        .is_some_and(|t| t.is_punct('&') || t.is_punct('(') || t.is_ident("mut") || t.is_ident("dyn"))
+    {
+        *i += 1;
+    }
+    let mut last: Option<String> = None;
+    loop {
+        let t = toks.get(*i)?;
+        if t.kind != TokenKind::Ident {
+            break;
+        }
+        last = Some(t.text.clone());
+        *i += 1;
+        if toks.get(*i).is_some_and(|t| t.is_punct(':'))
+            && toks.get(*i + 1).is_some_and(|t| t.is_punct(':'))
+        {
+            *i += 2;
+            continue;
+        }
+        break;
+    }
+    skip_generics(toks, i);
+    last
+}
+
+/// Parse an `impl`/`trait` item header starting at the keyword token.
+/// Returns `(self type, index of body open brace)`.
+fn parse_item_header(toks: &[Token], start: usize) -> Option<(String, usize)> {
+    let mut i = start + 1;
+    skip_generics(toks, &mut i);
+    let mut qual = read_path_last(toks, &mut i)?;
+    loop {
+        let t = toks.get(i)?;
+        if t.is_ident("for") {
+            i += 1;
+            qual = read_path_last(toks, &mut i)?;
+            continue;
+        }
+        if t.is_punct('{') {
+            return Some((qual, i));
+        }
+        if t.is_punct(';') {
+            // `impl Foo;` is not Rust, but a trait alias/odd input ends here.
+            return None;
+        }
+        i += 1; // where clauses, `+ Send` bounds, parens in Fn bounds
+    }
+}
+
+/// Is the token at `i` an *item-position* `impl`/`trait` keyword (as
+/// opposed to `-> impl Trait` / `(x: impl Trait)` type positions)?
+fn item_position(toks: &[Token], i: usize) -> bool {
+    if i == 0 {
+        return true;
+    }
+    let p = &toks[i - 1];
+    p.is_punct('{')
+        || p.is_punct('}')
+        || p.is_punct(';')
+        || p.is_punct(']')
+        || p.is_ident("pub")
+        || p.is_ident("unsafe")
+}
+
+/// Parse every function definition in one scanned file.
+pub fn parse_fns(file: usize, scan: &ScanResult) -> Vec<FnDef> {
+    let toks = &scan.tokens;
+    let mut out = Vec::new();
+    // Stack of (body close index, self type) for impl/trait blocks.
+    let mut ctx: Vec<(usize, String)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        while ctx.last().is_some_and(|(close, _)| i > *close) {
+            ctx.pop();
+        }
+        let t = &toks[i];
+        if (t.is_ident("impl") || t.is_ident("trait")) && item_position(toks, i) {
+            if let Some((qual, open)) = parse_item_header(toks, i) {
+                if let Some(close) = matching_close(toks, open, '{', '}') {
+                    ctx.push((close, qual));
+                    i = open + 1;
+                    continue;
+                }
+            }
+        }
+        if t.is_ident("fn") && toks.get(i + 1).is_some_and(|n| n.kind == TokenKind::Ident) {
+            let name = toks[i + 1].text.clone();
+            let mut j = i + 2;
+            let mut body = None;
+            while j < toks.len() {
+                if toks[j].is_punct('{') {
+                    body = matching_close(toks, j, '{', '}').map(|c| (j, c));
+                    break;
+                }
+                if toks[j].is_punct(';') {
+                    break;
+                }
+                j += 1;
+            }
+            let qual = ctx.last().map(|(_, q)| q.clone());
+            out.push(FnDef {
+                file,
+                qual,
+                name,
+                line: t.line,
+                body,
+                is_cold: super::cold_marked(scan, t.line),
+                in_test: t.in_test,
+            });
+            i = match body {
+                Some((open, _)) => open + 1, // visit nested items too
+                None => j,
+            };
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Call graph + reachability
+// ---------------------------------------------------------------------------
+
+/// One extracted call site: `name(…)`, `.name(…)`, or `Qual::name(…)`.
+struct CallSite {
+    qual: Option<String>,
+    /// Receiver is literally `self` (`self.name(…)`) — resolved against
+    /// the caller's own impl only.
+    self_recv: bool,
+    /// A `.name(…)` method call (any receiver).
+    is_method: bool,
+    name: String,
+}
+
+/// Keywords that look like `ident (` but are not calls.
+const NON_CALL_KEYWORDS: &[&str] = &[
+    "if", "while", "for", "in", "match", "return", "loop", "move", "else",
+    "let", "as", "mut", "ref", "box", "await", "yield", "fn",
+];
+
+/// Std-container/iterator/option method names. A `recv.m()` call with one
+/// of these names is overwhelmingly a call into std; resolving it by bare
+/// name to a same-named domain method would wire unrelated impls into the
+/// hot set (measured on this tree: `.insert(` alone linked the event core
+/// to the radix tree, and `.parse(`/`.load(` to the whole config layer).
+/// Domain dispatch names (`op_latency`, `on_tick`, `order`, `pick`, …)
+/// stay resolvable. Sorted; kept deliberately std-shaped — never add a
+/// domain method name here, mark the callee `simlint: cold` instead.
+const STD_METHODS: &[&str] = &[
+    "abs", "all", "and_then", "any", "as_bytes", "as_mut", "as_ref",
+    "as_slice", "as_str", "binary_search", "binary_search_by", "ceil",
+    "chain", "checked_add", "checked_sub", "chunks", "clear", "clone",
+    "cloned", "collect", "contains", "contains_key", "copied", "count",
+    "default", "drain", "entry", "enumerate", "exp", "expect", "extend",
+    "filter", "filter_map", "find", "find_map", "first", "flat_map",
+    "floor", "fold", "get", "get_mut", "get_or_insert_with", "insert",
+    "into_iter", "is_empty", "is_err", "is_none", "is_ok", "is_some",
+    "iter", "iter_mut", "join", "keys", "last", "len", "ln", "log2", "map",
+    "map_err", "max", "max_by", "max_by_key", "min", "min_by",
+    "min_by_key", "new", "next", "ok_or", "ok_or_else", "parse",
+    "position", "powf", "powi", "push", "push_back", "push_front",
+    "remove", "replace", "reserve", "resize", "retain", "rev", "round",
+    "rsplitn", "saturating_add", "saturating_sub", "skip", "skip_while",
+    "sort", "sort_by", "sort_by_key", "sort_unstable", "sort_unstable_by",
+    "split", "split_whitespace", "splitn", "sqrt", "starts_with",
+    "strip_prefix", "strip_suffix", "sum", "swap", "take", "take_while",
+    "to_string", "to_vec", "trim", "truncate", "unwrap", "unwrap_or",
+    "unwrap_or_default", "unwrap_or_else", "values", "values_mut",
+    "windows", "wrapping_mul", "write_str", "zip",
+];
+
+fn call_sites(toks: &[Token], open: usize, close: usize) -> Vec<CallSite> {
+    let mut out = Vec::new();
+    for j in open + 1..close {
+        let t = &toks[j];
+        if t.kind != TokenKind::Ident || !toks.get(j + 1).is_some_and(|n| n.is_punct('(')) {
+            continue;
+        }
+        if NON_CALL_KEYWORDS.contains(&t.text.as_str()) {
+            continue;
+        }
+        if j >= 1 && toks[j - 1].is_ident("fn") {
+            continue; // a nested definition, not a call
+        }
+        let mut qual = None;
+        let mut self_recv = false;
+        let mut is_method = false;
+        if j >= 2 && toks[j - 1].is_punct(':') && toks[j - 2].is_punct(':') {
+            if j >= 3 && toks[j - 3].kind == TokenKind::Ident {
+                qual = Some(toks[j - 3].text.clone());
+            }
+        } else if j >= 1 && toks[j - 1].is_punct('.') {
+            is_method = true;
+            self_recv = j >= 2 && toks[j - 2].is_ident("self");
+        }
+        out.push(CallSite {
+            qual,
+            self_recv,
+            is_method,
+            name: t.text.clone(),
+        });
+    }
+    out
+}
+
+/// The cross-file model: every parsed function plus its hot-set marking.
+pub struct FlowModel {
+    pub fns: Vec<FnDef>,
+    /// `hot[i]` — `fns[i]` is reachable from a hot root.
+    pub hot: Vec<bool>,
+}
+
+impl FlowModel {
+    /// Parse every file, build the call graph, and mark the hot set.
+    pub fn build(files: &[(String, ScanResult)]) -> FlowModel {
+        let mut fns: Vec<FnDef> = Vec::new();
+        for (idx, (_, scan)) in files.iter().enumerate() {
+            fns.extend(parse_fns(idx, scan));
+        }
+
+        let mut by_qual: BTreeMap<(&str, &str), Vec<usize>> = BTreeMap::new();
+        let mut free_by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        let mut method_by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            if f.in_test {
+                continue;
+            }
+            match &f.qual {
+                Some(q) => {
+                    by_qual.entry((q, &f.name)).or_default().push(i);
+                    method_by_name.entry(&f.name).or_default().push(i);
+                }
+                None => free_by_name.entry(&f.name).or_default().push(i),
+            }
+        }
+
+        // Resolution is deliberately asymmetric to stay useful:
+        // * `Type::m()` / `Self::m()` — exact `(type, name)` match only; a
+        //   miss means a std/external type and resolves to nothing.
+        // * `self.m()` — the caller's own impl only.
+        // * `recv.m()` — every impl'd method named `m` (this is what makes
+        //   trait dispatch like `perf.op_latency(…)` reach all impls),
+        //   EXCEPT std-shaped names (see [`STD_METHODS`]).
+        // * bare `m()` — free functions only (Rust requires a path for
+        //   associated fns, so a bare call can't be a method).
+        let mut edges: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); fns.len()];
+        for (i, f) in fns.iter().enumerate() {
+            if f.in_test {
+                continue;
+            }
+            let Some((open, close)) = f.body else { continue };
+            let toks = &files[f.file].1.tokens;
+            for call in call_sites(toks, open, close) {
+                // `Self::helper()` means the caller's own impl type.
+                let qual = match call.qual.as_deref() {
+                    Some("Self") => f.qual.clone(),
+                    other => other.map(str::to_string),
+                };
+                let name = call.name.as_str();
+                let targets: Option<&Vec<usize>> = match &qual {
+                    Some(q) => by_qual.get(&(q.as_str(), name)),
+                    None if call.self_recv => f
+                        .qual
+                        .as_deref()
+                        .and_then(|q| by_qual.get(&(q, name))),
+                    None if call.is_method => {
+                        if STD_METHODS.contains(&name) {
+                            None
+                        } else {
+                            method_by_name.get(name)
+                        }
+                    }
+                    None => free_by_name.get(name),
+                };
+                if let Some(ts) = targets {
+                    edges[i].extend(ts.iter().copied());
+                }
+            }
+        }
+
+        let mut hot = vec![false; fns.len()];
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        for (q, n) in HOT_ROOTS {
+            if let Some(roots) = by_qual.get(&(*q, *n)) {
+                queue.extend(roots.iter().copied());
+            }
+        }
+        while let Some(i) = queue.pop_front() {
+            if hot[i] || fns[i].is_cold || fns[i].in_test {
+                continue;
+            }
+            hot[i] = true;
+            for &j in &edges[i] {
+                if !hot[j] {
+                    queue.push_back(j);
+                }
+            }
+        }
+
+        FlowModel { fns, hot }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// H-rules: hot-path allocation and clone guards
+// ---------------------------------------------------------------------------
+
+fn push_finding(
+    findings: &mut Vec<Finding>,
+    rule: RuleId,
+    path: &str,
+    scan: &ScanResult,
+    tok: &Token,
+    message: String,
+) {
+    findings.push(Finding {
+        rule,
+        path: path.to_string(),
+        line: tok.line,
+        col: tok.col,
+        message,
+        line_text: scan.line_text(tok.line).to_string(),
+    });
+}
+
+/// `A :: B` starting at `j` (four-token window `A : : B`).
+fn path2(toks: &[Token], j: usize, a: &str, b: &str) -> bool {
+    toks[j].is_ident(a)
+        && toks.get(j + 1).is_some_and(|t| t.is_punct(':'))
+        && toks.get(j + 2).is_some_and(|t| t.is_punct(':'))
+        && toks.get(j + 3).is_some_and(|t| t.is_ident(b))
+}
+
+/// Run H01/H02 over every hot function. Findings are raw — the caller
+/// applies inline allows and the baseline.
+pub fn check_hot(files: &[(String, ScanResult)], model: &FlowModel) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    // Per-file H02 symbol tables, built lazily (most files have no hot fn).
+    let mut h02_syms: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+
+    for (i, f) in model.fns.iter().enumerate() {
+        if !model.hot[i] {
+            continue;
+        }
+        let Some((open, close)) = f.body else { continue };
+        let (path, scan) = &files[f.file];
+        let toks = &scan.tokens;
+        let who = f.display();
+
+        let syms = h02_syms.entry(f.file).or_insert_with(|| {
+            let refs: Vec<&Token> = scan.tokens.iter().filter(|t| !t.in_test).collect();
+            typed_symbols(&refs, H02_TYPES)
+        });
+
+        for j in open + 1..close {
+            let t = &toks[j];
+            // H01: allocation constructors.
+            if path2(toks, j, "Vec", "new")
+                || path2(toks, j, "String", "from")
+                || path2(toks, j, "Box", "new")
+            {
+                push_finding(
+                    &mut findings,
+                    RuleId::H01,
+                    path,
+                    scan,
+                    t,
+                    format!(
+                        "`{}::{}` allocates inside `{who}`, which is reachable from a hot root",
+                        t.text,
+                        toks[j + 3].text
+                    ),
+                );
+                continue;
+            }
+            if (t.is_ident("vec") || t.is_ident("format"))
+                && toks.get(j + 1).is_some_and(|n| n.is_punct('!'))
+            {
+                push_finding(
+                    &mut findings,
+                    RuleId::H01,
+                    path,
+                    scan,
+                    t,
+                    format!(
+                        "`{}!` allocates inside `{who}`, which is reachable from a hot root",
+                        t.text
+                    ),
+                );
+                continue;
+            }
+            if t.is_punct('.')
+                && toks
+                    .get(j + 1)
+                    .is_some_and(|n| n.is_ident("to_vec") || n.is_ident("collect"))
+            {
+                let m = &toks[j + 1];
+                let called = toks.get(j + 2).is_some_and(|n| {
+                    n.is_punct('(')
+                        || (n.is_punct(':') && toks.get(j + 3).is_some_and(|c| c.is_punct(':')))
+                });
+                if called {
+                    push_finding(
+                        &mut findings,
+                        RuleId::H01,
+                        path,
+                        scan,
+                        m,
+                        format!(
+                            "`.{}()` allocates inside `{who}`, which is reachable from a hot root",
+                            m.text
+                        ),
+                    );
+                }
+                continue;
+            }
+            // H02: clones of Request/batch-state values.
+            if t.is_punct('.')
+                && toks.get(j + 1).is_some_and(|n| n.is_ident("clone"))
+                && toks.get(j + 2).is_some_and(|n| n.is_punct('('))
+                && j >= 1
+                && toks[j - 1].kind == TokenKind::Ident
+                && syms.contains(&toks[j - 1].text)
+            {
+                push_finding(
+                    &mut findings,
+                    RuleId::H02,
+                    path,
+                    scan,
+                    &toks[j + 1],
+                    format!(
+                        "`{}.clone()` copies request/batch state inside `{who}`, \
+                         which is reachable from a hot root",
+                        toks[j - 1].text
+                    ),
+                );
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// E01: exhaustive dispatch over core enums
+// ---------------------------------------------------------------------------
+
+fn matching_close_ref(toks: &[&Token], open: usize, open_c: char, close_c: char) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < toks.len() {
+        if toks[j].is_punct(open_c) {
+            depth += 1;
+        } else if toks[j].is_punct(close_c) {
+            depth = depth.checked_sub(1)?;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Scan one file (non-test tokens) for wildcard arms in matches over core
+/// enums. Called from `rules::check` for core-module files.
+pub(crate) fn check_e01(
+    path: &str,
+    scan: &ScanResult,
+    toks: &[&Token],
+    findings: &mut Vec<Finding>,
+) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is_ident("match") {
+            i += 1;
+            continue;
+        }
+        // Scrutinee: everything to the first `{` at paren/bracket depth 0.
+        let mut j = i + 1;
+        let mut pd = 0i32;
+        let mut open = None;
+        while j < toks.len() {
+            let t = toks[j];
+            if t.is_punct('(') || t.is_punct('[') {
+                pd += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                pd -= 1;
+            } else if pd == 0 && t.is_punct('{') {
+                open = Some(j);
+                break;
+            } else if pd == 0 && t.is_punct(';') {
+                break;
+            }
+            j += 1;
+        }
+        let Some(open) = open else {
+            i += 1;
+            continue;
+        };
+        if let Some(close) = matching_close_ref(toks, open, '{', '}') {
+            check_match_arms(path, scan, toks, open, close, findings);
+        }
+        // Nested matches are reached by the outer loop continuing inside.
+        i += 1;
+    }
+}
+
+/// Parse the arms of one match body; flag wildcard arms when any arm
+/// pattern names a core enum.
+fn check_match_arms(
+    path: &str,
+    scan: &ScanResult,
+    toks: &[&Token],
+    open: usize,
+    close: usize,
+    findings: &mut Vec<Finding>,
+) {
+    let mut enum_name: Option<&str> = None;
+    let mut wildcards: Vec<usize> = Vec::new();
+
+    let mut i = open + 1;
+    while i < close {
+        // Pattern: tokens to the `=>` at depth 0.
+        let pat_start = i;
+        let mut depth = 0i32;
+        let mut arrow = None;
+        let mut j = i;
+        while j < close {
+            let t = toks[j];
+            if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+                depth += 1;
+            } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+                depth -= 1;
+            } else if depth == 0
+                && t.is_punct('=')
+                && toks.get(j + 1).is_some_and(|n| n.is_punct('>'))
+            {
+                arrow = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        let Some(arrow) = arrow else { break };
+
+        // Guard split: the pattern ends at a depth-0 `if`.
+        let mut pat_end = arrow;
+        {
+            let mut d = 0i32;
+            for k in pat_start..arrow {
+                let t = toks[k];
+                if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+                    d += 1;
+                } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+                    d -= 1;
+                } else if d == 0 && t.is_ident("if") {
+                    pat_end = k;
+                    break;
+                }
+            }
+        }
+
+        // Core-enum reference in the pattern (`Event ::`, …)?
+        for k in pat_start..pat_end {
+            if toks[k].kind == TokenKind::Ident
+                && toks.get(k + 1).is_some_and(|t| t.is_punct(':'))
+                && toks.get(k + 2).is_some_and(|t| t.is_punct(':'))
+            {
+                if let Some(e) = CORE_ENUMS.iter().find(|e| **e == toks[k].text) {
+                    enum_name = Some(*e);
+                }
+            }
+        }
+
+        // Wildcard: a depth-0 alternation branch that is exactly `_`, in an
+        // arm with NO guard. A guarded `_ if cond =>` arm is exempt: guards
+        // don't count toward exhaustiveness, so the compiler still forces
+        // the remaining arms to cover every variant — a new variant cannot
+        // fall through silently there.
+        if pat_end == arrow {
+            let mut d = 0i32;
+            let mut branch: Vec<usize> = Vec::new();
+            let mut flush = |branch: &mut Vec<usize>, wildcards: &mut Vec<usize>| {
+                if branch.len() == 1 && toks[branch[0]].is_ident("_") {
+                    wildcards.push(branch[0]);
+                }
+                branch.clear();
+            };
+            for k in pat_start..pat_end {
+                let t = toks[k];
+                if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+                    if d == 0 {
+                        branch.push(k);
+                    }
+                    d += 1;
+                    continue;
+                }
+                if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+                    d -= 1;
+                    if d == 0 {
+                        branch.push(k);
+                    }
+                    continue;
+                }
+                if d == 0 {
+                    if t.is_punct('|') {
+                        flush(&mut branch, &mut wildcards);
+                    } else {
+                        branch.push(k);
+                    }
+                }
+            }
+            flush(&mut branch, &mut wildcards);
+        }
+
+        // Skip the arm expression: a `{…}` block, or scan to a depth-0 `,`.
+        i = arrow + 2;
+        if i < close && toks[i].is_punct('{') {
+            match matching_close_ref(toks, i, '{', '}') {
+                Some(c) => {
+                    i = c + 1;
+                    if i < close && toks[i].is_punct(',') {
+                        i += 1;
+                    }
+                }
+                None => break,
+            }
+        } else {
+            let mut d = 0i32;
+            while i < close {
+                let t = toks[i];
+                if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+                    d += 1;
+                } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+                    d -= 1;
+                } else if d == 0 && t.is_punct(',') {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+        }
+    }
+
+    if let Some(e) = enum_name {
+        for w in wildcards {
+            push_finding(
+                findings,
+                RuleId::E01,
+                path,
+                scan,
+                toks[w],
+                format!(
+                    "wildcard `_ =>` arm in a match over core enum `{e}` — \
+                     a new variant would fall through silently"
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// P01: registry/doc consistency
+// ---------------------------------------------------------------------------
+
+/// Where a family's built-in names are defined or must re-appear.
+pub enum SourceSpec {
+    /// First string-literal argument of every `<method>("name", …)` call.
+    Register(&'static str),
+    /// All string literals inside `fn <name>` (optionally `Type::<name>`).
+    FnLiterals(Option<&'static str>, &'static str),
+}
+
+impl SourceSpec {
+    fn describe(&self) -> String {
+        match self {
+            SourceSpec::Register(m) => format!("`{m}(…)` calls"),
+            SourceSpec::FnLiterals(Some(q), n) => format!("`{q}::{n}`"),
+            SourceSpec::FnLiterals(None, n) => format!("`{n}`"),
+        }
+    }
+}
+
+/// One plugin-name family: definition site + the companion surfaces every
+/// name must appear in. Docs (README.md / DESIGN.md) are an implicit
+/// surface for every family.
+pub struct FamilySpec {
+    pub family: &'static str,
+    pub def: SourceSpec,
+    pub surfaces: &'static [SourceSpec],
+}
+
+/// The registry families P01 keeps consistent.
+pub const FAMILIES: &[FamilySpec] = &[
+    FamilySpec {
+        family: "route policy",
+        def: SourceSpec::Register("register_route"),
+        surfaces: &[],
+    },
+    FamilySpec {
+        family: "schedule policy",
+        def: SourceSpec::FnLiterals(Some("SchedPolicy"), "as_str"),
+        surfaces: &[SourceSpec::FnLiterals(Some("SchedPolicy"), "from_str")],
+    },
+    FamilySpec {
+        family: "eviction policy",
+        def: SourceSpec::FnLiterals(Some("EvictPolicy"), "as_str"),
+        surfaces: &[SourceSpec::FnLiterals(Some("EvictPolicy"), "from_str")],
+    },
+    FamilySpec {
+        family: "traffic source",
+        def: SourceSpec::FnLiterals(Some("Traffic"), "builtin_names"),
+        surfaces: &[SourceSpec::FnLiterals(Some("Traffic"), "for_name")],
+    },
+    FamilySpec {
+        family: "cluster controller",
+        def: SourceSpec::Register("register_controller"),
+        surfaces: &[],
+    },
+    FamilySpec {
+        family: "hardware preset",
+        def: SourceSpec::FnLiterals(Some("HardwareSpec"), "preset_names"),
+        surfaces: &[SourceSpec::FnLiterals(Some("HardwareSpec"), "preset")],
+    },
+    FamilySpec {
+        family: "chaos profile",
+        def: SourceSpec::FnLiterals(Some("ChaosConfig"), "profile_names"),
+        surfaces: &[SourceSpec::FnLiterals(Some("ChaosConfig"), "profile")],
+    },
+    FamilySpec {
+        family: "serving preset",
+        def: SourceSpec::FnLiterals(None, "serving_preset_names"),
+        surfaces: &[SourceSpec::FnLiterals(None, "by_name")],
+    },
+];
+
+/// A name extracted from a definition site, with its anchor for findings.
+struct NameOrigin {
+    name: String,
+    file: usize,
+    line: u32,
+    col: u32,
+}
+
+fn fn_matches(f: &FnDef, qual: Option<&str>, name: &str) -> bool {
+    f.name == name && f.qual.as_deref() == qual
+}
+
+/// Collect the string literals a [`SourceSpec`] denotes, with positions.
+fn collect_names(
+    files: &[(String, ScanResult)],
+    model: &FlowModel,
+    spec: &SourceSpec,
+) -> Vec<NameOrigin> {
+    let mut out = Vec::new();
+    match spec {
+        SourceSpec::Register(method) => {
+            for (fi, (_, scan)) in files.iter().enumerate() {
+                let toks = &scan.tokens;
+                for j in 0..toks.len() {
+                    if toks[j].in_test {
+                        continue;
+                    }
+                    if toks[j].is_ident(method)
+                        && toks.get(j + 1).is_some_and(|t| t.is_punct('('))
+                        && toks.get(j + 2).is_some_and(|t| t.kind == TokenKind::Str)
+                    {
+                        let s = &toks[j + 2];
+                        out.push(NameOrigin {
+                            name: s.text.clone(),
+                            file: fi,
+                            line: s.line,
+                            col: s.col,
+                        });
+                    }
+                }
+            }
+        }
+        SourceSpec::FnLiterals(qual, name) => {
+            for f in &model.fns {
+                if f.in_test || !fn_matches(f, *qual, name) {
+                    continue;
+                }
+                let Some((open, close)) = f.body else { continue };
+                let toks = &files[f.file].1.tokens;
+                for t in &toks[open + 1..close] {
+                    if t.kind == TokenKind::Str && !t.in_test {
+                        out.push(NameOrigin {
+                            name: t.text.clone(),
+                            file: f.file,
+                            line: t.line,
+                            col: t.col,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run the P01 consistency check. `docs` are `(display name, content)`
+/// pairs (README.md / DESIGN.md); when empty, the doc surface is skipped
+/// (single-file scans, fixture trees).
+pub fn check_p01(
+    files: &[(String, ScanResult)],
+    model: &FlowModel,
+    docs: &[(String, String)],
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for fam in FAMILIES {
+        let defs = collect_names(files, model, &fam.def);
+        if defs.is_empty() {
+            continue; // family not present in this scanned set
+        }
+        // Surface literal sets (exact match: a real arm, not a mention).
+        let surface_sets: Vec<(String, BTreeSet<String>)> = fam
+            .surfaces
+            .iter()
+            .map(|s| {
+                let names: BTreeSet<String> = collect_names(files, model, s)
+                    .into_iter()
+                    .map(|n| n.name)
+                    .collect();
+                (s.describe(), names)
+            })
+            .collect();
+        for def in &defs {
+            let (path, scan) = &files[def.file];
+            let mut missing: Vec<String> = Vec::new();
+            for (desc, names) in &surface_sets {
+                // A surface that is entirely absent from the scanned set
+                // (partial scan) cannot be checked honestly — skip it.
+                if !names.is_empty() && !names.contains(&def.name) {
+                    missing.push(desc.clone());
+                }
+            }
+            for (doc_name, content) in docs {
+                if !content.contains(&def.name) {
+                    missing.push(doc_name.clone());
+                }
+            }
+            if missing.is_empty() {
+                continue;
+            }
+            let tok = Token {
+                kind: TokenKind::Str,
+                text: def.name.clone(),
+                line: def.line,
+                col: def.col,
+                in_test: false,
+            };
+            push_finding(
+                &mut findings,
+                RuleId::P01,
+                path,
+                scan,
+                &tok,
+                format!(
+                    "built-in {} name '{}' is missing from: {}",
+                    fam.family,
+                    def.name,
+                    missing.join(", ")
+                ),
+            );
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scanner::scan;
+
+    fn model_of(files: &[(String, ScanResult)]) -> FlowModel {
+        FlowModel::build(files)
+    }
+
+    #[test]
+    fn parses_impl_qualified_fns() {
+        let src = "impl<'a> SimDriver<'a> {\n    pub fn step(&mut self) -> Option<u64> { self.tick() }\n    fn tick(&mut self) -> Option<u64> { None }\n}\nfn free() {}\n";
+        let s = scan(src);
+        let fns = parse_fns(0, &s);
+        let names: Vec<String> = fns.iter().map(|f| f.display()).collect();
+        assert_eq!(names, vec!["SimDriver::step", "SimDriver::tick", "free"]);
+    }
+
+    #[test]
+    fn trait_impl_qualifies_by_self_type() {
+        let src = "impl std::str::FromStr for SchedPolicy {\n    type Err = ();\n    fn from_str(s: &str) -> Result<Self, ()> { Err(()) }\n}\n";
+        let s = scan(src);
+        let fns = parse_fns(0, &s);
+        assert_eq!(fns[0].display(), "SchedPolicy::from_str");
+    }
+
+    #[test]
+    fn return_position_impl_is_not_an_item() {
+        let src = "fn f() -> impl Iterator<Item = u32> { (0..3).into_iter() }\nfn g() {}\n";
+        let s = scan(src);
+        let fns = parse_fns(0, &s);
+        let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["f", "g"]);
+        assert!(fns.iter().all(|f| f.qual.is_none()));
+    }
+
+    #[test]
+    fn reachability_crosses_files_and_respects_cold() {
+        let a = "impl Simulation {\n    fn handle_event(&mut self) { helper(); }\n}\n";
+        let b = "pub fn helper() { deep(); }\npub fn deep() {}\n// simlint: cold — diagnostics only\npub fn frosty() { deep(); }\n";
+        let files = vec![
+            ("coordinator/mod.rs".to_string(), scan(a)),
+            ("util/h.rs".to_string(), scan(b)),
+        ];
+        let m = model_of(&files);
+        let hot: BTreeSet<String> = m
+            .fns
+            .iter()
+            .zip(&m.hot)
+            .filter(|(_, h)| **h)
+            .map(|(f, _)| f.name.clone())
+            .collect();
+        assert!(hot.contains("handle_event"), "{hot:?}");
+        assert!(hot.contains("helper"), "{hot:?}");
+        assert!(hot.contains("deep"), "{hot:?}");
+        assert!(!hot.contains("frosty"), "cold fn must stay out: {hot:?}");
+    }
+
+    #[test]
+    fn h01_fires_only_in_hot_fns() {
+        let src = "impl Simulation {\n    fn handle_event(&mut self) { let v: Vec<u32> = Vec::new(); }\n}\nfn unreached() { let v: Vec<u32> = Vec::new(); }\n";
+        let files = vec![("coordinator/mod.rs".to_string(), scan(src))];
+        let m = model_of(&files);
+        let fs = check_hot(&files, &m);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, RuleId::H01);
+        assert!(fs[0].message.contains("handle_event"));
+    }
+
+    #[test]
+    fn h02_fires_on_request_clone_in_hot_fn() {
+        let src = "impl Simulation {\n    fn handle_event(&mut self, req: Request) { let r2 = req.clone(); }\n}\n";
+        let files = vec![("coordinator/mod.rs".to_string(), scan(src))];
+        let m = model_of(&files);
+        let fs = check_hot(&files, &m);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, RuleId::H02);
+    }
+
+    #[test]
+    fn e01_flags_wildcard_over_core_enum_only() {
+        let src = "fn f(e: Event) -> u32 {\n    match e {\n        Event::MetricsTick => 1,\n        _ => 0,\n    }\n}\nfn g(s: &str) -> u32 {\n    match s {\n        \"x\" => 1,\n        _ => 0,\n    }\n}\n";
+        let s = scan(src);
+        let refs: Vec<&Token> = s.tokens.iter().filter(|t| !t.in_test).collect();
+        let mut fs = Vec::new();
+        check_e01("sim/mod.rs", &s, &refs, &mut fs);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, RuleId::E01);
+        assert!(fs[0].message.contains("Event"));
+    }
+
+    #[test]
+    fn e01_ignores_wildcards_in_nested_noncore_match() {
+        let src = "fn f(e: Event, s: &str) -> u32 {\n    match e {\n        Event::MetricsTick => match s { \"x\" => 1, _ => 0 },\n        Event::ControllerTick => 2,\n    }\n}\n";
+        let s = scan(src);
+        let refs: Vec<&Token> = s.tokens.iter().filter(|t| !t.in_test).collect();
+        let mut fs = Vec::new();
+        check_e01("sim/mod.rs", &s, &refs, &mut fs);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn e01_exempts_guarded_wildcard_flags_bare_one() {
+        // `_ if n > 0` doesn't count toward exhaustiveness (the compiler
+        // still forces the rest to cover every variant), so only the bare
+        // `_ =>` arm fires.
+        let src = "fn f(e: Event, n: u32) -> u32 {\n    match e {\n        Event::MetricsTick => 1,\n        _ if n > 0 => 2,\n        _ => 0,\n    }\n}\n";
+        let s = scan(src);
+        let refs: Vec<&Token> = s.tokens.iter().filter(|t| !t.in_test).collect();
+        let mut fs = Vec::new();
+        check_e01("sim/mod.rs", &s, &refs, &mut fs);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].line, 5);
+    }
+
+    #[test]
+    fn p01_flags_names_missing_from_surface_and_docs() {
+        let src = "impl ChaosConfig {\n    pub fn profile_names() -> &'static [&'static str] {\n        &[\"none\", \"light\", \"storm\"]\n    }\n    pub fn profile(name: &str) -> u32 {\n        match name { \"none\" => 0, \"light\" => 1, _ => 2 }\n    }\n}\n";
+        let files = vec![("config/mod.rs".to_string(), scan(src))];
+        let m = model_of(&files);
+        let docs = vec![(
+            "README.md".to_string(),
+            "profiles: none, light, storm".to_string(),
+        )];
+        let fs = check_p01(&files, &m, &docs);
+        // "storm" is defined but absent from ChaosConfig::profile.
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("storm"), "{fs:?}");
+        assert!(fs[0].message.contains("ChaosConfig::profile"), "{fs:?}");
+
+        // And a doc gap is its own finding.
+        let docs2 = vec![("README.md".to_string(), "profiles: none, storm".to_string())];
+        let fs2 = check_p01(&files, &m, &docs2);
+        assert!(
+            fs2.iter().any(|f| f.message.contains("'light'")
+                && f.message.contains("README.md")),
+            "{fs2:?}"
+        );
+    }
+}

@@ -18,9 +18,16 @@
 //! | D03 | everywhere²  | entropy-seeded randomness                        |
 //! | D04 | core modules | iteration over hash-based containers             |
 //! | S01 | core modules | `unwrap`/`expect`/`panic!` without justification |
+//! | H01 | hot set³     | allocation constructors on the event hot path    |
+//! | H02 | hot set³     | `.clone()` of `Request`/batch-state values       |
+//! | E01 | core modules | wildcard `_ =>` arm in a match over a core enum  |
+//! | P01 | cross-file   | registered name missing from surfaces/docs       |
 //!
 //! ¹ except `util/bench.rs`, `util/logging.rs`, `benches/`.
 //! ² except `util/rng.rs`, the sanctioned seeded-RNG home.
+//! ³ functions reachable from [`flow::HOT_ROOTS`] in the call graph; see
+//!   [`flow`] for construction and the `// simlint: cold — <reason>`
+//!   opt-out for cold-by-design functions.
 //!
 //! Suppression is two-tier:
 //!
@@ -34,6 +41,7 @@
 //!   finding has been fixed or inline-justified.
 
 pub mod baseline;
+pub mod flow;
 pub mod rules;
 pub mod scanner;
 
@@ -47,15 +55,23 @@ pub enum RuleId {
     D03,
     D04,
     S01,
+    H01,
+    H02,
+    E01,
+    P01,
 }
 
 impl RuleId {
-    pub const ALL: [RuleId; 5] = [
+    pub const ALL: [RuleId; 9] = [
         RuleId::D01,
         RuleId::D02,
         RuleId::D03,
         RuleId::D04,
         RuleId::S01,
+        RuleId::H01,
+        RuleId::H02,
+        RuleId::E01,
+        RuleId::P01,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -65,6 +81,10 @@ impl RuleId {
             RuleId::D03 => "D03",
             RuleId::D04 => "D04",
             RuleId::S01 => "S01",
+            RuleId::H01 => "H01",
+            RuleId::H02 => "H02",
+            RuleId::E01 => "E01",
+            RuleId::P01 => "P01",
         }
     }
 
@@ -75,6 +95,10 @@ impl RuleId {
             "D03" => Some(RuleId::D03),
             "D04" => Some(RuleId::D04),
             "S01" => Some(RuleId::S01),
+            "H01" => Some(RuleId::H01),
+            "H02" => Some(RuleId::H02),
+            "E01" => Some(RuleId::E01),
+            "P01" => Some(RuleId::P01),
             _ => None,
         }
     }
@@ -94,6 +118,18 @@ impl RuleId {
             }
             RuleId::S01 => {
                 "handle the error, or add `// simlint: allow(S01) — <invariant>` stating why it cannot fire"
+            }
+            RuleId::H01 => {
+                "hoist the allocation out of the hot path (reuse a scratch buffer); `// simlint: allow(H01) — <reason>` for amortized sites, `// simlint: cold — <reason>` above cold-by-design fns"
+            }
+            RuleId::H02 => {
+                "move or borrow the request/batch state instead of cloning it on the hot path"
+            }
+            RuleId::E01 => {
+                "name every variant explicitly so adding one fails this match instead of falling through"
+            }
+            RuleId::P01 => {
+                "add the registered name to the listed companion functions and to README.md/DESIGN.md"
             }
         }
     }
@@ -115,6 +151,22 @@ pub struct Finding {
 }
 
 impl Finding {
+    /// Stable finding ID: FNV-1a 64 over `(rule, path, line_text)`,
+    /// rendered as 16 hex digits. Deliberately *excludes* line/col so the
+    /// ID survives unrelated edits above the finding; two identical
+    /// offending lines in one file share an ID (they are the same defect).
+    pub fn id(&self) -> String {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        for part in [self.rule.as_str(), "\u{1f}", &self.path, "\u{1f}", &self.line_text] {
+            for b in part.bytes() {
+                h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+            }
+        }
+        format!("{h:016x}")
+    }
+
     /// Render as `RULE path:line:col message` plus a fix-hint line.
     pub fn render(&self) -> String {
         format!(
@@ -190,8 +242,64 @@ fn allowed(scan: &scanner::ScanResult, rule: RuleId, line: u32) -> bool {
     false
 }
 
-/// Scan one file's source, returning findings **after** inline-allow
-/// filtering (the baseline is applied by the caller, typically the CLI).
+/// Parse a line-comment text as a `simlint: cold — <reason>` directive.
+/// Like `allow`, the reason is mandatory: a bare `simlint: cold` marks
+/// nothing. The directive must be exactly `cold` followed by a separator
+/// (so an identifier like `coldstart` in prose never counts).
+fn parse_cold(comment: &str) -> bool {
+    let t = comment.trim_start();
+    let Some(rest) = t.strip_prefix("simlint:") else {
+        return false;
+    };
+    let Some(rest) = rest.trim_start().strip_prefix("cold") else {
+        return false;
+    };
+    if !rest
+        .chars()
+        .next()
+        .is_some_and(|c| matches!(c, ' ' | '\t' | '—' | '–' | '-' | ':'))
+    {
+        return false;
+    }
+    let reason: String = rest
+        .chars()
+        .filter(|c| !matches!(c, '—' | '–' | '-' | ':' | ' ' | '\t'))
+        .collect();
+    reason.chars().count() >= 3
+}
+
+/// Is the `fn` at `line` marked cold — a `simlint: cold — <reason>`
+/// directive in the contiguous comment block directly above it? Attribute
+/// lines (`#[inline]`, `#[must_use]`, …) between the block and the `fn`
+/// are skipped, so the marker can sit above the attributes.
+pub(crate) fn cold_marked(scan: &scanner::ScanResult, line: u32) -> bool {
+    let covers = |l: u32| {
+        scan.line_comments
+            .iter()
+            .filter(|(cl, _)| *cl == l)
+            .any(|(_, text)| parse_cold(text))
+    };
+    if covers(line) {
+        return true;
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        if scan.pure_comment_lines.contains(&l) {
+            if covers(l) {
+                return true;
+            }
+        } else if !scan.line_text(l).starts_with("#[") {
+            return false;
+        }
+        l -= 1;
+    }
+    false
+}
+
+/// Scan one file's source with the per-file rules (D/S/E families),
+/// returning findings **after** inline-allow filtering (the baseline is
+/// applied by the caller, typically the CLI). The cross-file families
+/// (H01/H02/P01) need the whole scanned set — see [`analyze_sources`].
 /// `path` is used both for rule scoping (core module? exempt file?) and as
 /// the `Finding::path`; tests pass virtual paths like `coordinator/mod.rs`.
 pub fn scan_source(path: &str, source: &str) -> Vec<Finding> {
@@ -202,20 +310,135 @@ pub fn scan_source(path: &str, source: &str) -> Vec<Finding> {
         .collect()
 }
 
-/// Recursively scan every `.rs` file under `root`. Files are visited in
-/// sorted path order so output (and baselines) are deterministic. Paths in
-/// findings are `root`-prefixed and `/`-separated.
-pub fn scan_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
-    let mut files = Vec::new();
-    collect_rs_files(root, &mut files)?;
-    files.sort();
+/// Full analysis over a set of in-memory sources: the per-file rules plus
+/// the flow-aware families (H01/H02 over the call-graph hot set, P01
+/// registry/doc consistency). `docs` are `(name, content)` pairs for
+/// README.md / DESIGN.md; pass `&[]` to skip the doc surface. Findings are
+/// inline-allow filtered and sorted by `(path, line, col, rule)`.
+pub fn analyze_sources(files: &[(String, String)], docs: &[(String, String)]) -> Vec<Finding> {
+    let scanned: Vec<(String, scanner::ScanResult)> = files
+        .iter()
+        .map(|(p, src)| (p.clone(), scanner::scan(src)))
+        .collect();
+
     let mut findings = Vec::new();
-    for path in files {
-        let source = std::fs::read_to_string(&path)?;
-        let rel = path.to_string_lossy().replace('\\', "/");
-        findings.extend(scan_source(&rel, &source));
+    for (path, scan) in &scanned {
+        findings.extend(
+            rules::check(path, scan)
+                .into_iter()
+                .filter(|f| !allowed(scan, f.rule, f.line)),
+        );
     }
-    Ok(findings)
+
+    let model = flow::FlowModel::build(&scanned);
+    let mut cross = flow::check_hot(&scanned, &model);
+    cross.extend(flow::check_p01(&scanned, &model, docs));
+    for f in cross {
+        let covered = scanned
+            .iter()
+            .find(|(p, _)| *p == f.path)
+            .is_some_and(|(_, scan)| allowed(scan, f.rule, f.line));
+        if !covered {
+            findings.push(f);
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.col, a.rule).cmp(&(b.path.as_str(), b.line, b.col, b.rule))
+    });
+    findings
+}
+
+/// Full analysis over paths (directories are walked for `.rs` files).
+/// README.md/DESIGN.md are discovered by walking up from the first root to
+/// the nearest directory containing **both** — the repo root — so the P01
+/// doc surface is active for tree scans and absent for loose-file scans
+/// outside a checkout.
+pub fn analyze_paths(roots: &[std::path::PathBuf]) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for root in roots {
+        if root.is_dir() {
+            collect_rs_files(root, &mut files)?;
+        } else {
+            files.push(root.clone());
+        }
+    }
+    files.sort();
+    files.dedup();
+    let sources: Vec<(String, String)> = files
+        .iter()
+        .map(|p| {
+            let src = std::fs::read_to_string(p)?;
+            Ok((p.to_string_lossy().replace('\\', "/"), src))
+        })
+        .collect::<std::io::Result<_>>()?;
+    Ok(analyze_sources(&sources, &discover_docs(roots)))
+}
+
+fn discover_docs(roots: &[std::path::PathBuf]) -> Vec<(String, String)> {
+    let Some(first) = roots.first() else {
+        return Vec::new();
+    };
+    let start = first.canonicalize().unwrap_or_else(|_| first.clone());
+    let mut cur = if start.is_dir() {
+        Some(start.as_path())
+    } else {
+        start.parent()
+    };
+    while let Some(d) = cur {
+        let readme = d.join("README.md");
+        let design = d.join("DESIGN.md");
+        if readme.is_file() && design.is_file() {
+            let mut out = Vec::new();
+            for p in [readme, design] {
+                if let (Some(name), Ok(content)) = (p.file_name(), std::fs::read_to_string(&p)) {
+                    out.push((name.to_string_lossy().into_owned(), content));
+                }
+            }
+            return out;
+        }
+        cur = d.parent();
+    }
+    Vec::new()
+}
+
+/// Recursively scan every `.rs` file under `root` with the **full**
+/// analysis (per-file + flow-aware rules, docs discovered upward). Files
+/// are visited in sorted path order so output (and baselines) are
+/// deterministic. Paths in findings are `root`-prefixed, `/`-separated.
+pub fn scan_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    analyze_paths(&[root.to_path_buf()])
+}
+
+/// Render findings as the `--format json` report: a stable, sorted-key
+/// document built on [`crate::util::json`], so `parse → to_string`
+/// round-trips byte-identically.
+pub fn report_json(findings: &[Finding]) -> String {
+    use crate::util::json::{Number, Value};
+    use std::collections::BTreeMap;
+    let arr = findings
+        .iter()
+        .map(|f| {
+            let mut o = BTreeMap::new();
+            o.insert("id".to_string(), Value::Str(f.id()));
+            o.insert("rule".to_string(), Value::Str(f.rule.as_str().to_string()));
+            o.insert("path".to_string(), Value::Str(f.path.clone()));
+            o.insert("line".to_string(), Value::Num(Number::Int(i64::from(f.line))));
+            o.insert("col".to_string(), Value::Num(Number::Int(i64::from(f.col))));
+            o.insert("message".to_string(), Value::Str(f.message.clone()));
+            o.insert("line_text".to_string(), Value::Str(f.line_text.clone()));
+            o.insert("help".to_string(), Value::Str(f.rule.fix_hint().to_string()));
+            Value::Obj(o)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Value::Str("simlint/v2".to_string()));
+    root.insert(
+        "finding_count".to_string(),
+        Value::Num(Number::Int(findings.len() as i64)),
+    );
+    root.insert("findings".to_string(), Value::Arr(arr));
+    Value::Obj(root).to_string()
 }
 
 fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
@@ -280,6 +503,67 @@ mod tests {
     fn wrong_rule_allow_does_not_suppress() {
         let src = "pub fn f(x: Option<u32>) -> u32 {\n    // simlint: allow(D01) — wrong rule entirely\n    x.unwrap()\n}\n";
         assert_eq!(scan_source("sim/mod.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn parse_cold_requires_reason_and_separator() {
+        assert!(parse_cold(" simlint: cold — debug dump, never on the event path"));
+        assert!(parse_cold("simlint: cold: teardown"));
+        assert!(!parse_cold(" simlint: cold"));
+        assert!(!parse_cold(" simlint: cold — "));
+        assert!(!parse_cold(" simlint: coldstart path"));
+        assert!(!parse_cold(" just mentions cold"));
+    }
+
+    #[test]
+    fn cold_marker_skips_attribute_lines() {
+        let src = "// simlint: cold — diagnostics only\n#[inline(never)]\nfn dump() {}\nfn live() {}\n";
+        let scan = scanner::scan(src);
+        assert!(cold_marked(&scan, 3));
+        assert!(!cold_marked(&scan, 4));
+    }
+
+    #[test]
+    fn finding_id_is_stable_and_position_independent() {
+        let mk = |line| Finding {
+            rule: RuleId::H01,
+            path: "sim/mod.rs".to_string(),
+            line,
+            col: 9,
+            message: "msg".to_string(),
+            line_text: "let v = Vec::new();".to_string(),
+        };
+        let a = mk(10);
+        let b = mk(99);
+        assert_eq!(a.id(), b.id(), "id must survive line drift");
+        assert_eq!(a.id().len(), 16);
+        assert!(a.id().chars().all(|c| c.is_ascii_hexdigit()));
+        let mut c = mk(10);
+        c.rule = RuleId::H02;
+        assert_ne!(a.id(), c.id());
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let src = "use std::collections::HashMap;\n";
+        let fs = scan_source("router/mod.rs", src);
+        let rendered = report_json(&fs);
+        let parsed = crate::util::json::parse(&rendered).expect("report parses");
+        assert_eq!(parsed.to_string(), rendered, "sorted-key doc round-trips");
+        assert!(rendered.contains("\"schema\": \"simlint/v2\""));
+        assert!(rendered.contains("\"rule\": \"D01\""));
+    }
+
+    #[test]
+    fn analyze_sources_runs_flow_rules_and_respects_allows() {
+        let hot = "impl Simulation {\n    fn handle_event(&mut self) {\n        let a: Vec<u32> = Vec::new();\n        let b: Vec<u32> = Vec::new(); // simlint: allow(H01) — amortized scratch, cleared not dropped\n    }\n}\n";
+        let fs = analyze_sources(
+            &[("coordinator/mod.rs".to_string(), hot.to_string())],
+            &[],
+        );
+        let h01: Vec<&Finding> = fs.iter().filter(|f| f.rule == RuleId::H01).collect();
+        assert_eq!(h01.len(), 1, "{fs:?}");
+        assert_eq!(h01[0].line, 3);
     }
 
     #[test]

@@ -29,13 +29,18 @@ use super::{Finding, RuleId};
 use std::collections::BTreeSet;
 
 /// Module prefixes (under `src/`) that form the deterministic simulation
-/// core. D01/D04/S01 apply only here; D02/D03 apply everywhere.
+/// core. D01/D04/S01/E01 apply only here; D02/D03 apply everywhere.
+/// `config` and `model` are included because preset resolution and the
+/// operator vocabulary feed the determinism contract (a hash-ordered
+/// enumeration or unjustified abort there reaches reports just the same).
 pub const CORE_MODULES: &[&str] = &[
     "cluster",
+    "config",
     "coordinator",
     "instance",
     "memory",
     "metrics",
+    "model",
     "network",
     "perf",
     "policy",
@@ -80,19 +85,22 @@ const ITER_METHODS: &[&str] = &[
 /// Path of the file relative to the crate's `src/` directory: everything
 /// after the last `src` component, or the path unchanged when there is none
 /// (fixtures pass virtual paths like `coordinator/mod.rs` directly).
-pub fn module_rel(path: &str) -> &str {
-    let norm = path;
-    let mut rel = norm;
-    let mut rest = norm;
-    while let Some(pos) = rest.find("src/") {
-        let abs = norm.len() - rest.len() + pos;
+/// Separators are normalized to `/` first, so scoping and the `D02_EXEMPT`
+/// comparisons behave identically on Windows checkouts that hand simlint
+/// `\`-separated paths.
+pub fn module_rel(path: &str) -> String {
+    let norm = path.replace('\\', "/");
+    let mut rel_start = 0usize;
+    let mut rest = 0usize;
+    while let Some(pos) = norm[rest..].find("src/") {
+        let abs = rest + pos;
         let at_boundary = abs == 0 || norm.as_bytes()[abs - 1] == b'/';
         if at_boundary {
-            rel = &norm[abs + 4..];
+            rel_start = abs + 4;
         }
-        rest = &rest[pos + 4..];
+        rest = abs + 4;
     }
-    rel
+    norm[rel_start..].to_string()
 }
 
 fn first_segment(rel: &str) -> &str {
@@ -101,12 +109,16 @@ fn first_segment(rel: &str) -> &str {
 
 /// Is this file part of the deterministic simulation core?
 pub fn is_core(path: &str) -> bool {
-    CORE_MODULES.contains(&first_segment(module_rel(path)))
+    CORE_MODULES.contains(&first_segment(&module_rel(path)))
 }
 
 fn d02_exempt(path: &str) -> bool {
     let rel = module_rel(path);
-    D02_EXEMPT.contains(&rel) || path.split('/').any(|seg| seg == "benches")
+    D02_EXEMPT.contains(&rel.as_str())
+        || path
+            .replace('\\', "/")
+            .split('/')
+            .any(|seg| seg == "benches")
 }
 
 fn d03_exempt(path: &str) -> bool {
@@ -124,6 +136,7 @@ pub fn check(path: &str, scan: &ScanResult) -> Vec<Finding> {
         check_d01(path, scan, &toks, &mut findings);
         check_d04(path, scan, &toks, &mut findings);
         check_s01(path, scan, &toks, &mut findings);
+        super::flow::check_e01(path, scan, &toks, &mut findings);
     }
     if !d02_exempt(path) {
         check_d02(path, scan, &toks, &mut findings);
@@ -221,14 +234,15 @@ fn check_d03(path: &str, scan: &ScanResult, toks: &[&Token], findings: &mut Vec<
     }
 }
 
-/// Build the set of identifiers in this file known to name hash-backed
-/// containers: `name: [&][Mutex<]FxHashMap<…>` declarations (struct fields,
-/// fn params, typed lets) and `name = FxHashMap::default()` bindings.
-fn hash_symbols(toks: &[&Token]) -> BTreeSet<String> {
+/// Build the set of identifiers in this file declared with one of `types`:
+/// `name: [&][Mutex<]Type<…>` declarations (struct fields, fn params, typed
+/// lets) and `let name = Type::default()`-style constructor bindings. Shared
+/// by D04 (hash-backed containers) and H02 (Request/batch-state clones).
+pub(crate) fn typed_symbols(toks: &[&Token], types: &[&str]) -> BTreeSet<String> {
     let mut syms = BTreeSet::new();
     let mut i = 0usize;
     while i < toks.len() {
-        // Pattern: Ident ':' <short type chain containing a hash type>.
+        // Pattern: Ident ':' <short type chain containing a listed type>.
         if toks[i].kind == TokenKind::Ident
             && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
             && !toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
@@ -246,14 +260,14 @@ fn hash_symbols(toks: &[&Token]) -> BTreeSet<String> {
                 if delim {
                     break;
                 }
-                if t.kind == TokenKind::Ident && HASH_TYPES.contains(&t.text.as_str()) {
+                if t.kind == TokenKind::Ident && types.contains(&t.text.as_str()) {
                     syms.insert(name.clone());
                     break;
                 }
                 j += 1;
             }
         }
-        // Pattern: `let [mut] name = <hash type>::default()` (and similar
+        // Pattern: `let [mut] name = <listed type>::default()` (and similar
         // short constructor chains).
         if toks[i].is_ident("let") {
             let mut j = i + 1;
@@ -271,7 +285,7 @@ fn hash_symbols(toks: &[&Token]) -> BTreeSet<String> {
                     if t.is_punct('(') || t.is_punct(';') {
                         break;
                     }
-                    if t.kind == TokenKind::Ident && HASH_TYPES.contains(&t.text.as_str()) {
+                    if t.kind == TokenKind::Ident && types.contains(&t.text.as_str()) {
                         syms.insert(name.clone());
                         break;
                     }
@@ -282,6 +296,10 @@ fn hash_symbols(toks: &[&Token]) -> BTreeSet<String> {
         i += 1;
     }
     syms
+}
+
+fn hash_symbols(toks: &[&Token]) -> BTreeSet<String> {
+    typed_symbols(toks, HASH_TYPES)
 }
 
 fn check_d04(path: &str, scan: &ScanResult, toks: &[&Token], findings: &mut Vec<Finding>) {

@@ -18,12 +18,17 @@
 
 use std::collections::BTreeSet;
 
-/// Token classes the rules care about. Anything that is not an identifier
-/// or a number comes through as a single-character punct.
+/// Token classes the rules care about. Anything that is not an identifier,
+/// a number, or a string literal comes through as a single-character punct.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TokenKind {
     Ident,
     Num,
+    /// String literal; `text` is the *inner* content (quotes stripped,
+    /// escapes kept verbatim). Emitted so cross-file consistency rules
+    /// (P01) can read registered names — identifier/punct adjacency
+    /// patterns are unaffected because a string can never sit inside one.
+    Str,
     Punct,
 }
 
@@ -152,21 +157,33 @@ pub fn scan(source: &str) -> ScanResult {
             continue;
         }
 
-        // String literal.
+        // String literal — emitted as a `Str` token carrying the inner text.
         if c == '"' {
             line_has_code = true;
+            let (tline, tcol) = (line, col);
+            let mut text = String::new();
             bump!(); // opening quote
             while i < chars.len() {
                 if chars[i] == '\\' && i + 1 < chars.len() {
+                    text.push(chars[i]);
+                    text.push(chars[i + 1]);
                     bump!();
                     bump!();
                 } else if chars[i] == '"' {
                     bump!();
                     break;
                 } else {
+                    text.push(chars[i]);
                     bump!();
                 }
             }
+            out.tokens.push(Token {
+                kind: TokenKind::Str,
+                text,
+                line: tline,
+                col: tcol,
+                in_test: false,
+            });
             continue;
         }
 
@@ -268,12 +285,15 @@ pub fn scan(source: &str) -> ScanResult {
             let byte_prefix = text == "b" && matches!(next, Some('"') | Some('\''));
             if raw_prefix {
                 // Raw string: count hashes, then scan to `"` + same hashes.
+                // Emitted as a `Str` token like plain strings.
                 let mut hashes = 0usize;
                 while i < chars.len() && chars[i] == '#' {
                     hashes += 1;
                     bump!();
                 }
                 if i < chars.len() && chars[i] == '"' {
+                    let (sline, scol) = (line, col);
+                    let mut stext = String::new();
                     bump!(); // opening quote
                     'raw: while i < chars.len() {
                         if chars[i] == '"' {
@@ -290,8 +310,16 @@ pub fn scan(source: &str) -> ScanResult {
                                 break 'raw;
                             }
                         }
+                        stext.push(chars[i]);
                         bump!();
                     }
+                    out.tokens.push(Token {
+                        kind: TokenKind::Str,
+                        text: stext,
+                        line: sline,
+                        col: scol,
+                        in_test: false,
+                    });
                 }
                 continue;
             }

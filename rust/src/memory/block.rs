@@ -154,6 +154,8 @@ impl BlockManager {
     /// to zero. Returns the freed block ids.
     pub fn free_seq(&mut self, seq_id: u64) -> Vec<BlockId> {
         let chain = self.seqs.remove(&seq_id).unwrap_or_default();
+        // simlint: allow(H01) — the freed-id list is the return value, built
+        // once per finished/evicted sequence (not per step or per event)
         let mut freed = vec![];
         for b in chain {
             self.release_block(b, &mut freed);

@@ -297,6 +297,8 @@ impl PrefixCache {
              field of one of the leaves it was given",
             self.policy.name(),
             victim,
+            // simlint: allow(H01) — assert message: built only when the
+            // eviction-policy contract is already violated
             leaves.iter().map(|l| l.id).collect::<Vec<_>>()
         );
         // Reconstruct the leaf's full token path before removal so the host

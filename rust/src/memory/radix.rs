@@ -137,6 +137,8 @@ impl RadixTree {
     pub fn match_prefix(&self, query: &[Token]) -> Match {
         let mut cur = ROOT;
         let mut matched = 0usize;
+        // simlint: allow(H01) — `vec![]` is capacity-0 (no allocation until a
+        // node matches); bounded by tree depth, one lookup per admission
         let mut path = vec![];
         loop {
             let node = self.node(cur);
@@ -279,6 +281,8 @@ impl RadixTree {
                 last_access: n.last_access,
                 access_count: n.access_count,
             })
+            // simlint: allow(H01) — eviction-candidate snapshot, built only
+            // under cache pressure (eviction), not on the per-event path
             .collect()
     }
 
@@ -293,6 +297,8 @@ impl RadixTree {
             len += n.label.len();
             cur = n.parent;
         }
+        // simlint: allow(H01) — single exact-size allocation for the returned
+        // path, on the eviction/host-demotion path only
         let mut out = vec![0 as Token; len];
         let mut end = len;
         cur = id;

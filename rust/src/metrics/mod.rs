@@ -73,6 +73,8 @@ impl RequestRecord {
         self.token_times
             .windows(2)
             .map(|w| (w[1] - w[0]) as f64)
+            // simlint: allow(H01) — consumed once per request at finish time
+            // to fold gaps into the ITL aggregate, not per token or per event
             .collect()
     }
 
@@ -171,6 +173,8 @@ impl MetricsCollector {
                 arrival: at,
                 dispatched: None,
                 instance: None,
+                // simlint: allow(H01) — capacity-0 `vec![]`, allocates only as
+                // tokens arrive; one record per request admission
                 token_times: vec![],
                 finished: None,
                 prompt_tokens: req.prompt_tokens,

@@ -31,18 +31,17 @@ impl GateOutcome {
     /// Skew = max / mean over ACTIVE experts (>= 1.0); drives all-to-all
     /// congestion modeling.
     pub fn skew(&self) -> f64 {
-        let active: Vec<u64> = self
-            .tokens_per_expert
-            .iter()
-            .copied()
-            .filter(|&t| t > 0)
-            .collect();
-        if active.is_empty() {
+        let (mut max, mut sum, mut n) = (0u64, 0u64, 0u64);
+        for &t in self.tokens_per_expert.iter().filter(|&&t| t > 0) {
+            max = max.max(t);
+            sum += t;
+            n += 1;
+        }
+        if n == 0 {
             return 1.0;
         }
-        let max = *active.iter().max().unwrap() as f64;
-        let mean = active.iter().sum::<u64>() as f64 / active.len() as f64;
-        (max / mean).max(1.0)
+        let mean = sum as f64 / n as f64;
+        (max as f64 / mean).max(1.0)
     }
 }
 
@@ -91,6 +90,9 @@ impl ExpertRouter {
     /// Sampling is per-token without replacement within a token's top-k set,
     /// mirroring how a softmax gate picks k distinct experts.
     pub fn route(&mut self, layer: u64, tokens: u64) -> GateOutcome {
+        // simlint: allow(H01) — the per-expert counts ARE the returned
+        // outcome (`experts` elements, tens); a scratch buffer would force
+        // a clone into GateOutcome and save nothing
         let mut counts = vec![0u64; self.experts];
         let perm = &self.layer_perm[(layer as usize) % self.layer_perm.len()];
         for _ in 0..tokens {

@@ -36,6 +36,10 @@ pub struct TraceDb {
     pub hardware: String,
     pub model: String,
     ops: BTreeMap<OpKind, OpTrace>,
+    /// Distinct `(batches, ctxs)` axis values per decode-grid op, maintained
+    /// on insertion so the per-invocation interpolation never re-derives
+    /// (and never allocates) them.
+    axes: BTreeMap<OpKind, (Vec<u64>, Vec<u64>)>,
     name: String,
 }
 
@@ -45,6 +49,7 @@ impl TraceDb {
             hardware: hardware.to_string(),
             model: model.to_string(),
             ops: BTreeMap::new(),
+            axes: BTreeMap::new(),
             name: format!("trace[{hardware}/{model}]"),
         }
     }
@@ -75,6 +80,14 @@ impl TraceDb {
             OpTrace::BatchCtx(v) => {
                 v.push((batch, ctx, ns));
                 v.sort();
+                // Re-derive the grid axes here (insertion is load/profile
+                // time) so `lookup` stays allocation-free on the hot path.
+                let mut batches: Vec<u64> = v.iter().map(|p| p.0).collect();
+                batches.dedup(); // already sorted by batch first
+                let mut ctxs: Vec<u64> = v.iter().map(|p| p.1).collect();
+                ctxs.sort();
+                ctxs.dedup();
+                self.axes.insert(kind, (batches, ctxs));
             }
             // simlint: allow(S01) — mixing grid shapes for one op kind is a caller bug
             _ => panic!("{kind} is a tokens op"),
@@ -128,13 +141,15 @@ impl TraceDb {
         (y0 + slope * (t - x0)).max(0.0)
     }
 
-    fn interp_batch_ctx(points: &[(u64, u64, u64)], b: u64, c: u64) -> f64 {
-        // Collect the axes of the (assumed full) grid.
-        let mut batches: Vec<u64> = points.iter().map(|p| p.0).collect();
-        batches.dedup();
-        let mut ctxs: Vec<u64> = points.iter().map(|p| p.1).collect();
-        ctxs.sort();
-        ctxs.dedup();
+    /// `batches`/`ctxs` are the precomputed distinct axis values of the
+    /// (assumed full) grid, maintained by [`TraceDb::add_batch_ctx`].
+    fn interp_batch_ctx(
+        points: &[(u64, u64, u64)],
+        batches: &[u64],
+        ctxs: &[u64],
+        b: u64,
+        c: u64,
+    ) -> f64 {
         let lookup = |bb: u64, cc: u64| -> Option<f64> {
             points
                 .iter()
@@ -159,8 +174,8 @@ impl TraceDb {
             let w = if a1 > a0 { (xf - a0) / (a1 - a0) } else { 0.0 };
             (axis[i0], axis[i1], w)
         };
-        let (b0, b1, wb) = bracket(&batches, b);
-        let (c0, c1, wc) = bracket(&ctxs, c);
+        let (b0, b1, wb) = bracket(batches, b);
+        let (c0, c1, wc) = bracket(ctxs, c);
         let get = |bb, cc| lookup(bb, cc).unwrap_or_else(|| {
             // sparse grid fallback: nearest by batch then ctx
             points
@@ -186,7 +201,10 @@ impl TraceDb {
         match self.ops.get(&inv.kind)? {
             OpTrace::Tokens(pts) => Some(Self::interp_tokens(pts, inv.tokens)),
             OpTrace::BatchCtx(pts) => {
-                Some(Self::interp_batch_ctx(pts, inv.tokens, inv.ctx))
+                // The axes entry is written by the only place that creates a
+                // BatchCtx trace (`add_batch_ctx`); a miss means no samples.
+                let (batches, ctxs) = self.axes.get(&inv.kind)?;
+                Some(Self::interp_batch_ctx(pts, batches, ctxs, inv.tokens, inv.ctx))
             }
         }
     }

@@ -90,6 +90,8 @@ impl GlobalRouter {
              field of one of the views it was given",
             self.policy.name(),
             chosen,
+            // simlint: allow(H01) — assert message: built only when the
+            // route-policy contract is already violated
             candidates.iter().map(|v| v.id).collect::<Vec<_>>()
         );
         self.dispatched += 1;

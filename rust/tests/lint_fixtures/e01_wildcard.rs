@@ -1,0 +1,32 @@
+// Fixture: E01 — wildcard arm in a match over a core enum (silent
+// fall-through when a variant is added), a guarded wildcard (exempt:
+// guards never satisfy exhaustiveness, so the compiler still forces
+// coverage), and a non-core match (out of scope). Never compiled.
+pub enum Event {
+    Arrival,
+    StepComplete,
+    ControllerTick,
+}
+
+pub fn dispatch(e: &Event) -> u32 {
+    match e {
+        Event::Arrival => 1,
+        _ => 0,
+    }
+}
+
+pub fn guarded(e: &Event, busy: bool) -> u32 {
+    match e {
+        Event::Arrival => 1,
+        _ if busy => 2,
+        Event::StepComplete => 3,
+        Event::ControllerTick => 4,
+    }
+}
+
+pub fn noncore(n: u32) -> u32 {
+    match n {
+        0 => 0,
+        _ => 1,
+    }
+}

@@ -1,0 +1,28 @@
+// Fixture: H01 — allocation in a function reachable from a hot root, with
+// the three escape hatches demonstrated: an inline allow, a `cold` marker,
+// and plain unreachability. Never compiled.
+pub struct Simulation;
+
+impl Simulation {
+    pub fn handle_event(&mut self) {
+        self.dispatch_one();
+        self.cold_refresh();
+    }
+
+    fn dispatch_one(&mut self) {
+        let mut pending: Vec<u64> = Vec::new();
+        pending.push(1);
+        // simlint: allow(H01) — fixture exercising inline suppression
+        let label = format!("step");
+        let _ = label;
+    }
+
+    // simlint: cold — fixture: control-plane refresh, allocates by design
+    fn cold_refresh(&mut self) {
+        let _scratch: Vec<u64> = Vec::new();
+    }
+}
+
+pub fn offline_report() -> String {
+    String::from("never reachable from a hot root")
+}

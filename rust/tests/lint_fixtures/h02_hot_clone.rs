@@ -1,0 +1,20 @@
+// Fixture: H02 — cloning batch-state (`Request`) on the hot path. The same
+// clone in a function no hot root reaches is fine. Never compiled.
+pub struct Request {
+    pub id: u64,
+}
+
+pub struct Simulation {
+    req: Request,
+}
+
+impl Simulation {
+    pub fn handle_event(&mut self) {
+        let copy = self.req.clone();
+        let _ = copy;
+    }
+}
+
+pub fn snapshot(r: &Request) -> Request {
+    r.clone()
+}

@@ -1,0 +1,7 @@
+// Fixture: P01 — two route registrations; the test supplies a README that
+// mentions only one of them, so the other must be flagged as undocumented.
+// Never compiled.
+pub fn install(r: &mut Registry) {
+    r.register_route("fixture-documented", || Dummy);
+    r.register_route("fixture-ghost", || Dummy);
+}

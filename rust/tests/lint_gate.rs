@@ -4,14 +4,18 @@
 //! * **Fixture tests** — every rule is demonstrated to fire on a fixture
 //!   under `tests/lint_fixtures/` (scanned with virtual in-core paths; the
 //!   fixtures are never compiled), and every suppression path (inline
-//!   allow, malformed allow, `#[cfg(test)]` region, non-core exemption,
-//!   baseline) is demonstrated to behave.
+//!   allow, malformed allow, `// simlint: cold` hot-set opt-out,
+//!   `#[cfg(test)]` region, non-core exemption, baseline) is demonstrated
+//!   to behave. Flow-aware rules (H01/H02/P01) go through
+//!   `analyze_sources`, the same entry point the CLI uses.
 //! * **The gate** — `src/` must produce zero findings beyond the committed
-//!   `simlint.allow` baseline. This runs under plain `cargo test`, so the
-//!   tier-1 suite itself enforces the determinism rules.
+//!   `simlint.allow` baseline, through the full flow-aware analysis
+//!   (`scan_tree` → `analyze_paths`, which also discovers README/DESIGN
+//!   for P01). This runs under plain `cargo test`, so the tier-1 suite
+//!   itself enforces the determinism rules.
 
 use llmservingsim::lint::baseline::{format_baseline, Baseline};
-use llmservingsim::lint::{scan_source, scan_tree, RuleId};
+use llmservingsim::lint::{analyze_sources, report_json, scan_source, scan_tree, Finding, RuleId};
 use std::path::Path;
 
 const D01_SRC: &str = include_str!("lint_fixtures/d01_std_hash.rs");
@@ -22,12 +26,21 @@ const S01_SRC: &str = include_str!("lint_fixtures/s01_panics.rs");
 const ALLOW_OK_SRC: &str = include_str!("lint_fixtures/allow_suppresses.rs");
 const ALLOW_BAD_SRC: &str = include_str!("lint_fixtures/allow_malformed.rs");
 const TEST_REGION_SRC: &str = include_str!("lint_fixtures/test_region.rs");
+const H01_SRC: &str = include_str!("lint_fixtures/h01_hot_alloc.rs");
+const H02_SRC: &str = include_str!("lint_fixtures/h02_hot_clone.rs");
+const E01_SRC: &str = include_str!("lint_fixtures/e01_wildcard.rs");
+const P01_SRC: &str = include_str!("lint_fixtures/p01_registry.rs");
 
 /// Virtual path that makes every core-scoped rule applicable.
 const CORE: &str = "coordinator/mod.rs";
 
 fn rules_fired(path: &str, src: &str) -> Vec<RuleId> {
     scan_source(path, src).iter().map(|f| f.rule).collect()
+}
+
+/// Run the full (flow-aware) analysis over one fixture under a core path.
+fn analyze_fixture(src: &str, docs: &[(String, String)]) -> Vec<Finding> {
+    analyze_sources(&[(CORE.to_string(), src.to_string())], docs)
 }
 
 #[test]
@@ -108,6 +121,65 @@ fn cfg_test_regions_are_exempt_and_bounded() {
     assert_eq!(findings.len(), 1, "{findings:?}");
     assert_eq!(findings[0].rule, RuleId::S01);
     assert!(findings[0].line_text.contains("x.unwrap()"));
+}
+
+#[test]
+fn h01_fires_only_on_hot_reachable_allocation() {
+    let findings = analyze_fixture(H01_SRC, &[]);
+    // One allocation in the hot-reachable helper fires; the inline-allowed
+    // `format!`, the `cold`-marked refresh, and the unreachable free
+    // function do not.
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RuleId::H01);
+    assert!(findings[0].line_text.contains("Vec::new"));
+}
+
+#[test]
+fn h02_fires_on_hot_request_clone_only() {
+    let findings = analyze_fixture(H02_SRC, &[]);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RuleId::H02);
+    assert!(findings[0].line_text.contains("self.req.clone()"));
+}
+
+#[test]
+fn e01_fires_on_core_enum_wildcard_in_core_modules_only() {
+    // E01 is per-file and core-scoped, so it runs through scan_source.
+    let findings = scan_source(CORE, E01_SRC);
+    // The bare `_ =>` over `Event` fires; the guarded `_ if` arm and the
+    // non-enum match are exempt.
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RuleId::E01);
+    assert!(rules_fired("util/json.rs", E01_SRC).is_empty());
+}
+
+#[test]
+fn p01_flags_registered_name_missing_from_docs() {
+    let docs = vec![(
+        "README.md".to_string(),
+        "route policies: `fixture-documented`".to_string(),
+    )];
+    let findings = analyze_fixture(P01_SRC, &docs);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RuleId::P01);
+    assert!(findings[0].message.contains("fixture-ghost"));
+    assert!(findings[0].message.contains("README.md"));
+    // With the name documented, the family is clean.
+    let docs = vec![(
+        "README.md".to_string(),
+        "`fixture-documented`, `fixture-ghost`".to_string(),
+    )];
+    assert!(analyze_fixture(P01_SRC, &docs).is_empty());
+}
+
+#[test]
+fn json_report_is_stable_and_round_trips() {
+    let findings = analyze_fixture(H01_SRC, &[]);
+    let report = report_json(&findings);
+    let parsed = llmservingsim::util::json::parse(&report).expect("report must parse");
+    assert_eq!(parsed.to_string(), report, "JSON report must round-trip");
+    assert_eq!(parsed.get("schema").as_str(), Some("simlint/v2"));
+    assert_eq!(parsed.get("finding_count").as_u64(), Some(1));
 }
 
 #[test]
